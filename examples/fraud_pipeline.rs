@@ -1,0 +1,111 @@
+//! End-to-end validation driver (the DESIGN.md "headline" run): the full
+//! SGG pipeline on the IEEE-Fraud stand-in workload, exercising all three
+//! layers:
+//!
+//! 1. L3 fits structure (Kronecker MLE + degree fit), features, aligner;
+//! 2. if `make artifacts` has been run, the feature generator is the
+//!    CTGAN-style GAN whose fused ResNet blocks are the L1 Pallas kernel,
+//!    trained via the L2 AOT train-step HLO on the PJRT runtime — the
+//!    GAN loss curve is printed to prove real training happened;
+//! 3. generation + alignment produce a synthetic dataset that is scored
+//!    with the paper's Table-2 metrics against the original, plus the
+//!    baseline comparison (random / graphworld) so the paper's headline
+//!    ordering is reproduced in one run.
+//!
+//! Run: `make artifacts && cargo run --release --example fraud_pipeline`
+//! The output is recorded in EXPERIMENTS.md §End-to-end.
+
+use sgg::aligner::AlignKind;
+use sgg::featgen::FeatKind;
+use sgg::metrics;
+use sgg::pipeline::{Pipeline, PipelineConfig};
+use sgg::structgen::StructKind;
+
+fn main() -> sgg::Result<()> {
+    let ds = sgg::datasets::load("ieee-fraud", 42)?;
+    println!("workload: {}", ds.summary());
+    let have_artifacts = sgg::runtime::artifacts_available();
+    println!("artifacts available: {have_artifacts} (GAN backend: {})",
+             if have_artifacts { "PJRT/Pallas" } else { "resample fallback" });
+
+    let arms = vec![
+        ("random", PipelineConfig {
+            struct_kind: StructKind::Random,
+            feat_kind: FeatKind::Random,
+            align_kind: AlignKind::Random,
+            ..Default::default()
+        }),
+        ("graphworld", PipelineConfig {
+            struct_kind: StructKind::Sbm,
+            feat_kind: FeatKind::Gaussian,
+            align_kind: AlignKind::Random,
+            ..Default::default()
+        }),
+        ("ours", PipelineConfig::default()),
+    ];
+
+    let mut ours_beats_baselines = true;
+    let mut scores = Vec::new();
+    for (name, cfg) in arms {
+        let t0 = std::time::Instant::now();
+        let fitted = Pipeline::fit(&ds, &cfg)?;
+        let synth = fitted.generate(1, 7)?;
+        let r = metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features);
+        println!(
+            "{name:<12} degree_dist={:.4}  feature_corr={:.4}  degree_feat_dist={:.4}   ({:.1}s)",
+            r.degree_dist,
+            r.feature_corr,
+            r.degree_feat_dist,
+            t0.elapsed().as_secs_f64()
+        );
+        scores.push((name, r));
+    }
+    let ours = scores.last().unwrap().1;
+    for (name, r) in &scores[..scores.len() - 1] {
+        if ours.degree_dist < r.degree_dist || ours.degree_feat_dist > r.degree_feat_dist {
+            ours_beats_baselines = false;
+            println!("NOTE: ours does not dominate {name} on every metric in this run");
+        }
+    }
+
+    // GAN demonstration leg: the L1/L2 compute path (Pallas ResNet blocks
+    // inside the AOT train-step HLO, driven step-by-step from Rust)
+    if have_artifacts {
+        let gan_cfg = PipelineConfig {
+            struct_kind: StructKind::Kronecker,
+            feat_kind: FeatKind::Gan,
+            align_kind: AlignKind::Learned,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let fitted = Pipeline::fit(&ds, &gan_cfg)?;
+        let synth = fitted.generate(1, 7)?;
+        let r = metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features);
+        println!(
+            "ours (GAN)   degree_dist={:.4}  feature_corr={:.4}  degree_feat_dist={:.4}   ({:.1}s, PJRT train+sample)",
+            r.degree_dist, r.feature_corr, r.degree_feat_dist,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // scale-up leg: 2x nodes / 4x edges through the streaming path
+    let fitted = Pipeline::fit(&ds, &PipelineConfig::default())?;
+    let t0 = std::time::Instant::now();
+    let big = fitted.generate(2, 9)?;
+    println!(
+        "scale 2x: {} edges in {:.1}s ({:.2} Medges/s incl. alignment)",
+        big.edges.len(),
+        t0.elapsed().as_secs_f64(),
+        big.edges.len() as f64 / t0.elapsed().as_secs_f64() / 1e6
+    );
+
+    println!(
+        "\nE2E RESULT: {}",
+        if ours_beats_baselines {
+            "PASS — fitted pipeline reproduces the paper's Table-2 ordering"
+        } else {
+            "PARTIAL — see per-metric rows above"
+        }
+    );
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) → HLO *text*
+artifacts + parameter manifests + initial parameter packs.
+
+HLO text — not serialized HloModuleProto — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the Rust binary is self-contained
+afterwards. Usage: ``python -m compile.aot --out-dir ../artifacts``.
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import gnn, model
+
+# GAN width buckets: the Rust encoder pads its encoded row width into the
+# smallest bucket that fits (see rust/src/runtime/gan_exec.rs).
+GAN_WIDTHS = (128, 256)
+# Node-classification padding buckets.
+NODE_NS = (1024, 4096)
+# Edge-classifier bucket: (padded nodes, padded edges).
+EDGE_CLF = (2048, 32768)
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_artifact(out_dir, name, fn, example_args, manifest=None, init=None):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(fn, example_args)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}.hlo.txt ({len(text) / 1e6:.1f} MB)")
+    if manifest is not None:
+        meta = {
+            "name": name,
+            "params": [{"name": n, "shape": list(s)} for n, s in manifest],
+        }
+        with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+    if init is not None:
+        flat = np.concatenate([p.reshape(-1) for p in init]).astype("<f4")
+        flat.tofile(os.path.join(out_dir, f"{name}.init.bin"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated artifact name filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = [s for s in args.only.split(",") if s]
+
+    def wanted(name):
+        return not only or any(o in name for o in only)
+
+    print("lowering artifacts:")
+    for w in GAN_WIDTHS:
+        mani = model.gan_manifest(w)
+        if wanted(f"gan_train_w{w}"):
+            write_artifact(
+                args.out_dir,
+                f"gan_train_w{w}",
+                model.make_gan_train_step(w),
+                model.gan_example_args(w),
+                manifest=mani,
+                init=model.init_gan_params(w, seed=0),
+            )
+        if wanted(f"gan_sample_w{w}"):
+            write_artifact(
+                args.out_dir,
+                f"gan_sample_w{w}",
+                model.make_gan_sample(w),
+                model.gan_sample_example_args(w),
+            )
+    for n in NODE_NS:
+        for kind in ("gcn", "gat"):
+            name = f"{kind}_full_n{n}"
+            if not wanted(name):
+                continue
+            mani = gnn.gcn_manifest() if kind == "gcn" else gnn.gat_manifest()
+            write_artifact(
+                args.out_dir,
+                name,
+                gnn.make_node_clf_step(kind),
+                gnn.node_clf_example_args(kind, n),
+                manifest=mani,
+                init=gnn.init_params(mani, seed=0),
+            )
+    n, e = EDGE_CLF
+    if wanted("edge_clf"):
+        mani = gnn.edge_clf_manifest()
+        write_artifact(
+            args.out_dir,
+            f"edge_clf_n{n}_e{e}",
+            gnn.make_edge_clf_step(),
+            gnn.edge_clf_example_args(n, e),
+            manifest=mani,
+            init=gnn.init_params(mani, seed=0),
+        )
+    # constants the Rust runtime needs
+    with open(os.path.join(args.out_dir, "artifacts.json"), "w") as f:
+        json.dump(
+            {
+                "gan_widths": list(GAN_WIDTHS),
+                "gan_batch": model.BATCH,
+                "gan_z_dim": model.Z_DIM,
+                "node_ns": list(NODE_NS),
+                "node_feat": gnn.FEAT,
+                "node_classes": gnn.CLASSES,
+                "edge_clf": {"n": n, "e": e, "edge_feat": gnn.EDGE_FEAT},
+            },
+            f,
+            indent=1,
+        )
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""L2 JAX models for the downstream GNN experiments (paper §8.1/§8.4/§8.5):
+2-layer GCN and GAT over dense padded adjacencies, plus an edge
+classifier (GCN embeddings + MLP head). The N×N propagation runs through
+the L1 Pallas kernel ``kernels.gcn_layer``.
+
+Artifacts:
+* ``gcn_full_{N}`` / ``gat_full_{N}`` — full-batch node-classification
+  train step (Table 7 pretrain/finetune, Figure 4, Table 4 timing).
+* ``edge_clf_{N}`` — edge-classification train step (IEEE-Fraud task).
+
+All shapes are static; graphs are padded into the bucket by the Rust
+side (rows beyond the real node count are isolated zero-feature nodes
+excluded by the masks).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.gcn_layer import gcn_layer
+
+HIDDEN = 64
+CLASSES = 8
+FEAT = 32
+EDGE_FEAT = 16
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# --------------------------------------------------------------------------
+# manifests / init
+# --------------------------------------------------------------------------
+
+def gcn_manifest():
+    return [
+        ("w1", (FEAT, HIDDEN)),
+        ("w2", (HIDDEN, CLASSES)),
+    ]
+
+
+def gat_manifest():
+    return [
+        ("w1", (FEAT, HIDDEN)),
+        ("a_l1", (HIDDEN,)),
+        ("a_r1", (HIDDEN,)),
+        ("w2", (HIDDEN, CLASSES)),
+        ("a_l2", (CLASSES,)),
+        ("a_r2", (CLASSES,)),
+    ]
+
+
+def edge_clf_manifest():
+    return [
+        ("w1", (FEAT, HIDDEN)),
+        ("w2", (HIDDEN, HIDDEN)),
+        ("head_w1", (2 * HIDDEN + EDGE_FEAT, HIDDEN)),
+        ("head_b1", (HIDDEN,)),
+        ("head_w2", (HIDDEN, 2)),
+        ("head_b2", (2,)),
+    ]
+
+
+def init_params(manifest, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in manifest:
+        if name.endswith("_b1") or name.endswith("_b2"):
+            out.append(np.zeros(shape, dtype=np.float32))
+        elif len(shape) == 1:
+            out.append(rng.normal(0.0, 0.1, size=shape).astype(np.float32))
+        else:
+            fan_in = shape[0]
+            out.append(
+                rng.normal(0.0, np.sqrt(2.0 / fan_in), size=shape).astype(np.float32)
+            )
+    return out
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def gcn_forward(params, a_hat, x):
+    w1, w2 = params
+    h1 = gcn_layer(a_hat, x @ w1)          # fused relu(Â X W1)
+    logits = a_hat @ (h1 @ w2)             # linear output layer
+    return logits
+
+
+def _gat_layer(a_mask, h, w, a_l, a_r, relu: bool):
+    """Single-head dense GAT layer. ``a_mask`` is the 0/1 adjacency with
+    self-loops; attention logits are masked to the edge set."""
+    hw = h @ w
+    el = hw @ a_l                          # (N,)
+    er = hw @ a_r
+    e = jax.nn.leaky_relu(el[:, None] + er[None, :], 0.2)
+    e = jnp.where(a_mask > 0.0, e, -1e9)
+    alpha = jax.nn.softmax(e, axis=1)
+    out = alpha @ hw
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def gat_forward(params, a_mask, x):
+    w1, a_l1, a_r1, w2, a_l2, a_r2 = params
+    h1 = _gat_layer(a_mask, x, w1, a_l1, a_r1, relu=True)
+    return _gat_layer(a_mask, h1, w2, a_l2, a_r2, relu=False)
+
+
+def masked_ce(logits, labels_1h, mask):
+    logp = jax.nn.log_softmax(logits, axis=1)
+    per = -jnp.sum(labels_1h * logp, axis=1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per * mask) / denom
+
+
+def masked_acc(logits, labels_1h, mask):
+    pred = jnp.argmax(logits, axis=1)
+    truth = jnp.argmax(labels_1h, axis=1)
+    hit = (pred == truth).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(hit * mask) / denom
+
+
+# --------------------------------------------------------------------------
+# train steps (AOT entry points)
+# --------------------------------------------------------------------------
+
+def _adam(params, m, v, grads, t, lr):
+    t1 = t + 1.0
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / (1.0 - ADAM_B1 ** t1)
+        vhat = vi / (1.0 - ADAM_B2 ** t1)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+def make_node_clf_step(kind: str):
+    """kind ∈ {gcn, gat}: train_step(params…, m…, v…, t, a, x, y1h,
+    train_mask, val_mask, lr) → (params…, m…, v…, loss, train_acc,
+    val_acc)."""
+    manifest = gcn_manifest() if kind == "gcn" else gat_manifest()
+    fwd = gcn_forward if kind == "gcn" else gat_forward
+    k = len(manifest)
+
+    def step(*args):
+        params = list(args[:k])
+        m = list(args[k:2 * k])
+        v = list(args[2 * k:3 * k])
+        t, a, x, y1h, train_mask, val_mask, lr = args[3 * k:]
+
+        def obj(ps):
+            return masked_ce(fwd(list(ps), a, x), y1h, train_mask)
+
+        loss, grads = jax.value_and_grad(obj)(tuple(params))
+        new_p, new_m, new_v = _adam(params, m, v, list(grads), t, lr)
+        logits = fwd(new_p, a, x)
+        return tuple(
+            new_p + new_m + new_v
+            + [loss, masked_acc(logits, y1h, train_mask), masked_acc(logits, y1h, val_mask)]
+        )
+
+    return step
+
+
+def node_clf_example_args(kind: str, n: int):
+    f32 = jnp.float32
+    manifest = gcn_manifest() if kind == "gcn" else gat_manifest()
+    p = [jax.ShapeDtypeStruct(s, f32) for _, s in manifest]
+    rest = [
+        jax.ShapeDtypeStruct((), f32),            # t
+        jax.ShapeDtypeStruct((n, n), f32),        # a (normalized or mask)
+        jax.ShapeDtypeStruct((n, FEAT), f32),     # x
+        jax.ShapeDtypeStruct((n, CLASSES), f32),  # y one-hot
+        jax.ShapeDtypeStruct((n,), f32),          # train mask
+        jax.ShapeDtypeStruct((n,), f32),          # val mask
+        jax.ShapeDtypeStruct((), f32),            # lr
+    ]
+    return p + p + p + rest
+
+
+def edge_clf_forward(params, a_hat, x, src_idx, dst_idx, edge_feat):
+    w1, w2, hw1, hb1, hw2, hb2 = params
+    h1 = gcn_layer(a_hat, x @ w1)
+    h2 = gcn_layer(a_hat, h1 @ w2)
+    hs = jnp.take(h2, src_idx, axis=0)
+    hd = jnp.take(h2, dst_idx, axis=0)
+    z = jnp.concatenate([hs, hd, edge_feat], axis=1)
+    z = jnp.maximum(z @ hw1 + hb1, 0.0)
+    return z @ hw2 + hb2
+
+
+def make_edge_clf_step():
+    """train_step(params…, m…, v…, t, a, x, src, dst, efeat, y1h,
+    train_mask, val_mask, lr) → (params…, m…, v…, loss, train_acc,
+    val_acc)."""
+    k = len(edge_clf_manifest())
+
+    def step(*args):
+        params = list(args[:k])
+        m = list(args[k:2 * k])
+        v = list(args[2 * k:3 * k])
+        t, a, x, src, dst, ef, y1h, train_mask, val_mask, lr = args[3 * k:]
+
+        def obj(ps):
+            return masked_ce(edge_clf_forward(list(ps), a, x, src, dst, ef), y1h, train_mask)
+
+        loss, grads = jax.value_and_grad(obj)(tuple(params))
+        new_p, new_m, new_v = _adam(params, m, v, list(grads), t, lr)
+        logits = edge_clf_forward(new_p, a, x, src, dst, ef)
+        return tuple(
+            new_p + new_m + new_v
+            + [loss, masked_acc(logits, y1h, train_mask), masked_acc(logits, y1h, val_mask)]
+        )
+
+    return step
+
+
+def edge_clf_example_args(n: int, e: int):
+    f32 = jnp.float32
+    i32 = jnp.int32
+    p = [jax.ShapeDtypeStruct(s, f32) for _, s in edge_clf_manifest()]
+    rest = [
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((n, FEAT), f32),
+        jax.ShapeDtypeStruct((e,), i32),
+        jax.ShapeDtypeStruct((e,), i32),
+        jax.ShapeDtypeStruct((e, EDGE_FEAT), f32),
+        jax.ShapeDtypeStruct((e, 2), f32),
+        jax.ShapeDtypeStruct((e,), f32),
+        jax.ShapeDtypeStruct((e,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    ]
+    return p + p + p + rest

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: fused dense GCN propagation.
+
+The GNN experiments (paper §8.1/§8.4) run 2-layer GCN/GAT models; on a
+dense padded adjacency the hot spot is the N×N propagation
+``relu(Â @ (H W))``. The H @ W projection is cheap (N×F×H) and stays in
+jnp; this kernel tiles the propagation:
+
+    out[i, j] = relu( Σ_k a_hat[i, k] · hw[k, j] )
+
+Grid over (row tiles × col tiles) with a K-loop over Â row slabs —
+identical scheduling story to ``resnet_block`` (see that module for the
+TPU mapping rationale). interpret=True on this CPU image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .resnet_block import _pick_tile
+
+
+def _kernel(a_ref, hw_ref, o_ref, *, n_k_tiles: int, bk: int):
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for k in range(n_k_tiles):
+        ak = a_ref[:, k * bk:(k + 1) * bk]
+        hk = hw_ref[k * bk:(k + 1) * bk, :]
+        acc = acc + jnp.dot(ak, hk, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(acc, 0.0)
+
+
+def _forward(a_hat, hw):
+    n, k_in = a_hat.shape
+    k2, h = hw.shape
+    assert k_in == k2, (a_hat.shape, hw.shape)
+    bm = _pick_tile(n, 256)
+    bn = _pick_tile(h, 128)
+    bk = _pick_tile(k_in, 256)
+    n_k_tiles = k_in // bk
+    kernel = functools.partial(_kernel, n_k_tiles=n_k_tiles, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bm, h // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((k_in, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, h), jnp.float32),
+        interpret=True,
+    )(a_hat, hw)
+
+
+@jax.custom_vjp
+def gcn_layer(a_hat, hw):
+    """Fused ``relu(a_hat @ hw)`` (see module docstring)."""
+    return _forward(a_hat, hw)
+
+
+def _fwd(a_hat, hw):
+    out = _forward(a_hat, hw)
+    return out, (a_hat, hw, out)
+
+
+def _bwd(res, g):
+    a_hat, hw, out = res
+    g_pre = jnp.where(out > 0.0, g, 0.0)
+    da = g_pre @ hw.T
+    dhw = a_hat.T @ g_pre
+    return da, dhw
+
+
+gcn_layer.defvjp(_fwd, _bwd)

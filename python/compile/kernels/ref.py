@@ -1,0 +1,33 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package must match its reference here to
+float32 tolerance; ``python/tests/test_kernels.py`` enforces it with
+hypothesis sweeps over shapes.
+"""
+
+import jax.numpy as jnp
+
+
+def resnet_block_ref(x, xn, w, b):
+    """Reference for the fused ResNet block tail (paper §3.3):
+
+        out = x + relu(xn @ w + b)
+
+    ``xn`` is the batch-normalized input (BN runs in the surrounding jnp
+    graph because its batch statistics are a global reduction); the fused
+    kernel covers the FLOPs-dominant matmul + bias + ReLU + residual.
+    Dropout is identity at artifact time (see DESIGN.md).
+    """
+    return x + jnp.maximum(xn @ w + b, 0.0)
+
+
+def gcn_layer_ref(a_hat, hw):
+    """Reference for the fused GCN propagation (paper §8.1 models):
+
+        out = relu(a_hat @ hw)
+
+    ``a_hat`` is the normalized dense adjacency and ``hw = h @ w`` the
+    pre-projected features (the projection is cheap; the N×N propagation
+    is the hot spot).
+    """
+    return jnp.maximum(a_hat @ hw, 0.0)

@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: fused ResNet-block tail for the tabular GAN.
+
+The paper's feature GAN stacks ``ResNetBlock(x) = x + Dropout(ReLU(FC(
+BatchNorm(x))))`` (§3.3). BatchNorm's batch statistics are a global
+reduction, so it stays in the surrounding jnp graph; this kernel fuses the
+FLOPs-dominant remainder — matmul, bias, ReLU, residual add — into one
+VMEM-resident pass:
+
+    out[i, j] = x[i, j] + relu( Σ_k xn[i, k] · w[k, j] + b[j] )
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles (batch ×
+out-features); each program instance keeps an (BM × BN) accumulator in
+VMEM and loops over K-tiles of ``xn`` and ``w``, feeding MXU-shaped
+(128-aligned when the problem allows) matmul tiles. On this CPU image the
+kernel runs under ``interpret=True`` (Mosaic custom-calls cannot execute
+on the CPU PJRT plugin); correctness is enforced against ``ref.py``.
+
+Backward: ``jax.custom_vjp`` with a hand-derived jnp backward — pallas
+forward + analytic VJP keeps the train-step artifact differentiable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(n: int, cap: int) -> int:
+    """Largest divisor of n that is ≤ cap (tiles must divide the dims)."""
+    for t in range(min(n, cap), 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+def _kernel(x_ref, xn_ref, w_ref, b_ref, o_ref, *, n_k_tiles: int, bk: int):
+    """One (BM × BN) output tile: K-loop accumulate, then bias+relu+res."""
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    for k in range(n_k_tiles):
+        xk = xn_ref[:, k * bk:(k + 1) * bk]
+        wk = w_ref[k * bk:(k + 1) * bk, :]
+        acc = acc + jnp.dot(xk, wk, preferred_element_type=jnp.float32)
+    o_ref[...] = x_ref[...] + jnp.maximum(acc + b_ref[...], 0.0)
+
+
+def _forward(x, xn, w, b):
+    m, d = x.shape
+    k_in, d_out = w.shape
+    assert xn.shape == (m, k_in) and d == d_out, (x.shape, xn.shape, w.shape)
+    bm = _pick_tile(m, 128)
+    bn = _pick_tile(d_out, 128)
+    bk = _pick_tile(k_in, 128)
+    n_k_tiles = k_in // bk
+    grid = (m // bm, d_out // bn)
+    kernel = functools.partial(_kernel, n_k_tiles=n_k_tiles, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),      # x (residual)
+            pl.BlockSpec((bm, k_in), lambda i, j: (i, 0)),    # xn rows
+            pl.BlockSpec((k_in, bn), lambda i, j: (0, j)),    # w cols
+            pl.BlockSpec((bn,), lambda i, j: (j,)),           # bias slice
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), jnp.float32),
+        interpret=True,
+    )(x, xn, w, b)
+
+
+@jax.custom_vjp
+def resnet_block(x, xn, w, b):
+    """Fused ``x + relu(xn @ w + b)`` (see module docstring)."""
+    return _forward(x, xn, w, b)
+
+
+def _fwd(x, xn, w, b):
+    out = _forward(x, xn, w, b)
+    return out, (x, xn, w, b, out)
+
+
+def _bwd(res, g):
+    x, xn, w, b, out = res
+    # relu mask from the forward: active where out - x > 0
+    mask = (out - x) > 0.0
+    g_pre = jnp.where(mask, g, 0.0)
+    dx = g
+    dxn = g_pre @ w.T
+    dw = xn.T @ g_pre
+    db = jnp.sum(g_pre, axis=0)
+    return dx, dxn, dw, db
+
+
+resnet_block.defvjp(_fwd, _bwd)
+
+
+def vmem_estimate(m: int, k: int, n: int, bm: int = 128, bn: int = 128,
+                  bk: int = 128) -> dict:
+    """Static VMEM/MXU estimate for DESIGN.md §Perf (interpret=True gives
+    no hardware counters; structure is what we can reason about).
+
+    Returns bytes held in VMEM per program instance and the MXU tile
+    utilization (fraction of a 128×128 systolic pass that is useful work).
+    """
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    bytes_vmem = 4 * (bm * bn       # accumulator + x tile (reused)
+                      + bm * bk     # xn K-tile
+                      + bk * bn     # w K-tile
+                      + bn)         # bias
+    mxu_util = (bm / 128) * (bn / 128)
+    return {"vmem_bytes": bytes_vmem, "mxu_tile_utilization": min(mxu_util, 1.0)}

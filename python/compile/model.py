@@ -1,0 +1,200 @@
+"""L2 JAX model: the CTGAN-style tabular feature GAN (paper §3.3).
+
+Generator and discriminator are stacks of the paper's ResNet blocks
+``x + Dropout(ReLU(FC(BatchNorm(x))))`` whose fused tail is the L1 Pallas
+kernel (``kernels.resnet_block``); BatchNorm statistics are computed in
+the surrounding graph. Both networks train jointly with the
+non-saturating GAN objective (paper eq. 13/14) under Adam.
+
+Parameters cross the Rust boundary as a *flat ordered list* of f32
+arrays; the manifest (name, shape) list is emitted next to each artifact
+so the Rust runtime can initialize, pack and unpack them without any
+Python at run time.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.resnet_block import resnet_block
+
+Z_DIM = 64
+BATCH = 256
+N_BLOCKS = 2
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+BN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# parameter manifest
+# --------------------------------------------------------------------------
+
+def gan_manifest(width: int, hidden: int | None = None):
+    """Ordered (name, shape) list for the GAN parameter flat-pack."""
+    h = hidden or max(width, 64)
+    spec = []
+
+    def net(prefix, d_in, d_out):
+        spec.append((f"{prefix}_fc_in_w", (d_in, h)))
+        spec.append((f"{prefix}_fc_in_b", (h,)))
+        for i in range(N_BLOCKS):
+            spec.append((f"{prefix}_blk{i}_bn_scale", (h,)))
+            spec.append((f"{prefix}_blk{i}_bn_bias", (h,)))
+            spec.append((f"{prefix}_blk{i}_fc_w", (h, h)))
+            spec.append((f"{prefix}_blk{i}_fc_b", (h,)))
+        spec.append((f"{prefix}_fc_out_w", (h, d_out)))
+        spec.append((f"{prefix}_fc_out_b", (d_out,)))
+
+    net("g", Z_DIM, width)
+    net("d", width, 1)
+    return spec
+
+
+def init_gan_params(width: int, seed: int = 0):
+    """He-initialized flat parameter list in manifest order (numpy, so the
+    values can be serialized for the Rust side)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in gan_manifest(width):
+        if name.endswith("_w"):
+            fan_in = shape[0]
+            params.append(
+                rng.normal(0.0, np.sqrt(2.0 / fan_in), size=shape).astype(np.float32)
+            )
+        elif name.endswith("bn_scale"):
+            params.append(np.ones(shape, dtype=np.float32))
+        else:
+            params.append(np.zeros(shape, dtype=np.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# networks
+# --------------------------------------------------------------------------
+
+def _batchnorm(x, scale, bias):
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.var(x, axis=0, keepdims=True)
+    xn = (x - mu) / jnp.sqrt(var + BN_EPS)
+    return xn * scale + bias
+
+
+def _stack(params, offset, x):
+    """Shared G/D trunk: FC in → N ResNet blocks (Pallas tail) → FC out.
+
+    Returns (output, next_offset)."""
+    i = offset
+    w, b = params[i], params[i + 1]
+    i += 2
+    h = jnp.maximum(x @ w + b, 0.0)
+    for _ in range(N_BLOCKS):
+        bn_s, bn_b, fc_w, fc_b = params[i], params[i + 1], params[i + 2], params[i + 3]
+        i += 4
+        hn = _batchnorm(h, bn_s, bn_b)
+        h = resnet_block(h, hn, fc_w, fc_b)
+    w, b = params[i], params[i + 1]
+    i += 2
+    return h @ w + b, i
+
+
+def generator(params, z):
+    """G: z → tanh(trunk(z)) ∈ [−1, 1]^width (α slots and soft one-hots)."""
+    out, _ = _stack(params, 0, z)
+    return jnp.tanh(out)
+
+
+def discriminator(params, g_len, x):
+    """D: x → logit."""
+    out, _ = _stack(params, g_len, x)
+    return out[:, 0]
+
+
+def _g_len(width: int) -> int:
+    return len([n for n, _ in gan_manifest(width) if n.startswith("g_")])
+
+
+# --------------------------------------------------------------------------
+# training step (AOT entry point)
+# --------------------------------------------------------------------------
+
+def gan_losses(params, g_len, real, z):
+    fake = generator(params[:g_len], z)
+    logit_real = discriminator(params, g_len, real)
+    logit_fake = discriminator(params, g_len, fake)
+    d_loss = jnp.mean(jax.nn.softplus(-logit_real)) + jnp.mean(
+        jax.nn.softplus(logit_fake)
+    )
+    g_loss = jnp.mean(jax.nn.softplus(-logit_fake))
+    return d_loss, g_loss
+
+
+def make_gan_train_step(width: int):
+    """Build train_step(params…, m…, v…, t, real, z, lr) → (params…, m…,
+    v…, d_loss, g_loss) with flat-list params (manifest order)."""
+    g_len = _g_len(width)
+    n_params = len(gan_manifest(width))
+
+    def train_step(*args):
+        params = list(args[:n_params])
+        m = list(args[n_params:2 * n_params])
+        v = list(args[2 * n_params:3 * n_params])
+        t, real, z, lr = args[3 * n_params:]
+
+        def d_obj(d_part):
+            full = params[:g_len] + list(d_part)
+            return gan_losses(full, g_len, real, z)[0]
+
+        def g_obj(g_part):
+            full = list(g_part) + params[g_len:]
+            return gan_losses(full, g_len, real, z)[1]
+
+        d_loss, d_grads = jax.value_and_grad(d_obj)(tuple(params[g_len:]))
+        g_loss, g_grads = jax.value_and_grad(g_obj)(tuple(params[:g_len]))
+        grads = list(g_grads) + list(d_grads)
+
+        t1 = t + 1.0
+        new_p, new_m, new_v = [], [], []
+        for p, mi, vi, g in zip(params, m, v, grads):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+            mhat = mi / (1.0 - ADAM_B1 ** t1)
+            vhat = vi / (1.0 - ADAM_B2 ** t1)
+            new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p + new_m + new_v + [d_loss, g_loss])
+
+    return train_step
+
+
+def make_gan_sample(width: int):
+    """Build sample(g_params…, z) → fake batch."""
+    g_len = _g_len(width)
+
+    def sample(*args):
+        g_params = list(args[:g_len])
+        z = args[g_len]
+        return (generator(g_params, z),)
+
+    return sample
+
+
+def gan_example_args(width: int):
+    """ShapeDtypeStructs for lowering the train step."""
+    f32 = jnp.float32
+    manifest = gan_manifest(width)
+    p = [jax.ShapeDtypeStruct(s, f32) for _, s in manifest]
+    scalars = [
+        jax.ShapeDtypeStruct((), f32),            # t
+        jax.ShapeDtypeStruct((BATCH, width), f32),  # real
+        jax.ShapeDtypeStruct((BATCH, Z_DIM), f32),  # z
+        jax.ShapeDtypeStruct((), f32),            # lr
+    ]
+    return p + p + p + scalars
+
+
+def gan_sample_example_args(width: int):
+    f32 = jnp.float32
+    manifest = gan_manifest(width)
+    g = [jax.ShapeDtypeStruct(s, f32) for n, s in manifest if n.startswith("g_")]
+    return g + [jax.ShapeDtypeStruct((BATCH, Z_DIM), f32)]

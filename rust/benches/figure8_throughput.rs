@@ -1,0 +1,10 @@
+//! Bench: regenerates paper Figure 8 (generator throughput curves) —
+//! the headline performance claim; this is the §Perf measurement target.
+//!
+//! Run: `cargo bench --bench figure8_throughput`
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    sgg::experiments::figure8::run(false).expect("figure8");
+    println!("\n[bench] figure8 end-to-end: {:.2}s", t0.elapsed().as_secs_f64());
+}

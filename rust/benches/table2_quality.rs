@@ -1,0 +1,11 @@
+//! Bench: regenerates paper Table 2 (quality vs baselines) end-to-end and
+//! times each (dataset, method) cell. Custom harness (criterion is not
+//! available offline).
+//!
+//! Run: `cargo bench --bench table2_quality`
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    sgg::experiments::table2::run(true).expect("table2");
+    println!("\n[bench] table2 end-to-end: {:.2}s", t0.elapsed().as_secs_f64());
+}

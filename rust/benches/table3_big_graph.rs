@@ -1,0 +1,10 @@
+//! Bench: regenerates paper Table 3 (big-graph generation scaling) —
+//! chunked structural generation + tabular phase timings per scale.
+//!
+//! Run: `cargo bench --bench table3_big_graph`
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    sgg::experiments::table3::run(true).expect("table3");
+    println!("\n[bench] table3 end-to-end: {:.2}s", t0.elapsed().as_secs_f64());
+}

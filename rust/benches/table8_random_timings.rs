@@ -1,0 +1,9 @@
+//! Bench: regenerates paper Table 8 (ER generation timings, E sweep).
+//!
+//! Run: `cargo bench --bench table8_random_timings`
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    sgg::experiments::table8::run(false).expect("table8");
+    println!("\n[bench] table8 end-to-end: {:.2}s", t0.elapsed().as_secs_f64());
+}

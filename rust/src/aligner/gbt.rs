@@ -1,0 +1,454 @@
+//! Gradient-boosted regression trees — the from-scratch stand-in for the
+//! RAPIDS XGBoost models the paper's aligner uses (§3.4, §12).
+//!
+//! Histogram-based: each feature is quantized into ≤64 bins at fit time;
+//! split finding scans bin histograms of (gradient, hessian) sums. Squared
+//! loss (gradient = residual, hessian = 1), depth-limited trees, shrinkage
+//! (learning rate), and L2 leaf regularization `alpha` (the paper sets
+//! alpha = 10, lr = 0.1, max_depth = 5, 100 estimators).
+//!
+//! Categorical targets are handled one-vs-rest by
+//! [`GbtClassifier`], matching "a separate model per feature" in App. 7.
+
+use crate::util::threadpool::{default_threads, par_map};
+
+/// GBT hyper-parameters (defaults from paper §12).
+#[derive(Clone, Debug)]
+pub struct GbtConfig {
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub learning_rate: f64,
+    /// L2 regularization on leaf values (XGBoost's lambda; paper α=10).
+    pub l2: f64,
+    /// Minimum samples to split a node.
+    pub min_samples_split: usize,
+    /// Histogram bins per feature.
+    pub n_bins: usize,
+}
+
+impl Default for GbtConfig {
+    fn default() -> Self {
+        GbtConfig {
+            n_trees: 100,
+            max_depth: 5,
+            learning_rate: 0.1,
+            l2: 10.0,
+            min_samples_split: 8,
+            n_bins: 64,
+        }
+    }
+}
+
+impl GbtConfig {
+    /// Cheaper settings used inside large experiment sweeps.
+    pub fn fast() -> Self {
+        GbtConfig { n_trees: 30, max_depth: 4, ..Default::default() }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    /// Split feature (bin threshold applies to binned values).
+    feature: u16,
+    /// Go left if bin <= threshold.
+    threshold: u8,
+    left: u32,
+    right: u32,
+    /// Leaf value (valid when is_leaf).
+    value: f64,
+    is_leaf: bool,
+}
+
+#[derive(Clone, Debug)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict_binned(&self, row: &[u8]) -> f64 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.is_leaf {
+                return n.value;
+            }
+            i = if row[n.feature as usize] <= n.threshold {
+                n.left as usize
+            } else {
+                n.right as usize
+            };
+        }
+    }
+}
+
+/// Per-feature bin edges learned on the training data.
+#[derive(Clone, Debug)]
+pub struct Binner {
+    /// edges[f] sorted ascending; bin = #edges < x, clamped to n_bins-1.
+    edges: Vec<Vec<f64>>,
+}
+
+impl Binner {
+    /// Quantile binning on column-major access into a row-major matrix.
+    pub fn fit(x: &[f64], n_rows: usize, n_cols: usize, n_bins: usize) -> Binner {
+        let mut edges = Vec::with_capacity(n_cols);
+        for f in 0..n_cols {
+            let mut col: Vec<f64> = (0..n_rows).map(|r| x[r * n_cols + f]).collect();
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            col.dedup();
+            let mut e = Vec::with_capacity(n_bins - 1);
+            if col.len() > 1 {
+                for b in 1..n_bins.min(col.len()) {
+                    let idx = b * (col.len() - 1) / n_bins.min(col.len());
+                    let v = col[idx.min(col.len() - 1)];
+                    if e.last().map(|&l| v > l).unwrap_or(true) {
+                        e.push(v);
+                    }
+                }
+            }
+            edges.push(e);
+        }
+        Binner { edges }
+    }
+
+    /// Bin a full row-major matrix.
+    pub fn transform(&self, x: &[f64], n_rows: usize, n_cols: usize) -> Vec<u8> {
+        let mut out = vec![0u8; n_rows * n_cols];
+        for r in 0..n_rows {
+            for f in 0..n_cols {
+                let v = x[r * n_cols + f];
+                let e = &self.edges[f];
+                // binary search: number of edges <= v
+                let bin = e.partition_point(|&t| t < v);
+                out[r * n_cols + f] = bin.min(255) as u8;
+            }
+        }
+        out
+    }
+
+    fn n_cols(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// Gradient-boosted regressor with squared loss.
+#[derive(Clone, Debug)]
+pub struct GbtRegressor {
+    binner: Binner,
+    trees: Vec<Tree>,
+    base: f64,
+    lr: f64,
+    n_cols: usize,
+}
+
+impl GbtRegressor {
+    /// Fit on a row-major `n_rows × n_cols` matrix and target vector.
+    pub fn fit(x: &[f64], y: &[f64], n_cols: usize, cfg: &GbtConfig) -> GbtRegressor {
+        let n_rows = y.len();
+        assert_eq!(x.len(), n_rows * n_cols, "x shape mismatch");
+        let binner = Binner::fit(x, n_rows, n_cols, cfg.n_bins);
+        let xb = binner.transform(x, n_rows, n_cols);
+        let base = crate::util::stats::mean(y);
+        let mut pred = vec![base; n_rows];
+        let mut trees = Vec::with_capacity(cfg.n_trees);
+        let mut grad = vec![0.0f64; n_rows];
+        for _ in 0..cfg.n_trees {
+            for i in 0..n_rows {
+                grad[i] = y[i] - pred[i]; // negative gradient of squared loss
+            }
+            let tree = build_tree(&xb, &grad, n_rows, n_cols, cfg);
+            for i in 0..n_rows {
+                pred[i] += cfg.learning_rate * tree.predict_binned(&xb[i * n_cols..(i + 1) * n_cols]);
+            }
+            trees.push(tree);
+        }
+        GbtRegressor { binner, trees, base, lr: cfg.learning_rate, n_cols }
+    }
+
+    /// Predict a single row.
+    pub fn predict_row(&self, row: &[f64]) -> f64 {
+        let binned = self.binner.transform(row, 1, self.n_cols);
+        self.base
+            + self.lr
+                * self
+                    .trees
+                    .iter()
+                    .map(|t| t.predict_binned(&binned))
+                    .sum::<f64>()
+    }
+
+    /// Predict many rows (row-major), parallelized.
+    pub fn predict(&self, x: &[f64], n_rows: usize) -> Vec<f64> {
+        let xb = self.binner.transform(x, n_rows, self.n_cols);
+        let threads = default_threads();
+        let chunk = n_rows.div_ceil(threads.max(1)).max(1);
+        let n_chunks = n_rows.div_ceil(chunk);
+        let parts = par_map(n_chunks, threads, |ci| {
+            let lo = ci * chunk;
+            let hi = ((ci + 1) * chunk).min(n_rows);
+            let mut out = Vec::with_capacity(hi - lo);
+            for r in lo..hi {
+                let row = &xb[r * self.n_cols..(r + 1) * self.n_cols];
+                let mut v = self.base;
+                for t in &self.trees {
+                    v += self.lr * t.predict_binned(row);
+                }
+                out.push(v);
+            }
+            out
+        });
+        parts.concat()
+    }
+}
+
+/// One-vs-rest GBT classifier for categorical targets.
+#[derive(Clone, Debug)]
+pub struct GbtClassifier {
+    models: Vec<GbtRegressor>,
+}
+
+impl GbtClassifier {
+    /// Fit `cardinality` one-vs-rest regressors.
+    pub fn fit(x: &[f64], y: &[u32], n_cols: usize, cardinality: u32, cfg: &GbtConfig) -> Self {
+        let models = (0..cardinality)
+            .map(|c| {
+                let target: Vec<f64> =
+                    y.iter().map(|&v| if v == c { 1.0 } else { 0.0 }).collect();
+                GbtRegressor::fit(x, &target, n_cols, cfg)
+            })
+            .collect();
+        GbtClassifier { models }
+    }
+
+    /// Per-class scores for many rows: row-major `n_rows × cardinality`.
+    pub fn predict_scores(&self, x: &[f64], n_rows: usize) -> Vec<f64> {
+        let k = self.models.len();
+        let mut out = vec![0.0f64; n_rows * k];
+        for (c, m) in self.models.iter().enumerate() {
+            let scores = m.predict(x, n_rows);
+            for r in 0..n_rows {
+                out[r * k + c] = scores[r];
+            }
+        }
+        out
+    }
+
+    /// Argmax class per row.
+    pub fn predict(&self, x: &[f64], n_rows: usize) -> Vec<u32> {
+        let k = self.models.len();
+        let scores = self.predict_scores(x, n_rows);
+        (0..n_rows)
+            .map(|r| {
+                let row = &scores[r * k..(r + 1) * k];
+                let mut best = 0u32;
+                let mut bv = f64::NEG_INFINITY;
+                for (c, &s) in row.iter().enumerate() {
+                    if s > bv {
+                        bv = s;
+                        best = c as u32;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+/// Grow one tree on binned features against the gradient (residual).
+fn build_tree(xb: &[u8], grad: &[f64], n_rows: usize, n_cols: usize, cfg: &GbtConfig) -> Tree {
+    let mut nodes: Vec<Node> = Vec::new();
+    let rows: Vec<u32> = (0..n_rows as u32).collect();
+    grow(&mut nodes, xb, grad, rows, n_cols, 0, cfg);
+    Tree { nodes }
+}
+
+fn leaf_value(grad_sum: f64, count: f64, l2: f64) -> f64 {
+    grad_sum / (count + l2)
+}
+
+fn grow(
+    nodes: &mut Vec<Node>,
+    xb: &[u8],
+    grad: &[f64],
+    rows: Vec<u32>,
+    n_cols: usize,
+    depth: usize,
+    cfg: &GbtConfig,
+) -> u32 {
+    let idx = nodes.len() as u32;
+    let g_total: f64 = rows.iter().map(|&r| grad[r as usize]).sum();
+    let n = rows.len() as f64;
+    nodes.push(Node {
+        feature: 0,
+        threshold: 0,
+        left: 0,
+        right: 0,
+        value: leaf_value(g_total, n, cfg.l2),
+        is_leaf: true,
+    });
+    if depth >= cfg.max_depth || rows.len() < cfg.min_samples_split {
+        return idx;
+    }
+
+    // histogram split search over all features
+    let mut best_gain = 1e-12;
+    let mut best: Option<(u16, u8)> = None;
+    let parent_score = g_total * g_total / (n + cfg.l2);
+    let mut hist_g = vec![0.0f64; cfg.n_bins];
+    let mut hist_n = vec![0.0f64; cfg.n_bins];
+    for f in 0..n_cols {
+        hist_g.iter_mut().for_each(|v| *v = 0.0);
+        hist_n.iter_mut().for_each(|v| *v = 0.0);
+        for &r in &rows {
+            let b = xb[r as usize * n_cols + f] as usize;
+            let b = b.min(cfg.n_bins - 1);
+            hist_g[b] += grad[r as usize];
+            hist_n[b] += 1.0;
+        }
+        let mut gl = 0.0;
+        let mut nl = 0.0;
+        for t in 0..cfg.n_bins - 1 {
+            gl += hist_g[t];
+            nl += hist_n[t];
+            let nr = n - nl;
+            if nl < 1.0 || nr < 1.0 {
+                continue;
+            }
+            let gr = g_total - gl;
+            let gain = gl * gl / (nl + cfg.l2) + gr * gr / (nr + cfg.l2) - parent_score;
+            if gain > best_gain {
+                best_gain = gain;
+                best = Some((f as u16, t as u8));
+            }
+        }
+    }
+
+    if let Some((f, t)) = best {
+        let (mut lrows, mut rrows) = (Vec::new(), Vec::new());
+        for &r in &rows {
+            if xb[r as usize * n_cols + f as usize] <= t {
+                lrows.push(r);
+            } else {
+                rrows.push(r);
+            }
+        }
+        if lrows.is_empty() || rrows.is_empty() {
+            return idx;
+        }
+        let left = grow(nodes, xb, grad, lrows, n_cols, depth + 1, cfg);
+        let right = grow(nodes, xb, grad, rrows, n_cols, depth + 1, cfg);
+        let node = &mut nodes[idx as usize];
+        node.feature = f;
+        node.threshold = t;
+        node.left = left;
+        node.right = right;
+        node.is_leaf = false;
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn make_xy(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        // y = 3*x0 - 2*x1 + noise, x2 irrelevant
+        let mut rng = Pcg64::new(seed);
+        let mut x = Vec::with_capacity(n * 3);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let a = rng.normal();
+            let b = rng.normal();
+            let c = rng.normal();
+            x.extend_from_slice(&[a, b, c]);
+            y.push(3.0 * a - 2.0 * b + 0.1 * rng.normal());
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_linear_function() {
+        let (x, y) = make_xy(2000, 1);
+        let cfg = GbtConfig { n_trees: 60, ..Default::default() };
+        let m = GbtRegressor::fit(&x, &y, 3, &cfg);
+        let pred = m.predict(&x, 2000);
+        let mse: f64 =
+            pred.iter().zip(&y).map(|(p, t)| (p - t) * (p - t)).sum::<f64>() / y.len() as f64;
+        let var = crate::util::stats::variance(&y);
+        assert!(mse < 0.2 * var, "mse={mse} var={var}");
+    }
+
+    #[test]
+    fn generalizes_to_test_set() {
+        let (xtr, ytr) = make_xy(3000, 2);
+        let (xte, yte) = make_xy(500, 3);
+        let m = GbtRegressor::fit(&xtr, &ytr, 3, &GbtConfig::fast());
+        let pred = m.predict(&xte, 500);
+        let mse: f64 =
+            pred.iter().zip(&yte).map(|(p, t)| (p - t) * (p - t)).sum::<f64>() / 500.0;
+        let var = crate::util::stats::variance(&yte);
+        assert!(mse < 0.4 * var, "mse={mse} var={var}");
+    }
+
+    #[test]
+    fn predict_row_matches_batch() {
+        let (x, y) = make_xy(500, 4);
+        let m = GbtRegressor::fit(&x, &y, 3, &GbtConfig::fast());
+        let batch = m.predict(&x, 500);
+        for r in [0usize, 13, 499] {
+            let single = m.predict_row(&x[r * 3..(r + 1) * 3]);
+            assert!((single - batch[r]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let x: Vec<f64> = (0..300).map(|i| i as f64).collect();
+        let y = vec![5.0; 100];
+        let m = GbtRegressor::fit(&x, &y, 3, &GbtConfig::fast());
+        let p = m.predict_row(&[1.0, 2.0, 3.0]);
+        assert!((p - 5.0).abs() < 0.2, "p={p}");
+    }
+
+    #[test]
+    fn classifier_separates_classes() {
+        let mut rng = Pcg64::new(5);
+        let n = 1200;
+        let mut x = Vec::with_capacity(n * 2);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cls = rng.below(3) as u32;
+            let cx = [0.0, 4.0, -4.0][cls as usize] + rng.normal() * 0.5;
+            let cy = [3.0, -3.0, 0.0][cls as usize] + rng.normal() * 0.5;
+            x.extend_from_slice(&[cx, cy]);
+            y.push(cls);
+        }
+        let m = GbtClassifier::fit(&x, &y, 2, 3, &GbtConfig::fast());
+        let pred = m.predict(&x, n);
+        let acc = pred.iter().zip(&y).filter(|(a, b)| a == b).count() as f64 / n as f64;
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let (x, y) = make_xy(500, 7);
+        let cfg = GbtConfig { n_trees: 1, max_depth: 2, ..Default::default() };
+        let m = GbtRegressor::fit(&x, &y, 3, &cfg);
+        // depth-2 tree has at most 7 nodes
+        assert!(m.trees[0].nodes.len() <= 7);
+    }
+
+    #[test]
+    fn binner_monotone() {
+        let x: Vec<f64> = vec![1.0, 5.0, 2.0, 9.0, 3.0, 7.0];
+        let b = Binner::fit(&x, 6, 1, 4);
+        let t = b.transform(&x, 6, 1);
+        // larger values never get smaller bins
+        let mut pairs: Vec<(f64, u8)> = x.iter().copied().zip(t.iter().copied()).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in pairs.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+}

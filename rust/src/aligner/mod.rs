@@ -1,0 +1,70 @@
+//! The aligner (paper §3.4 + Appendix 7): maps generated feature rows onto
+//! the generated structure so that structure↔feature correlations of the
+//! original graph are preserved.
+//!
+//! Training: extract per-node structural features F_S (degree, PageRank,
+//! Katz centrality, clustering coefficient — [`structfeat`]; optionally
+//! node2vec embeddings — [`node2vec`]) from the *original* graph, then
+//! train one gradient-boosted-tree regressor/classifier per feature column
+//! ([`gbt`], the from-scratch XGBoost stand-in) to predict the column from
+//! (F_S(src), F_S(dst)) for edge features or F_S(v) for node features.
+//!
+//! Generation: compute the same structural features on the *generated*
+//! graph, predict each edge/node's expected features, and rank-assign the
+//! generated feature rows by similarity (eq. 17–19) — [`ranking`].
+
+pub mod gbt;
+pub mod node2vec;
+pub mod ranking;
+pub mod structfeat;
+
+use crate::featgen::FeatureTable;
+use crate::graph::EdgeList;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+pub use ranking::LearnedAligner;
+pub use structfeat::{StructFeatConfig, StructFeatures};
+
+/// Which aligner a pipeline uses (ablation axis of Table 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlignKind {
+    /// Learned XGBoost-style aligner ("xgboost").
+    Learned,
+    /// Random assignment ("random").
+    Random,
+}
+
+impl std::str::FromStr for AlignKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "xgboost" | "learned" | "gbt" => Ok(AlignKind::Learned),
+            "random" => Ok(AlignKind::Random),
+            other => Err(format!("unknown aligner `{other}`")),
+        }
+    }
+}
+
+/// Randomly permute generated rows onto the structure — the trivial
+/// aligner of §3.4 and the "random" arm of Table 6.
+pub fn random_alignment(
+    generated: &FeatureTable,
+    n_targets: usize,
+    seed: u64,
+) -> Result<FeatureTable> {
+    let n = generated.n_rows();
+    let mut rng = Pcg64::new(seed);
+    let perm: Vec<usize> = (0..n_targets)
+        .map(|i| if n == 0 { 0 } else if i < n { i } else { rng.below_usize(n) })
+        .collect();
+    let mut shuffled = perm;
+    rng.shuffle(&mut shuffled);
+    Ok(generated.gather(&shuffled))
+}
+
+/// Convenience: structural features with the paper's default set
+/// (degrees, PageRank, Katz — Table 9's best combination).
+pub fn default_struct_features(edges: &EdgeList) -> StructFeatures {
+    structfeat::compute(edges, &StructFeatConfig::default())
+}

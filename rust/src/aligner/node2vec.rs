@@ -1,0 +1,251 @@
+//! node2vec embeddings (Grover & Leskovec 2016) — the alternative
+//! structural feature set compared in paper Table 9.
+//!
+//! Biased second-order random walks (return parameter p, in-out q) over
+//! the undirected CSR, followed by skip-gram with negative sampling
+//! trained by SGD. Scaled-down defaults (dim 16) since the aligner only
+//! consumes the embeddings as GBT input features.
+
+use crate::graph::Csr;
+use crate::util::rng::Pcg64;
+
+/// node2vec hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct Node2VecConfig {
+    /// Embedding dimension.
+    pub dim: usize,
+    /// Walks per node.
+    pub walks_per_node: usize,
+    /// Walk length.
+    pub walk_length: usize,
+    /// Skip-gram window.
+    pub window: usize,
+    /// Negative samples per positive.
+    pub negatives: usize,
+    /// SGD epochs over the walk corpus.
+    pub epochs: usize,
+    /// Return parameter p (likelihood of revisiting the previous node).
+    pub p: f64,
+    /// In-out parameter q (BFS- vs DFS-like exploration).
+    pub q: f64,
+    /// Learning rate.
+    pub lr: f32,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for Node2VecConfig {
+    fn default() -> Self {
+        Node2VecConfig {
+            dim: 16,
+            walks_per_node: 4,
+            walk_length: 20,
+            window: 4,
+            negatives: 3,
+            epochs: 2,
+            p: 1.0,
+            q: 1.0,
+            lr: 0.025,
+            seed: 0x6e32_7665, // "n2ve"
+        }
+    }
+}
+
+/// One biased walk from `start`.
+fn walk(csr: &Csr, start: u64, cfg: &Node2VecConfig, rng: &mut Pcg64) -> Vec<u64> {
+    let mut path = Vec::with_capacity(cfg.walk_length);
+    path.push(start);
+    let mut prev: Option<u64> = None;
+    let mut cur = start;
+    for _ in 1..cfg.walk_length {
+        let nbrs = csr.neighbors(cur);
+        if nbrs.is_empty() {
+            break;
+        }
+        // biased choice: weight 1/p to return, 1 for common neighbors of
+        // prev, 1/q otherwise (rejection sampling over uniform proposals)
+        let next = if let Some(pv) = prev {
+            let max_w = (1.0 / cfg.p).max(1.0).max(1.0 / cfg.q);
+            let mut chosen = None;
+            for _ in 0..16 {
+                let cand = nbrs[rng.below_usize(nbrs.len())];
+                let w = if cand == pv {
+                    1.0 / cfg.p
+                } else if csr.has_edge(cand, pv) {
+                    1.0
+                } else {
+                    1.0 / cfg.q
+                };
+                if rng.f64() < w / max_w {
+                    chosen = Some(cand);
+                    break;
+                }
+            }
+            chosen.unwrap_or(nbrs[rng.below_usize(nbrs.len())])
+        } else {
+            nbrs[rng.below_usize(nbrs.len())]
+        };
+        path.push(next);
+        prev = Some(cur);
+        cur = next;
+    }
+    path
+}
+
+/// Train node2vec embeddings; returns a row-major `n_nodes × dim` f32
+/// matrix.
+pub fn node2vec_embeddings(csr: &Csr, cfg: &Node2VecConfig) -> Vec<f32> {
+    let n = csr.n_nodes as usize;
+    let dim = cfg.dim;
+    let mut rng = Pcg64::new(cfg.seed);
+    // init small random
+    let mut emb: Vec<f32> = (0..n * dim).map(|_| (rng.f32() - 0.5) / dim as f32).collect();
+    let mut ctx: Vec<f32> = vec![0.0; n * dim];
+    if n == 0 {
+        return emb;
+    }
+
+    // degree-weighted negative table (unigram^0.75)
+    let weights: Vec<f64> = (0..n)
+        .map(|v| (csr.degree(v as u64) as f64 + 1.0).powf(0.75))
+        .collect();
+    let neg_table = crate::util::rng::AliasTable::new(&weights);
+
+    for _ in 0..cfg.epochs {
+        for start in 0..n as u64 {
+            for _ in 0..cfg.walks_per_node {
+                let path = walk(csr, start, cfg, &mut rng);
+                for (i, &center) in path.iter().enumerate() {
+                    let lo = i.saturating_sub(cfg.window);
+                    let hi = (i + cfg.window + 1).min(path.len());
+                    for &context in &path[lo..hi] {
+                        if context == center {
+                            continue;
+                        }
+                        sgns_update(
+                            &mut emb,
+                            &mut ctx,
+                            center as usize,
+                            context as usize,
+                            true,
+                            dim,
+                            cfg.lr,
+                        );
+                        for _ in 0..cfg.negatives {
+                            let neg = neg_table.sample(&mut rng);
+                            if neg as u64 != context {
+                                sgns_update(&mut emb, &mut ctx, center as usize, neg, false, dim, cfg.lr);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    emb
+}
+
+#[inline]
+fn sgns_update(
+    emb: &mut [f32],
+    ctx: &mut [f32],
+    center: usize,
+    other: usize,
+    positive: bool,
+    dim: usize,
+    lr: f32,
+) {
+    let (e0, c0) = (center * dim, other * dim);
+    let mut dot = 0.0f32;
+    for d in 0..dim {
+        dot += emb[e0 + d] * ctx[c0 + d];
+    }
+    let label = if positive { 1.0 } else { 0.0 };
+    let sigma = 1.0 / (1.0 + (-dot).exp());
+    let g = lr * (label - sigma);
+    for d in 0..dim {
+        let e = emb[e0 + d];
+        let c = ctx[c0 + d];
+        emb[e0 + d] += g * c;
+        ctx[c0 + d] += g * e;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, PartiteSpec};
+
+    fn two_cliques() -> Csr {
+        // two 5-cliques joined by one edge
+        let mut pairs = Vec::new();
+        for a in 0..5u64 {
+            for b in (a + 1)..5 {
+                pairs.push((a, b));
+                pairs.push((a + 5, b + 5));
+            }
+        }
+        pairs.push((0, 5));
+        Csr::undirected(&EdgeList::from_pairs(PartiteSpec::square(10), &pairs))
+    }
+
+    fn cosine(a: &[f32], b: &[f32]) -> f32 {
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    }
+
+    #[test]
+    fn walks_stay_on_graph() {
+        let csr = two_cliques();
+        let cfg = Node2VecConfig::default();
+        let mut rng = Pcg64::new(1);
+        let p = walk(&csr, 0, &cfg, &mut rng);
+        assert!(p.len() > 1);
+        for w in p.windows(2) {
+            assert!(csr.has_edge(w[0], w[1]), "{w:?} not an edge");
+        }
+    }
+
+    #[test]
+    fn community_structure_in_embeddings() {
+        let csr = two_cliques();
+        let cfg = Node2VecConfig { epochs: 4, walks_per_node: 8, ..Default::default() };
+        let emb = node2vec_embeddings(&csr, &cfg);
+        let dim = cfg.dim;
+        // avg intra-clique cosine should exceed inter-clique cosine
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut ni = 0;
+        let mut nx = 0;
+        for a in 0..10usize {
+            for b in (a + 1)..10 {
+                let c = cosine(&emb[a * dim..(a + 1) * dim], &emb[b * dim..(b + 1) * dim]);
+                if (a < 5) == (b < 5) {
+                    intra += c;
+                    ni += 1;
+                } else {
+                    inter += c;
+                    nx += 1;
+                }
+            }
+        }
+        let intra = intra / ni as f32;
+        let inter = inter / nx as f32;
+        assert!(intra > inter, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn embedding_shape() {
+        let csr = two_cliques();
+        let cfg = Node2VecConfig { dim: 8, epochs: 1, ..Default::default() };
+        let emb = node2vec_embeddings(&csr, &cfg);
+        assert_eq!(emb.len(), 10 * 8);
+        assert!(emb.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,247 @@
+//! Per-node structural features F_S : V → ℝ^d (paper §3.4 / Appendix 7):
+//! in/out/total degree, PageRank, Katz centrality, local clustering
+//! coefficient, and optionally node2vec embeddings (Table 9 ablation).
+
+use super::node2vec::{node2vec_embeddings, Node2VecConfig};
+use crate::graph::{Csr, EdgeList};
+
+/// Which structural features to extract (Table 9's rows toggle these).
+#[derive(Clone, Debug)]
+pub struct StructFeatConfig {
+    pub degrees: bool,
+    pub pagerank: bool,
+    pub katz: bool,
+    pub clustering: bool,
+    pub node2vec: Option<Node2VecConfig>,
+    /// PageRank/Katz iteration count.
+    pub iterations: usize,
+}
+
+impl Default for StructFeatConfig {
+    fn default() -> Self {
+        // the paper's best combination in Table 9: degrees+pagerank+katz
+        StructFeatConfig {
+            degrees: true,
+            pagerank: true,
+            katz: true,
+            clustering: false,
+            node2vec: None,
+            iterations: 20,
+        }
+    }
+}
+
+/// Node-major structural feature matrix over the *global* node id space.
+#[derive(Clone, Debug)]
+pub struct StructFeatures {
+    /// Row-major `n_nodes × dim` matrix.
+    pub data: Vec<f64>,
+    pub n_nodes: usize,
+    pub dim: usize,
+    /// Column labels.
+    pub names: Vec<String>,
+}
+
+impl StructFeatures {
+    /// Feature row of node `v`.
+    pub fn row(&self, v: u64) -> &[f64] {
+        &self.data[v as usize * self.dim..(v as usize + 1) * self.dim]
+    }
+}
+
+/// PageRank with damping 0.85 on the undirected view.
+pub fn pagerank(csr: &Csr, iters: usize) -> Vec<f64> {
+    let n = csr.n_nodes as usize;
+    if n == 0 {
+        return Vec::new();
+    }
+    let damping = 0.85;
+    let mut rank = vec![1.0 / n as f64; n];
+    let mut next = vec![0.0f64; n];
+    for _ in 0..iters {
+        for x in next.iter_mut() {
+            *x = (1.0 - damping) / n as f64;
+        }
+        let mut dangling = 0.0;
+        for v in 0..n {
+            let deg = csr.degree(v as u64);
+            if deg == 0 {
+                dangling += rank[v];
+                continue;
+            }
+            let share = damping * rank[v] / deg as f64;
+            for &w in csr.neighbors(v as u64) {
+                next[w as usize] += share;
+            }
+        }
+        let dangling_share = damping * dangling / n as f64;
+        for x in next.iter_mut() {
+            *x += dangling_share;
+        }
+        std::mem::swap(&mut rank, &mut next);
+    }
+    rank
+}
+
+/// Katz centrality: x = Σ_k α^k A^k 1, computed iteratively with
+/// α < 1/λ_max approximated via max degree.
+pub fn katz(csr: &Csr, iters: usize) -> Vec<f64> {
+    let n = csr.n_nodes as usize;
+    if n == 0 {
+        return Vec::new();
+    }
+    let max_deg = (0..n).map(|v| csr.degree(v as u64)).max().unwrap_or(1).max(1);
+    let alpha = 0.5 / max_deg as f64;
+    let mut x = vec![1.0f64; n];
+    let mut next = vec![0.0f64; n];
+    for _ in 0..iters {
+        for xi in next.iter_mut() {
+            *xi = 1.0;
+        }
+        for v in 0..n {
+            for &w in csr.neighbors(v as u64) {
+                next[v] += alpha * x[w as usize];
+            }
+        }
+        std::mem::swap(&mut x, &mut next);
+    }
+    x
+}
+
+/// Local clustering coefficient per node (undirected view).
+pub fn clustering_coefficient(csr: &Csr) -> Vec<f64> {
+    let n = csr.n_nodes as usize;
+    let mut cc = vec![0.0f64; n];
+    for v in 0..n {
+        let nbrs = csr.neighbors(v as u64);
+        let k = nbrs.len();
+        if k < 2 {
+            continue;
+        }
+        let mut links = 0usize;
+        for (i, &a) in nbrs.iter().enumerate() {
+            if a == v as u64 {
+                continue;
+            }
+            for &b in &nbrs[i + 1..] {
+                if b == a || b == v as u64 {
+                    continue;
+                }
+                if csr.has_edge(a, b) {
+                    links += 1;
+                }
+            }
+        }
+        cc[v] = 2.0 * links as f64 / (k * (k - 1)) as f64;
+    }
+    cc
+}
+
+/// Compute the configured features over the global node space.
+pub fn compute(edges: &EdgeList, cfg: &StructFeatConfig) -> StructFeatures {
+    let csr = Csr::undirected(edges);
+    let n = csr.n_nodes as usize;
+    let mut cols: Vec<(String, Vec<f64>)> = Vec::new();
+    if cfg.degrees {
+        cols.push(("degree".into(), csr.degrees_f64()));
+        // log-degree stabilizes GBT splits over power-law degrees
+        cols.push((
+            "log_degree".into(),
+            (0..n).map(|v| ((csr.degree(v as u64) + 1) as f64).ln()).collect(),
+        ));
+    }
+    if cfg.pagerank {
+        cols.push(("pagerank".into(), pagerank(&csr, cfg.iterations)));
+    }
+    if cfg.katz {
+        cols.push(("katz".into(), katz(&csr, cfg.iterations)));
+    }
+    if cfg.clustering {
+        cols.push(("clustering".into(), clustering_coefficient(&csr)));
+    }
+    if let Some(n2v) = &cfg.node2vec {
+        let emb = node2vec_embeddings(&csr, n2v);
+        for d in 0..n2v.dim {
+            cols.push((
+                format!("n2v_{d}"),
+                (0..n).map(|v| emb[v * n2v.dim + d] as f64).collect(),
+            ));
+        }
+    }
+    let dim = cols.len();
+    let mut data = vec![0.0f64; n * dim];
+    for (j, (_, col)) in cols.iter().enumerate() {
+        for (i, &x) in col.iter().enumerate() {
+            data[i * dim + j] = x;
+        }
+    }
+    StructFeatures {
+        data,
+        n_nodes: n,
+        dim,
+        names: cols.into_iter().map(|(n, _)| n).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PartiteSpec;
+
+    fn star() -> EdgeList {
+        // hub 0 connected to 1..=4
+        EdgeList::from_pairs(
+            PartiteSpec::square(5),
+            &[(0, 1), (0, 2), (0, 3), (0, 4)],
+        )
+    }
+
+    #[test]
+    fn pagerank_hub_highest() {
+        let csr = Csr::undirected(&star());
+        let pr = pagerank(&csr, 30);
+        assert!((pr.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        for v in 1..5 {
+            assert!(pr[0] > pr[v]);
+        }
+    }
+
+    #[test]
+    fn katz_hub_highest() {
+        let csr = Csr::undirected(&star());
+        let k = katz(&csr, 30);
+        for v in 1..5 {
+            assert!(k[0] > k[v]);
+        }
+    }
+
+    #[test]
+    fn clustering_triangle() {
+        let e = EdgeList::from_pairs(PartiteSpec::square(4), &[(0, 1), (1, 2), (2, 0), (0, 3)]);
+        let csr = Csr::undirected(&e);
+        let cc = clustering_coefficient(&csr);
+        // node 1 and 2 have cc=1 (their 2 neighbors are connected)
+        assert!((cc[1] - 1.0).abs() < 1e-12);
+        assert!((cc[2] - 1.0).abs() < 1e-12);
+        // node 0 has 3 neighbors {1,2,3}, one link (1-2): cc = 1/3
+        assert!((cc[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(cc[3], 0.0);
+    }
+
+    #[test]
+    fn compute_shapes_and_names() {
+        let f = compute(&star(), &StructFeatConfig::default());
+        assert_eq!(f.n_nodes, 5);
+        assert_eq!(f.dim, 4); // degree, log_degree, pagerank, katz
+        assert_eq!(f.names, vec!["degree", "log_degree", "pagerank", "katz"]);
+        assert_eq!(f.row(0)[0], 4.0);
+        assert_eq!(f.row(1)[0], 1.0);
+    }
+
+    #[test]
+    fn clustering_flag_adds_column() {
+        let cfg = StructFeatConfig { clustering: true, ..Default::default() };
+        let f = compute(&star(), &cfg);
+        assert_eq!(f.dim, 5);
+    }
+}

@@ -1,0 +1,489 @@
+//! Stand-in dataset constructors (see module docs of [`super`]).
+
+use super::schema::{transaction_schema, ColSpec, DatasetSchema};
+use super::Dataset;
+use crate::featgen::table::{Column, ColumnData, FeatureTable};
+use crate::graph::{EdgeList, PartiteSpec};
+use crate::structgen::kronecker::KroneckerGen;
+use crate::structgen::theta::ThetaS;
+use crate::structgen::StructureGenerator;
+use crate::util::rng::Pcg64;
+
+/// Standardized degree signal per edge: ln(1 + deg(src)) z-scored.
+fn degree_signal(edges: &EdgeList) -> Vec<f64> {
+    let deg = edges.out_degrees();
+    let raw: Vec<f64> = edges.iter().map(|(s, _)| ((deg[s as usize] + 1) as f64).ln()).collect();
+    let m = crate::util::stats::mean(&raw);
+    let sd = crate::util::stats::std_dev(&raw).max(1e-9);
+    raw.iter().map(|x| (x - m) / sd).collect()
+}
+
+/// Node-level degree signal.
+fn node_degree_signal(edges: &EdgeList) -> Vec<f64> {
+    let deg = edges.out_degrees();
+    let raw: Vec<f64> = deg.iter().map(|&d| ((d + 1) as f64).ln()).collect();
+    let m = crate::util::stats::mean(&raw);
+    let sd = crate::util::stats::std_dev(&raw).max(1e-9);
+    raw.iter().map(|x| (x - m) / sd).collect()
+}
+
+/// Synthesize feature columns per schema, mixing in the degree signal.
+fn synth_columns(specs: &[ColSpec], signal: &[f64], rng: &mut Pcg64) -> FeatureTable {
+    let n = signal.len();
+    let columns = specs
+        .iter()
+        .map(|spec| match *spec {
+            ColSpec::LogNormal { name, mu, sigma, deg_corr } => {
+                let v: Vec<f64> = (0..n)
+                    .map(|i| {
+                        let z = deg_corr * signal[i]
+                            + (1.0 - deg_corr * deg_corr).sqrt() * rng.normal();
+                        (mu + sigma * z).exp()
+                    })
+                    .collect();
+                Column::continuous(name, v)
+            }
+            ColSpec::Normal { name, mean, std, deg_corr } => {
+                let v: Vec<f64> = (0..n)
+                    .map(|i| {
+                        let z = deg_corr * signal[i]
+                            + (1.0 - deg_corr * deg_corr).sqrt() * rng.normal();
+                        mean + std * z
+                    })
+                    .collect();
+                Column::continuous(name, v)
+            }
+            ColSpec::Uniform { name, lo, hi } => {
+                Column::continuous(name, (0..n).map(|_| rng.range(lo, hi)).collect())
+            }
+            ColSpec::Categorical { name, k, alpha, deg_corr } => {
+                let codes: Vec<u32> = (0..n)
+                    .map(|i| {
+                        if deg_corr > 0.0 && rng.bool(deg_corr) {
+                            // degree-linked head/tail split
+                            if signal[i] > 0.0 {
+                                rng.zipf(k as usize / 2 + 1, alpha) as u32
+                            } else {
+                                (k as usize / 2
+                                    + rng.zipf(k as usize - k as usize / 2, alpha))
+                                    as u32
+                            }
+                        } else {
+                            rng.zipf(k as usize, alpha) as u32
+                        }
+                    })
+                    .map(|c| c.min(k - 1))
+                    .collect();
+                Column {
+                    name: name.to_string(),
+                    data: ColumnData::Categorical { codes, cardinality: k },
+                }
+            }
+        })
+        .collect();
+    FeatureTable::new(columns).expect("schema columns are equal length")
+}
+
+/// Core builder: skewed Kronecker structure + schema features.
+fn build(
+    name: &str,
+    spec: PartiteSpec,
+    edges: u64,
+    theta: ThetaS,
+    schema: &DatasetSchema,
+    seed: u64,
+) -> Dataset {
+    let gen = KroneckerGen::new(theta, spec, edges).with_noise(0.3);
+    let graph = gen.generate(1, seed).unwrap();
+    let mut rng = Pcg64::with_stream(seed, 0xfea7);
+    let edge_features = synth_columns(&schema.edge_cols, &degree_signal(&graph), &mut rng);
+    let node_features = if schema.node_cols.is_empty() {
+        None
+    } else {
+        Some(synth_columns(&schema.node_cols, &node_degree_signal(&graph), &mut rng))
+    };
+    Dataset {
+        name: name.to_string(),
+        edges: graph,
+        edge_features,
+        node_features,
+        node_labels: None,
+        edge_labels: None,
+    }
+}
+
+/// Tabformer stand-in: bipartite user-card × merchant transactions,
+/// 5 edge features (Table 1 row 1, scaled 106k×978k → 8k×60k).
+pub fn tabformer(seed: u64) -> Dataset {
+    build(
+        "tabformer",
+        PartiteSpec::bipartite(1 << 13, 1 << 9),
+        60_000,
+        ThetaS::new(0.52, 0.22, 0.18, 0.08),
+        &transaction_schema(0),
+        seed,
+    )
+}
+
+/// IEEE-Fraud stand-in: bipartite card-profile × address-profile graph,
+/// 12 features (scaled from 48) + fraud edge labels (~3.5% positive,
+/// degree- and feature-correlated so a GNN can learn it).
+pub fn ieee_fraud(seed: u64) -> Dataset {
+    let mut ds = build(
+        "ieee-fraud",
+        PartiteSpec::bipartite(1 << 10, 1 << 8),
+        26_000,
+        ThetaS::new(0.45, 0.25, 0.2, 0.1),
+        &transaction_schema(7),
+        seed,
+    );
+    // fraud labels: logistic in amount + degree signal
+    let sig = degree_signal(&ds.edges);
+    let amount = ds.edge_features.column("amount").unwrap().as_continuous().to_vec();
+    let la = crate::util::stats::mean(&amount);
+    let mut rng = Pcg64::with_stream(seed, 0xf4a6d);
+    let labels: Vec<u32> = (0..ds.edges.len())
+        .map(|i| {
+            let score = 0.8 * (amount[i] / la - 1.0) - 1.2 * sig[i] - 3.3;
+            let p = 1.0 / (1.0 + (-score).exp());
+            rng.bool(p) as u32
+        })
+        .collect();
+    ds.edge_labels = Some(labels);
+    ds
+}
+
+/// Paysim stand-in: mobile-money transfers orig → dest, 8 features
+/// (scaled 9M nodes → 16k).
+pub fn paysim(seed: u64) -> Dataset {
+    build(
+        "paysim",
+        PartiteSpec::bipartite(1 << 13, 1 << 13),
+        50_000,
+        ThetaS::new(0.62, 0.16, 0.14, 0.08),
+        &transaction_schema(3),
+        seed,
+    )
+}
+
+/// Credit stand-in: small, very dense card-holder × merchant graph
+/// (Table 1: 1 666 nodes, 476 k edges — the densest set; scaled edges).
+pub fn credit(seed: u64) -> Dataset {
+    build(
+        "credit",
+        PartiteSpec::bipartite(832, 834),
+        48_000,
+        ThetaS::new(0.36, 0.27, 0.24, 0.13),
+        &transaction_schema(15),
+        seed,
+    )
+}
+
+/// Home-Credit stand-in: applicant graph keyed by shared attributes.
+pub fn home_credit(seed: u64) -> Dataset {
+    build(
+        "home-credit",
+        PartiteSpec::bipartite(1 << 12, 1 << 7),
+        70_000,
+        ThetaS::new(0.48, 0.24, 0.19, 0.09),
+        &transaction_schema(11),
+        seed,
+    )
+}
+
+/// Travel-Insurance stand-in: policy-holder graph (small, dense-ish).
+pub fn travel_insurance(seed: u64) -> Dataset {
+    build(
+        "travel-insurance",
+        PartiteSpec::bipartite(993, 993),
+        40_000,
+        ThetaS::new(0.4, 0.26, 0.22, 0.12),
+        &transaction_schema(4),
+        seed,
+    )
+}
+
+/// OGBN-MAG stand-in: paper × author-ish bipartite graph, 16 features.
+pub fn ogbn_mag_mini(seed: u64) -> Dataset {
+    build(
+        "ogbn-mag-mini",
+        PartiteSpec::bipartite(1 << 12, 1 << 10),
+        100_000,
+        ThetaS::new(0.56, 0.19, 0.17, 0.08),
+        &transaction_schema(11),
+        seed,
+    )
+}
+
+/// MAG240m stand-in at integer `scale` (Table 3's base unit, heavily
+/// scaled down: scale 1 ≈ 2^14 src nodes / 200k edges on this testbed).
+pub fn mag_mini(scale: u64, seed: u64) -> Dataset {
+    let spec = PartiteSpec::bipartite((1 << 14) * scale, (1 << 12) * scale);
+    build(
+        "mag-mini",
+        spec,
+        200_000 * scale * scale,
+        ThetaS::new(0.57, 0.19, 0.17, 0.07),
+        &transaction_schema(3),
+        seed,
+    )
+}
+
+/// Cora stand-in: homophilous citation network with 7 topic classes,
+/// 32-dim multi-hot node features (scaled from 1433), node labels.
+/// Structure: community-biased sampling so GNNs beat feature-only models.
+pub fn cora(seed: u64) -> Dataset {
+    citation_graph("cora", 2708, 5429, 7, 32, 0.81, seed)
+}
+
+/// CORA-ML stand-in (Table 10's benchmark: 2810 nodes, 7981 edges).
+pub fn cora_ml(seed: u64) -> Dataset {
+    citation_graph("cora-ml", 2810, 7981, 7, 32, 0.78, seed)
+}
+
+/// Homophilous multi-class graph with degree skew: class-conditioned
+/// preferential attachment + multi-hot class-correlated node features.
+fn citation_graph(
+    name: &str,
+    n: u64,
+    m: u64,
+    classes: u32,
+    feat_dim: usize,
+    homophily: f64,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let labels: Vec<u32> = (0..n).map(|_| rng.below(classes as u64) as u32).collect();
+    // preferential attachment with homophily bias
+    let mut deg = vec![1.0f64; n as usize];
+    let mut edges = EdgeList::with_capacity(PartiteSpec::square(n), m as usize);
+    for _ in 0..m {
+        // source: uniform; destination: degree-weighted, same-class biased
+        let s = rng.below(n);
+        let mut d;
+        loop {
+            // degree-proportional proposal via two-step: pick random edge
+            // endpoint or random node
+            d = if rng.bool(0.7) && !edges.is_empty() {
+                let e = rng.below_usize(edges.len());
+                if rng.bool(0.5) {
+                    edges.src[e]
+                } else {
+                    edges.dst[e]
+                }
+            } else {
+                rng.below(n)
+            };
+            if d == s {
+                continue;
+            }
+            let same = labels[s as usize] == labels[d as usize];
+            let accept = if same { homophily } else { 1.0 - homophily };
+            if rng.bool(accept.clamp(0.05, 0.95)) {
+                break;
+            }
+        }
+        deg[s as usize] += 1.0;
+        deg[d as usize] += 1.0;
+        edges.push(s, d);
+    }
+    // multi-hot node features: class signature bits + noise bits
+    let bits_per_class = feat_dim / classes as usize;
+    let mut cols: Vec<Column> = Vec::with_capacity(feat_dim);
+    let mut data: Vec<Vec<f64>> = vec![Vec::with_capacity(n as usize); feat_dim];
+    for v in 0..n as usize {
+        let c = labels[v] as usize;
+        for (f, col) in data.iter_mut().enumerate() {
+            let in_sig = f / bits_per_class.max(1) == c;
+            let p = if in_sig { 0.45 } else { 0.04 };
+            col.push(if rng.bool(p) { 1.0 } else { 0.0 });
+        }
+    }
+    for (f, vals) in data.into_iter().enumerate() {
+        cols.push(Column::continuous(
+            Box::leak(format!("w{f}").into_boxed_str()),
+            vals,
+        ));
+    }
+    let node_features = FeatureTable::new(cols).unwrap();
+    // simple edge feature (citation weight)
+    let sig = degree_signal(&edges);
+    let ef: Vec<f64> = sig.iter().map(|&s| 1.0 + (0.5 * s + rng.normal() * 0.3).exp()).collect();
+    Dataset {
+        name: name.to_string(),
+        edges,
+        edge_features: FeatureTable::new(vec![Column::continuous("weight", ef)]).unwrap(),
+        node_features: Some(node_features),
+        node_labels: Some(labels),
+        edge_labels: None,
+    }
+}
+
+/// Figure 4's controlled synthetic: SBM with homophily `h` and feature
+/// signal-to-noise `snr`. 1000 nodes, ~24k edges (density 0.06 as in
+/// §8.5), `classes` clusters; returns (edges, node features, labels).
+pub fn homophily_snr(h: f64, snr: f64, classes: u32, seed: u64) -> Dataset {
+    let n = 1000u64;
+    let density = 0.06 * 0.5; // undirected pairs stored once
+    let target_edges = (density * (n * (n - 1)) as f64 / 2.0) as usize;
+    let mut rng = Pcg64::new(seed);
+    let labels: Vec<u32> = (0..n).map(|_| rng.below(classes as u64) as u32).collect();
+    let mut edges = EdgeList::with_capacity(PartiteSpec::square(n), target_edges);
+    while edges.len() < target_edges {
+        let a = rng.below(n);
+        let b = rng.below(n);
+        if a == b {
+            continue;
+        }
+        let same = labels[a as usize] == labels[b as usize];
+        // homophily h: intra-cluster edges h/(1-h) times more likely
+        let p = if same { h } else { 1.0 - h };
+        if rng.bool(p.clamp(0.02, 0.98)) {
+            edges.push(a, b);
+        }
+    }
+    // features: class mean separated by snr, unit noise
+    let dim = 8usize;
+    let mut class_means = vec![vec![0.0f64; dim]; classes as usize];
+    let mut dir_rng = Pcg64::new(0xd14);
+    for mean in class_means.iter_mut() {
+        for x in mean.iter_mut() {
+            *x = dir_rng.normal();
+        }
+        let norm: f64 = mean.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-9);
+        for x in mean.iter_mut() {
+            *x = *x / norm * snr;
+        }
+    }
+    let mut cols: Vec<Vec<f64>> = vec![Vec::with_capacity(n as usize); dim];
+    for v in 0..n as usize {
+        let c = labels[v] as usize;
+        for (f, col) in cols.iter_mut().enumerate() {
+            col.push(class_means[c][f] + rng.normal());
+        }
+    }
+    let node_features = FeatureTable::new(
+        cols.into_iter()
+            .enumerate()
+            .map(|(f, v)| Column::continuous(Box::leak(format!("x{f}").into_boxed_str()), v))
+            .collect(),
+    )
+    .unwrap();
+    let sig = degree_signal(&edges);
+    Dataset {
+        name: format!("synth-h{h}-snr{snr}"),
+        edge_features: FeatureTable::new(vec![Column::continuous(
+            "w",
+            sig.iter().map(|&s| s + rng.normal() * 0.1).collect(),
+        )])
+        .unwrap(),
+        edges,
+        node_features: Some(node_features),
+        node_labels: Some(labels),
+        edge_labels: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+
+    #[test]
+    fn ieee_fraud_label_rate_realistic() {
+        let ds = ieee_fraud(3);
+        let labels = ds.edge_labels.as_ref().unwrap();
+        let rate = labels.iter().filter(|&&l| l == 1).count() as f64 / labels.len() as f64;
+        assert!(rate > 0.01 && rate < 0.12, "rate={rate}");
+    }
+
+    #[test]
+    fn cora_is_homophilous() {
+        let ds = cora(1);
+        let labels = ds.node_labels.as_ref().unwrap();
+        let same = ds
+            .edges
+            .iter()
+            .filter(|(s, d)| labels[*s as usize] == labels[*d as usize])
+            .count() as f64
+            / ds.edges.len() as f64;
+        // 7 classes: random baseline ≈ 1/7 ≈ 0.14
+        assert!(same > 0.4, "same-class edge fraction={same}");
+    }
+
+    #[test]
+    fn cora_features_class_informative() {
+        let ds = cora(2);
+        let labels = ds.node_labels.as_ref().unwrap();
+        let nf = ds.node_features.as_ref().unwrap();
+        // class-0 signature columns should be denser for class-0 nodes
+        let col = nf.columns[0].as_continuous();
+        let in0: Vec<f64> = (0..col.len()).filter(|&v| labels[v] == 0).map(|v| col[v]).collect();
+        let out0: Vec<f64> = (0..col.len()).filter(|&v| labels[v] != 0).map(|v| col[v]).collect();
+        assert!(
+            crate::util::stats::mean(&in0) > crate::util::stats::mean(&out0) + 0.2,
+            "{} vs {}",
+            crate::util::stats::mean(&in0),
+            crate::util::stats::mean(&out0)
+        );
+    }
+
+    #[test]
+    fn degree_skew_present_in_transactions() {
+        let ds = tabformer(1);
+        let deg = ds.edges.out_degrees();
+        let mean = ds.edges.len() as f64 / ds.edges.spec.n_src as f64;
+        let max = *deg.iter().max().unwrap() as f64;
+        assert!(max > 10.0 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn features_degree_correlated() {
+        let ds = tabformer(2);
+        let sig = super::degree_signal(&ds.edges);
+        let amount: Vec<f64> = ds
+            .edge_features
+            .column("amount")
+            .unwrap()
+            .as_continuous()
+            .iter()
+            .map(|&x| x.ln())
+            .collect();
+        let corr = crate::util::stats::pearson(&sig, &amount);
+        assert!(corr > 0.3, "corr={corr}");
+    }
+
+    #[test]
+    fn homophily_snr_extremes() {
+        let hi = homophily_snr(0.85, 1.5, 4, 1);
+        let lo = homophily_snr(0.15, 0.5, 4, 2);
+        let frac_same = |ds: &Dataset| {
+            let l = ds.node_labels.as_ref().unwrap();
+            ds.edges
+                .iter()
+                .filter(|(s, d)| l[*s as usize] == l[*d as usize])
+                .count() as f64
+                / ds.edges.len() as f64
+        };
+        assert!(frac_same(&hi) > 0.5, "hi={}", frac_same(&hi));
+        assert!(frac_same(&lo) < 0.2, "lo={}", frac_same(&lo));
+        // edge count near 24k (paper: ~24,000 directed ≈ 15k stored here)
+        assert!(hi.edges.len() > 10_000);
+    }
+
+    #[test]
+    fn mag_mini_scales_quadratically() {
+        let s1 = mag_mini(1, 1);
+        let s2 = mag_mini(2, 1);
+        assert_eq!(s2.edges.len(), 4 * s1.edges.len());
+        assert_eq!(s2.edges.spec.n_src, 2 * s1.edges.spec.n_src);
+    }
+
+    #[test]
+    fn cora_connected_enough() {
+        let ds = cora(5);
+        let csr = Csr::undirected(&ds.edges);
+        let lcc = crate::graph::traversal::largest_component(&csr);
+        assert!(lcc > 2000, "lcc={lcc}");
+    }
+}

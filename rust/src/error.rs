@@ -1,0 +1,42 @@
+//! Crate-wide error type.
+
+/// Unified error type for the SGG framework.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// I/O failure (dataset files, artifact files, output shards).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// XLA / PJRT runtime failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// An artifact referenced by the runtime is missing on disk.
+    #[error("missing artifact `{0}` — run `make artifacts` first")]
+    MissingArtifact(String),
+
+    /// Configuration / CLI argument problem.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed input data (dataset schema mismatch, parse failure, ...).
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// A model was used before it was fitted.
+    #[error("model not fitted: {0}")]
+    NotFitted(String),
+
+    /// Numerical failure (non-convergence, singular matrix, ...).
+    #[error("numeric error: {0}")]
+    Numeric(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

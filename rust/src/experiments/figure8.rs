@@ -1,0 +1,104 @@
+//! Paper Figure 8 (§11): generator throughput comparison. We measure our
+//! R-MAT implementation single-threaded and chunk-parallel, plus the
+//! TrillionG-style and ER generators; the paper's FastSGG/TrillionG/
+//! FastKronecker curves were themselves quoted from [41]'s machine, so
+//! their published edges/sec constants are reprinted alongside for the
+//! shape comparison (who is fastest, rough factors).
+
+use super::{print_table, save};
+use crate::graph::PartiteSpec;
+use crate::structgen::chunked::{generate_chunked, ChunkConfig};
+use crate::structgen::erdos_renyi::ErdosRenyi;
+use crate::structgen::fit::fit_kronecker;
+use crate::structgen::kronecker::KroneckerGen;
+use crate::structgen::theta::ThetaS;
+use crate::structgen::trilliong::TrillionG;
+use crate::structgen::StructureGenerator;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Published throughput constants (edges/sec) from the paper's Fig. 8
+/// sources (Wang et al. [41], Xeon E5-2630): order-of-magnitude anchors.
+pub const PUBLISHED: &[(&str, f64)] = &[
+    ("FastSGG (quoted)", 7.0e6),
+    ("TrillionG (quoted)", 4.0e6),
+    ("FastKronecker (quoted)", 1.5e6),
+];
+
+pub fn run(quick: bool) -> Result<Json> {
+    let n: u64 = 1 << 20;
+    let sweep: Vec<u64> = if quick {
+        vec![1_000_000, 4_000_000]
+    } else {
+        vec![1_000_000, 4_000_000, 16_000_000, 64_000_000]
+    };
+    let spec = PartiteSpec::square(n);
+    let kron = KroneckerGen::new(ThetaS::rmat_default(), spec, 0);
+    let fitted = {
+        let sample = kron.generate_sized(n, n, 1_000_000, 1)?;
+        fit_kronecker(&sample)
+    };
+    let _ = fitted;
+    let tg = TrillionG::with_default_seed(spec, 0);
+    let er = ErdosRenyi { spec, edges: 0 };
+
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for &e in &sweep {
+        // 1 thread RMAT
+        let t0 = std::time::Instant::now();
+        kron.generate_sized(n, n, e, 3)?;
+        let rmat1 = e as f64 / t0.elapsed().as_secs_f64();
+        // parallel chunked RMAT
+        let cfg = ChunkConfig::default();
+        let t0 = std::time::Instant::now();
+        generate_chunked(&kron, n, n, e, 3, cfg, |_c| {})?;
+        let rmat_par = e as f64 / t0.elapsed().as_secs_f64();
+        // TrillionG-style
+        let t0 = std::time::Instant::now();
+        tg.generate_sized(n, n, e, 3)?;
+        let tg_rate = e as f64 / t0.elapsed().as_secs_f64();
+        // ER
+        let t0 = std::time::Instant::now();
+        er.generate_sized(n, n, e, 3)?;
+        let er_rate = e as f64 / t0.elapsed().as_secs_f64();
+        rows.push(vec![
+            format!("{e}"),
+            format!("{:.1}", rmat1 / 1e6),
+            format!("{:.1}", rmat_par / 1e6),
+            format!("{:.1}", tg_rate / 1e6),
+            format!("{:.1}", er_rate / 1e6),
+        ]);
+        records.push(Json::obj(vec![
+            ("edges", Json::from(e)),
+            ("rmat_1thread_eps", Json::Num(rmat1)),
+            ("rmat_parallel_eps", Json::Num(rmat_par)),
+            ("trilliong_eps", Json::Num(tg_rate)),
+            ("er_eps", Json::Num(er_rate)),
+        ]));
+    }
+    print_table(
+        "Figure 8: generator throughput in Medges/s (paper: our RMAT tops every competitor)",
+        &["edges", "RMAT-1t", "RMAT-par", "TrillionG-style", "ER"],
+        &rows,
+    );
+    println!("published anchors (from [41]'s machine):");
+    for (name, eps) in PUBLISHED {
+        println!("  {name:<24} {:.1} Medges/s", eps / 1e6);
+    }
+    let record = Json::obj(vec![
+        ("experiment", Json::from("figure8")),
+        ("rows", Json::Arr(records)),
+        (
+            "published",
+            Json::Arr(
+                PUBLISHED
+                    .iter()
+                    .map(|(n, e)| Json::obj(vec![("name", Json::from(*n)), ("eps", Json::Num(*e))]))
+                    .collect(),
+            ),
+        ),
+    ]);
+    save("figure8", &record)?;
+    Ok(record)
+}

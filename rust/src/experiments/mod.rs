@@ -1,0 +1,99 @@
+//! Experiment harnesses — one module per table/figure of the paper's
+//! evaluation (see DESIGN.md's experiment index). Each `run(quick)`
+//! prints the same rows/series the paper reports and returns a Json
+//! record that EXPERIMENTS.md summarizes. `quick=true` shrinks sweep
+//! sizes for CI-class machines; shapes (who wins, rough factors) are
+//! preserved.
+
+pub mod figure2;
+pub mod figure4;
+pub mod figure5;
+pub mod figure6;
+pub mod figure7;
+pub mod figure8;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+pub mod table9;
+pub mod table10;
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "table2", "figure2", "table3", "table4", "table5", "table6", "table7",
+    "figure4", "table8", "table9", "table10", "figure5", "figure6",
+    "figure7", "figure8",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, quick: bool) -> Result<Json> {
+    match id {
+        "table2" => table2::run(quick),
+        "figure2" => figure2::run(quick),
+        "table3" => table3::run(quick),
+        "table4" => table4::run(quick),
+        "table5" => table5::run(quick),
+        "table6" => table6::run(quick),
+        "table7" => table7::run(quick),
+        "figure4" => figure4::run(quick),
+        "table8" => table8::run(quick),
+        "table9" => table9::run(quick),
+        "table10" => table10::run(quick),
+        "figure5" => figure5::run(quick),
+        "figure6" => figure6::run(quick),
+        "figure7" => figure7::run(quick),
+        "figure8" => figure8::run(quick),
+        other => Err(crate::Error::Config(format!(
+            "unknown experiment `{other}`; known: {ALL:?}"
+        ))),
+    }
+}
+
+/// Save an experiment record under results/.
+pub fn save(id: &str, record: &Json) -> Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{id}.json"));
+    std::fs::write(&path, record.to_string())?;
+    Ok(path)
+}
+
+/// Fixed-width table printer shared by the harnesses.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+/// Shrink an edge count in quick mode.
+pub fn scaled_edges(e: usize, quick: bool) -> usize {
+    if quick {
+        (e / 4).max(2_000)
+    } else {
+        e
+    }
+}

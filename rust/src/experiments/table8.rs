@@ -1,0 +1,58 @@
+//! Paper Table 8 (§8.6): Erdős–Rényi generation timings — nodes fixed,
+//! edges swept upward (paper: 100e6 nodes, up to 1e12 edges on 8×V100;
+//! here CPU-scaled). The claim: generation time is linear in E.
+
+use super::{print_table, save};
+use crate::graph::PartiteSpec;
+use crate::structgen::erdos_renyi::ErdosRenyi;
+use crate::structgen::StructureGenerator;
+use crate::util::json::Json;
+use crate::Result;
+
+pub fn run(quick: bool) -> Result<Json> {
+    let nodes: u64 = 1_000_000;
+    let edge_sweep: Vec<u64> = if quick {
+        vec![1_000_000, 2_500_000, 5_000_000]
+    } else {
+        vec![5_000_000, 12_500_000, 25_000_000, 37_500_000, 50_000_000]
+    };
+    let gen = ErdosRenyi { spec: PartiteSpec::square(nodes), edges: 0 };
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for &e in &edge_sweep {
+        let t0 = std::time::Instant::now();
+        let g = gen.generate_sized(nodes, nodes, e, 3)?;
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(g.len() as u64, e);
+        rows.push(vec![
+            format!("{nodes}"),
+            format!("{e}"),
+            format!("{secs:.2}s"),
+            format!("{:.1}", e as f64 / secs / 1e6),
+        ]);
+        records.push(Json::obj(vec![
+            ("nodes", Json::from(nodes)),
+            ("edges", Json::from(e)),
+            ("secs", Json::Num(secs)),
+            ("medges_per_sec", Json::Num(e as f64 / secs / 1e6)),
+        ]));
+    }
+    print_table(
+        "Table 8: ER generation timings, fixed nodes (paper: time linear in edges)",
+        &["nodes", "edges", "time", "Medges/s"],
+        &rows,
+    );
+    if records.len() >= 2 {
+        let t0 = records[0].get("secs").unwrap().as_f64().unwrap();
+        let tn = records.last().unwrap().get("secs").unwrap().as_f64().unwrap();
+        let e0 = records[0].get("edges").unwrap().as_f64().unwrap();
+        let en = records.last().unwrap().get("edges").unwrap().as_f64().unwrap();
+        println!(
+            "scaling exponent: {:.2} (1.0 = linear)",
+            (tn / t0.max(1e-9)).ln() / (en / e0).ln()
+        );
+    }
+    let record = Json::obj(vec![("experiment", Json::from("table8")), ("rows", Json::Arr(records))]);
+    save("table8", &record)?;
+    Ok(record)
+}

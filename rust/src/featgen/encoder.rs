@@ -1,0 +1,252 @@
+//! Mode-specific normalization encoder (paper §3.3, after Xu et al. [44]).
+//!
+//! Continuous columns are encoded as `(α, one-hot mode)` pairs where the
+//! mode is the most-responsible component of a per-column Gaussian
+//! mixture ([`crate::featgen::gmm`]) and α the in-mode normalized scalar;
+//! categorical columns as one-hot vectors. The resulting dense f32 matrix
+//! is what the GAN trains on; [`ModeSpecificEncoder::decode`] inverts the
+//! transform on generated rows.
+
+use super::gmm::Gmm;
+use super::table::{Column, ColumnData, FeatureTable};
+use crate::error::{Error, Result};
+
+/// Per-column encoding metadata.
+#[derive(Clone, Debug)]
+enum ColCodec {
+    /// Continuous: α scalar followed by `gmm.n_components()` mode slots.
+    Continuous { name: String, gmm: Gmm },
+    /// Categorical: `cardinality` one-hot slots.
+    Categorical { name: String, cardinality: u32 },
+}
+
+/// Fitted encoder mapping a [`FeatureTable`] to a dense f32 matrix.
+#[derive(Clone, Debug)]
+pub struct ModeSpecificEncoder {
+    codecs: Vec<ColCodec>,
+    width: usize,
+}
+
+/// Maximum GMM components per continuous column (CTGAN uses 10).
+pub const MAX_MODES: usize = 8;
+
+impl ModeSpecificEncoder {
+    /// Fit the per-column codecs.
+    pub fn fit(table: &FeatureTable) -> ModeSpecificEncoder {
+        let mut codecs = Vec::with_capacity(table.n_cols());
+        let mut width = 0usize;
+        for (i, c) in table.columns.iter().enumerate() {
+            match &c.data {
+                ColumnData::Continuous(v) => {
+                    let gmm = Gmm::fit(v, MAX_MODES, 20, 0.02, 0x5eed ^ i as u64);
+                    width += 1 + gmm.n_components();
+                    codecs.push(ColCodec::Continuous { name: c.name.clone(), gmm });
+                }
+                ColumnData::Categorical { cardinality, .. } => {
+                    width += (*cardinality).max(1) as usize;
+                    codecs.push(ColCodec::Categorical {
+                        name: c.name.clone(),
+                        cardinality: (*cardinality).max(1),
+                    });
+                }
+            }
+        }
+        ModeSpecificEncoder { codecs, width }
+    }
+
+    /// Encoded row width.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Encode the table into a row-major f32 matrix `n_rows × width`.
+    pub fn encode(&self, table: &FeatureTable) -> Result<Vec<f32>> {
+        let n = table.n_rows();
+        if table.n_cols() != self.codecs.len() {
+            return Err(Error::Data("encoder/table column mismatch".into()));
+        }
+        let mut out = vec![0.0f32; n * self.width];
+        for r in 0..n {
+            let mut off = r * self.width;
+            for (ci, codec) in self.codecs.iter().enumerate() {
+                match (codec, &table.columns[ci].data) {
+                    (ColCodec::Continuous { gmm, .. }, ColumnData::Continuous(v)) => {
+                        let (mode, alpha) = gmm.encode(v[r]);
+                        out[off] = alpha as f32;
+                        out[off + 1 + mode] = 1.0;
+                        off += 1 + gmm.n_components();
+                    }
+                    (ColCodec::Categorical { cardinality, .. }, ColumnData::Categorical { codes, .. }) => {
+                        out[off + codes[r] as usize] = 1.0;
+                        off += *cardinality as usize;
+                    }
+                    _ => return Err(Error::Data("column type mismatch vs encoder".into())),
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a row-major f32 matrix back into a [`FeatureTable`]. Mode /
+    /// category slots are resolved by argmax (generated outputs are soft).
+    pub fn decode(&self, data: &[f32], n_rows: usize) -> Result<FeatureTable> {
+        if data.len() != n_rows * self.width {
+            return Err(Error::Data(format!(
+                "decode: got {} values, want {}",
+                data.len(),
+                n_rows * self.width
+            )));
+        }
+        let mut columns: Vec<Column> = Vec::with_capacity(self.codecs.len());
+        // column-major accumulation
+        let mut cont_vals: Vec<Vec<f64>> = Vec::new();
+        let mut cat_vals: Vec<Vec<u32>> = Vec::new();
+        for codec in &self.codecs {
+            match codec {
+                ColCodec::Continuous { .. } => cont_vals.push(Vec::with_capacity(n_rows)),
+                ColCodec::Categorical { .. } => cat_vals.push(Vec::with_capacity(n_rows)),
+            }
+        }
+        for r in 0..n_rows {
+            let mut off = r * self.width;
+            let mut ic = 0;
+            let mut ik = 0;
+            for codec in &self.codecs {
+                match codec {
+                    ColCodec::Continuous { gmm, .. } => {
+                        let k = gmm.n_components();
+                        let alpha = data[off] as f64;
+                        let mode = argmax(&data[off + 1..off + 1 + k]);
+                        cont_vals[ic].push(gmm.decode(mode, alpha));
+                        ic += 1;
+                        off += 1 + k;
+                    }
+                    ColCodec::Categorical { cardinality, .. } => {
+                        let k = *cardinality as usize;
+                        cat_vals[ik].push(argmax(&data[off..off + k]) as u32);
+                        ik += 1;
+                        off += k;
+                    }
+                }
+            }
+        }
+        let mut ic = 0;
+        let mut ik = 0;
+        for codec in &self.codecs {
+            match codec {
+                ColCodec::Continuous { name, .. } => {
+                    columns.push(Column {
+                        name: name.clone(),
+                        data: ColumnData::Continuous(std::mem::take(&mut cont_vals[ic])),
+                    });
+                    ic += 1;
+                }
+                ColCodec::Categorical { name, cardinality } => {
+                    columns.push(Column {
+                        name: name.clone(),
+                        data: ColumnData::Categorical {
+                            codes: std::mem::take(&mut cat_vals[ik]),
+                            cardinality: *cardinality,
+                        },
+                    });
+                    ik += 1;
+                }
+            }
+        }
+        FeatureTable::new(columns)
+    }
+
+    /// Paper §12's embedding-size rule for categorical columns:
+    /// `min(600, round(1.6·|D|^0.56))` — exposed for the L2 model config.
+    pub fn embedding_dim(cardinality: u32) -> usize {
+        (1.6 * (cardinality as f64).powf(0.56)).round().min(600.0) as usize
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn table() -> FeatureTable {
+        let mut rng = Pcg64::new(11);
+        let vals: Vec<f64> = (0..800)
+            .map(|i| if i % 2 == 0 { rng.normal_ms(-4.0, 0.3) } else { rng.normal_ms(6.0, 0.5) })
+            .collect();
+        let codes: Vec<u32> = (0..800).map(|i| (i % 5) as u32).collect();
+        FeatureTable::new(vec![
+            Column::continuous("v", vals),
+            Column::categorical("c", codes),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn width_accounts_for_modes_and_onehot() {
+        let t = table();
+        let enc = ModeSpecificEncoder::fit(&t);
+        // v: 1 + n_modes; c: 5
+        let v_modes = enc.width() - 5 - 1;
+        assert!(v_modes >= 2, "modes={v_modes}");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = table();
+        let enc = ModeSpecificEncoder::fit(&t);
+        let data = enc.encode(&t).unwrap();
+        let back = enc.decode(&data, t.n_rows()).unwrap();
+        // categorical: exact roundtrip
+        assert_eq!(
+            back.column("c").unwrap().as_categorical().0,
+            t.column("c").unwrap().as_categorical().0
+        );
+        // continuous: within in-mode error
+        let orig = t.column("v").unwrap().as_continuous();
+        let rec = back.column("v").unwrap().as_continuous();
+        for (a, b) in orig.iter().zip(rec).take(200) {
+            assert!((a - b).abs() < 0.8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn onehot_rows_are_valid() {
+        let t = table();
+        let enc = ModeSpecificEncoder::fit(&t);
+        let data = enc.encode(&t).unwrap();
+        let w = enc.width();
+        // each row: exactly 1 one-hot among last 5 slots
+        for r in 0..10 {
+            let row = &data[r * w..(r + 1) * w];
+            let cat_ones: f32 = row[w - 5..].iter().sum();
+            assert_eq!(cat_ones, 1.0);
+        }
+    }
+
+    #[test]
+    fn embedding_dim_rule() {
+        assert_eq!(ModeSpecificEncoder::embedding_dim(2), 2);
+        assert!(ModeSpecificEncoder::embedding_dim(100_000) <= 600);
+        // paper formula: 1.6 * 50^0.56 ≈ 14.3
+        assert_eq!(ModeSpecificEncoder::embedding_dim(50), 14);
+    }
+
+    #[test]
+    fn decode_rejects_bad_shape() {
+        let t = table();
+        let enc = ModeSpecificEncoder::fit(&t);
+        assert!(enc.decode(&[0.0; 7], 3).is_err());
+    }
+}

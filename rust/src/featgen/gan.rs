@@ -1,0 +1,160 @@
+//! The CTGAN-style feature GAN (paper §3.3).
+//!
+//! The compute lives in the AOT-compiled JAX/Pallas artifacts (L1/L2);
+//! this module owns the *coordinator-side* logic: the mode-specific
+//! encoder, batching of encoded rows, driving the backend train step, and
+//! decoding generated samples back into a [`FeatureTable`].
+//!
+//! The backend is abstracted by [`GanBackend`] so the pipeline and tests
+//! can run without the PJRT runtime ([`ResampleBackend`]); the real
+//! backend is [`crate::runtime::gan_exec::PjrtGanBackend`], which executes
+//! `gan_train_step` / `gan_sample` HLO artifacts on the PJRT CPU client.
+
+use super::encoder::ModeSpecificEncoder;
+use super::table::FeatureTable;
+use super::FeatureGenerator;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+/// Abstract GAN compute backend over encoded rows.
+pub trait GanBackend {
+    /// Backend name for logs/tables.
+    fn name(&self) -> &'static str;
+
+    /// Train on the encoded matrix (`n_rows × width`, row-major).
+    fn train(&mut self, encoded: &[f32], n_rows: usize, width: usize, seed: u64) -> Result<()>;
+
+    /// Generate `n` encoded rows of the given width.
+    fn sample(&self, n: usize, width: usize, seed: u64) -> Result<Vec<f32>>;
+}
+
+/// Test/fallback backend: memorizes the encoded training rows and samples
+/// them with small jitter on the α slots. Exercises the exact same
+/// encode→train→sample→decode path as the PJRT backend.
+#[derive(Default)]
+pub struct ResampleBackend {
+    rows: Vec<f32>,
+    width: usize,
+}
+
+impl GanBackend for ResampleBackend {
+    fn name(&self) -> &'static str {
+        "resample"
+    }
+
+    fn train(&mut self, encoded: &[f32], _n_rows: usize, width: usize, _seed: u64) -> Result<()> {
+        self.rows = encoded.to_vec();
+        self.width = width;
+        Ok(())
+    }
+
+    fn sample(&self, n: usize, width: usize, seed: u64) -> Result<Vec<f32>> {
+        let n_rows = if self.width == 0 { 0 } else { self.rows.len() / self.width };
+        let mut rng = Pcg64::new(seed);
+        let mut out = vec![0.0f32; n * width];
+        for r in 0..n {
+            if n_rows == 0 {
+                continue;
+            }
+            let src = rng.below_usize(n_rows);
+            let row = &self.rows[src * self.width..(src + 1) * self.width];
+            let take = width.min(self.width);
+            out[r * width..r * width + take].copy_from_slice(&row[..take]);
+        }
+        Ok(out)
+    }
+}
+
+/// Feature GAN: encoder + backend.
+pub struct GanFeatureGen {
+    encoder: ModeSpecificEncoder,
+    backend: Box<dyn GanBackend>,
+}
+
+impl GanFeatureGen {
+    /// Fit the encoder on `table`, then train `backend` on the encoding.
+    pub fn fit_with_backend(
+        table: &FeatureTable,
+        mut backend: Box<dyn GanBackend>,
+        seed: u64,
+    ) -> Result<GanFeatureGen> {
+        let encoder = ModeSpecificEncoder::fit(table);
+        let encoded = encoder.encode(table)?;
+        backend.train(&encoded, table.n_rows(), encoder.width(), seed)?;
+        Ok(GanFeatureGen { encoder, backend })
+    }
+
+    /// Fit with the in-process resample backend (no artifacts needed).
+    pub fn fit_resample(table: &FeatureTable, seed: u64) -> Result<GanFeatureGen> {
+        Self::fit_with_backend(table, Box::new(ResampleBackend::default()), seed)
+    }
+
+    /// Encoded width (for runtime artifact selection).
+    pub fn width(&self) -> usize {
+        self.encoder.width()
+    }
+
+    /// Backend name.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+impl FeatureGenerator for GanFeatureGen {
+    fn name(&self) -> &'static str {
+        "gan"
+    }
+
+    fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {
+        let encoded = self.backend.sample(n, self.encoder.width(), seed)?;
+        self.encoder.decode(&encoded, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featgen::table::Column;
+    use crate::util::stats;
+
+    fn table() -> FeatureTable {
+        let mut rng = Pcg64::new(4);
+        let vals: Vec<f64> = (0..1000)
+            .map(|i| if i % 3 == 0 { rng.normal_ms(10.0, 1.0) } else { rng.normal_ms(-2.0, 0.5) })
+            .collect();
+        let codes: Vec<u32> = (0..1000).map(|_| if rng.bool(0.7) { 0 } else { 1 }).collect();
+        FeatureTable::new(vec![
+            Column::continuous("v", vals),
+            Column::categorical("c", codes),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn resample_backend_roundtrip_preserves_distribution() {
+        let t = table();
+        let g = GanFeatureGen::fit_resample(&t, 1).unwrap();
+        let s = g.sample(1000, 2).unwrap();
+        assert_eq!(s.n_rows(), 1000);
+        let mo = stats::mean(t.column("v").unwrap().as_continuous());
+        let ms = stats::mean(s.column("v").unwrap().as_continuous());
+        assert!((mo - ms).abs() < 1.0, "{mo} vs {ms}");
+        let (codes, _) = s.column("c").unwrap().as_categorical();
+        let p0 = codes.iter().filter(|&&c| c == 0).count() as f64 / 1000.0;
+        assert!((p0 - 0.7).abs() < 0.08, "p0={p0}");
+    }
+
+    #[test]
+    fn sample_is_deterministic() {
+        let t = table();
+        let g = GanFeatureGen::fit_resample(&t, 1).unwrap();
+        assert_eq!(g.sample(50, 9).unwrap(), g.sample(50, 9).unwrap());
+    }
+
+    #[test]
+    fn width_positive() {
+        let t = table();
+        let g = GanFeatureGen::fit_resample(&t, 1).unwrap();
+        assert!(g.width() >= 4);
+    }
+}

@@ -1,0 +1,200 @@
+//! Multivariate Gaussian feature generator — the feature model used when
+//! the GraphWorld baseline is integrated into the framework (paper §4.4:
+//! "the feature generators are multi-variate Gaussians").
+//!
+//! Continuous columns are modeled jointly (mean vector + covariance via
+//! Cholesky); categorical columns fall back to their empirical marginals.
+
+use super::table::{Column, ColumnData, FeatureTable};
+use super::FeatureGenerator;
+use crate::util::rng::{AliasTable, Pcg64};
+use crate::util::stats;
+use crate::Result;
+
+/// Fitted multivariate Gaussian over the continuous columns.
+#[derive(Clone, Debug)]
+pub struct GaussianFeatureGen {
+    cont_names: Vec<String>,
+    mean: Vec<f64>,
+    /// Lower Cholesky factor of the covariance, row-major d×d.
+    chol: Vec<f64>,
+    d: usize,
+    cats: Vec<(String, AliasTable, u32)>,
+    /// Column order of the original table, to reconstruct layout.
+    order: Vec<(bool, usize)>, // (is_continuous, index within kind)
+}
+
+impl GaussianFeatureGen {
+    /// Fit mean/covariance on continuous columns and empirical marginals
+    /// on categorical columns.
+    pub fn fit(table: &FeatureTable) -> Result<Self> {
+        let mut cont_cols: Vec<(&str, &[f64])> = Vec::new();
+        let mut cats = Vec::new();
+        let mut order = Vec::new();
+        for c in &table.columns {
+            match &c.data {
+                ColumnData::Continuous(v) => {
+                    order.push((true, cont_cols.len()));
+                    cont_cols.push((&c.name, v));
+                }
+                ColumnData::Categorical { codes, cardinality } => {
+                    let mut counts = vec![0.0f64; *cardinality as usize];
+                    for &x in codes {
+                        counts[x as usize] += 1.0;
+                    }
+                    order.push((false, cats.len()));
+                    cats.push((c.name.clone(), AliasTable::new(&counts), *cardinality));
+                }
+            }
+        }
+        let d = cont_cols.len();
+        let n = table.n_rows();
+        let mean: Vec<f64> = cont_cols.iter().map(|(_, v)| stats::mean(v)).collect();
+        // covariance with diagonal jitter
+        let mut cov = vec![0.0f64; d * d];
+        for i in 0..d {
+            for j in i..d {
+                let mut s = 0.0;
+                for r in 0..n {
+                    s += (cont_cols[i].1[r] - mean[i]) * (cont_cols[j].1[r] - mean[j]);
+                }
+                let c = if n > 1 { s / (n - 1) as f64 } else { 1.0 };
+                cov[i * d + j] = c;
+                cov[j * d + i] = c;
+            }
+        }
+        for i in 0..d {
+            cov[i * d + i] += 1e-9;
+        }
+        let chol = if d > 0 {
+            stats::cholesky(&cov, d).map_err(crate::Error::Numeric)?
+        } else {
+            Vec::new()
+        };
+        Ok(GaussianFeatureGen {
+            cont_names: cont_cols.iter().map(|(n, _)| n.to_string()).collect(),
+            mean,
+            chol,
+            d,
+            cats,
+            order,
+        })
+    }
+}
+
+impl FeatureGenerator for GaussianFeatureGen {
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+
+    fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {
+        let mut rng = Pcg64::new(seed);
+        let d = self.d;
+        // continuous: x = mean + L z
+        let mut cont: Vec<Vec<f64>> = vec![Vec::with_capacity(n); d];
+        let mut z = vec![0.0f64; d];
+        for _ in 0..n {
+            for zi in z.iter_mut() {
+                *zi = rng.normal();
+            }
+            for i in 0..d {
+                let mut x = self.mean[i];
+                for k in 0..=i {
+                    x += self.chol[i * d + k] * z[k];
+                }
+                cont[i].push(x);
+            }
+        }
+        let mut cat: Vec<Vec<u32>> = Vec::with_capacity(self.cats.len());
+        for (_, table, _) in &self.cats {
+            cat.push((0..n).map(|_| table.sample(&mut rng) as u32).collect());
+        }
+        let mut columns = Vec::with_capacity(self.order.len());
+        for &(is_cont, idx) in &self.order {
+            if is_cont {
+                columns.push(Column {
+                    name: self.cont_names[idx].clone(),
+                    data: ColumnData::Continuous(std::mem::take(&mut cont[idx])),
+                });
+            } else {
+                let (name, _, card) = &self.cats[idx];
+                columns.push(Column {
+                    name: name.clone(),
+                    data: ColumnData::Categorical {
+                        codes: std::mem::take(&mut cat[idx]),
+                        cardinality: *card,
+                    },
+                });
+            }
+        }
+        FeatureTable::new(columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn correlated_table(n: usize) -> FeatureTable {
+        let mut rng = Pcg64::new(3);
+        let mut a = Vec::with_capacity(n);
+        let mut b = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = rng.normal();
+            a.push(2.0 * x + 1.0);
+            b.push(-x + rng.normal() * 0.3);
+        }
+        FeatureTable::new(vec![
+            Column::continuous("a", a),
+            Column::continuous("b", b),
+            Column::categorical("c", (0..n).map(|i| (i % 3) as u32).collect()),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn preserves_correlation() {
+        let t = correlated_table(3000);
+        let g = GaussianFeatureGen::fit(&t).unwrap();
+        let s = g.sample(3000, 1).unwrap();
+        let corr_orig = stats::pearson(
+            t.column("a").unwrap().as_continuous(),
+            t.column("b").unwrap().as_continuous(),
+        );
+        let corr_synth = stats::pearson(
+            s.column("a").unwrap().as_continuous(),
+            s.column("b").unwrap().as_continuous(),
+        );
+        assert!((corr_orig - corr_synth).abs() < 0.05, "{corr_orig} vs {corr_synth}");
+    }
+
+    #[test]
+    fn preserves_mean_and_layout() {
+        let t = correlated_table(2000);
+        let g = GaussianFeatureGen::fit(&t).unwrap();
+        let s = g.sample(2000, 2).unwrap();
+        assert_eq!(s.columns[0].name, "a");
+        assert_eq!(s.columns[2].name, "c");
+        let m = stats::mean(s.column("a").unwrap().as_continuous());
+        assert!((m - 1.0).abs() < 0.15, "m={m}");
+    }
+
+    #[test]
+    fn categorical_marginal_preserved() {
+        let t = correlated_table(3000);
+        let g = GaussianFeatureGen::fit(&t).unwrap();
+        let s = g.sample(3000, 5).unwrap();
+        let (codes, card) = s.column("c").unwrap().as_categorical();
+        assert_eq!(card, 3);
+        let p0 = codes.iter().filter(|&&c| c == 0).count() as f64 / codes.len() as f64;
+        assert!((p0 - 1.0 / 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn no_continuous_columns_ok() {
+        let t = FeatureTable::new(vec![Column::categorical("only", vec![0, 1, 1, 0])]).unwrap();
+        let g = GaussianFeatureGen::fit(&t).unwrap();
+        let s = g.sample(10, 1).unwrap();
+        assert_eq!(s.n_rows(), 10);
+    }
+}

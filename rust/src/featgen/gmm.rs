@@ -1,0 +1,289 @@
+//! 1-D Gaussian mixture fitted by EM with weight pruning.
+//!
+//! Stands in for the *variational* Gaussian mixture (VGM) of CTGAN's
+//! mode-specific normalization (paper §3.3, following Xu et al. [44]):
+//! components whose responsibility mass falls below a threshold are
+//! pruned, mimicking the sparsity the variational Dirichlet prior
+//! induces, so the number of active modes adapts to the data.
+
+use crate::util::rng::{AliasTable, Pcg64};
+
+/// A fitted 1-D Gaussian mixture.
+#[derive(Clone, Debug)]
+pub struct Gmm {
+    /// Component weights (sum to 1).
+    pub weights: Vec<f64>,
+    /// Component means.
+    pub means: Vec<f64>,
+    /// Component standard deviations (≥ 1e-6).
+    pub stds: Vec<f64>,
+}
+
+const MIN_STD: f64 = 1e-6;
+
+fn log_normal_pdf(x: f64, mu: f64, sd: f64) -> f64 {
+    let z = (x - mu) / sd;
+    -0.5 * z * z - sd.ln() - 0.5 * (2.0 * std::f64::consts::PI).ln()
+}
+
+impl Gmm {
+    /// Fit with at most `k` components, EM for `iters` iterations,
+    /// pruning components with weight < `prune`. Deterministic given
+    /// `seed` (used for k-means++-style initialization).
+    pub fn fit(data: &[f64], k: usize, iters: usize, prune: f64, seed: u64) -> Gmm {
+        let n = data.len();
+        if n == 0 {
+            return Gmm { weights: vec![1.0], means: vec![0.0], stds: vec![1.0] };
+        }
+        let k = k.max(1).min(n);
+        let mut rng = Pcg64::new(seed);
+        // init means from data quantile spread, stds from global std
+        let global_mean = crate::util::stats::mean(data);
+        let global_std = crate::util::stats::std_dev(data).max(MIN_STD);
+        let mut means: Vec<f64> = (0..k)
+            .map(|_| data[rng.below_usize(n)])
+            .collect();
+        let mut stds = vec![global_std; k];
+        let mut weights = vec![1.0 / k as f64; k];
+        let mut resp = vec![0.0f64; k]; // per-point responsibilities buffer
+
+        for _ in 0..iters {
+            // accumulators
+            let mut w_acc = vec![0.0f64; k];
+            let mut m_acc = vec![0.0f64; k];
+            let mut v_acc = vec![0.0f64; k];
+            for &x in data {
+                // E-step for one point (log-sum-exp)
+                let mut max_lp = f64::NEG_INFINITY;
+                for j in 0..k {
+                    resp[j] = weights[j].max(1e-300).ln() + log_normal_pdf(x, means[j], stds[j]);
+                    max_lp = max_lp.max(resp[j]);
+                }
+                let mut z = 0.0;
+                for r in resp.iter_mut() {
+                    *r = (*r - max_lp).exp();
+                    z += *r;
+                }
+                for j in 0..k {
+                    let r = resp[j] / z;
+                    w_acc[j] += r;
+                    m_acc[j] += r * x;
+                    v_acc[j] += r * x * x;
+                }
+            }
+            // M-step
+            for j in 0..k {
+                if w_acc[j] > 1e-12 {
+                    means[j] = m_acc[j] / w_acc[j];
+                    let var = (v_acc[j] / w_acc[j] - means[j] * means[j]).max(MIN_STD * MIN_STD);
+                    stds[j] = var.sqrt();
+                    weights[j] = w_acc[j] / n as f64;
+                } else {
+                    // dead component: re-seed on a random point
+                    means[j] = data[rng.below_usize(n)];
+                    stds[j] = global_std;
+                    weights[j] = 1e-6;
+                }
+            }
+            let s: f64 = weights.iter().sum();
+            for w in weights.iter_mut() {
+                *w /= s;
+            }
+        }
+        let _ = global_mean;
+
+        // prune low-weight components (VGM-style sparsity)
+        let keep: Vec<usize> =
+            (0..k).filter(|&j| weights[j] >= prune).collect();
+        let keep = if keep.is_empty() { vec![0] } else { keep };
+        let mut g = Gmm {
+            weights: keep.iter().map(|&j| weights[j]).collect(),
+            means: keep.iter().map(|&j| means[j]).collect(),
+            stds: keep.iter().map(|&j| stds[j]).collect(),
+        };
+        // merge near-duplicate components: plain EM happily represents one
+        // mode with several overlapping Gaussians; the variational prior
+        // in CTGAN's VGM collapses those, which we mimic by merging
+        // components whose means are within half a pooled std
+        g.merge_close();
+        let s: f64 = g.weights.iter().sum();
+        for w in g.weights.iter_mut() {
+            *w /= s;
+        }
+        g
+    }
+
+    /// Merge components whose means differ by less than 0.5 pooled std.
+    fn merge_close(&mut self) {
+        loop {
+            let k = self.n_components();
+            if k <= 1 {
+                return;
+            }
+            let mut merged = false;
+            'outer: for i in 0..k {
+                for j in (i + 1)..k {
+                    let pooled = 0.5 * (self.stds[i] + self.stds[j]);
+                    if (self.means[i] - self.means[j]).abs() < 0.5 * pooled.max(MIN_STD) {
+                        // moment-preserving merge of i and j into i
+                        let (wi, wj) = (self.weights[i], self.weights[j]);
+                        let w = wi + wj;
+                        let mu = (wi * self.means[i] + wj * self.means[j]) / w;
+                        let var = (wi * (self.stds[i] * self.stds[i]
+                            + (self.means[i] - mu) * (self.means[i] - mu))
+                            + wj * (self.stds[j] * self.stds[j]
+                                + (self.means[j] - mu) * (self.means[j] - mu)))
+                            / w;
+                        self.weights[i] = w;
+                        self.means[i] = mu;
+                        self.stds[i] = var.sqrt().max(MIN_STD);
+                        self.weights.remove(j);
+                        self.means.remove(j);
+                        self.stds.remove(j);
+                        merged = true;
+                        break 'outer;
+                    }
+                }
+            }
+            if !merged {
+                return;
+            }
+        }
+    }
+
+    /// Number of (surviving) components.
+    pub fn n_components(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Most responsible component for `x` and the in-mode normalized
+    /// scalar α = (x − μ)/(4σ) clamped to [−1, 1] (CTGAN convention).
+    pub fn encode(&self, x: f64) -> (usize, f64) {
+        let mut best = 0;
+        let mut best_lp = f64::NEG_INFINITY;
+        for j in 0..self.n_components() {
+            let lp = self.weights[j].max(1e-300).ln()
+                + log_normal_pdf(x, self.means[j], self.stds[j]);
+            if lp > best_lp {
+                best_lp = lp;
+                best = j;
+            }
+        }
+        let alpha = ((x - self.means[best]) / (4.0 * self.stds[best])).clamp(-1.0, 1.0);
+        (best, alpha)
+    }
+
+    /// Inverse of [`encode`].
+    pub fn decode(&self, mode: usize, alpha: f64) -> f64 {
+        let mode = mode.min(self.n_components() - 1);
+        self.means[mode] + alpha.clamp(-1.0, 1.0) * 4.0 * self.stds[mode]
+    }
+
+    /// Sample from the mixture.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let table = AliasTable::new(&self.weights);
+        let j = table.sample(rng);
+        rng.normal_ms(self.means[j], self.stds[j])
+    }
+
+    /// Mixture log-likelihood of a sample.
+    pub fn log_likelihood(&self, data: &[f64]) -> f64 {
+        data.iter()
+            .map(|&x| {
+                let mut max_lp = f64::NEG_INFINITY;
+                let lps: Vec<f64> = (0..self.n_components())
+                    .map(|j| {
+                        let lp = self.weights[j].max(1e-300).ln()
+                            + log_normal_pdf(x, self.means[j], self.stds[j]);
+                        max_lp = max_lp.max(lp);
+                        lp
+                    })
+                    .collect();
+                max_lp + lps.iter().map(|lp| (lp - max_lp).exp()).sum::<f64>().ln()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bimodal(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    rng.normal_ms(-5.0, 0.5)
+                } else {
+                    rng.normal_ms(5.0, 0.8)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn finds_two_modes() {
+        let data = bimodal(2000, 1);
+        let g = Gmm::fit(&data, 5, 30, 0.05, 7);
+        assert!(g.n_components() >= 2, "k={}", g.n_components());
+        // two heaviest components near -5 and 5
+        let mut idx: Vec<usize> = (0..g.n_components()).collect();
+        idx.sort_by(|&a, &b| g.weights[b].partial_cmp(&g.weights[a]).unwrap());
+        let m0 = g.means[idx[0]];
+        let m1 = g.means[idx[1]];
+        let (lo, hi) = if m0 < m1 { (m0, m1) } else { (m1, m0) };
+        assert!((lo + 5.0).abs() < 0.5, "lo={lo}");
+        assert!((hi - 5.0).abs() < 0.5, "hi={hi}");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let data = bimodal(1000, 2);
+        let g = Gmm::fit(&data, 4, 25, 0.05, 3);
+        for &x in data.iter().take(100) {
+            let (mode, alpha) = g.encode(x);
+            let back = g.decode(mode, alpha);
+            assert!((back - x).abs() < 1.0, "x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn prune_removes_spurious_components() {
+        // unimodal data, ask for 8 components, expect pruning to few
+        let mut rng = Pcg64::new(3);
+        let data: Vec<f64> = (0..1500).map(|_| rng.normal_ms(2.0, 1.0)).collect();
+        let g = Gmm::fit(&data, 8, 30, 0.08, 5);
+        assert!(g.n_components() <= 4, "k={}", g.n_components());
+    }
+
+    #[test]
+    fn sample_matches_distribution() {
+        let data = bimodal(2000, 4);
+        let g = Gmm::fit(&data, 4, 25, 0.05, 6);
+        let mut rng = Pcg64::new(8);
+        let synth: Vec<f64> = (0..2000).map(|_| g.sample(&mut rng)).collect();
+        let m_data = crate::util::stats::mean(&data);
+        let m_synth = crate::util::stats::mean(&synth);
+        assert!((m_data - m_synth).abs() < 0.5, "{m_data} vs {m_synth}");
+        let s_data = crate::util::stats::std_dev(&data);
+        let s_synth = crate::util::stats::std_dev(&synth);
+        assert!((s_data - s_synth).abs() / s_data < 0.2);
+    }
+
+    #[test]
+    fn empty_data_safe() {
+        let g = Gmm::fit(&[], 3, 10, 0.05, 1);
+        assert_eq!(g.n_components(), 1);
+        let mut rng = Pcg64::new(1);
+        let _ = g.sample(&mut rng);
+    }
+
+    #[test]
+    fn loglik_improves_with_fit() {
+        let data = bimodal(800, 9);
+        let fitted = Gmm::fit(&data, 4, 30, 0.05, 2);
+        let naive = Gmm { weights: vec![1.0], means: vec![0.0], stds: vec![1.0] };
+        assert!(fitted.log_likelihood(&data) > naive.log_likelihood(&data));
+    }
+}

@@ -1,0 +1,205 @@
+//! Multivariate kernel density estimation (Parzen–Rosenblatt), the
+//! classical tabular generator the paper ablates against (Table 6: "KDE").
+//!
+//! Joint product-kernel KDE: a sample is a bootstrap of a full data *row*
+//! (preserving inter-column dependence) plus Gaussian kernel noise with
+//! Silverman bandwidth on each continuous column; categorical columns
+//! keep the row's code with a small smoothing probability of resampling
+//! from the empirical marginal.
+
+use super::table::{Column, ColumnData, FeatureTable};
+use super::FeatureGenerator;
+use crate::util::rng::{AliasTable, Pcg64};
+use crate::util::stats;
+use crate::Result;
+
+/// Probability a categorical cell is resampled from the marginal
+/// (kernel smoothing for discrete columns).
+const CAT_SMOOTH: f64 = 0.05;
+
+/// Fixed seed for the deterministic fit-time subsample.
+const KDE_SUBSAMPLE_SEED: u64 = 0x6b64_6531;
+
+/// Fitted joint KDE generator.
+#[derive(Clone, Debug)]
+pub struct KdeFeatureGen {
+    /// Bootstrap support (possibly subsampled rows of the input).
+    support: FeatureTable,
+    /// Bandwidth per column (0 for categorical).
+    bandwidths: Vec<f64>,
+    /// Marginal tables for categorical smoothing (None for continuous).
+    marginals: Vec<Option<(AliasTable, u32)>>,
+}
+
+/// Silverman's rule-of-thumb bandwidth.
+pub fn silverman_bandwidth(data: &[f64]) -> f64 {
+    let n = data.len().max(1) as f64;
+    let sd = stats::std_dev(data);
+    let iqr = stats::quantile(data, 0.75) - stats::quantile(data, 0.25);
+    let sigma = if iqr > 0.0 { sd.min(iqr / 1.34) } else { sd };
+    let sigma = if sigma > 0.0 { sigma } else { 1e-3 };
+    0.9 * sigma * n.powf(-0.2)
+}
+
+impl KdeFeatureGen {
+    /// Fit; tables larger than 50k rows are subsampled deterministically.
+    pub fn fit(table: &FeatureTable) -> Self {
+        const MAX_SAMPLE: usize = 50_000;
+        let n = table.n_rows();
+        let support = if n > MAX_SAMPLE {
+            let mut rng = Pcg64::new(KDE_SUBSAMPLE_SEED);
+            let rows: Vec<usize> = (0..MAX_SAMPLE).map(|_| rng.below_usize(n)).collect();
+            table.gather(&rows)
+        } else {
+            table.clone()
+        };
+        let mut bandwidths = Vec::with_capacity(support.n_cols());
+        let mut marginals = Vec::with_capacity(support.n_cols());
+        for c in &support.columns {
+            match &c.data {
+                ColumnData::Continuous(v) => {
+                    bandwidths.push(silverman_bandwidth(v));
+                    marginals.push(None);
+                }
+                ColumnData::Categorical { codes, cardinality } => {
+                    let mut counts = vec![0.0f64; (*cardinality).max(1) as usize];
+                    for &x in codes {
+                        counts[x as usize] += 1.0;
+                    }
+                    bandwidths.push(0.0);
+                    marginals.push(Some((AliasTable::new(&counts), *cardinality)));
+                }
+            }
+        }
+        KdeFeatureGen { support, bandwidths, marginals }
+    }
+}
+
+impl FeatureGenerator for KdeFeatureGen {
+    fn name(&self) -> &'static str {
+        "kde"
+    }
+
+    fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {
+        let mut rng = Pcg64::new(seed);
+        let n_sup = self.support.n_rows();
+        let mut columns: Vec<Column> = self
+            .support
+            .columns
+            .iter()
+            .map(|c| Column {
+                name: c.name.clone(),
+                data: match &c.data {
+                    ColumnData::Continuous(_) => ColumnData::Continuous(Vec::with_capacity(n)),
+                    ColumnData::Categorical { cardinality, .. } => ColumnData::Categorical {
+                        codes: Vec::with_capacity(n),
+                        cardinality: *cardinality,
+                    },
+                },
+            })
+            .collect();
+        for _ in 0..n {
+            let r = if n_sup == 0 { 0 } else { rng.below_usize(n_sup) };
+            for (ci, col) in self.support.columns.iter().enumerate() {
+                match (&col.data, &mut columns[ci].data) {
+                    (ColumnData::Continuous(src), ColumnData::Continuous(dst)) => {
+                        let base = if n_sup == 0 { 0.0 } else { src[r] };
+                        dst.push(base + rng.normal() * self.bandwidths[ci]);
+                    }
+                    (ColumnData::Categorical { codes, .. }, ColumnData::Categorical { codes: dst, .. }) => {
+                        let (table, _) = self.marginals[ci].as_ref().unwrap();
+                        let code = if n_sup == 0 || rng.bool(CAT_SMOOTH) {
+                            table.sample(&mut rng) as u32
+                        } else {
+                            codes[r]
+                        };
+                        dst.push(code);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+        FeatureTable::new(columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bimodal_table(n: usize) -> FeatureTable {
+        let mut rng = Pcg64::new(5);
+        let vals: Vec<f64> = (0..n)
+            .map(|i| if i % 2 == 0 { rng.normal_ms(-3.0, 0.4) } else { rng.normal_ms(3.0, 0.4) })
+            .collect();
+        let codes: Vec<u32> = (0..n).map(|_| if rng.bool(0.8) { 0 } else { 1 }).collect();
+        FeatureTable::new(vec![
+            Column::continuous("v", vals),
+            Column::categorical("c", codes),
+        ])
+        .unwrap()
+    }
+
+    fn correlated_table(n: usize) -> FeatureTable {
+        let mut rng = Pcg64::new(9);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..n {
+            let x = rng.normal();
+            a.push(x);
+            b.push(2.0 * x + rng.normal() * 0.3);
+        }
+        FeatureTable::new(vec![Column::continuous("a", a), Column::continuous("b", b)]).unwrap()
+    }
+
+    #[test]
+    fn preserves_bimodality() {
+        let t = bimodal_table(4000);
+        let g = KdeFeatureGen::fit(&t);
+        let s = g.sample(4000, 1).unwrap();
+        let vals = s.column("v").unwrap().as_continuous();
+        let near_neg = vals.iter().filter(|&&x| (x + 3.0).abs() < 1.0).count();
+        let near_pos = vals.iter().filter(|&&x| (x - 3.0).abs() < 1.0).count();
+        assert!(near_neg > 1500 && near_pos > 1500, "{near_neg} {near_pos}");
+    }
+
+    #[test]
+    fn preserves_inter_column_correlation() {
+        // the joint (row-bootstrap) property: a-b correlation survives
+        let t = correlated_table(3000);
+        let g = KdeFeatureGen::fit(&t);
+        let s = g.sample(3000, 3).unwrap();
+        let corr_orig = stats::pearson(
+            t.column("a").unwrap().as_continuous(),
+            t.column("b").unwrap().as_continuous(),
+        );
+        let corr_synth = stats::pearson(
+            s.column("a").unwrap().as_continuous(),
+            s.column("b").unwrap().as_continuous(),
+        );
+        assert!((corr_orig - corr_synth).abs() < 0.1, "{corr_orig} vs {corr_synth}");
+    }
+
+    #[test]
+    fn categorical_frequencies_preserved() {
+        let t = bimodal_table(4000);
+        let g = KdeFeatureGen::fit(&t);
+        let s = g.sample(4000, 2).unwrap();
+        let (codes, _) = s.column("c").unwrap().as_categorical();
+        let p0 = codes.iter().filter(|&&c| c == 0).count() as f64 / codes.len() as f64;
+        assert!((p0 - 0.8).abs() < 0.05, "p0={p0}");
+    }
+
+    #[test]
+    fn silverman_positive() {
+        assert!(silverman_bandwidth(&[1.0, 2.0, 3.0, 10.0]) > 0.0);
+        assert!(silverman_bandwidth(&[5.0, 5.0, 5.0]) > 0.0);
+    }
+
+    #[test]
+    fn deterministic_sampling() {
+        let t = bimodal_table(100);
+        let g = KdeFeatureGen::fit(&t);
+        assert_eq!(g.sample(20, 9).unwrap(), g.sample(20, 9).unwrap());
+    }
+}

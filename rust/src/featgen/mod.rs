@@ -1,0 +1,62 @@
+//! Feature generation (paper §3.3).
+//!
+//! Node/edge features are treated as a tabular dataset ([`table`]) of
+//! continuous and categorical columns. Four interchangeable generators
+//! implement [`FeatureGenerator`]:
+//!
+//! * [`gan`] — the paper's CTGAN-style GAN: mode-specific normalization
+//!   ([`encoder`], backed by the [`gmm`] EM mixture standing in for the
+//!   variational GM), feature tokenizer + ResNet stacks in JAX/Pallas,
+//!   trained and sampled through the PJRT runtime.
+//! * [`kde`] — per-column kernel density estimation (the classical
+//!   tabular baseline, Table 6 ablation).
+//! * [`random`] — ranges-only random generator (the paper's "random").
+//! * [`gaussian`] — multivariate Gaussian (the feature model used when
+//!   integrating GraphWorld into the framework, §4.4).
+
+pub mod encoder;
+pub mod gan;
+pub mod gaussian;
+pub mod gmm;
+pub mod kde;
+pub mod random;
+pub mod table;
+
+pub use table::{Column, ColumnData, FeatureTable};
+
+use crate::Result;
+
+/// A fitted tabular feature generator.
+pub trait FeatureGenerator {
+    /// Name used in experiment tables.
+    fn name(&self) -> &'static str;
+
+    /// Sample `n` feature rows.
+    fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable>;
+}
+
+/// Which feature generator a pipeline uses (ablation axis of Table 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatKind {
+    /// CTGAN-style GAN (requires AOT artifacts).
+    Gan,
+    /// Kernel density estimation.
+    Kde,
+    /// Ranges-only random.
+    Random,
+    /// Multivariate Gaussian.
+    Gaussian,
+}
+
+impl std::str::FromStr for FeatKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "gan" => Ok(FeatKind::Gan),
+            "kde" => Ok(FeatKind::Kde),
+            "random" => Ok(FeatKind::Random),
+            "gaussian" | "mvg" => Ok(FeatKind::Gaussian),
+            other => Err(format!("unknown feature generator `{other}`")),
+        }
+    }
+}

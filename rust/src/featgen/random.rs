@@ -1,0 +1,107 @@
+//! Range-fitted random feature generator — the paper's "random" baseline
+//! (§4.1: "a random feature generator with ranges fitted to the original
+//! feature dimension").
+
+use super::table::{Column, ColumnData, FeatureTable};
+use super::FeatureGenerator;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+/// Per-column fitted ranges.
+#[derive(Clone, Debug)]
+pub struct RandomFeatureGen {
+    specs: Vec<ColumnSpec>,
+}
+
+#[derive(Clone, Debug)]
+enum ColumnSpec {
+    Continuous { name: String, lo: f64, hi: f64 },
+    Categorical { name: String, cardinality: u32 },
+}
+
+impl RandomFeatureGen {
+    /// Fit: record each column's range / cardinality.
+    pub fn fit(table: &FeatureTable) -> Self {
+        let specs = table
+            .columns
+            .iter()
+            .map(|c| match &c.data {
+                ColumnData::Continuous(v) => {
+                    let (lo, hi) = crate::util::stats::min_max(v);
+                    ColumnSpec::Continuous { name: c.name.clone(), lo, hi }
+                }
+                ColumnData::Categorical { cardinality, .. } => {
+                    ColumnSpec::Categorical { name: c.name.clone(), cardinality: *cardinality }
+                }
+            })
+            .collect();
+        RandomFeatureGen { specs }
+    }
+}
+
+impl FeatureGenerator for RandomFeatureGen {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {
+        let mut rng = Pcg64::new(seed);
+        let columns = self
+            .specs
+            .iter()
+            .map(|s| match s {
+                ColumnSpec::Continuous { name, lo, hi } => Column {
+                    name: name.clone(),
+                    data: ColumnData::Continuous((0..n).map(|_| rng.range(*lo, *hi)).collect()),
+                },
+                ColumnSpec::Categorical { name, cardinality } => Column {
+                    name: name.clone(),
+                    data: ColumnData::Categorical {
+                        codes: (0..n).map(|_| rng.below(*cardinality.max(&1) as u64) as u32).collect(),
+                        cardinality: *cardinality,
+                    },
+                },
+            })
+            .collect();
+        FeatureTable::new(columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> FeatureTable {
+        FeatureTable::new(vec![
+            Column::continuous("x", vec![-2.0, 0.0, 4.0]),
+            Column::categorical("c", vec![0, 2, 1]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn respects_ranges() {
+        let g = RandomFeatureGen::fit(&table());
+        let s = g.sample(500, 1).unwrap();
+        for &v in s.column("x").unwrap().as_continuous() {
+            assert!((-2.0..=4.0).contains(&v));
+        }
+        let (codes, card) = s.column("c").unwrap().as_categorical();
+        assert_eq!(card, 3);
+        assert!(codes.iter().all(|&c| c < 3));
+    }
+
+    #[test]
+    fn sample_shape() {
+        let g = RandomFeatureGen::fit(&table());
+        let s = g.sample(17, 2).unwrap();
+        assert_eq!(s.n_rows(), 17);
+        assert_eq!(s.n_cols(), 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = RandomFeatureGen::fit(&table());
+        assert_eq!(g.sample(10, 3).unwrap(), g.sample(10, 3).unwrap());
+    }
+}

@@ -1,0 +1,215 @@
+//! Tabular feature container: the `F_V` / `F_E` matrices of the paper,
+//! stored column-major with explicit continuous/categorical typing
+//! (the multi-modal setting of §3.3).
+
+use crate::error::{Error, Result};
+
+/// Column payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ColumnData {
+    /// Continuous feature values.
+    Continuous(Vec<f64>),
+    /// Categorical codes in [0, cardinality).
+    Categorical { codes: Vec<u32>, cardinality: u32 },
+}
+
+/// A named, typed feature column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Column {
+    pub name: String,
+    pub data: ColumnData,
+}
+
+impl Column {
+    /// New continuous column.
+    pub fn continuous(name: &str, values: Vec<f64>) -> Column {
+        Column { name: name.to_string(), data: ColumnData::Continuous(values) }
+    }
+
+    /// New categorical column; cardinality inferred from the codes.
+    pub fn categorical(name: &str, codes: Vec<u32>) -> Column {
+        let cardinality = codes.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+        Column { name: name.to_string(), data: ColumnData::Categorical { codes, cardinality } }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match &self.data {
+            ColumnData::Continuous(v) => v.len(),
+            ColumnData::Categorical { codes, .. } => codes.len(),
+        }
+    }
+
+    /// True when the column has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True for continuous columns.
+    pub fn is_continuous(&self) -> bool {
+        matches!(self.data, ColumnData::Continuous(_))
+    }
+
+    /// Continuous values (panics on categorical — use after checking).
+    pub fn as_continuous(&self) -> &[f64] {
+        match &self.data {
+            ColumnData::Continuous(v) => v,
+            _ => panic!("column `{}` is not continuous", self.name),
+        }
+    }
+
+    /// Categorical codes.
+    pub fn as_categorical(&self) -> (&[u32], u32) {
+        match &self.data {
+            ColumnData::Categorical { codes, cardinality } => (codes, *cardinality),
+            _ => panic!("column `{}` is not categorical", self.name),
+        }
+    }
+}
+
+/// A table of equally long feature columns.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FeatureTable {
+    pub columns: Vec<Column>,
+}
+
+impl FeatureTable {
+    /// Build, validating equal column lengths.
+    pub fn new(columns: Vec<Column>) -> Result<FeatureTable> {
+        if let Some(first) = columns.first() {
+            let n = first.len();
+            for c in &columns {
+                if c.len() != n {
+                    return Err(Error::Data(format!(
+                        "column `{}` has {} rows, expected {n}",
+                        c.name,
+                        c.len()
+                    )));
+                }
+            }
+        }
+        Ok(FeatureTable { columns })
+    }
+
+    /// Number of rows.
+    pub fn n_rows(&self) -> usize {
+        self.columns.first().map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// Number of columns.
+    pub fn n_cols(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Indices of continuous / categorical columns.
+    pub fn split_indices(&self) -> (Vec<usize>, Vec<usize>) {
+        let mut cont = Vec::new();
+        let mut cat = Vec::new();
+        for (i, c) in self.columns.iter().enumerate() {
+            if c.is_continuous() {
+                cont.push(i);
+            } else {
+                cat.push(i);
+            }
+        }
+        (cont, cat)
+    }
+
+    /// Extract row `i` as (continuous values, categorical codes) in
+    /// column order.
+    pub fn row(&self, i: usize) -> (Vec<f64>, Vec<u32>) {
+        let mut cont = Vec::new();
+        let mut cat = Vec::new();
+        for c in &self.columns {
+            match &c.data {
+                ColumnData::Continuous(v) => cont.push(v[i]),
+                ColumnData::Categorical { codes, .. } => cat.push(codes[i]),
+            }
+        }
+        (cont, cat)
+    }
+
+    /// Gather a subset of rows into a new table (row `perm[i]` of self
+    /// becomes row i). Indices may repeat.
+    pub fn gather(&self, perm: &[usize]) -> FeatureTable {
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| Column {
+                name: c.name.clone(),
+                data: match &c.data {
+                    ColumnData::Continuous(v) => {
+                        ColumnData::Continuous(perm.iter().map(|&i| v[i]).collect())
+                    }
+                    ColumnData::Categorical { codes, cardinality } => ColumnData::Categorical {
+                        codes: perm.iter().map(|&i| codes[i]).collect(),
+                        cardinality: *cardinality,
+                    },
+                },
+            })
+            .collect();
+        FeatureTable { columns }
+    }
+
+    /// Look up a column by name.
+    pub fn column(&self, name: &str) -> Option<&Column> {
+        self.columns.iter().find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> FeatureTable {
+        FeatureTable::new(vec![
+            Column::continuous("amount", vec![1.0, 2.0, 3.0]),
+            Column::categorical("kind", vec![0, 1, 0]),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let t = sample();
+        assert_eq!(t.n_rows(), 3);
+        assert_eq!(t.n_cols(), 2);
+        let (cont, cat) = t.split_indices();
+        assert_eq!(cont, vec![0]);
+        assert_eq!(cat, vec![1]);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let r = FeatureTable::new(vec![
+            Column::continuous("a", vec![1.0]),
+            Column::continuous("b", vec![1.0, 2.0]),
+        ]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn row_extraction() {
+        let t = sample();
+        let (cont, cat) = t.row(1);
+        assert_eq!(cont, vec![2.0]);
+        assert_eq!(cat, vec![1]);
+    }
+
+    #[test]
+    fn gather_repeats_and_reorders() {
+        let t = sample();
+        let g = t.gather(&[2, 2, 0]);
+        assert_eq!(g.column("amount").unwrap().as_continuous(), &[3.0, 3.0, 1.0]);
+        let (codes, card) = g.column("kind").unwrap().as_categorical();
+        assert_eq!(codes, &[0, 0, 0]);
+        assert_eq!(card, 2);
+    }
+
+    #[test]
+    fn cardinality_inferred() {
+        let c = Column::categorical("x", vec![3, 1, 2]);
+        let (_, card) = c.as_categorical();
+        assert_eq!(card, 4);
+    }
+}

@@ -1,0 +1,80 @@
+//! Bridging datasets into the GNN executors (paper §8.1/§8.4/§8.5).
+//!
+//! Converts a [`Dataset`] into the padded dense tensors the
+//! `gcn_full_*` / `gat_full_*` / `edge_clf_*` artifacts expect, and picks
+//! the right node bucket.
+
+use crate::datasets::Dataset;
+use crate::error::{Error, Result};
+use crate::runtime::gnn_exec::{prepare_dense, DenseGraph};
+
+/// Node buckets compiled into the artifacts (aot.py NODE_NS).
+pub const NODE_BUCKETS: &[usize] = &[1024, 4096];
+
+/// Smallest artifact bucket that fits `n` nodes.
+pub fn pick_bucket(n: usize) -> Result<usize> {
+    NODE_BUCKETS
+        .iter()
+        .copied()
+        .find(|&b| b >= n)
+        .ok_or_else(|| Error::Config(format!("{n} nodes exceed largest GNN bucket")))
+}
+
+/// Prepare a node-classification task from a dataset with node features
+/// and labels (e.g. the Cora stand-in or a Figure 4 synthetic).
+pub fn node_task(ds: &Dataset, seed: u64) -> Result<DenseGraph> {
+    let nf = ds
+        .node_features
+        .as_ref()
+        .ok_or_else(|| Error::Data(format!("{} has no node features", ds.name)))?;
+    let labels = ds
+        .node_labels
+        .as_ref()
+        .ok_or_else(|| Error::Data(format!("{} has no node labels", ds.name)))?;
+    let n = ds.edges.n_nodes() as usize;
+    let bucket = pick_bucket(n)?;
+    // row-major node feature vectors
+    let rows: Vec<Vec<f64>> = (0..nf.n_rows()).map(|i| nf.row(i).0).collect();
+    prepare_dense(&ds.edges, &rows, labels, bucket, seed)
+}
+
+/// Transplant labels/features from an original dataset onto a generated
+/// structure of the same node count (pretraining graphs keep the task
+/// semantics of the original — paper §8.4).
+pub fn node_task_on_structure(
+    original: &Dataset,
+    structure: &crate::graph::EdgeList,
+    seed: u64,
+) -> Result<DenseGraph> {
+    let mut ds = original.clone();
+    ds.edges = structure.clone();
+    node_task(&ds, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(pick_bucket(500).unwrap(), 1024);
+        assert_eq!(pick_bucket(1024).unwrap(), 1024);
+        assert_eq!(pick_bucket(2708).unwrap(), 4096);
+        assert!(pick_bucket(100_000).is_err());
+    }
+
+    #[test]
+    fn cora_task_shapes() {
+        let ds = crate::datasets::load("cora", 1).unwrap();
+        let g = node_task(&ds, 2).unwrap();
+        assert_eq!(g.n, 4096);
+        assert_eq!(g.n_real, 2708);
+        assert_eq!(g.x.len(), 4096 * crate::runtime::gnn_exec::FEAT);
+        // masks only over real nodes
+        let t: f32 = g.train_mask.iter().sum();
+        let v: f32 = g.val_mask.iter().sum();
+        assert_eq!((t + v) as usize, 2708);
+        // adjacency symmetric + self loops
+        assert_eq!(g.a_mask[0], 1.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Partite layout descriptors.
+//!
+//! The paper's structure generator (§3.2.2) works on a possibly non-square
+//! n×m adjacency where rows and columns may represent *different* nodes
+//! (bipartite / K-partite graphs) or the *same* nodes (homogeneous square
+//! graphs). `PartiteSpec` records which interpretation applies; it decides
+//! how degree distributions, metrics and the aligner map row/column indices
+//! to node identities.
+
+/// Describes the node space behind an adjacency matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartiteSpec {
+    /// Number of row (source) nodes, `N` in the paper.
+    pub n_src: u64,
+    /// Number of column (destination) nodes, `M` in the paper.
+    pub n_dst: u64,
+    /// If true, rows and columns index the *same* node set (homogeneous
+    /// graph, square adjacency); total nodes = n_src. Otherwise the graph
+    /// is bipartite and total nodes = n_src + n_dst.
+    pub square: bool,
+}
+
+impl Default for PartiteSpec {
+    fn default() -> Self {
+        PartiteSpec::square(0)
+    }
+}
+
+impl PartiteSpec {
+    /// Homogeneous graph over `n` nodes (square adjacency).
+    pub fn square(n: u64) -> Self {
+        PartiteSpec { n_src: n, n_dst: n, square: true }
+    }
+
+    /// Bipartite graph with `n` source and `m` destination nodes.
+    pub fn bipartite(n: u64, m: u64) -> Self {
+        PartiteSpec { n_src: n, n_dst: m, square: false }
+    }
+
+    /// Total number of distinct nodes.
+    pub fn total_nodes(&self) -> u64 {
+        if self.square {
+            self.n_src
+        } else {
+            self.n_src + self.n_dst
+        }
+    }
+
+    /// Global node id of source-row `i` (row partite comes first).
+    pub fn src_global(&self, i: u64) -> u64 {
+        i
+    }
+
+    /// Global node id of destination-column `j`.
+    pub fn dst_global(&self, j: u64) -> u64 {
+        if self.square {
+            j
+        } else {
+            self.n_src + j
+        }
+    }
+
+    /// Scale both partites by `k` (paper §8.2: nodes scale linearly).
+    pub fn scaled(&self, k: u64) -> PartiteSpec {
+        PartiteSpec { n_src: self.n_src * k, n_dst: self.n_dst * k, square: self.square }
+    }
+
+    /// Graph density E / (N·M) (paper eq. 22).
+    pub fn density(&self, edges: u64) -> f64 {
+        let cells = self.n_src as f64 * self.n_dst as f64;
+        if cells <= 0.0 {
+            0.0
+        } else {
+            edges as f64 / cells
+        }
+    }
+
+    /// Number of edges that preserves this spec's density in a graph
+    /// scaled by `k` in both partites (eq. 22: E scales as k²).
+    pub fn density_preserving_edges(&self, edges: u64, k: u64) -> u64 {
+        edges.saturating_mul(k).saturating_mul(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_ids_bipartite() {
+        let s = PartiteSpec::bipartite(10, 5);
+        assert_eq!(s.src_global(3), 3);
+        assert_eq!(s.dst_global(0), 10);
+        assert_eq!(s.dst_global(4), 14);
+        assert_eq!(s.total_nodes(), 15);
+    }
+
+    #[test]
+    fn global_ids_square() {
+        let s = PartiteSpec::square(8);
+        assert_eq!(s.dst_global(5), 5);
+        assert_eq!(s.total_nodes(), 8);
+    }
+
+    #[test]
+    fn density_preserved_under_scaling() {
+        let s = PartiteSpec::bipartite(100, 50);
+        let e = 1000u64;
+        let d0 = s.density(e);
+        let k = 4;
+        let s2 = s.scaled(k);
+        let e2 = s.density_preserving_edges(e, k);
+        let d1 = s2.density(e2);
+        assert!((d0 - d1).abs() < 1e-12, "{d0} vs {d1}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Compressed sparse row adjacency built from an [`EdgeList`].
+//!
+//! Used by everything that needs neighborhood queries: BFS/hop-plot,
+//! PageRank/Katz, clustering coefficients, triangle counting, node2vec
+//! walks, and the GNN data prep. For bipartite graphs the CSR is built
+//! over the *global* node space (rows then columns) with edges in both
+//! directions when an undirected view is requested.
+
+use super::edgelist::EdgeList;
+
+/// CSR adjacency. `neighbors(v)` is `adj[offsets[v]..offsets[v+1]]`.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// Row offsets, length `n_nodes + 1`.
+    pub offsets: Vec<u64>,
+    /// Column indices (global node ids).
+    pub adj: Vec<u64>,
+    /// Number of nodes in the global id space.
+    pub n_nodes: u64,
+}
+
+impl Csr {
+    /// Directed CSR over global ids: edges go src_global -> dst_global.
+    pub fn directed(edges: &EdgeList) -> Csr {
+        Self::build(edges, false)
+    }
+
+    /// Undirected CSR: each edge contributes both directions (self-loops
+    /// once). This is the view used by hop-plots, clustering and
+    /// components, matching how the paper evaluates its graphs.
+    pub fn undirected(edges: &EdgeList) -> Csr {
+        Self::build(edges, true)
+    }
+
+    fn build(edges: &EdgeList, symmetrize: bool) -> Csr {
+        let n = edges.spec.total_nodes();
+        let mut deg = vec![0u64; n as usize];
+        for (s, d) in edges.iter() {
+            let gs = edges.spec.src_global(s);
+            let gd = edges.spec.dst_global(d);
+            deg[gs as usize] += 1;
+            if symmetrize && gs != gd {
+                deg[gd as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0u64; n as usize + 1];
+        for i in 0..n as usize {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut adj = vec![0u64; offsets[n as usize] as usize];
+        let mut cursor = offsets.clone();
+        for (s, d) in edges.iter() {
+            let gs = edges.spec.src_global(s) as usize;
+            let gd = edges.spec.dst_global(d) as usize;
+            adj[cursor[gs] as usize] = gd as u64;
+            cursor[gs] += 1;
+            if symmetrize && gs != gd {
+                adj[cursor[gd] as usize] = gs as u64;
+                cursor[gd] += 1;
+            }
+        }
+        let mut csr = Csr { offsets, adj, n_nodes: n };
+        csr.sort_neighbors();
+        csr
+    }
+
+    fn sort_neighbors(&mut self) {
+        for v in 0..self.n_nodes as usize {
+            let (a, b) = (self.offsets[v] as usize, self.offsets[v + 1] as usize);
+            self.adj[a..b].sort_unstable();
+        }
+    }
+
+    /// Neighbor slice of node `v` (sorted).
+    #[inline]
+    pub fn neighbors(&self, v: u64) -> &[u64] {
+        let a = self.offsets[v as usize] as usize;
+        let b = self.offsets[v as usize + 1] as usize;
+        &self.adj[a..b]
+    }
+
+    /// Degree of node `v` in this view.
+    #[inline]
+    pub fn degree(&self, v: u64) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// All degrees as f64 (for metric computations).
+    pub fn degrees_f64(&self) -> Vec<f64> {
+        (0..self.n_nodes).map(|v| self.degree(v) as f64).collect()
+    }
+
+    /// True if edge (u, v) exists in this view (binary search).
+    pub fn has_edge(&self, u: u64, v: u64) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Total number of stored directed arcs.
+    pub fn n_arcs(&self) -> usize {
+        self.adj.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::bipartite::PartiteSpec;
+
+    fn petersen_outer() -> EdgeList {
+        // simple 5-cycle
+        EdgeList::from_pairs(
+            PartiteSpec::square(5),
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0)],
+        )
+    }
+
+    #[test]
+    fn directed_preserves_arcs() {
+        let e = petersen_outer();
+        let csr = Csr::directed(&e);
+        assert_eq!(csr.n_arcs(), 5);
+        assert_eq!(csr.neighbors(0), &[1]);
+        assert_eq!(csr.degree(4), 1);
+    }
+
+    #[test]
+    fn undirected_symmetrizes() {
+        let e = petersen_outer();
+        let csr = Csr::undirected(&e);
+        assert_eq!(csr.n_arcs(), 10);
+        assert_eq!(csr.neighbors(0), &[1, 4]);
+        assert!(csr.has_edge(1, 0));
+        assert!(!csr.has_edge(0, 2));
+    }
+
+    #[test]
+    fn bipartite_global_ids() {
+        let e = EdgeList::from_pairs(PartiteSpec::bipartite(2, 3), &[(0, 0), (1, 2)]);
+        let csr = Csr::undirected(&e);
+        assert_eq!(csr.n_nodes, 5);
+        // dst 0 is global 2; dst 2 is global 4
+        assert_eq!(csr.neighbors(0), &[2]);
+        assert_eq!(csr.neighbors(4), &[1]);
+    }
+
+    #[test]
+    fn self_loop_counted_once_undirected() {
+        let e = EdgeList::from_pairs(PartiteSpec::square(3), &[(1, 1), (0, 2)]);
+        let csr = Csr::undirected(&e);
+        assert_eq!(csr.neighbors(1), &[1]);
+        assert_eq!(csr.degree(1), 1);
+    }
+
+    #[test]
+    fn degrees_f64_matches() {
+        let e = petersen_outer();
+        let csr = Csr::undirected(&e);
+        assert_eq!(csr.degrees_f64(), vec![2.0; 5]);
+    }
+}

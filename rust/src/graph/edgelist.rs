@@ -1,0 +1,204 @@
+//! Edge list: the primary interchange representation between the
+//! generators, the aligner and the metrics. Stored column-major
+//! (struct-of-arrays) for cache-friendly scans.
+
+use super::bipartite::PartiteSpec;
+
+/// A directed edge list over a (possibly bipartite) node space.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    /// Source node id per edge (row partite for bipartite graphs).
+    pub src: Vec<u64>,
+    /// Destination node id per edge (column partite for bipartite graphs).
+    pub dst: Vec<u64>,
+    /// Partite layout.
+    pub spec: PartiteSpec,
+}
+
+impl EdgeList {
+    /// Create an empty edge list with the given partite spec.
+    pub fn new(spec: PartiteSpec) -> Self {
+        EdgeList { src: Vec::new(), dst: Vec::new(), spec }
+    }
+
+    /// Create with pre-allocated capacity.
+    pub fn with_capacity(spec: PartiteSpec, cap: usize) -> Self {
+        EdgeList { src: Vec::with_capacity(cap), dst: Vec::with_capacity(cap), spec }
+    }
+
+    /// Build from parallel src/dst vectors.
+    pub fn from_pairs(spec: PartiteSpec, pairs: &[(u64, u64)]) -> Self {
+        let mut e = EdgeList::with_capacity(spec, pairs.len());
+        for &(s, d) in pairs {
+            e.push(s, d);
+        }
+        e
+    }
+
+    /// Number of edges.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.src.len()
+    }
+
+    /// True when there are no edges.
+    pub fn is_empty(&self) -> bool {
+        self.src.is_empty()
+    }
+
+    /// Append an edge.
+    #[inline]
+    pub fn push(&mut self, s: u64, d: u64) {
+        self.src.push(s);
+        self.dst.push(d);
+    }
+
+    /// Append all edges of another list (same spec assumed).
+    pub fn extend_from(&mut self, other: &EdgeList) {
+        self.src.extend_from_slice(&other.src);
+        self.dst.extend_from_slice(&other.dst);
+    }
+
+    /// Iterate over `(src, dst)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.src.iter().copied().zip(self.dst.iter().copied())
+    }
+
+    /// Number of source-partite nodes.
+    pub fn n_src(&self) -> u64 {
+        self.spec.n_src
+    }
+
+    /// Number of destination-partite nodes.
+    pub fn n_dst(&self) -> u64 {
+        self.spec.n_dst
+    }
+
+    /// Total node count across partites (N = n + m in the paper).
+    pub fn n_nodes(&self) -> u64 {
+        self.spec.total_nodes()
+    }
+
+    /// Out-degree histogram over source nodes: `out[i] = deg(v_i)`.
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.spec.n_src as usize];
+        for &s in &self.src {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// In-degree histogram over destination nodes.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.spec.n_dst as usize];
+        for &d in &self.dst {
+            deg[d as usize] += 1;
+        }
+        deg
+    }
+
+    /// Sort edges by (src, dst) and remove duplicates. Returns the number
+    /// of duplicates removed. Used by generators that sample with
+    /// replacement and by the ingest path.
+    pub fn sort_dedup(&mut self) -> usize {
+        let mut keys: Vec<u128> = self
+            .iter()
+            .map(|(s, d)| ((s as u128) << 64) | d as u128)
+            .collect();
+        keys.sort_unstable();
+        let before = keys.len();
+        keys.dedup();
+        let removed = before - keys.len();
+        self.src.clear();
+        self.dst.clear();
+        for k in keys {
+            self.src.push((k >> 64) as u64);
+            self.dst.push(k as u64);
+        }
+        removed
+    }
+
+    /// Validate that all endpoints are within the partite bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, (s, d)) in self.iter().enumerate() {
+            if s >= self.spec.n_src {
+                return Err(format!("edge {i}: src {s} >= n_src {}", self.spec.n_src));
+            }
+            if d >= self.spec.n_dst {
+                return Err(format!("edge {i}: dst {d} >= n_dst {}", self.spec.n_dst));
+            }
+        }
+        Ok(())
+    }
+
+    /// Edge overlap with another edge list over the same node space:
+    /// |E ∩ E'| / |E| — the "EO" column of paper Table 10.
+    pub fn edge_overlap(&self, other: &EdgeList) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let set: std::collections::HashSet<u128> = other
+            .iter()
+            .map(|(s, d)| ((s as u128) << 64) | d as u128)
+            .collect();
+        let hit = self
+            .iter()
+            .filter(|(s, d)| set.contains(&(((*s as u128) << 64) | *d as u128)))
+            .count();
+        hit as f64 / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: u64, m: u64) -> PartiteSpec {
+        PartiteSpec::bipartite(n, m)
+    }
+
+    #[test]
+    fn push_and_degrees() {
+        let mut e = EdgeList::new(spec(3, 2));
+        e.push(0, 0);
+        e.push(0, 1);
+        e.push(2, 1);
+        assert_eq!(e.len(), 3);
+        assert_eq!(e.out_degrees(), vec![2, 0, 1]);
+        assert_eq!(e.in_degrees(), vec![1, 2]);
+    }
+
+    #[test]
+    fn sort_dedup_removes_duplicates() {
+        let mut e = EdgeList::from_pairs(spec(4, 4), &[(1, 2), (0, 0), (1, 2), (3, 3), (0, 0)]);
+        let removed = e.sort_dedup();
+        assert_eq!(removed, 2);
+        assert_eq!(e.len(), 3);
+        let pairs: Vec<_> = e.iter().collect();
+        assert_eq!(pairs, vec![(0, 0), (1, 2), (3, 3)]);
+    }
+
+    #[test]
+    fn validate_bounds() {
+        let e = EdgeList::from_pairs(spec(2, 2), &[(0, 1)]);
+        assert!(e.validate().is_ok());
+        let bad = EdgeList::from_pairs(spec(2, 2), &[(2, 0)]);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn edge_overlap_fraction() {
+        let a = EdgeList::from_pairs(spec(4, 4), &[(0, 0), (1, 1), (2, 2), (3, 3)]);
+        let b = EdgeList::from_pairs(spec(4, 4), &[(0, 0), (1, 1), (0, 3)]);
+        assert!((a.edge_overlap(&b) - 0.5).abs() < 1e-12);
+        assert!((b.edge_overlap(&a) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_nodes_bipartite_vs_square() {
+        let e = EdgeList::new(PartiteSpec::bipartite(5, 7));
+        assert_eq!(e.n_nodes(), 12);
+        let sq = EdgeList::new(PartiteSpec::square(5));
+        assert_eq!(sq.n_nodes(), 5);
+    }
+}

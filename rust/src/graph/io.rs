@@ -1,0 +1,167 @@
+//! On-disk edge-list formats: a compact little-endian binary format for
+//! shard outputs (16 bytes/edge) and a TSV text format for interchange.
+
+use super::bipartite::PartiteSpec;
+use super::edgelist::EdgeList;
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SGGEDGE1";
+
+/// Write an edge list in the binary shard format:
+/// `magic | n_src u64 | n_dst u64 | square u8 | n_edges u64 | (src,dst)*`.
+pub fn write_binary(path: &Path, edges: &EdgeList) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&edges.spec.n_src.to_le_bytes())?;
+    w.write_all(&edges.spec.n_dst.to_le_bytes())?;
+    w.write_all(&[edges.spec.square as u8])?;
+    w.write_all(&(edges.len() as u64).to_le_bytes())?;
+    for (s, d) in edges.iter() {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&d.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary shard format written by [`write_binary`].
+pub fn read_binary(path: &Path) -> Result<EdgeList> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Data(format!("{}: bad magic", path.display())));
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n_src = read_u64(&mut r)?;
+    let n_dst = read_u64(&mut r)?;
+    let mut sq = [0u8; 1];
+    r.read_exact(&mut sq)?;
+    let spec = if sq[0] == 1 {
+        PartiteSpec::square(n_src)
+    } else {
+        PartiteSpec::bipartite(n_src, n_dst)
+    };
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    let n_edges = u64::from_le_bytes(buf) as usize;
+    let mut edges = EdgeList::with_capacity(spec, n_edges);
+    let mut pair = [0u8; 16];
+    for _ in 0..n_edges {
+        r.read_exact(&mut pair)?;
+        let s = u64::from_le_bytes(pair[0..8].try_into().unwrap());
+        let d = u64::from_le_bytes(pair[8..16].try_into().unwrap());
+        edges.push(s, d);
+    }
+    Ok(edges)
+}
+
+/// Write TSV: header `# n_src n_dst square` then `src\tdst` lines.
+pub fn write_tsv(path: &Path, edges: &EdgeList) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(
+        w,
+        "# {} {} {}",
+        edges.spec.n_src, edges.spec.n_dst, edges.spec.square as u8
+    )?;
+    for (s, d) in edges.iter() {
+        writeln!(w, "{s}\t{d}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the TSV format written by [`write_tsv`].
+pub fn read_tsv(path: &Path) -> Result<EdgeList> {
+    let f = std::fs::File::open(path)?;
+    let r = BufReader::new(f);
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Data("empty tsv".into()))??;
+    let parts: Vec<&str> = header.trim_start_matches('#').split_whitespace().collect();
+    if parts.len() != 3 {
+        return Err(Error::Data(format!("bad tsv header `{header}`")));
+    }
+    let n_src: u64 = parts[0].parse().map_err(|_| Error::Data("bad n_src".into()))?;
+    let n_dst: u64 = parts[1].parse().map_err(|_| Error::Data("bad n_dst".into()))?;
+    let square = parts[2] == "1";
+    let spec = if square {
+        PartiteSpec::square(n_src)
+    } else {
+        PartiteSpec::bipartite(n_src, n_dst)
+    };
+    let mut edges = EdgeList::new(spec);
+    for line in lines {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split('\t');
+        let s: u64 = it
+            .next()
+            .and_then(|x| x.parse().ok())
+            .ok_or_else(|| Error::Data(format!("bad edge line `{line}`")))?;
+        let d: u64 = it
+            .next()
+            .and_then(|x| x.parse().ok())
+            .ok_or_else(|| Error::Data(format!("bad edge line `{line}`")))?;
+        edges.push(s, d);
+    }
+    Ok(edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EdgeList {
+        EdgeList::from_pairs(PartiteSpec::bipartite(10, 20), &[(0, 19), (9, 0), (5, 5)])
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("sgg_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let path = tmp("bin");
+        let e = sample();
+        write_binary(&path, &e).unwrap();
+        let r = read_binary(&path).unwrap();
+        assert_eq!(r.spec, e.spec);
+        assert_eq!(r.src, e.src);
+        assert_eq!(r.dst, e.dst);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let path = tmp("tsv");
+        let e = sample();
+        write_tsv(&path, &e).unwrap();
+        let r = read_tsv(&path).unwrap();
+        assert_eq!(r.spec, e.spec);
+        assert_eq!(r.src, e.src);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOTMAGIC________").unwrap();
+        assert!(read_binary(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,21 @@
+//! Graph data structures: edge lists, CSR adjacency, bipartite views,
+//! traversals, and on-disk formats.
+//!
+//! SGG graphs follow the paper's formulation (§3.1): a graph is a triple
+//! `G(S, F_V, F_E)` — here the structure `S` lives in this module, feature
+//! matrices in [`crate::featgen::table`], and the two are combined by the
+//! pipeline after alignment.
+//!
+//! Node ids are `u64`. For bipartite graphs (the paper's n×m non-square
+//! adjacency), source ids index the row partite and destination ids the
+//! column partite; [`bipartite::PartiteSpec`] carries the partite sizes.
+
+pub mod bipartite;
+pub mod csr;
+pub mod edgelist;
+pub mod io;
+pub mod traversal;
+
+pub use bipartite::PartiteSpec;
+pub use csr::Csr;
+pub use edgelist::EdgeList;

@@ -1,0 +1,98 @@
+//! BFS-based traversals: single-source shortest hop counts, connected
+//! components, and sampled pair reachability used by the hop-plot metric.
+
+use super::csr::Csr;
+
+/// BFS hop distances from `source` (u32::MAX = unreachable).
+pub fn bfs_distances(csr: &Csr, source: u64) -> Vec<u32> {
+    let n = csr.n_nodes as usize;
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    dist[source as usize] = 0;
+    queue.push_back(source);
+    while let Some(v) = queue.pop_front() {
+        let dv = dist[v as usize];
+        for &w in csr.neighbors(v) {
+            if dist[w as usize] == u32::MAX {
+                dist[w as usize] = dv + 1;
+                queue.push_back(w);
+            }
+        }
+    }
+    dist
+}
+
+/// Connected components (undirected view expected): returns (labels,
+/// component count). Labels are in [0, count).
+pub fn connected_components(csr: &Csr) -> (Vec<u32>, usize) {
+    let n = csr.n_nodes as usize;
+    let mut label = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut stack = Vec::new();
+    for start in 0..n {
+        if label[start] != u32::MAX {
+            continue;
+        }
+        label[start] = next;
+        stack.push(start as u64);
+        while let Some(v) = stack.pop() {
+            for &w in csr.neighbors(v) {
+                if label[w as usize] == u32::MAX {
+                    label[w as usize] = next;
+                    stack.push(w);
+                }
+            }
+        }
+        next += 1;
+    }
+    (label, next as usize)
+}
+
+/// Size of the largest connected component.
+pub fn largest_component(csr: &Csr) -> usize {
+    let (labels, count) = connected_components(csr);
+    let mut sizes = vec![0usize; count];
+    for l in labels {
+        sizes[l as usize] += 1;
+    }
+    sizes.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EdgeList, PartiteSpec};
+
+    fn two_components() -> Csr {
+        let e = EdgeList::from_pairs(
+            PartiteSpec::square(6),
+            &[(0, 1), (1, 2), (3, 4)],
+        );
+        Csr::undirected(&e)
+    }
+
+    #[test]
+    fn bfs_distances_chain() {
+        let csr = two_components();
+        let d = bfs_distances(&csr, 0);
+        assert_eq!(d[0], 0);
+        assert_eq!(d[1], 1);
+        assert_eq!(d[2], 2);
+        assert_eq!(d[3], u32::MAX);
+    }
+
+    #[test]
+    fn components_counted() {
+        let csr = two_components();
+        let (labels, count) = connected_components(&csr);
+        assert_eq!(count, 3); // {0,1,2}, {3,4}, {5}
+        assert_eq!(labels[0], labels[2]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn largest_component_size() {
+        let csr = two_components();
+        assert_eq!(largest_component(&csr), 3);
+    }
+}

@@ -1,0 +1,43 @@
+//! # SGG — Synthetic Graph Dataset Generation at Scale
+//!
+//! A Rust + JAX + Pallas reproduction of *"A Framework for Large Scale
+//! Synthetic Graph Dataset Generation"* (Darabi et al., 2022).
+//!
+//! The framework decomposes graph dataset generation into three fitted,
+//! swappable components (paper §3):
+//!
+//! 1. **Structure generation** ([`structgen`]) — a generalized stochastic
+//!    Kronecker model over possibly non-square adjacency matrices
+//!    (eq. 1–5), fitted to the input graph's in/out degree distributions
+//!    (eq. 6–8), with optional per-level noise (paper §9) and a chunked,
+//!    shared-nothing parallel sampler for graphs larger than memory
+//!    (paper §10).
+//! 2. **Feature generation** ([`featgen`]) — tabular generators over node
+//!    and edge feature matrices: a CTGAN-style GAN (JAX/Pallas, AOT-compiled
+//!    and driven from Rust via PJRT), kernel density estimation, per-column
+//!    random, and multivariate Gaussian models, all sharing a
+//!    mode-specific-normalization encoder.
+//! 3. **Alignment** ([`aligner`]) — gradient-boosted trees over graph
+//!    structural features (degree, PageRank, Katz, clustering, node2vec)
+//!    that rank generated feature rows onto generated structure
+//!    (eq. 15–19).
+//!
+//! [`pipeline`] wires the three together into a streaming fit → generate →
+//! align → emit pipeline; [`metrics`] implements every evaluation metric in
+//! the paper (§4.3 + appendix), and [`experiments`] regenerates every table
+//! and figure.
+
+pub mod error;
+pub mod util;
+pub mod graph;
+pub mod structgen;
+pub mod featgen;
+pub mod aligner;
+pub mod metrics;
+pub mod datasets;
+pub mod pipeline;
+pub mod runtime;
+pub mod gnn;
+pub mod experiments;
+
+pub use error::{Error, Result};

@@ -1,0 +1,139 @@
+//! `sgg` — the SGG command-line launcher.
+//!
+//! ```text
+//! sgg datasets                          list the dataset registry
+//! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
+//! sgg evaluate --dataset tabformer      fit + generate + Table-2 metrics
+//! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards
+//! sgg experiment table2 [--quick]       regenerate one paper table/figure
+//! sgg experiment all [--quick]          regenerate everything
+//! ```
+
+use sgg::pipeline::{Pipeline, PipelineConfig};
+use sgg::util::args::Args;
+use sgg::Result;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = PipelineConfig::default();
+    if let Some(s) = args.get("struct") {
+        cfg.struct_kind = s.parse().map_err(sgg::Error::Config)?;
+    }
+    if let Some(s) = args.get("feat") {
+        cfg.feat_kind = s.parse().map_err(sgg::Error::Config)?;
+    }
+    if let Some(s) = args.get("align") {
+        cfg.align_kind = s.parse().map_err(sgg::Error::Config)?;
+    }
+    cfg.noise = args.get_or("noise", cfg.noise);
+    cfg.seed = args.get_or("seed", cfg.seed);
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("datasets") => {
+            for name in sgg::datasets::REGISTRY {
+                let ds = sgg::datasets::load(name, 1)?;
+                println!("{}", ds.summary());
+            }
+            Ok(())
+        }
+        Some("fit-generate") => {
+            let name = args.get("dataset").unwrap_or("ieee-fraud");
+            let scale = args.get_or("scale", 1u64);
+            let seed = args.get_or("seed", 42u64);
+            let ds = sgg::datasets::load(name, 1)?;
+            let cfg = pipeline_config(args)?;
+            let fitted = Pipeline::fit(&ds, &cfg)?;
+            let synth = fitted.generate(scale, seed)?;
+            println!(
+                "generated `{}`: {} nodes, {} edges, {} feature cols",
+                synth.name,
+                synth.edges.n_nodes(),
+                synth.edges.len(),
+                synth.edge_features.n_cols()
+            );
+            if let Some(out) = args.get("out") {
+                let dir = std::path::Path::new(out);
+                std::fs::create_dir_all(dir)?;
+                sgg::graph::io::write_binary(&dir.join("edges.sgg"), &synth.edges)?;
+                println!("wrote {}", dir.join("edges.sgg").display());
+            }
+            Ok(())
+        }
+        Some("evaluate") => {
+            let name = args.get("dataset").unwrap_or("ieee-fraud");
+            let ds = sgg::datasets::load(name, 1)?;
+            let cfg = pipeline_config(args)?;
+            let fitted = Pipeline::fit(&ds, &cfg)?;
+            let synth = fitted.generate(args.get_or("scale", 1u64), args.get_or("seed", 42u64))?;
+            let report = sgg::metrics::evaluate(
+                &ds.edges,
+                &ds.edge_features,
+                &synth.edges,
+                &synth.edge_features,
+            );
+            println!("{name}: {report}");
+            Ok(())
+        }
+        Some("stream") => {
+            let nodes = args.get_or("nodes", 1u64 << 20);
+            let edges = args.get_or("edges", 10_000_000u64);
+            let out = args.get("out").unwrap_or("/tmp/sgg-shards").to_string();
+            let gen = sgg::structgen::kronecker::KroneckerGen::new(
+                sgg::structgen::theta::ThetaS::rmat_default(),
+                sgg::graph::PartiteSpec::square(nodes),
+                edges,
+            );
+            let report = sgg::pipeline::orchestrator::stream_to_shards(
+                &gen,
+                nodes,
+                nodes,
+                edges,
+                args.get_or("seed", 7u64),
+                sgg::structgen::chunked::ChunkConfig::default(),
+                std::path::Path::new(&out),
+            )?;
+            println!("{report}");
+            Ok(())
+        }
+        Some("experiment") => {
+            let quick = args.has_flag("quick") || args.get("quick").is_some();
+            let id = args
+                .positional
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| "all".to_string());
+            if id == "all" {
+                for id in sgg::experiments::ALL {
+                    sgg::experiments::run(id, quick)?;
+                }
+            } else {
+                sgg::experiments::run(&id, quick)?;
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "usage: sgg <datasets|fit-generate|evaluate|stream|experiment> [--options]\n\
+                 experiments: {:?}\n\
+                 components: --struct kronecker|random|sbm|trilliong  \
+                 --feat gan|kde|random|gaussian  --align xgboost|random",
+                sgg::experiments::ALL
+            );
+            Ok(())
+        }
+    }
+}

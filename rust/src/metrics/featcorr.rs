@@ -1,0 +1,187 @@
+//! Feature-correlation similarity ("Feature Corr. ↑", paper §4.3).
+//!
+//! Builds the pairwise association matrix of a feature table — Pearson
+//! between continuous pairs, correlation ratio between categorical and
+//! continuous, Theil's U between categorical pairs — and scores a
+//! synthetic table by 1 − mean |assoc_orig − assoc_synth|.
+
+use crate::featgen::table::{ColumnData, FeatureTable};
+use crate::util::stats;
+
+/// Pairwise association matrix (row-major k×k, diagonal = 1).
+pub fn association_matrix(t: &FeatureTable) -> Vec<f64> {
+    let k = t.n_cols();
+    let mut m = vec![0.0f64; k * k];
+    for i in 0..k {
+        m[i * k + i] = 1.0;
+        for j in (i + 1)..k {
+            let a = association(&t.columns[i].data, &t.columns[j].data);
+            m[i * k + j] = a;
+            m[j * k + i] = a;
+        }
+    }
+    m
+}
+
+fn association(a: &ColumnData, b: &ColumnData) -> f64 {
+    match (a, b) {
+        (ColumnData::Continuous(x), ColumnData::Continuous(y)) => stats::pearson(x, y).abs(),
+        (ColumnData::Categorical { codes, .. }, ColumnData::Continuous(y)) => {
+            let cats: Vec<usize> = codes.iter().map(|&c| c as usize).collect();
+            stats::correlation_ratio(&cats, y)
+        }
+        (ColumnData::Continuous(x), ColumnData::Categorical { codes, .. }) => {
+            let cats: Vec<usize> = codes.iter().map(|&c| c as usize).collect();
+            stats::correlation_ratio(&cats, x)
+        }
+        (
+            ColumnData::Categorical { codes: ca, .. },
+            ColumnData::Categorical { codes: cb, .. },
+        ) => {
+            let xa: Vec<usize> = ca.iter().map(|&c| c as usize).collect();
+            let xb: Vec<usize> = cb.iter().map(|&c| c as usize).collect();
+            // symmetrized Theil's U
+            0.5 * (stats::theils_u(&xa, &xb) + stats::theils_u(&xb, &xa))
+        }
+    }
+}
+
+/// "Feature Corr. ↑": 1 − mean |Δassociation| over off-diagonal pairs,
+/// in [0, 1]. Tables must have the same column layout. Single-column
+/// tables fall back to marginal similarity (1 − JS distance of the
+/// column's histogram).
+pub fn feature_corr_score(orig: &FeatureTable, synth: &FeatureTable) -> f64 {
+    let k = orig.n_cols();
+    if k == 0 || synth.n_cols() != k {
+        return 0.0;
+    }
+    if k == 1 {
+        return marginal_similarity(&orig.columns[0].data, &synth.columns[0].data);
+    }
+    let mo = association_matrix(orig);
+    let ms = association_matrix(synth);
+    let mut diff = 0.0;
+    let mut count = 0;
+    for i in 0..k {
+        for j in (i + 1)..k {
+            diff += (mo[i * k + j] - ms[i * k + j]).abs();
+            count += 1;
+        }
+    }
+    (1.0 - diff / count as f64).clamp(0.0, 1.0)
+}
+
+/// 1 − JS distance between the marginal distributions of two columns.
+pub fn marginal_similarity(a: &ColumnData, b: &ColumnData) -> f64 {
+    match (a, b) {
+        (ColumnData::Continuous(x), ColumnData::Continuous(y)) => {
+            let (lo1, hi1) = stats::min_max(x);
+            let (lo2, hi2) = stats::min_max(y);
+            let (lo, hi) = (lo1.min(lo2), hi1.max(hi2));
+            let ha = stats::histogram(x, lo, hi, 32);
+            let hb = stats::histogram(y, lo, hi, 32);
+            1.0 - stats::js_distance(&ha, &hb)
+        }
+        (ColumnData::Categorical { codes: ca, cardinality: k1 },
+         ColumnData::Categorical { codes: cb, cardinality: k2 }) => {
+            let k = (*k1).max(*k2) as usize;
+            let mut ha = vec![0.0; k.max(1)];
+            let mut hb = vec![0.0; k.max(1)];
+            for &c in ca {
+                ha[c as usize] += 1.0;
+            }
+            for &c in cb {
+                hb[c as usize] += 1.0;
+            }
+            1.0 - stats::js_distance(&ha, &hb)
+        }
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featgen::table::Column;
+    use crate::util::rng::Pcg64;
+
+    fn correlated(n: usize, seed: u64) -> FeatureTable {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let mut c = Vec::new();
+        for _ in 0..n {
+            let x = rng.normal();
+            a.push(x);
+            b.push(2.0 * x + rng.normal() * 0.2);
+            c.push(if x > 0.0 { 1u32 } else { 0 });
+        }
+        FeatureTable::new(vec![
+            Column::continuous("a", a),
+            Column::continuous("b", b),
+            Column::categorical("c", c),
+        ])
+        .unwrap()
+    }
+
+    fn independent(n: usize, seed: u64) -> FeatureTable {
+        let mut rng = Pcg64::new(seed);
+        FeatureTable::new(vec![
+            Column::continuous("a", (0..n).map(|_| rng.normal()).collect()),
+            Column::continuous("b", (0..n).map(|_| rng.normal()).collect()),
+            Column::categorical("c", (0..n).map(|_| rng.below(2) as u32).collect()),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn same_process_scores_high() {
+        let s = feature_corr_score(&correlated(2000, 1), &correlated(2000, 2));
+        assert!(s > 0.95, "s={s}");
+    }
+
+    #[test]
+    fn independent_vs_correlated_scores_lower() {
+        let high = feature_corr_score(&correlated(2000, 1), &correlated(2000, 2));
+        let low = feature_corr_score(&correlated(2000, 1), &independent(2000, 3));
+        assert!(low < high, "low={low} high={high}");
+        assert!(low < 0.75, "low={low}");
+    }
+
+    #[test]
+    fn association_matrix_symmetric_unit_diag() {
+        let t = correlated(500, 4);
+        let m = association_matrix(&t);
+        let k = t.n_cols();
+        for i in 0..k {
+            assert!((m[i * k + i] - 1.0).abs() < 1e-12);
+            for j in 0..k {
+                assert!((m[i * k + j] - m[j * k + i]).abs() < 1e-12);
+            }
+        }
+        // a-b strongly associated
+        assert!(m[1] > 0.9, "m01={}", m[1]);
+    }
+
+    #[test]
+    fn single_column_marginal_fallback() {
+        let mut rng = Pcg64::new(9);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let a = FeatureTable::new(vec![Column::continuous("x", xs)]).unwrap();
+        let b = FeatureTable::new(vec![Column::continuous("x", ys)]).unwrap();
+        let s = feature_corr_score(&a, &b);
+        assert!(s > 0.7, "s={s}");
+        // shifted distribution scores lower
+        let zs: Vec<f64> = (0..2000).map(|_| rng.normal_ms(4.0, 1.0)).collect();
+        let c = FeatureTable::new(vec![Column::continuous("x", zs)]).unwrap();
+        assert!(feature_corr_score(&a, &c) < s);
+    }
+
+    #[test]
+    fn layout_mismatch_scores_zero() {
+        let a = correlated(100, 1);
+        let b = FeatureTable::new(vec![Column::continuous("x", vec![0.0; 100])]).unwrap();
+        assert_eq!(feature_corr_score(&a, &b), 0.0);
+    }
+}

@@ -1,0 +1,250 @@
+//! The graph statistics of paper Table 10 (NetGAN's benchmark set):
+//! max degree, assortativity, triangle count, power-law exponent,
+//! average clustering coefficient, wedge count, claw count, relative edge
+//! distribution entropy, largest connected component, Gini coefficient of
+//! degrees, edge overlap, and characteristic path length.
+
+use super::degree::power_law_alpha;
+use super::hopplot::characteristic_path_length;
+use crate::graph::traversal::largest_component;
+use crate::graph::{Csr, EdgeList};
+use crate::util::stats;
+
+/// All Table 10 statistics for one graph (+ edge overlap vs a reference).
+#[derive(Clone, Debug, Default)]
+pub struct GraphStats {
+    pub max_degree: f64,
+    pub assortativity: f64,
+    pub triangles: u64,
+    pub power_law_exp: f64,
+    pub avg_clustering: f64,
+    pub wedges: u64,
+    pub claws: u64,
+    pub rel_edge_entropy: f64,
+    pub largest_cc: usize,
+    pub gini: f64,
+    pub edge_overlap: f64,
+    pub char_path_len: f64,
+}
+
+impl std::fmt::Display for GraphStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "max_deg={:.0} assort={:+.3} tri={} alpha={:.3} cc={:.2e} wedges={} claws={} \
+             entr={:.3} lcc={} gini={:.3} eo={:.1}% cpl={:.2}",
+            self.max_degree,
+            self.assortativity,
+            self.triangles,
+            self.power_law_exp,
+            self.avg_clustering,
+            self.wedges,
+            self.claws,
+            self.rel_edge_entropy,
+            self.largest_cc,
+            self.gini,
+            self.edge_overlap * 100.0,
+            self.char_path_len
+        )
+    }
+}
+
+/// Degree assortativity: Pearson correlation of endpoint degrees over
+/// edges (undirected view).
+pub fn assortativity(csr: &Csr) -> f64 {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for v in 0..csr.n_nodes {
+        let dv = csr.degree(v) as f64;
+        for &w in csr.neighbors(v) {
+            xs.push(dv);
+            ys.push(csr.degree(w) as f64);
+        }
+    }
+    stats::pearson(&xs, &ys)
+}
+
+/// Triangle count (each triangle counted once). Neighbor lists are
+/// sorted, so intersection is a linear merge.
+pub fn triangle_count(csr: &Csr) -> u64 {
+    let mut count = 0u64;
+    for v in 0..csr.n_nodes {
+        for &w in csr.neighbors(v) {
+            if w <= v {
+                continue;
+            }
+            // common neighbors u > w close a triangle v<w<u exactly once
+            let (mut i, mut j) = (0usize, 0usize);
+            let nv = csr.neighbors(v);
+            let nw = csr.neighbors(w);
+            while i < nv.len() && j < nw.len() {
+                match nv[i].cmp(&nw[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        if nv[i] > w {
+                            count += 1;
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Wedge count: Σ_v C(deg(v), 2).
+pub fn wedge_count(csr: &Csr) -> u64 {
+    (0..csr.n_nodes)
+        .map(|v| {
+            let d = csr.degree(v) as u64;
+            d * d.saturating_sub(1) / 2
+        })
+        .sum()
+}
+
+/// Claw (3-star) count: Σ_v C(deg(v), 3).
+pub fn claw_count(csr: &Csr) -> u64 {
+    (0..csr.n_nodes)
+        .map(|v| {
+            let d = csr.degree(v) as u64;
+            if d < 3 {
+                0
+            } else {
+                d * (d - 1) * (d - 2) / 6
+            }
+        })
+        .sum()
+}
+
+/// Global average clustering coefficient: 3·triangles / wedges.
+pub fn global_clustering(csr: &Csr) -> f64 {
+    let w = wedge_count(csr);
+    if w == 0 {
+        0.0
+    } else {
+        3.0 * triangle_count(csr) as f64 / w as f64
+    }
+}
+
+/// Relative edge-distribution entropy: H(degree distribution) / ln N.
+pub fn relative_edge_entropy(csr: &Csr) -> f64 {
+    let n = csr.n_nodes as f64;
+    if n <= 1.0 {
+        return 0.0;
+    }
+    let total: f64 = (0..csr.n_nodes).map(|v| csr.degree(v) as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for v in 0..csr.n_nodes {
+        let p = csr.degree(v) as f64 / total;
+        if p > 0.0 {
+            h -= p * p.ln();
+        }
+    }
+    h / n.ln()
+}
+
+/// Compute the full Table 10 row. `reference` supplies the edge-overlap
+/// target (use the original graph; pass the same graph for EO = 1).
+pub fn compute(edges: &EdgeList, reference: &EdgeList, path_samples: usize) -> GraphStats {
+    let csr = Csr::undirected(edges);
+    let degrees: Vec<f64> = csr.degrees_f64();
+    let deg_u32: Vec<u32> = degrees.iter().map(|&d| d as u32).collect();
+    GraphStats {
+        max_degree: degrees.iter().copied().fold(0.0, f64::max),
+        assortativity: assortativity(&csr),
+        triangles: triangle_count(&csr),
+        power_law_exp: power_law_alpha(&deg_u32, 1),
+        avg_clustering: global_clustering(&csr),
+        wedges: wedge_count(&csr),
+        claws: claw_count(&csr),
+        rel_edge_entropy: relative_edge_entropy(&csr),
+        largest_cc: largest_component(&csr),
+        gini: stats::gini(&degrees),
+        edge_overlap: edges.edge_overlap(reference),
+        char_path_len: characteristic_path_length(edges, path_samples, 0xcafe),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PartiteSpec;
+
+    fn triangle_plus_tail() -> EdgeList {
+        // triangle 0-1-2 plus edge 2-3
+        EdgeList::from_pairs(PartiteSpec::square(4), &[(0, 1), (1, 2), (2, 0), (2, 3)])
+    }
+
+    #[test]
+    fn triangle_and_wedge_counts() {
+        let csr = Csr::undirected(&triangle_plus_tail());
+        assert_eq!(triangle_count(&csr), 1);
+        // degrees: 2,2,3,1 -> wedges 1+1+3+0 = 5
+        assert_eq!(wedge_count(&csr), 5);
+        // claws: C(3,3)=1 at node 2
+        assert_eq!(claw_count(&csr), 1);
+        let cc = global_clustering(&csr);
+        assert!((cc - 3.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_counts() {
+        let star = EdgeList::from_pairs(
+            PartiteSpec::square(5),
+            &[(0, 1), (0, 2), (0, 3), (0, 4)],
+        );
+        let csr = Csr::undirected(&star);
+        assert_eq!(triangle_count(&csr), 0);
+        assert_eq!(wedge_count(&csr), 6); // C(4,2)
+        assert_eq!(claw_count(&csr), 4); // C(4,3)
+        // star is disassortative
+        assert!(assortativity(&csr) < 0.0);
+    }
+
+    #[test]
+    fn clique_stats() {
+        let mut pairs = Vec::new();
+        for a in 0..6u64 {
+            for b in (a + 1)..6 {
+                pairs.push((a, b));
+            }
+        }
+        let e = EdgeList::from_pairs(PartiteSpec::square(6), &pairs);
+        let csr = Csr::undirected(&e);
+        assert_eq!(triangle_count(&csr), 20); // C(6,3)
+        assert!((global_clustering(&csr) - 1.0).abs() < 1e-12);
+        // regular graph: assortativity undefined (constant degrees) -> 0
+        assert_eq!(assortativity(&csr), 0.0);
+    }
+
+    #[test]
+    fn entropy_uniform_vs_star() {
+        let mut pairs = Vec::new();
+        for a in 0..6u64 {
+            pairs.push((a, (a + 1) % 6)); // cycle: uniform degrees
+        }
+        let cyc = Csr::undirected(&EdgeList::from_pairs(PartiteSpec::square(6), &pairs));
+        let star = Csr::undirected(&EdgeList::from_pairs(
+            PartiteSpec::square(6),
+            &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5)],
+        ));
+        assert!(relative_edge_entropy(&cyc) > relative_edge_entropy(&star));
+    }
+
+    #[test]
+    fn full_stats_row() {
+        let e = triangle_plus_tail();
+        let s = compute(&e, &e, 4);
+        assert_eq!(s.triangles, 1);
+        assert_eq!(s.largest_cc, 4);
+        assert!((s.edge_overlap - 1.0).abs() < 1e-12);
+        assert!(s.char_path_len > 0.0);
+        assert_eq!(s.max_degree, 3.0);
+    }
+}

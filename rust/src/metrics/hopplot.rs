@@ -1,0 +1,150 @@
+//! Hop-plot and effective diameter (paper §4.3, Figure 2 right).
+//!
+//! The hop-plot d(h) counts node pairs reachable within h hops. Exact
+//! computation is O(N·M); we sample BFS sources (the standard ANF-style
+//! approximation) which preserves the curve shape the paper compares.
+
+use crate::graph::traversal::bfs_distances;
+use crate::graph::{Csr, EdgeList};
+use crate::util::rng::Pcg64;
+
+/// Hop-plot: `pairs[h]` ≈ fraction of (ordered) reachable pairs within h
+/// hops, estimated from `samples` BFS sources. Index 0 counts self-pairs.
+pub fn hop_plot(edges: &EdgeList, samples: usize, seed: u64) -> Vec<f64> {
+    let csr = Csr::undirected(edges);
+    let n = csr.n_nodes as usize;
+    if n == 0 {
+        return vec![];
+    }
+    let samples = samples.min(n).max(1);
+    let mut rng = Pcg64::new(seed);
+    let sources = rng.sample_indices(n, samples);
+    let mut max_h = 0usize;
+    let mut counts: Vec<u64> = Vec::new();
+    for &s in &sources {
+        let dist = bfs_distances(&csr, s as u64);
+        for d in dist {
+            if d == u32::MAX {
+                continue;
+            }
+            let d = d as usize;
+            if d >= counts.len() {
+                counts.resize(d + 1, 0);
+            }
+            counts[d] += 1;
+            max_h = max_h.max(d);
+        }
+    }
+    // cumulative reachable pairs within h hops, normalized per source*N
+    let total = (samples as f64) * n as f64;
+    let mut acc = 0u64;
+    counts
+        .iter()
+        .map(|&c| {
+            acc += c;
+            acc as f64 / total
+        })
+        .collect()
+}
+
+/// Effective diameter: smallest h such that ≥ `fraction` of reachable
+/// pairs are within h hops (paper uses 0.9), linearly interpolated.
+pub fn effective_diameter(edges: &EdgeList, fraction: f64, samples: usize, seed: u64) -> f64 {
+    let hp = hop_plot(edges, samples, seed);
+    if hp.is_empty() {
+        return 0.0;
+    }
+    let reach = *hp.last().unwrap();
+    let target = fraction * reach;
+    for h in 0..hp.len() {
+        if hp[h] >= target {
+            if h == 0 {
+                return 0.0;
+            }
+            let prev = hp[h - 1];
+            let frac = if hp[h] > prev { (target - prev) / (hp[h] - prev) } else { 0.0 };
+            return (h - 1) as f64 + frac;
+        }
+    }
+    (hp.len() - 1) as f64
+}
+
+/// Characteristic (average) path length over sampled pairs (Table 10).
+pub fn characteristic_path_length(edges: &EdgeList, samples: usize, seed: u64) -> f64 {
+    let csr = Csr::undirected(edges);
+    let n = csr.n_nodes as usize;
+    if n == 0 {
+        return 0.0;
+    }
+    let samples = samples.min(n).max(1);
+    let mut rng = Pcg64::new(seed);
+    let sources = rng.sample_indices(n, samples);
+    let mut total = 0.0f64;
+    let mut count = 0u64;
+    for &s in &sources {
+        let dist = bfs_distances(&csr, s as u64);
+        for (v, d) in dist.iter().enumerate() {
+            if *d != u32::MAX && v != s {
+                total += *d as f64;
+                count += 1;
+            }
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PartiteSpec;
+
+    fn path_graph(n: u64) -> EdgeList {
+        let pairs: Vec<(u64, u64)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        EdgeList::from_pairs(PartiteSpec::square(n), &pairs)
+    }
+
+    fn clique(n: u64) -> EdgeList {
+        let mut pairs = Vec::new();
+        for a in 0..n {
+            for b in (a + 1)..n {
+                pairs.push((a, b));
+            }
+        }
+        EdgeList::from_pairs(PartiteSpec::square(n), &pairs)
+    }
+
+    #[test]
+    fn hop_plot_monotone_and_saturates() {
+        let hp = hop_plot(&path_graph(20), 20, 1);
+        for w in hp.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!((hp.last().unwrap() - 1.0).abs() < 1e-9); // fully connected path
+    }
+
+    #[test]
+    fn clique_diameter_one() {
+        let d = effective_diameter(&clique(10), 0.9, 10, 1);
+        assert!(d <= 1.0, "d={d}");
+        let cpl = characteristic_path_length(&clique(10), 10, 1);
+        assert!((cpl - 1.0).abs() < 1e-9, "cpl={cpl}");
+    }
+
+    #[test]
+    fn path_diameter_grows() {
+        let d_short = effective_diameter(&path_graph(8), 0.9, 8, 1);
+        let d_long = effective_diameter(&path_graph(64), 0.9, 64, 1);
+        assert!(d_long > d_short, "{d_long} vs {d_short}");
+    }
+
+    #[test]
+    fn cpl_path_graph_known() {
+        // path of 3 nodes: distances 1,1,2 (ordered pairs doubled) -> mean 4/3
+        let cpl = characteristic_path_length(&path_graph(3), 3, 1);
+        assert!((cpl - 4.0 / 3.0).abs() < 1e-9, "cpl={cpl}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Joint degree×feature distribution distance ("Degree-Feat Dist-Dist ↓",
+//! paper §4.3) and the Figure 5 heat-map dump (§8.9).
+//!
+//! For each edge, take (source degree, feature value); bin degrees
+//! logarithmically and features linearly (categoricals by code); the
+//! metric is the JS distance between the original's and the synthetic's
+//! joint histograms, averaged over feature columns.
+
+use crate::featgen::table::{ColumnData, FeatureTable};
+use crate::graph::EdgeList;
+use crate::util::stats;
+
+/// Degree (log) bins × feature bins used by the metric.
+const DEG_BINS: usize = 12;
+const FEAT_BINS: usize = 12;
+
+/// 2-D joint histogram of (src degree, feature) over the edges of a graph.
+/// Returns a row-major `DEG_BINS × f_bins` matrix (counts).
+pub fn joint_histogram(
+    edges: &EdgeList,
+    values: &ColumnData,
+    max_degree: u32,
+    feat_range: (f64, f64),
+) -> Vec<f64> {
+    let deg = edges.out_degrees();
+    let max_d = max_degree.max(1) as f64;
+    let f_bins = match values {
+        ColumnData::Continuous(_) => FEAT_BINS,
+        ColumnData::Categorical { cardinality, .. } => (*cardinality as usize).clamp(1, 64),
+    };
+    let mut hist = vec![0.0f64; DEG_BINS * f_bins];
+    let (lo, hi) = feat_range;
+    for (e, (s, _)) in edges.iter().enumerate() {
+        let d = deg[s as usize] as f64;
+        let td = if max_d <= 1.0 { 0.0 } else { (d.max(1.0)).ln() / max_d.ln() };
+        let db = ((td * DEG_BINS as f64) as usize).min(DEG_BINS - 1);
+        let fb = match values {
+            ColumnData::Continuous(v) => {
+                if hi <= lo {
+                    0
+                } else {
+                    let t = (v[e] - lo) / (hi - lo);
+                    ((t * FEAT_BINS as f64) as isize).clamp(0, FEAT_BINS as isize - 1) as usize
+                }
+            }
+            ColumnData::Categorical { codes, .. } => (codes[e] as usize).min(f_bins - 1),
+        };
+        hist[db * f_bins + fb] += 1.0;
+    }
+    hist
+}
+
+/// "Degree-Feat Dist-Dist ↓": JS distance between joint (degree, feature)
+/// histograms, averaged over all feature columns. In [0, 1], lower better.
+pub fn degree_feature_distance(
+    orig_edges: &EdgeList,
+    orig_feats: &FeatureTable,
+    synth_edges: &EdgeList,
+    synth_feats: &FeatureTable,
+) -> f64 {
+    let k = orig_feats.n_cols();
+    if k == 0 || synth_feats.n_cols() != k {
+        return 1.0;
+    }
+    // shared normalization so the two histograms align
+    let max_deg = orig_edges
+        .out_degrees()
+        .iter()
+        .chain(synth_edges.out_degrees().iter())
+        .copied()
+        .max()
+        .unwrap_or(1);
+    let mut total = 0.0;
+    for c in 0..k {
+        let range = match (&orig_feats.columns[c].data, &synth_feats.columns[c].data) {
+            (ColumnData::Continuous(a), ColumnData::Continuous(b)) => {
+                let (lo1, hi1) = stats::min_max(a);
+                let (lo2, hi2) = stats::min_max(b);
+                (lo1.min(lo2), hi1.max(hi2))
+            }
+            _ => (0.0, 0.0),
+        };
+        let ho = joint_histogram(orig_edges, &orig_feats.columns[c].data, max_deg, range);
+        let hs = joint_histogram(synth_edges, &synth_feats.columns[c].data, max_deg, range);
+        if ho.len() != hs.len() {
+            total += 1.0;
+            continue;
+        }
+        total += stats::js_distance(&ho, &hs);
+    }
+    total / k as f64
+}
+
+/// Figure 5 heat map: normalized joint histogram of the first continuous
+/// column (rows = degree bins, cols = feature bins).
+pub fn heatmap(edges: &EdgeList, feats: &FeatureTable) -> Option<(Vec<f64>, usize, usize)> {
+    let col = feats.columns.iter().find(|c| c.is_continuous())?;
+    let (lo, hi) = stats::min_max(col.as_continuous());
+    let max_deg = edges.out_degrees().iter().copied().max().unwrap_or(1);
+    let mut h = joint_histogram(edges, &col.data, max_deg, (lo, hi));
+    let total: f64 = h.iter().sum();
+    if total > 0.0 {
+        for x in h.iter_mut() {
+            *x /= total;
+        }
+    }
+    Some((h, DEG_BINS, FEAT_BINS))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::featgen::table::Column;
+    use crate::graph::PartiteSpec;
+    use crate::structgen::kronecker::KroneckerGen;
+    use crate::structgen::theta::ThetaS;
+    use crate::structgen::StructureGenerator;
+    use crate::util::rng::Pcg64;
+
+    /// Edge features correlated (or not) with src degree.
+    fn dataset(correlated: bool, seed: u64) -> (EdgeList, FeatureTable) {
+        let g = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(512), 8_000);
+        let edges = g.generate(1, seed).unwrap();
+        let deg = edges.out_degrees();
+        let mut rng = Pcg64::new(seed ^ 0xfeed);
+        let vals: Vec<f64> = edges
+            .iter()
+            .map(|(s, _)| {
+                if correlated {
+                    (deg[s as usize] as f64).ln() + rng.normal() * 0.2
+                } else {
+                    rng.normal()
+                }
+            })
+            .collect();
+        (edges, FeatureTable::new(vec![Column::continuous("f", vals)]).unwrap())
+    }
+
+    #[test]
+    fn same_process_has_low_distance() {
+        let (e1, f1) = dataset(true, 1);
+        let (e2, f2) = dataset(true, 2);
+        let d = degree_feature_distance(&e1, &f1, &e2, &f2);
+        assert!(d < 0.3, "d={d}");
+    }
+
+    #[test]
+    fn decorrelated_process_has_higher_distance() {
+        let (e1, f1) = dataset(true, 1);
+        let (e2, f2) = dataset(true, 2);
+        let (e3, f3) = dataset(false, 3);
+        let d_same = degree_feature_distance(&e1, &f1, &e2, &f2);
+        let d_diff = degree_feature_distance(&e1, &f1, &e3, &f3);
+        assert!(d_diff > d_same, "diff={d_diff} same={d_same}");
+    }
+
+    #[test]
+    fn identical_is_zero() {
+        let (e, f) = dataset(true, 4);
+        let d = degree_feature_distance(&e, &f, &e, &f);
+        assert!(d < 1e-9, "d={d}");
+    }
+
+    #[test]
+    fn heatmap_normalized() {
+        let (e, f) = dataset(true, 5);
+        let (h, rows, cols) = heatmap(&e, &f).unwrap();
+        assert_eq!(h.len(), rows * cols);
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn categorical_joint_supported() {
+        let (e, _) = dataset(true, 6);
+        let deg = e.out_degrees();
+        let codes: Vec<u32> = e.iter().map(|(s, _)| (deg[s as usize] > 20) as u32).collect();
+        let f = FeatureTable::new(vec![Column::categorical("hub", codes)]).unwrap();
+        let d = degree_feature_distance(&e, &f, &e, &f);
+        assert!(d < 1e-9);
+    }
+}

@@ -1,0 +1,62 @@
+//! Evaluation metrics (paper §4.3 + appendix §8.12 + Table 10).
+//!
+//! * [`degree`] — degree-distribution similarity (the "Degree Dist. ↑"
+//!   column of Table 2) and the DCC coefficient of eq. 20.
+//! * [`hopplot`] — sampled approximate neighbourhood function and
+//!   effective diameter (Figure 2 right).
+//! * [`featcorr`] — pairwise feature association matrix (Pearson /
+//!   correlation-ratio / Theil's U) and its similarity score
+//!   ("Feature Corr. ↑").
+//! * [`joint`] — joint degree×feature distribution JS divergence
+//!   ("Degree-Feat Dist-Dist ↓") and the Figure 5 heat map.
+//! * [`graphstats`] — the 14 statistics of Table 10.
+
+pub mod degree;
+pub mod featcorr;
+pub mod graphstats;
+pub mod hopplot;
+pub mod joint;
+
+use crate::featgen::FeatureTable;
+use crate::graph::EdgeList;
+
+/// The three headline metrics of paper Table 2.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QualityReport {
+    /// Degree-distribution similarity, higher is better (↑).
+    pub degree_dist: f64,
+    /// Feature-correlation similarity, higher is better (↑).
+    pub feature_corr: f64,
+    /// Joint degree-feature JS distance, lower is better (↓).
+    pub degree_feat_dist: f64,
+}
+
+impl std::fmt::Display for QualityReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "degree_dist={:.4} feature_corr={:.4} degree_feat_dist={:.4}",
+            self.degree_dist, self.feature_corr, self.degree_feat_dist
+        )
+    }
+}
+
+/// Evaluate a synthetic (structure, features) pair against the original —
+/// one row of paper Table 2. Features are edge-level (one row per edge).
+pub fn evaluate(
+    orig_edges: &EdgeList,
+    orig_feats: &FeatureTable,
+    synth_edges: &EdgeList,
+    synth_feats: &FeatureTable,
+) -> QualityReport {
+    QualityReport {
+        degree_dist: degree::degree_dist_score(orig_edges, synth_edges),
+        feature_corr: featcorr::feature_corr_score(orig_feats, synth_feats),
+        degree_feat_dist: joint::degree_feature_distance(
+            orig_edges,
+            orig_feats,
+            synth_edges,
+            synth_feats,
+        ),
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT-backed GAN compute: implements [`crate::featgen::gan::GanBackend`]
+//! over the `gan_train_w{W}` / `gan_sample_w{W}` artifacts.
+//!
+//! The encoded feature width is padded into the smallest artifact bucket;
+//! α slots and one-hots are zero-padded (decode ignores the padding).
+//! Training runs `epochs` passes of minibatch Adam steps entirely from
+//! Rust — each step is one PJRT execution of the fused train-step HLO.
+
+use super::literal::{f32_scalar, f32_tensor, to_f32_scalar, to_f32_vec};
+use super::{ParamSpec, Runtime};
+use crate::error::{Error, Result};
+use crate::featgen::gan::GanBackend;
+use crate::util::rng::Pcg64;
+use std::rc::Rc;
+
+/// Training hyper-parameters (paper §12: Adam, lr 1e-3, ~5 epochs
+/// suffices for most datasets).
+#[derive(Clone, Copy, Debug)]
+pub struct GanTrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Cap on train steps (keeps big sweeps bounded).
+    pub max_steps: usize,
+}
+
+impl Default for GanTrainConfig {
+    fn default() -> Self {
+        GanTrainConfig { epochs: 5, lr: 1e-3, max_steps: 400 }
+    }
+}
+
+/// PJRT GAN backend over a shared [`Runtime`].
+pub struct PjrtGanBackend {
+    rt: Rc<Runtime>,
+    cfg: GanTrainConfig,
+    widths: Vec<usize>,
+    batch: usize,
+    z_dim: usize,
+    /// fitted state
+    bucket: usize,
+    manifest: Vec<ParamSpec>,
+    g_len: usize,
+    params: Vec<Vec<f32>>,
+    /// training losses per step (d_loss, g_loss) for diagnostics
+    pub loss_history: Vec<(f32, f32)>,
+}
+
+impl PjrtGanBackend {
+    /// Create over a runtime; reads bucket constants from artifacts.json.
+    pub fn new(rt: Rc<Runtime>, cfg: GanTrainConfig) -> Result<Self> {
+        let consts = rt.constants()?;
+        let widths: Vec<usize> = consts
+            .get("gan_widths")
+            .and_then(|w| w.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as usize).collect())
+            .unwrap_or_else(|| vec![128, 256]);
+        let batch = consts.get("gan_batch").and_then(|x| x.as_f64()).unwrap_or(256.0) as usize;
+        let z_dim = consts.get("gan_z_dim").and_then(|x| x.as_f64()).unwrap_or(64.0) as usize;
+        Ok(PjrtGanBackend {
+            rt,
+            cfg,
+            widths,
+            batch,
+            z_dim,
+            bucket: 0,
+            manifest: Vec::new(),
+            g_len: 0,
+            params: Vec::new(),
+            loss_history: Vec::new(),
+        })
+    }
+
+    /// Smallest bucket ≥ width.
+    fn pick_bucket(&self, width: usize) -> Result<usize> {
+        self.widths
+            .iter()
+            .copied()
+            .filter(|&b| b >= width)
+            .min()
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "encoded width {width} exceeds largest GAN bucket {:?}",
+                    self.widths
+                ))
+            })
+    }
+
+    fn pad_rows(&self, encoded: &[f32], n_rows: usize, width: usize, bucket: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n_rows * bucket];
+        for r in 0..n_rows {
+            out[r * bucket..r * bucket + width]
+                .copy_from_slice(&encoded[r * width..(r + 1) * width]);
+        }
+        out
+    }
+}
+
+impl GanBackend for PjrtGanBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train(&mut self, encoded: &[f32], n_rows: usize, width: usize, seed: u64) -> Result<()> {
+        let bucket = self.pick_bucket(width)?;
+        let name = format!("gan_train_w{bucket}");
+        let exe = self.rt.executable(&name)?;
+        let manifest = self.rt.manifest(&name)?;
+        let mut params = self.rt.init_params(&name, &manifest)?;
+        let mut m: Vec<Vec<f32>> = manifest.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let mut v: Vec<Vec<f32>> = manifest.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let padded = self.pad_rows(encoded, n_rows, width, bucket);
+        let mut rng = Pcg64::new(seed);
+        let steps_per_epoch = (n_rows / self.batch).max(1);
+        let total_steps = (self.cfg.epochs * steps_per_epoch).min(self.cfg.max_steps).max(1);
+        self.loss_history.clear();
+
+        let mut real = vec![0.0f32; self.batch * bucket];
+        let mut z = vec![0.0f32; self.batch * self.z_dim];
+        for t in 0..total_steps {
+            // minibatch with replacement
+            for b in 0..self.batch {
+                let r = rng.below_usize(n_rows);
+                real[b * bucket..(b + 1) * bucket]
+                    .copy_from_slice(&padded[r * bucket..(r + 1) * bucket]);
+            }
+            for zi in z.iter_mut() {
+                *zi = rng.normal() as f32;
+            }
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * manifest.len() + 4);
+            for (spec, p) in manifest.iter().zip(&params) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            for (spec, p) in manifest.iter().zip(&m) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            for (spec, p) in manifest.iter().zip(&v) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            inputs.push(f32_scalar(t as f32));
+            inputs.push(f32_tensor(&real, &[self.batch, bucket])?);
+            inputs.push(f32_tensor(&z, &[self.batch, self.z_dim])?);
+            inputs.push(f32_scalar(self.cfg.lr));
+            let out = self.rt.run(&exe, &inputs)?;
+            let k = manifest.len();
+            for i in 0..k {
+                params[i] = to_f32_vec(&out[i])?;
+                m[i] = to_f32_vec(&out[k + i])?;
+                v[i] = to_f32_vec(&out[2 * k + i])?;
+            }
+            let d_loss = to_f32_scalar(&out[3 * k])?;
+            let g_loss = to_f32_scalar(&out[3 * k + 1])?;
+            self.loss_history.push((d_loss, g_loss));
+        }
+        self.bucket = bucket;
+        self.g_len = manifest.iter().filter(|p| p.name.starts_with("g_")).count();
+        self.manifest = manifest;
+        self.params = params;
+        Ok(())
+    }
+
+    fn sample(&self, n: usize, width: usize, seed: u64) -> Result<Vec<f32>> {
+        if self.params.is_empty() {
+            return Err(Error::NotFitted("PjrtGanBackend".into()));
+        }
+        let bucket = self.bucket;
+        let exe = self.rt.executable(&format!("gan_sample_w{bucket}"))?;
+        let mut rng = Pcg64::new(seed);
+        let mut out = vec![0.0f32; n * width];
+        let mut produced = 0usize;
+        let mut z = vec![0.0f32; self.batch * self.z_dim];
+        while produced < n {
+            for zi in z.iter_mut() {
+                *zi = rng.normal() as f32;
+            }
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.g_len + 1);
+            for i in 0..self.g_len {
+                inputs.push(f32_tensor(&self.params[i], &self.manifest[i].shape)?);
+            }
+            inputs.push(f32_tensor(&z, &[self.batch, self.z_dim])?);
+            let res = self.rt.run(&exe, &inputs)?;
+            let fake = to_f32_vec(&res[0])?;
+            let take = (n - produced).min(self.batch);
+            for r in 0..take {
+                out[(produced + r) * width..(produced + r + 1) * width]
+                    .copy_from_slice(&fake[r * bucket..r * bucket + width]);
+            }
+            produced += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,399 @@
+//! GNN executors over the AOT artifacts: full-batch node classification
+//! (GCN/GAT, Tables 4/7, Figure 4) and edge classification (IEEE-Fraud).
+//!
+//! Graph prep (dense normalized adjacency, padding into the artifact's
+//! node bucket, masks) happens here in Rust; each train epoch is one PJRT
+//! execution.
+
+use super::literal::{f32_scalar, f32_tensor, i32_vector, to_f32_scalar, to_f32_vec};
+use super::{ParamSpec, Runtime};
+use crate::error::{Error, Result};
+use crate::graph::{Csr, EdgeList};
+use crate::util::rng::Pcg64;
+use std::rc::Rc;
+
+/// Feature width / class count compiled into the GNN artifacts.
+pub const FEAT: usize = 32;
+pub const CLASSES: usize = 8;
+pub const EDGE_FEAT: usize = 16;
+
+/// Which node-classification model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GnnKind {
+    Gcn,
+    Gat,
+}
+
+impl GnnKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GnnKind::Gcn => "gcn",
+            GnnKind::Gat => "gat",
+        }
+    }
+}
+
+/// A padded dense graph ready for the node-classification artifacts.
+pub struct DenseGraph {
+    /// Padded node count (artifact bucket).
+    pub n: usize,
+    /// Real node count.
+    pub n_real: usize,
+    /// Dense adjacency: normalized Â for GCN, 0/1 mask (+self loops) for GAT.
+    pub a_gcn: Vec<f32>,
+    pub a_mask: Vec<f32>,
+    /// Node features (n × FEAT).
+    pub x: Vec<f32>,
+    /// One-hot labels (n × CLASSES).
+    pub y: Vec<f32>,
+    /// Train/val masks.
+    pub train_mask: Vec<f32>,
+    pub val_mask: Vec<f32>,
+}
+
+/// Build a padded dense graph from an edge list + node features/labels.
+/// Features wider than FEAT are truncated, narrower zero-padded. The
+/// train/val split is a seeded 50/50 over real nodes.
+pub fn prepare_dense(
+    edges: &EdgeList,
+    node_features: &[Vec<f64>],
+    labels: &[u32],
+    bucket: usize,
+    seed: u64,
+) -> Result<DenseGraph> {
+    let csr = Csr::undirected(edges);
+    let n_real = csr.n_nodes as usize;
+    if n_real > bucket {
+        return Err(Error::Config(format!(
+            "graph has {n_real} nodes > bucket {bucket}"
+        )));
+    }
+    let n = bucket;
+    let mut a_mask = vec![0.0f32; n * n];
+    for v in 0..n_real {
+        a_mask[v * n + v] = 1.0; // self loops
+        for &w in csr.neighbors(v as u64) {
+            a_mask[v * n + w as usize] = 1.0;
+            a_mask[w as usize * n + v] = 1.0;
+        }
+    }
+    // symmetric normalization D^-1/2 (A+I) D^-1/2
+    let mut deg = vec![0.0f32; n];
+    for v in 0..n {
+        let mut d = 0.0;
+        for w in 0..n {
+            d += a_mask[v * n + w];
+        }
+        deg[v] = d.max(1.0);
+    }
+    let mut a_gcn = vec![0.0f32; n * n];
+    for v in 0..n {
+        for w in 0..n {
+            if a_mask[v * n + w] > 0.0 {
+                a_gcn[v * n + w] = 1.0 / (deg[v].sqrt() * deg[w].sqrt());
+            }
+        }
+    }
+    let mut x = vec![0.0f32; n * FEAT];
+    for v in 0..n_real.min(node_features.len()) {
+        for (f, &val) in node_features[v].iter().take(FEAT).enumerate() {
+            x[v * FEAT + f] = val as f32;
+        }
+    }
+    let mut y = vec![0.0f32; n * CLASSES];
+    for v in 0..n_real.min(labels.len()) {
+        y[v * CLASSES + (labels[v] as usize % CLASSES)] = 1.0;
+    }
+    let mut rng = Pcg64::new(seed);
+    let mut train_mask = vec![0.0f32; n];
+    let mut val_mask = vec![0.0f32; n];
+    for v in 0..n_real {
+        if rng.bool(0.5) {
+            train_mask[v] = 1.0;
+        } else {
+            val_mask[v] = 1.0;
+        }
+    }
+    Ok(DenseGraph { n, n_real, a_gcn, a_mask, x, y, train_mask, val_mask })
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainResult {
+    pub loss: f32,
+    pub train_acc: f32,
+    pub val_acc: f32,
+    /// Seconds per epoch (mean over epochs) — the Table 4 measurement.
+    pub secs_per_epoch: f64,
+    pub epochs_run: usize,
+}
+
+/// Full-batch node-classification trainer.
+pub struct NodeClfRunner {
+    rt: Rc<Runtime>,
+    kind: GnnKind,
+    bucket: usize,
+    manifest: Vec<ParamSpec>,
+    params: Vec<Vec<f32>>,
+}
+
+impl NodeClfRunner {
+    /// Create; loads the artifact for the given padding bucket.
+    pub fn new(rt: Rc<Runtime>, kind: GnnKind, bucket: usize) -> Result<Self> {
+        let name = format!("{}_full_n{bucket}", kind.name());
+        let manifest = rt.manifest(&name)?;
+        let params = rt.init_params(&name, &manifest)?;
+        Ok(NodeClfRunner { rt, kind, bucket, manifest, params })
+    }
+
+    /// Reset parameters to the artifact's initialization.
+    pub fn reset(&mut self) -> Result<()> {
+        let name = format!("{}_full_n{}", self.kind.name(), self.bucket);
+        self.params = self.rt.init_params(&name, &self.manifest)?;
+        Ok(())
+    }
+
+    /// Train `epochs` full-batch steps (paper: Adam, lr 0.01, early stop
+    /// after `patience` epochs without val improvement; patience=0
+    /// disables).
+    pub fn train(
+        &mut self,
+        g: &DenseGraph,
+        epochs: usize,
+        lr: f32,
+        patience: usize,
+    ) -> Result<TrainResult> {
+        let name = format!("{}_full_n{}", self.kind.name(), self.bucket);
+        let exe = self.rt.executable(&name)?;
+        let k = self.manifest.len();
+        let mut m: Vec<Vec<f32>> = self.manifest.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let mut v: Vec<Vec<f32>> = self.manifest.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let adj = match self.kind {
+            GnnKind::Gcn => &g.a_gcn,
+            GnnKind::Gat => &g.a_mask,
+        };
+        let n = g.n;
+        let mut best_val = 0.0f32;
+        let mut since_best = 0usize;
+        let mut result = TrainResult::default();
+        let t0 = std::time::Instant::now();
+        let mut epochs_run = 0usize;
+        for t in 0..epochs {
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * k + 7);
+            for (spec, p) in self.manifest.iter().zip(&self.params) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            for (spec, p) in self.manifest.iter().zip(&m) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            for (spec, p) in self.manifest.iter().zip(&v) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            inputs.push(f32_scalar(t as f32));
+            inputs.push(f32_tensor(adj, &[n, n])?);
+            inputs.push(f32_tensor(&g.x, &[n, FEAT])?);
+            inputs.push(f32_tensor(&g.y, &[n, CLASSES])?);
+            inputs.push(f32_tensor(&g.train_mask, &[n])?);
+            inputs.push(f32_tensor(&g.val_mask, &[n])?);
+            inputs.push(f32_scalar(lr));
+            let out = self.rt.run(&exe, &inputs)?;
+            for i in 0..k {
+                self.params[i] = to_f32_vec(&out[i])?;
+                m[i] = to_f32_vec(&out[k + i])?;
+                v[i] = to_f32_vec(&out[2 * k + i])?;
+            }
+            result.loss = to_f32_scalar(&out[3 * k])?;
+            result.train_acc = to_f32_scalar(&out[3 * k + 1])?;
+            result.val_acc = to_f32_scalar(&out[3 * k + 2])?;
+            epochs_run += 1;
+            if patience > 0 {
+                if result.val_acc > best_val {
+                    best_val = result.val_acc;
+                    since_best = 0;
+                } else {
+                    since_best += 1;
+                    if since_best >= patience {
+                        break;
+                    }
+                }
+            }
+        }
+        result.val_acc = result.val_acc.max(best_val);
+        result.epochs_run = epochs_run;
+        result.secs_per_epoch = t0.elapsed().as_secs_f64() / epochs_run.max(1) as f64;
+        Ok(result)
+    }
+}
+
+/// Edge-classification trainer (fixed bucket from artifacts.json).
+pub struct EdgeClfRunner {
+    rt: Rc<Runtime>,
+    name: String,
+    n: usize,
+    e: usize,
+    manifest: Vec<ParamSpec>,
+    params: Vec<Vec<f32>>,
+}
+
+/// Inputs for the edge classifier, padded to (n, e).
+pub struct EdgeTask {
+    pub a_gcn: Vec<f32>,
+    pub x: Vec<f32>,
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub edge_feat: Vec<f32>,
+    pub y: Vec<f32>,
+    pub train_mask: Vec<f32>,
+    pub val_mask: Vec<f32>,
+}
+
+impl EdgeClfRunner {
+    pub fn new(rt: Rc<Runtime>) -> Result<Self> {
+        let consts = rt.constants()?;
+        let n = consts
+            .get("edge_clf")
+            .and_then(|e| e.get("n"))
+            .and_then(|x| x.as_f64())
+            .unwrap_or(2048.0) as usize;
+        let e = consts
+            .get("edge_clf")
+            .and_then(|c| c.get("e"))
+            .and_then(|x| x.as_f64())
+            .unwrap_or(32768.0) as usize;
+        let name = format!("edge_clf_n{n}_e{e}");
+        let manifest = rt.manifest(&name)?;
+        let params = rt.init_params(&name, &manifest)?;
+        Ok(EdgeClfRunner { rt, name, n, e, manifest, params })
+    }
+
+    pub fn buckets(&self) -> (usize, usize) {
+        (self.n, self.e)
+    }
+
+    /// Build the padded edge task from a dataset. Node features are
+    /// degree-based (the IEEE graph carries edge features only).
+    pub fn prepare(
+        &self,
+        edges: &EdgeList,
+        edge_features: &crate::featgen::FeatureTable,
+        edge_labels: &[u32],
+        seed: u64,
+    ) -> Result<EdgeTask> {
+        let csr = Csr::undirected(edges);
+        let n_real = csr.n_nodes as usize;
+        if n_real > self.n {
+            return Err(Error::Config(format!("{n_real} nodes > bucket {}", self.n)));
+        }
+        // dense normalized adjacency (same recipe as prepare_dense)
+        let mut a = vec![0.0f32; self.n * self.n];
+        for v in 0..n_real {
+            a[v * self.n + v] = 1.0;
+            for &w in csr.neighbors(v as u64) {
+                a[v * self.n + w as usize] = 1.0;
+                a[w as usize * self.n + v] = 1.0;
+            }
+        }
+        let mut deg = vec![0.0f32; self.n];
+        for v in 0..self.n {
+            deg[v] = (0..self.n).map(|w| a[v * self.n + w]).sum::<f32>().max(1.0);
+        }
+        for v in 0..self.n {
+            for w in 0..self.n {
+                if a[v * self.n + w] > 0.0 {
+                    a[v * self.n + w] = 1.0 / (deg[v].sqrt() * deg[w].sqrt());
+                }
+            }
+        }
+        // degree-profile node features
+        let mut x = vec![0.0f32; self.n * FEAT];
+        for v in 0..n_real {
+            let d = csr.degree(v as u64) as f32;
+            x[v * FEAT] = (d + 1.0).ln();
+            x[v * FEAT + 1] = d;
+            x[v * FEAT + 2] = if (v as u64) < edges.spec.n_src { 1.0 } else { 0.0 };
+        }
+        let e_real = edges.len().min(self.e);
+        let mut src = vec![0i32; self.e];
+        let mut dst = vec![0i32; self.e];
+        let mut ef = vec![0.0f32; self.e * EDGE_FEAT];
+        let mut y = vec![0.0f32; self.e * 2];
+        let mut train_mask = vec![0.0f32; self.e];
+        let mut val_mask = vec![0.0f32; self.e];
+        let mut rng = Pcg64::new(seed);
+        // continuous columns standardized into the first EDGE_FEAT slots
+        let (cont_idx, _) = edge_features.split_indices();
+        let cols: Vec<(&[f64], f64, f64)> = cont_idx
+            .iter()
+            .take(EDGE_FEAT)
+            .map(|&ci| {
+                let v = edge_features.columns[ci].as_continuous();
+                let m = crate::util::stats::mean(v);
+                let s = crate::util::stats::std_dev(v).max(1e-9);
+                (v, m, s)
+            })
+            .collect();
+        for (i, (s, d)) in edges.iter().take(e_real).enumerate() {
+            src[i] = edges.spec.src_global(s) as i32;
+            dst[i] = edges.spec.dst_global(d) as i32;
+            for (f, (col, m, sd)) in cols.iter().enumerate() {
+                ef[i * EDGE_FEAT + f] = ((col[i] - m) / sd) as f32;
+            }
+            y[i * 2 + (edge_labels[i] as usize % 2)] = 1.0;
+            if rng.bool(0.5) {
+                train_mask[i] = 1.0;
+            } else {
+                val_mask[i] = 1.0;
+            }
+        }
+        Ok(EdgeTask { a_gcn: a, x, src, dst, edge_feat: ef, y, train_mask, val_mask })
+    }
+
+    pub fn reset(&mut self) -> Result<()> {
+        self.params = self.rt.init_params(&self.name, &self.manifest)?;
+        Ok(())
+    }
+
+    /// Train `epochs` steps; returns final metrics + timing.
+    pub fn train(&mut self, task: &EdgeTask, epochs: usize, lr: f32) -> Result<TrainResult> {
+        let exe = self.rt.executable(&self.name)?;
+        let k = self.manifest.len();
+        let mut m: Vec<Vec<f32>> = self.manifest.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let mut v: Vec<Vec<f32>> = self.manifest.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let mut result = TrainResult::default();
+        let t0 = std::time::Instant::now();
+        for t in 0..epochs {
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * k + 10);
+            for (spec, p) in self.manifest.iter().zip(&self.params) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            for (spec, p) in self.manifest.iter().zip(&m) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            for (spec, p) in self.manifest.iter().zip(&v) {
+                inputs.push(f32_tensor(p, &spec.shape)?);
+            }
+            inputs.push(f32_scalar(t as f32));
+            inputs.push(f32_tensor(&task.a_gcn, &[self.n, self.n])?);
+            inputs.push(f32_tensor(&task.x, &[self.n, FEAT])?);
+            inputs.push(i32_vector(&task.src));
+            inputs.push(i32_vector(&task.dst));
+            inputs.push(f32_tensor(&task.edge_feat, &[self.e, EDGE_FEAT])?);
+            inputs.push(f32_tensor(&task.y, &[self.e, 2])?);
+            inputs.push(f32_tensor(&task.train_mask, &[self.e])?);
+            inputs.push(f32_tensor(&task.val_mask, &[self.e])?);
+            inputs.push(f32_scalar(lr));
+            let out = self.rt.run(&exe, &inputs)?;
+            for i in 0..k {
+                self.params[i] = to_f32_vec(&out[i])?;
+                m[i] = to_f32_vec(&out[k + i])?;
+                v[i] = to_f32_vec(&out[2 * k + i])?;
+            }
+            result.loss = to_f32_scalar(&out[3 * k])?;
+            result.train_acc = to_f32_scalar(&out[3 * k + 1])?;
+            result.val_acc = to_f32_scalar(&out[3 * k + 2])?;
+            result.epochs_run = t + 1;
+        }
+        result.secs_per_epoch = t0.elapsed().as_secs_f64() / result.epochs_run.max(1) as f64;
+        Ok(result)
+    }
+}

@@ -1,0 +1,58 @@
+//! Literal packing helpers: Rust buffers ↔ XLA literals.
+
+use crate::error::Result;
+
+/// f32 tensor literal from a flat slice + shape.
+pub fn f32_tensor(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    debug_assert_eq!(numel, data.len());
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// f32 scalar literal.
+pub fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 vector literal.
+pub fn i32_vector(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract an f32 scalar.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    Ok(v.first().copied().unwrap_or(f32::NAN))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let lit = f32_tensor(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = f32_scalar(2.5);
+        assert_eq!(to_f32_scalar(&lit).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn empty_shape_is_scalar() {
+        let lit = f32_tensor(&[7.0], &[]).unwrap();
+        assert_eq!(to_f32_scalar(&lit).unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! PJRT runtime (L3 ↔ L1/L2 boundary).
+//!
+//! Loads the HLO-text artifacts produced by ``make artifacts``
+//! (`python/compile/aot.py`), compiles them once on the PJRT CPU client,
+//! and exposes typed executors: [`gan_exec::PjrtGanBackend`] for the
+//! feature GAN and [`gnn_exec`] for the downstream GNN experiments.
+//! Python never runs at generation time — the Rust binary is
+//! self-contained once `artifacts/` exists.
+
+pub mod gan_exec;
+pub mod gnn_exec;
+pub mod literal;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::cell::RefCell;
+
+/// A parameter manifest entry (name + shape) mirrored from the python
+/// side (`*.manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Artifact directory resolution: `SGG_ARTIFACTS` env var, else
+/// `./artifacts` relative to the working directory.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SGG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True if the AOT artifacts are present (runtime-dependent experiments
+/// are skipped gracefully when not).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("artifacts.json").exists()
+}
+
+/// Per-thread shared runtime handle. The `xla` crate's PJRT client is
+/// `Rc`-based (not `Send`), so the runtime is thread-local: all PJRT
+/// execution in SGG happens on the coordinator thread, which matches the
+/// single-device CPU setup.
+pub fn global() -> Result<std::rc::Rc<Runtime>> {
+    thread_local! {
+        static GLOBAL: std::cell::RefCell<Option<std::rc::Rc<Runtime>>> =
+            const { std::cell::RefCell::new(None) };
+    }
+    GLOBAL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if let Some(rt) = slot.as_ref() {
+            return Ok(rt.clone());
+        }
+        let rt = std::rc::Rc::new(Runtime::cpu()?);
+        *slot = Some(rt.clone());
+        Ok(rt)
+    })
+}
+
+/// Shared PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over the default artifact directory.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir: artifacts_dir(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact directory in use.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile (or fetch cached) an artifact by stem name.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::MissingArtifact(name.to_string()));
+        }
+        crate::info!("compiling artifact `{name}`");
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Run an executable on literal inputs; outputs are the decomposed
+    /// top-level tuple (jax lowering uses `return_tuple=True`).
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Load a parameter manifest.
+    pub fn manifest(&self, name: &str) -> Result<Vec<ParamSpec>> {
+        let path = self.dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|_| Error::MissingArtifact(format!("{name}.manifest.json")))?;
+        let v = Json::parse(&text).map_err(Error::Data)?;
+        let params = v
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| Error::Data("manifest missing params".into()))?;
+        params
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| Error::Data("param missing name".into()))?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| Error::Data("param missing shape".into()))?
+                    .iter()
+                    .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                    .collect();
+                Ok(ParamSpec { name, shape })
+            })
+            .collect()
+    }
+
+    /// Load the initial parameter pack (`*.init.bin`, f32 LE, manifest
+    /// order) and split it into per-parameter vectors.
+    pub fn init_params(&self, name: &str, manifest: &[ParamSpec]) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(format!("{name}.init.bin"));
+        let bytes = std::fs::read(&path)
+            .map_err(|_| Error::MissingArtifact(format!("{name}.init.bin")))?;
+        let total: usize = manifest.iter().map(|p| p.numel()).sum();
+        if bytes.len() != total * 4 {
+            return Err(Error::Data(format!(
+                "{name}.init.bin: {} bytes, manifest wants {}",
+                bytes.len(),
+                total * 4
+            )));
+        }
+        let mut flat = Vec::with_capacity(total);
+        for c in bytes.chunks_exact(4) {
+            flat.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut out = Vec::with_capacity(manifest.len());
+        let mut off = 0usize;
+        for p in manifest {
+            let n = p.numel();
+            out.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// Global constants emitted by aot.py (`artifacts.json`).
+    pub fn constants(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.dir.join("artifacts.json"))
+            .map_err(|_| Error::MissingArtifact("artifacts.json".into()))?;
+        Json::parse(&text).map_err(Error::Data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/ (integration)
+    // so `cargo test --lib` stays artifact-free.
+
+    #[test]
+    fn param_spec_numel() {
+        let p = ParamSpec { name: "w".into(), shape: vec![3, 4] };
+        assert_eq!(p.numel(), 12);
+        let s = ParamSpec { name: "b".into(), shape: vec![] };
+        assert_eq!(s.numel(), 1);
+    }
+}

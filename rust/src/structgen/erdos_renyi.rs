@@ -1,0 +1,110 @@
+//! Erdős–Rényi random generator — the paper's "random" baseline
+//! (G(n, E) variant: E edges sampled uniformly over the n×m cells).
+
+use super::StructureGenerator;
+use crate::error::{Error, Result};
+use crate::graph::{EdgeList, PartiteSpec};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::{default_threads, par_map};
+
+/// Uniform random structure generator fitted only to (N, M, E).
+#[derive(Clone, Copy, Debug)]
+pub struct ErdosRenyi {
+    /// Partite sizes of the original graph (scale 1).
+    pub spec: PartiteSpec,
+    /// Edge count of the original graph.
+    pub edges: u64,
+}
+
+impl ErdosRenyi {
+    /// "Fit" to an input graph: record its sizes.
+    pub fn fit(edges: &EdgeList) -> Self {
+        ErdosRenyi { spec: edges.spec, edges: edges.len() as u64 }
+    }
+}
+
+impl StructureGenerator for ErdosRenyi {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn generate(&self, scale: u64, seed: u64) -> Result<EdgeList> {
+        let spec = self.spec.scaled(scale);
+        let edges = self.spec.density_preserving_edges(self.edges, scale);
+        self.generate_sized(spec.n_src, spec.n_dst, edges, seed)
+    }
+
+    fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {
+        if n_src == 0 || n_dst == 0 {
+            return Err(Error::Config("empty partite".into()));
+        }
+        let spec = if self.spec.square {
+            PartiteSpec::square(n_src)
+        } else {
+            PartiteSpec::bipartite(n_src, n_dst)
+        };
+        // parallel uniform sampling with per-shard streams
+        let threads = default_threads();
+        let per = edges / threads as u64;
+        let rem = edges % threads as u64;
+        let shards = par_map(threads, threads, |t| {
+            let mut rng = Pcg64::with_stream(seed, t as u64 + 1);
+            let count = per + if (t as u64) < rem { 1 } else { 0 };
+            let mut src = Vec::with_capacity(count as usize);
+            let mut dst = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                src.push(rng.below(n_src));
+                dst.push(rng.below(n_dst));
+            }
+            (src, dst)
+        });
+        let mut out = EdgeList::with_capacity(spec, edges as usize);
+        for (src, dst) in shards {
+            out.src.extend_from_slice(&src);
+            out.dst.extend_from_slice(&dst);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_count_and_bounds() {
+        let g = ErdosRenyi { spec: PartiteSpec::bipartite(100, 30), edges: 5_000 };
+        let e = g.generate(1, 1).unwrap();
+        assert_eq!(e.len(), 5_000);
+        assert!(e.validate().is_ok());
+    }
+
+    #[test]
+    fn approximately_uniform_degrees() {
+        let g = ErdosRenyi { spec: PartiteSpec::square(100), edges: 100_000 };
+        let e = g.generate(1, 3).unwrap();
+        let deg = e.out_degrees();
+        let mean = 1_000.0;
+        let max = *deg.iter().max().unwrap() as f64;
+        let min = *deg.iter().min().unwrap() as f64;
+        // Binomial(1e5, 1/100): std≈31; 6 sigma bounds
+        assert!(max < mean + 6.0 * 31.5, "max={max}");
+        assert!(min > mean - 6.0 * 31.5, "min={min}");
+    }
+
+    #[test]
+    fn fit_records_shape() {
+        let e = EdgeList::from_pairs(PartiteSpec::bipartite(10, 20), &[(0, 0), (1, 1)]);
+        let g = ErdosRenyi::fit(&e);
+        assert_eq!(g.spec, e.spec);
+        assert_eq!(g.edges, 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = ErdosRenyi { spec: PartiteSpec::square(64), edges: 1000 };
+        let a = g.generate(1, 5).unwrap();
+        let b = g.generate(1, 5).unwrap();
+        assert_eq!(a.src, b.src);
+    }
+}

@@ -1,0 +1,286 @@
+//! Fitting the Kronecker seed to an input graph (paper §3.2.3).
+//!
+//! Two estimators combine:
+//!
+//! 1. **Quadrant-mass MLE for the ratios a/b and a/c** — R-MAT fixes
+//!    a/b = a/c = 3, which the paper found violated by real datasets.
+//!    Instead we count, at every recursion level, which quadrant each
+//!    observed edge's (source-bit, destination-bit) pair falls into; the
+//!    MLE of θ under a multinomial likelihood is the normalized count
+//!    vector, from which the ratios follow.
+//! 2. **Degree-distribution objective over the marginals** (eq. 6–8) —
+//!    the expected number of nodes with (in/out-)degree k under the model
+//!    has the closed form of eq. 7/8; J(θ_S) is minimized over p (out) and
+//!    q (in) independently by golden-section search.
+//!
+//! The seed is then reassembled from (p, q, a/b, a/c) via
+//! [`ThetaS::from_marginals`].
+
+use super::kronecker::KroneckerGen;
+use super::theta::ThetaS;
+use crate::graph::EdgeList;
+
+/// Natural log of the gamma function (Lanczos approximation, |err|<1e-10).
+pub fn ln_gamma(x: f64) -> f64 {
+    // g=7, n=9 Lanczos coefficients
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = COEF[0];
+    for (i, c) in COEF.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+/// ln C(n, k).
+pub fn ln_choose(n: f64, k: f64) -> f64 {
+    if k < 0.0 || k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_gamma(n + 1.0) - ln_gamma(k + 1.0) - ln_gamma(n - k + 1.0)
+}
+
+/// Expected degree histogram under the Kronecker model (paper eq. 7/8).
+///
+/// `bits` address bits on this side, `marg` the per-bit probability of a
+/// 0-bit (p for out-degrees, q for in-degrees), `e` total edges. Returns
+/// c̃_k for k in 0..=kmax: the expected number of nodes with degree k,
+/// c̃_k = Σ_{i=0}^{bits} C(bits, i) · Binom(E, π_i)(k),  π_i = marg^{bits−i}(1−marg)^i.
+pub fn expected_degree_hist(bits: u32, marg: f64, e: u64, kmax: usize) -> Vec<f64> {
+    let marg = marg.clamp(1e-9, 1.0 - 1e-9);
+    let e_f = e as f64;
+    let mut hist = vec![0.0f64; kmax + 1];
+    for i in 0..=bits {
+        let ln_pi = (bits - i) as f64 * marg.ln() + i as f64 * (1.0 - marg).ln();
+        let pi: f64 = ln_pi.exp();
+        let ln_count = ln_choose(bits as f64, i as f64); // # nodes with i one-bits
+        let ln_1mpi = if pi < 1e-12 { -pi } else { (1.0 - pi).ln() };
+        // Binomial(E, pi) over k, in log space; skip negligible tails
+        for (k, h) in hist.iter_mut().enumerate() {
+            let ln_pmf =
+                ln_choose(e_f, k as f64) + k as f64 * ln_pi + (e_f - k as f64) * ln_1mpi;
+            let contrib = (ln_count + ln_pmf).exp();
+            *h += contrib;
+        }
+    }
+    hist
+}
+
+/// Observed degree histogram: counts[k] = #nodes with degree k (k ≤ kmax;
+/// larger degrees are clamped into the last bin).
+pub fn degree_histogram(degrees: &[u32], kmax: usize) -> Vec<f64> {
+    let mut h = vec![0.0; kmax + 1];
+    for &d in degrees {
+        h[(d as usize).min(kmax)] += 1.0;
+    }
+    h
+}
+
+/// Squared-error degree-distribution objective (one side of eq. 6).
+fn objective(observed: &[f64], expected: &[f64]) -> f64 {
+    observed
+        .iter()
+        .zip(expected)
+        .map(|(o, e)| (o - e) * (o - e))
+        .sum()
+}
+
+/// Golden-section minimization of a unimodal 1-D function on [lo, hi].
+pub fn golden_section<F: Fn(f64) -> f64>(f: F, lo: f64, hi: f64, iters: usize) -> f64 {
+    let phi = (5.0f64.sqrt() - 1.0) / 2.0;
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - phi * (b - a);
+    let mut d = a + phi * (b - a);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    for _ in 0..iters {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - phi * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + phi * (b - a);
+            fd = f(d);
+        }
+    }
+    0.5 * (a + b)
+}
+
+/// Per-level quadrant counts of the observed edges: for each square level
+/// the (src-bit, dst-bit) pair selects one of the 4 quadrants.
+pub fn quadrant_counts(edges: &EdgeList) -> [f64; 4] {
+    let (rb, db) = KroneckerGen::bits(edges.spec.n_src, edges.spec.n_dst);
+    let shared = rb.min(db);
+    let mut counts = [0.0f64; 4];
+    if shared == 0 {
+        return [1.0, 1.0, 1.0, 1.0];
+    }
+    for (s, d) in edges.iter() {
+        for l in 0..shared {
+            // most-significant shared bit first, matching the sampler
+            let sb = (s >> (rb - 1 - l)) & 1;
+            let db_ = (d >> (db - 1 - l)) & 1;
+            counts[(sb * 2 + db_) as usize] += 1.0;
+        }
+    }
+    counts
+}
+
+/// Cap on the degree histogram length used in the objective.
+const KMAX_CAP: usize = 512;
+
+/// Fit a [`KroneckerGen`] to an input graph (paper §3.2.3).
+pub fn fit_kronecker(edges: &EdgeList) -> KroneckerGen {
+    let (rb, db) = KroneckerGen::bits(edges.spec.n_src, edges.spec.n_dst);
+    let e = edges.len() as u64;
+
+    // 1. ratio MLE from quadrant masses
+    let counts = quadrant_counts(edges);
+    let eps = 1.0;
+    let (ca, cb, cc, _cd) = (counts[0] + eps, counts[1] + eps, counts[2] + eps, counts[3] + eps);
+    let r_b = ca / cb;
+    let r_c = ca / cc;
+
+    // 2. marginal fit against observed degree histograms (eq. 6-8)
+    let out_deg = edges.out_degrees();
+    let in_deg = edges.in_degrees();
+    let kmax_out = (out_deg.iter().copied().max().unwrap_or(1) as usize).clamp(4, KMAX_CAP);
+    let kmax_in = (in_deg.iter().copied().max().unwrap_or(1) as usize).clamp(4, KMAX_CAP);
+    let obs_out = degree_histogram(&out_deg, kmax_out);
+    let obs_in = degree_histogram(&in_deg, kmax_in);
+
+    let p = if rb == 0 {
+        0.5
+    } else {
+        golden_section(
+            |p| objective(&obs_out, &expected_degree_hist(rb, p, e, kmax_out)),
+            0.5,
+            0.999,
+            40,
+        )
+    };
+    let q = if db == 0 {
+        0.5
+    } else {
+        golden_section(
+            |q| objective(&obs_in, &expected_degree_hist(db, q, e, kmax_in)),
+            0.5,
+            0.999,
+            40,
+        )
+    };
+
+    let theta = ThetaS::from_marginals(p, q, r_b, r_c);
+    KroneckerGen::new(theta, edges.spec, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PartiteSpec;
+    use crate::structgen::StructureGenerator;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24
+        assert!(ln_gamma(1.0).abs() < 1e-9);
+        assert!(ln_gamma(2.0).abs() < 1e-9);
+        assert!((ln_gamma(5.0) - 24.0f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_choose_known() {
+        assert!((ln_choose(5.0, 2.0) - 10.0f64.ln()).abs() < 1e-9);
+        assert!((ln_choose(10.0, 0.0)).abs() < 1e-9);
+        assert_eq!(ln_choose(3.0, 4.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn expected_hist_mass_sums_to_nodes() {
+        // Σ_k c̃_k should equal the number of padded nodes 2^bits
+        let bits = 6;
+        let e = 500u64;
+        let h = expected_degree_hist(bits, 0.7, e, e as usize);
+        let total: f64 = h.iter().sum();
+        assert!((total - 64.0).abs() < 0.5, "total={total}");
+    }
+
+    #[test]
+    fn golden_section_finds_minimum() {
+        let x = golden_section(|x| (x - 0.3) * (x - 0.3), 0.0, 1.0, 60);
+        assert!((x - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quadrant_counts_skew() {
+        // all edges at (0,0) -> all mass in quadrant a
+        let e = EdgeList::from_pairs(PartiteSpec::square(8), &[(0, 0), (0, 0), (1, 1)]);
+        let c = quadrant_counts(&e);
+        assert!(c[0] > c[3]);
+        assert_eq!(c[1], 0.0);
+    }
+
+    #[test]
+    fn fit_recovers_skewed_theta() {
+        // generate from a known theta, fit, check recovered parameters
+        let truth = ThetaS::new(0.6, 0.18, 0.15, 0.07);
+        let gen = KroneckerGen::new(truth, PartiteSpec::square(1 << 12), 60_000);
+        let g = gen.generate(1, 123).unwrap();
+        let fitted = fit_kronecker(&g);
+        let t = fitted.theta;
+        assert!((t.p() - truth.p()).abs() < 0.05, "p {} vs {}", t.p(), truth.p());
+        assert!((t.q() - truth.q()).abs() < 0.05, "q {} vs {}", t.q(), truth.q());
+        assert!((t.a - truth.a).abs() < 0.08, "a {} vs {}", t.a, truth.a);
+    }
+
+    #[test]
+    fn fit_then_generate_matches_degree_shape() {
+        let truth = ThetaS::new(0.55, 0.2, 0.18, 0.07);
+        let gen = KroneckerGen::new(truth, PartiteSpec::square(1 << 10), 20_000);
+        let original = gen.generate(1, 9).unwrap();
+        let fitted = fit_kronecker(&original);
+        let synth = fitted.generate(1, 77).unwrap();
+        // heavy-head comparison: max degree within 2x
+        let mo = *original.out_degrees().iter().max().unwrap() as f64;
+        let ms = *synth.out_degrees().iter().max().unwrap() as f64;
+        assert!(ms / mo < 2.0 && mo / ms < 2.0, "mo={mo} ms={ms}");
+    }
+
+    #[test]
+    fn fit_uniform_graph_near_uniform_theta() {
+        let mut rng = Pcg64::new(5);
+        let spec = PartiteSpec::square(1 << 10);
+        let mut e = EdgeList::new(spec);
+        for _ in 0..20_000 {
+            e.push(rng.below(1 << 10), rng.below(1 << 10));
+        }
+        let fitted = fit_kronecker(&e);
+        let t = fitted.theta;
+        assert!((t.p() - 0.5).abs() < 0.05, "p={}", t.p());
+        assert!((t.q() - 0.5).abs() < 0.05, "q={}", t.q());
+    }
+}

@@ -1,0 +1,342 @@
+//! Generalized stochastic Kronecker edge sampler (paper eq. 1–5).
+//!
+//! θ is never materialized: each edge performs one bit-descent per
+//! recursion level. `min(rb, db)` levels are full 2×2 quadrant choices
+//! (θ_S); the remaining `|rb − db|` levels consume a single bit of the
+//! longer dimension using the appropriate marginal (θ_H / θ_V, eq. 2).
+//! With `rb == db` this is exactly R-MAT (eq. 5).
+
+use super::theta::{Level, ThetaS};
+use super::{noise::NoiseConfig, StructureGenerator};
+use crate::error::{Error, Result};
+use crate::graph::{EdgeList, PartiteSpec};
+use crate::util::rng::Pcg64;
+
+/// Fitted generalized-Kronecker structure generator.
+#[derive(Clone, Debug)]
+pub struct KroneckerGen {
+    /// Seed matrix (fitted by [`super::fit::fit_kronecker`] or set manually).
+    pub theta: ThetaS,
+    /// Partite sizes of the *original* graph (scale 1).
+    pub spec: PartiteSpec,
+    /// Edge count of the original graph.
+    pub edges: u64,
+    /// Optional per-level noise (paper §9). `None` = pure Kronecker power.
+    pub noise: Option<NoiseConfig>,
+}
+
+impl KroneckerGen {
+    /// Construct from an explicit seed matrix.
+    pub fn new(theta: ThetaS, spec: PartiteSpec, edges: u64) -> Self {
+        KroneckerGen { theta, spec, edges, noise: None }
+    }
+
+    /// Enable per-level noise with the given amplitude scale in [0,1]
+    /// (fraction of the maximal admissible n_f from paper eq. 25).
+    pub fn with_noise(mut self, amplitude: f64) -> Self {
+        self.noise = Some(NoiseConfig { amplitude });
+        self
+    }
+
+    /// Number of source/destination address bits for given partite sizes.
+    pub fn bits(n_src: u64, n_dst: u64) -> (u32, u32) {
+        let bits_for = |n: u64| -> u32 {
+            if n <= 1 {
+                0
+            } else {
+                64 - (n - 1).leading_zeros()
+            }
+        };
+        (bits_for(n_src), bits_for(n_dst))
+    }
+
+    /// Build the per-level cascade for a graph with `rb` source bits and
+    /// `db` destination bits, applying noise if configured (paper eq. 23).
+    pub fn levels(&self, rb: u32, db: u32, rng: &mut Pcg64) -> Vec<Level> {
+        let shared = rb.min(db);
+        let mut levels = Vec::with_capacity((rb.max(db)) as usize);
+        for _ in 0..shared {
+            let t = match &self.noise {
+                Some(cfg) => cfg.perturb(self.theta, rng),
+                None => self.theta,
+            };
+            levels.push(Level::Square { cum: t.cumulative() });
+        }
+        // extra source bits: only the source-bit marginal applies
+        for _ in db..rb {
+            let mut p0 = self.theta.p();
+            if let Some(cfg) = &self.noise {
+                p0 = cfg.perturb_marginal(p0, rng);
+            }
+            levels.push(Level::Col { q: p0 });
+        }
+        // extra destination bits
+        for _ in rb..db {
+            let mut q0 = self.theta.q();
+            if let Some(cfg) = &self.noise {
+                q0 = cfg.perturb_marginal(q0, rng);
+            }
+            levels.push(Level::Row { p: q0 });
+        }
+        levels
+    }
+
+    /// Compile a level cascade into the branchless integer-threshold
+    /// [`SamplerPlan`] used on the hot path (see EXPERIMENTS.md §Perf:
+    /// ~5× over the enum-match/f64 descent).
+    pub fn plan(levels: &[Level]) -> SamplerPlan {
+        let to_u32 = |p: f64| -> u32 {
+            // map probability to a 32-bit threshold; clamp avoids overflow
+            (p.clamp(0.0, 1.0) * u32::MAX as f64) as u32
+        };
+        let mut square = Vec::new();
+        let mut col_q = Vec::new();
+        let mut row_p = Vec::new();
+        for level in levels {
+            match level {
+                Level::Square { cum } => {
+                    square.push([to_u32(cum[0]), to_u32(cum[1]), to_u32(cum[2])]);
+                }
+                Level::Col { q } => col_q.push(to_u32(*q)),
+                Level::Row { p } => row_p.push(to_u32(*p)),
+            }
+        }
+        SamplerPlan { square, col_q, row_p }
+    }
+
+    /// Sample one edge by descending the cascade. Returns raw (src, dst)
+    /// in the padded 2^rb × 2^db space.
+    #[inline]
+    pub fn sample_raw(levels: &[Level], rng: &mut Pcg64) -> (u64, u64) {
+        let mut u = 0u64;
+        let mut v = 0u64;
+        for level in levels {
+            match level {
+                Level::Square { cum } => {
+                    let r = rng.f64();
+                    // quadrant: 0 -> (0,0), 1 -> (0,1), 2 -> (1,0), 3 -> (1,1)
+                    let (sb, db_) = if r < cum[0] {
+                        (0, 0)
+                    } else if r < cum[1] {
+                        (0, 1)
+                    } else if r < cum[2] {
+                        (1, 0)
+                    } else {
+                        (1, 1)
+                    };
+                    u = (u << 1) | sb;
+                    v = (v << 1) | db_;
+                }
+                Level::Col { q } => {
+                    let bit = (rng.f64() >= *q) as u64;
+                    u = (u << 1) | bit;
+                }
+                Level::Row { p } => {
+                    let bit = (rng.f64() >= *p) as u64;
+                    v = (v << 1) | bit;
+                }
+            }
+        }
+        (u, v)
+    }
+
+    /// Sample `count` edges into `out`, rejecting samples that fall outside
+    /// the requested partite sizes (the padded space has 2^bits slots).
+    pub fn sample_into(
+        levels: &[Level],
+        n_src: u64,
+        n_dst: u64,
+        count: u64,
+        rng: &mut Pcg64,
+        out: &mut EdgeList,
+    ) {
+        let plan = Self::plan(levels);
+        let mut produced = 0u64;
+        // Bounded rejection: with mass concentrated on low ids the
+        // acceptance rate is high; guard against pathological thetas.
+        let max_attempts = count.saturating_mul(64).max(1024);
+        let mut attempts = 0u64;
+        while produced < count && attempts < max_attempts {
+            attempts += 1;
+            let (u, v) = plan.sample(rng);
+            if u < n_src && v < n_dst {
+                out.push(u, v);
+                produced += 1;
+            }
+        }
+        // If rejection was pathological, fill the remainder uniformly so
+        // the requested edge count is always honored.
+        while produced < count {
+            out.push(rng.below(n_src), rng.below(n_dst));
+            produced += 1;
+        }
+    }
+}
+
+/// Branchless hot-path sampler compiled from a level cascade: per square
+/// level the quadrant index is the count of thresholds below the random
+/// draw (no branches, no f64 math), and one 64-bit RNG output feeds *two*
+/// levels via its 32-bit halves. See EXPERIMENTS.md §Perf for the
+/// iteration log (enum/f64 descent → u64 thresholds → paired 32-bit
+/// draws).
+#[derive(Clone, Debug)]
+pub struct SamplerPlan {
+    /// 32-bit thresholds per square level.
+    square: Vec<[u32; 3]>,
+    col_q: Vec<u32>,
+    row_p: Vec<u32>,
+}
+
+impl SamplerPlan {
+    /// Sample one raw (src, dst) pair.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> (u64, u64) {
+        let mut u = 0u64;
+        let mut v = 0u64;
+        let mut pairs = self.square.chunks_exact(2);
+        for pair in &mut pairs {
+            let r = rng.next_u64();
+            let (r0, r1) = (r as u32, (r >> 32) as u32);
+            let t = &pair[0];
+            let quad = (r0 >= t[0]) as u64 + (r0 >= t[1]) as u64 + (r0 >= t[2]) as u64;
+            u = (u << 1) | (quad >> 1);
+            v = (v << 1) | (quad & 1);
+            let t = &pair[1];
+            let quad = (r1 >= t[0]) as u64 + (r1 >= t[1]) as u64 + (r1 >= t[2]) as u64;
+            u = (u << 1) | (quad >> 1);
+            v = (v << 1) | (quad & 1);
+        }
+        for t in pairs.remainder() {
+            let r0 = rng.next_u64() as u32;
+            let quad = (r0 >= t[0]) as u64 + (r0 >= t[1]) as u64 + (r0 >= t[2]) as u64;
+            u = (u << 1) | (quad >> 1);
+            v = (v << 1) | (quad & 1);
+        }
+        for &t in &self.col_q {
+            u = (u << 1) | (rng.next_u64() as u32 >= t) as u64;
+        }
+        for &t in &self.row_p {
+            v = (v << 1) | (rng.next_u64() as u32 >= t) as u64;
+        }
+        (u, v)
+    }
+}
+
+impl StructureGenerator for KroneckerGen {
+    fn name(&self) -> &'static str {
+        if self.noise.is_some() {
+            "kronecker-noisy"
+        } else {
+            "kronecker"
+        }
+    }
+
+    fn generate(&self, scale: u64, seed: u64) -> Result<EdgeList> {
+        let spec = self.spec.scaled(scale);
+        let edges = self.spec.density_preserving_edges(self.edges, scale);
+        self.generate_sized(spec.n_src, spec.n_dst, edges, seed)
+    }
+
+    fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {
+        if n_src == 0 || n_dst == 0 {
+            return Err(Error::Config("empty partite".into()));
+        }
+        let (rb, db) = Self::bits(n_src, n_dst);
+        let mut rng = Pcg64::new(seed);
+        let levels = self.levels(rb, db, &mut rng);
+        let spec = if self.spec.square {
+            PartiteSpec::square(n_src)
+        } else {
+            PartiteSpec::bipartite(n_src, n_dst)
+        };
+        let mut out = EdgeList::with_capacity(spec, edges as usize);
+        Self::sample_into(&levels, n_src, n_dst, edges, &mut rng, &mut out);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_computation() {
+        assert_eq!(KroneckerGen::bits(1, 1), (0, 0));
+        assert_eq!(KroneckerGen::bits(2, 2), (1, 1));
+        assert_eq!(KroneckerGen::bits(5, 16), (3, 4));
+        assert_eq!(KroneckerGen::bits(1024, 1000), (10, 10));
+    }
+
+    #[test]
+    fn generates_requested_count_and_bounds() {
+        let g = KroneckerGen::new(
+            ThetaS::rmat_default(),
+            PartiteSpec::bipartite(100, 50),
+            1_000,
+        );
+        let e = g.generate(1, 7).unwrap();
+        assert_eq!(e.len(), 1_000);
+        assert!(e.validate().is_ok());
+    }
+
+    #[test]
+    fn square_is_rmat() {
+        let g = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(1024), 10_000);
+        let e = g.generate(1, 3).unwrap();
+        assert_eq!(e.len(), 10_000);
+        // skewed theta -> node 0 is the heaviest hub with high probability
+        let deg = e.out_degrees();
+        let max_deg = *deg.iter().max().unwrap();
+        assert!(deg[0] as f64 >= 0.5 * max_deg as f64, "deg0={} max={}", deg[0], max_deg);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(256), 5_000);
+        let a = g.generate(1, 42).unwrap();
+        let b = g.generate(1, 42).unwrap();
+        assert_eq!(a.src, b.src);
+        assert_eq!(a.dst, b.dst);
+        let c = g.generate(1, 43).unwrap();
+        assert_ne!(a.src, c.src);
+    }
+
+    #[test]
+    fn scaling_preserves_density() {
+        let g = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(128), 1_000);
+        let e2 = g.generate(2, 1).unwrap();
+        assert_eq!(e2.spec.n_src, 256);
+        assert_eq!(e2.len(), 4_000); // edges scale quadratically
+    }
+
+    #[test]
+    fn skew_increases_hub_mass() {
+        // more skewed theta -> heavier head of degree distribution
+        let mild = KroneckerGen::new(ThetaS::new(0.3, 0.25, 0.25, 0.2), PartiteSpec::square(512), 20_000);
+        let skew = KroneckerGen::new(ThetaS::new(0.7, 0.15, 0.1, 0.05), PartiteSpec::square(512), 20_000);
+        let d_mild = mild.generate(1, 5).unwrap().out_degrees();
+        let d_skew = skew.generate(1, 5).unwrap().out_degrees();
+        let max_mild = *d_mild.iter().max().unwrap();
+        let max_skew = *d_skew.iter().max().unwrap();
+        assert!(max_skew > max_mild, "skew {max_skew} <= mild {max_mild}");
+    }
+
+    #[test]
+    fn uniform_theta_close_to_er() {
+        let g = KroneckerGen::new(ThetaS::new(0.25, 0.25, 0.25, 0.25), PartiteSpec::square(256), 50_000);
+        let deg = g.generate(1, 11).unwrap().out_degrees();
+        // uniform theta: expected degree ~ E/N = 195; max should be modest
+        let max_deg = *deg.iter().max().unwrap() as f64;
+        let mean = 50_000.0 / 256.0;
+        assert!(max_deg < mean * 1.6, "max={max_deg} mean={mean}");
+    }
+
+    #[test]
+    fn marginal_levels_used_for_rectangular() {
+        // tall: many sources, few destinations
+        let g = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::bipartite(4096, 16), 5_000);
+        let e = g.generate(1, 9).unwrap();
+        assert!(e.validate().is_ok());
+        assert!(e.src.iter().any(|&s| s >= 16)); // uses the full tall space
+    }
+}

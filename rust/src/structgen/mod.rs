@@ -1,0 +1,80 @@
+//! Structure generation (paper §3.2).
+//!
+//! The centerpiece is the **generalized stochastic Kronecker generator**
+//! ([`kronecker`]): eq. 1 builds the edge-probability distribution
+//! `θ = θ_S^⊗min(m,n) ⊗ θ_H^⊗max(0,n−m) ⊗ θ_V^⊗max(0,m−n)` over a possibly
+//! non-square 2ⁿ×2ᵐ adjacency, which reduces to R-MAT when n = m (eq. 5).
+//! θ is never materialized — each of the E sampled edges performs one
+//! recursive bit-descent per level.
+//!
+//! [`fit`] recovers θ_S from an input graph: quadrant-mass MLE for the
+//! a/b and a/c ratios (replacing R-MAT's fixed 3:1 assumption, §3.2.3)
+//! plus a closed-form degree-distribution objective (eq. 6–8) minimized
+//! over the marginals p = a+b and q = a+c.
+//!
+//! [`noise`] implements the per-level zero-sum noise of paper §9 that
+//! smooths the oscillations a pure Kronecker power produces, and
+//! [`chunked`] the §10 prefix-partitioned generation scheme that bounds
+//! memory and parallelizes across shared-nothing workers.
+//!
+//! Baselines: [`erdos_renyi`] (the paper's "random"), [`sbm`]
+//! (degree-corrected SBM standing in for GraphWorld, with the fitting step
+//! the paper adds), and [`trilliong`] (recursive-vector model).
+
+pub mod chunked;
+pub mod erdos_renyi;
+pub mod fit;
+pub mod kronecker;
+pub mod noise;
+pub mod sbm;
+pub mod theta;
+pub mod trilliong;
+
+use crate::graph::EdgeList;
+use crate::Result;
+
+/// A fitted structure generator that can produce a graph at any scale.
+///
+/// `scale` multiplies each partite's node count linearly; the edge count is
+/// scaled by `scale²` to preserve density (paper eq. 22 / Table 5 note).
+pub trait StructureGenerator: Send + Sync {
+    /// Human-readable name used in experiment tables.
+    fn name(&self) -> &'static str;
+
+    /// Generate a graph at integer `scale` (1 = same size as the input).
+    fn generate(&self, scale: u64, seed: u64) -> Result<EdgeList>;
+
+    /// Generate with explicit node/edge targets (used by the chunked
+    /// pipeline and the scaling studies with non-integer factors).
+    fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList>;
+}
+
+/// Which structural generator to use in a pipeline (ablation axis of
+/// paper Table 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StructKind {
+    /// The paper's fitted Kronecker generator ("ours").
+    Kronecker,
+    /// Kronecker with per-level noise ("ours with noise", Table 10).
+    KroneckerNoisy,
+    /// Erdős–Rényi ("random").
+    Random,
+    /// Degree-corrected SBM ("graphworld", with fitting).
+    Sbm,
+    /// TrillionG-style recursive vector model.
+    TrillionG,
+}
+
+impl std::str::FromStr for StructKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "kronecker" | "ours" => Ok(StructKind::Kronecker),
+            "kronecker-noisy" | "ours-noisy" => Ok(StructKind::KroneckerNoisy),
+            "random" | "er" | "erdos-renyi" => Ok(StructKind::Random),
+            "sbm" | "graphworld" => Ok(StructKind::Sbm),
+            "trilliong" => Ok(StructKind::TrillionG),
+            other => Err(format!("unknown struct generator `{other}`")),
+        }
+    }
+}

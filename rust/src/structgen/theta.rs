@@ -1,0 +1,158 @@
+//! The seed matrix θ_S and its marginals (paper eq. 2–4).
+
+/// 2×2 stochastic Kronecker seed `[[a, b], [c, d]]`, a+b+c+d = 1.
+///
+/// `a` is the probability mass of the top-left quadrant at each recursion
+/// level; `p = a+b` (row marginal, paper θ_V) and `q = a+c` (column
+/// marginal, θ_H).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThetaS {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl ThetaS {
+    /// Construct, renormalizing to the probability simplex and clamping
+    /// tiny/negative entries.
+    pub fn new(a: f64, b: f64, c: f64, d: f64) -> ThetaS {
+        let mut t = ThetaS { a, b, c, d };
+        t.normalize();
+        t
+    }
+
+    /// The R-MAT default seed from Chakrabarti et al. (a/b = a/c = 3).
+    pub fn rmat_default() -> ThetaS {
+        ThetaS::new(0.57, 0.19, 0.19, 0.05)
+    }
+
+    /// Clamp entries to [1e-9, 1] and renormalize to sum 1.
+    pub fn normalize(&mut self) {
+        self.a = self.a.max(1e-9);
+        self.b = self.b.max(1e-9);
+        self.c = self.c.max(1e-9);
+        self.d = self.d.max(1e-9);
+        let s = self.a + self.b + self.c + self.d;
+        self.a /= s;
+        self.b /= s;
+        self.c /= s;
+        self.d /= s;
+    }
+
+    /// Row marginal p = a + b (paper eq. 4): probability a destination bit
+    /// is 0.
+    #[inline]
+    pub fn p(&self) -> f64 {
+        self.a + self.b
+    }
+
+    /// Column marginal q = a + c: probability a source bit is 0.
+    #[inline]
+    pub fn q(&self) -> f64 {
+        self.a + self.c
+    }
+
+    /// Build a ThetaS from marginals (p, q) and the ratios r_b = a/b,
+    /// r_c = a/c estimated by MLE (paper §3.2.3: the system in eq. 6 is
+    /// under-determined, the ratios close it).
+    pub fn from_marginals(p: f64, q: f64, r_b: f64, r_c: f64) -> ThetaS {
+        let p = p.clamp(1e-6, 1.0 - 1e-6);
+        let q = q.clamp(1e-6, 1.0 - 1e-6);
+        let r_b = r_b.max(1e-6);
+        let r_c = r_c.max(1e-6);
+        // a from each marginal equation, then reconciled
+        let a_p = p * r_b / (1.0 + r_b);
+        let a_q = q * r_c / (1.0 + r_c);
+        let a = 0.5 * (a_p + a_q);
+        let b = (p - a).max(1e-9);
+        let c = (q - a).max(1e-9);
+        let d = (1.0 - a - b - c).max(1e-9);
+        ThetaS::new(a, b, c, d)
+    }
+
+    /// Cumulative quadrant thresholds (a, a+b, a+b+c) for fast sampling.
+    #[inline]
+    pub fn cumulative(&self) -> [f64; 3] {
+        [self.a, self.a + self.b, self.a + self.b + self.c]
+    }
+
+    /// Log-likelihood of observed quadrant counts under this seed.
+    pub fn log_likelihood(&self, counts: &[f64; 4]) -> f64 {
+        counts[0] * self.a.ln()
+            + counts[1] * self.b.ln()
+            + counts[2] * self.c.ln()
+            + counts[3] * self.d.ln()
+    }
+}
+
+impl Default for ThetaS {
+    fn default() -> Self {
+        ThetaS::rmat_default()
+    }
+}
+
+/// One recursion level of the (possibly noisy) Kronecker cascade. Square
+/// levels consume one source bit and one destination bit; Row/Col levels
+/// consume a single bit of the longer dimension (paper θ_H / θ_V).
+#[derive(Clone, Copy, Debug)]
+pub enum Level {
+    /// Full 2×2 quadrant choice with cumulative thresholds.
+    Square { cum: [f64; 3] },
+    /// Only a destination bit remains: P(bit = 0) = p.
+    Row { p: f64 },
+    /// Only a source bit remains: P(bit = 0) = q.
+    Col { q: f64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_simplex() {
+        let t = ThetaS::new(3.0, 1.0, 1.0, 1.0);
+        assert!((t.a + t.b + t.c + t.d - 1.0).abs() < 1e-12);
+        assert!((t.a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn marginals() {
+        let t = ThetaS::rmat_default();
+        assert!((t.p() - 0.76).abs() < 1e-9);
+        assert!((t.q() - 0.76).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_marginals_recovers() {
+        let t0 = ThetaS::rmat_default();
+        let t = ThetaS::from_marginals(t0.p(), t0.q(), t0.a / t0.b, t0.a / t0.c);
+        assert!((t.a - t0.a).abs() < 1e-6, "{t:?}");
+        assert!((t.d - t0.d).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_marginals_asymmetric() {
+        // a=0.5 b=0.3 c=0.1 d=0.1 -> p=0.8 q=0.6, r_b=5/3, r_c=5
+        let t = ThetaS::from_marginals(0.8, 0.6, 5.0 / 3.0, 5.0);
+        assert!((t.a - 0.5).abs() < 1e-6, "{t:?}");
+        assert!((t.b - 0.3).abs() < 1e-6);
+        assert!((t.c - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cumulative_monotone() {
+        let t = ThetaS::rmat_default();
+        let c = t.cumulative();
+        assert!(c[0] < c[1] && c[1] < c[2] && c[2] < 1.0);
+    }
+
+    #[test]
+    fn loglik_prefers_true_seed() {
+        let truth = ThetaS::new(0.6, 0.2, 0.15, 0.05);
+        let counts = [600.0, 200.0, 150.0, 50.0];
+        let ll_true = truth.log_likelihood(&counts);
+        let ll_other = ThetaS::rmat_default().log_likelihood(&counts);
+        assert!(ll_true > ll_other);
+    }
+}

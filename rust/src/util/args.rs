@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options. Later occurrences win.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Get an option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Get an option parsed into T, or a default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// True if `--flag` was passed.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        // NOTE: `--flag value`-style ambiguity is resolved greedily — a
+        // bare `--verbose` must come last or use `--verbose=1`.
+        let a = parse(&["generate", "extra", "--scale", "4", "--out=/tmp/x", "--verbose"]);
+        assert_eq!(a.positional, vec!["generate", "extra"]);
+        assert_eq!(a.get("scale"), Some("4"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_or("scale", 0usize), 4);
+        assert_eq!(a.get_or("missing", 7usize), 7);
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse(&["--dry-run", "--seed", "42"]);
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_or("seed", 0u64), 42);
+    }
+
+    #[test]
+    fn repeated_option_last_wins() {
+        let a = parse(&["--k", "1", "--k", "2"]);
+        assert_eq!(a.get("k"), Some("2"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["cmd", "--fast"]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation substrates built from scratch for the offline environment:
+//! PRNG + distributions, JSON, CLI args, a scoped thread pool, statistics
+//! helpers, logging, and a tiny property-testing driver.
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,59 @@
+//! Hand-rolled property-testing driver (no `proptest` crate offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property over `cases` random
+//! inputs drawn from a seeded [`Pcg64`]; on failure it reports the case
+//! seed so the exact input can be replayed deterministically.
+
+use super::rng::Pcg64;
+
+/// Run `prop` on `cases` independent seeded RNGs. The property returns
+/// `Err(description)` on violation. Panics with the failing seed.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // decorrelate case seeds
+        let seed = 0x9e37_79b9_7f4a_7c15u64
+            .wrapping_mul(case + 1)
+            .rotate_left(17)
+            ^ 0x5bf0_3635;
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed on case {case} (seed={seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 plus zero", 50, |rng| {
+            let x = rng.next_u64();
+            if x.wrapping_add(0) == x {
+                Ok(())
+            } else {
+                Err("addition broken".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn reports_failures() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,407 @@
+//! Deterministic, seedable PRNG and sampling distributions.
+//!
+//! The offline crate registry has no `rand`, so this module provides the
+//! generator used throughout the framework: PCG64 (permuted congruential
+//! generator, O'Neill 2014) plus the distributions the paper's components
+//! need — uniforms, Box–Muller Gaussians, categorical sampling via Walker
+//! alias tables, and shuffles. Every generator in SGG is seeded explicitly
+//! so all experiments are reproducible bit-for-bit.
+
+/// PCG-XSL-RR 128/64 pseudo random generator.
+///
+/// 128-bit LCG state with a 64-bit xorshift-rotate output permutation.
+/// Passes BigCrush; period 2^128 per stream.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed. Distinct seeds give independent
+    /// streams in practice (seed is mixed through two rounds first).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator with an explicit stream id. Generators with the
+    /// same seed but different streams are independent — used by the
+    /// chunked generator to give each chunk its own stream.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let s = self.state;
+        let xored = ((s >> 64) as u64) ^ (s as u64);
+        let rot = (s >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; throughput is not normal-bound anywhere in SGG).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Zipf-like heavy-tailed integer in [0, n): P(k) ∝ (k+1)^-alpha.
+    /// Uses inverse-CDF on a precomputable tail; for one-off draws this
+    /// rejection-free approximation is adequate for dataset synthesis.
+    pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
+        // inverse transform on the continuous Pareto then clamp
+        let u = self.f64().max(1e-12);
+        let x = u.powf(-1.0 / (alpha - 1.0).max(1e-9)) - 1.0;
+        (x as usize).min(n - 1)
+    }
+
+    /// Poisson (Knuth for small lambda, normal approx for large).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal_ms(lambda, lambda.sqrt());
+            x.max(0.0).round() as u64
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (Floyd's algorithm).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below_usize(j + 1);
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        out
+    }
+
+    /// Draw from a discrete distribution given (unnormalized) weights.
+    /// O(n) per draw — build an [`AliasTable`] for repeated draws.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+/// Walker alias table: O(1) categorical sampling after O(n) build.
+///
+/// Used on hot paths that repeatedly draw from a fixed discrete
+/// distribution (degree-corrected SBM block picks, feature mode picks).
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights. Empty or all-zero
+    /// weights yield a uniform table.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len().max(1);
+        let total: f64 = weights.iter().sum();
+        let uniform = total <= 0.0 || weights.is_empty();
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        let mut scaled: Vec<f64> = if uniform {
+            vec![1.0; n]
+        } else {
+            weights.iter().map(|w| w * n as f64 / total).collect()
+        };
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, s) in scaled.iter().enumerate() {
+            if *s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while !small.is_empty() && !large.is_empty() {
+            let (s, l) = (small.pop().unwrap(), large.pop().unwrap());
+            prob[s] = scaled[s];
+            alias[s] = l as u32;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        for i in large.into_iter().chain(small) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True if the table has no categories.
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw a category index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let i = rng.below_usize(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::with_stream(1, 0);
+        let mut b = Pcg64::with_stream(1, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut rng = Pcg64::new(11);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for c in counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.2).abs() < 0.01, "p={p}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&weights);
+        let mut rng = Pcg64::new(9);
+        let mut counts = [0usize; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let want = weights[i] / 10.0;
+            let got = *c as f64 / n as f64;
+            assert!((got - want).abs() < 0.01, "i={i} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate() {
+        let t = AliasTable::new(&[0.0, 0.0]);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10 {
+            assert!(t.sample(&mut rng) < 2);
+        }
+        let single = AliasTable::new(&[3.5]);
+        assert_eq!(single.sample(&mut rng), 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(2);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::new(4);
+        let idx = rng.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 20);
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut rng = Pcg64::new(6);
+        for &lambda in &[2.0, 50.0] {
+            let n = 50_000;
+            let s: u64 = (0..n).map(|_| rng.poisson(lambda)).sum();
+            let mean = s as f64 / n as f64;
+            assert!((mean - lambda).abs() / lambda < 0.05, "lambda={lambda} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Pcg64::new(8);
+        let mut c0 = 0;
+        for _ in 0..10_000 {
+            if rng.categorical(&[9.0, 1.0]) == 0 {
+                c0 += 1;
+            }
+        }
+        assert!(c0 > 8_600 && c0 < 9_400, "c0={c0}");
+    }
+}

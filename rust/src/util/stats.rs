@@ -1,0 +1,367 @@
+//! Statistics helpers shared by the metrics, fitting and feature modules:
+//! descriptive statistics, histograms, correlation measures, divergences,
+//! and a small dense linear-algebra kit (Cholesky) for the multivariate
+//! Gaussian generator.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Minimum and maximum (NaN-ignoring). Returns (0,0) for empty input.
+pub fn min_max(xs: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        if x.is_nan() {
+            continue;
+        }
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if lo > hi {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Pearson correlation coefficient between two equal-length slices.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..n {
+        let a = xs[i] - mx;
+        let b = ys[i] - my;
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+/// Correlation ratio η (categorical x, continuous y) — Fisher [12] in the
+/// paper; measures how much of y's variance is explained by category.
+pub fn correlation_ratio(categories: &[usize], values: &[f64]) -> f64 {
+    assert_eq!(categories.len(), values.len());
+    if values.is_empty() {
+        return 0.0;
+    }
+    let k = categories.iter().copied().max().unwrap_or(0) + 1;
+    let mut sums = vec![0.0; k];
+    let mut counts = vec![0usize; k];
+    for (&c, &v) in categories.iter().zip(values) {
+        sums[c] += v;
+        counts[c] += 1;
+    }
+    let total_mean = mean(values);
+    let mut between = 0.0;
+    for c in 0..k {
+        if counts[c] > 0 {
+            let m = sums[c] / counts[c] as f64;
+            between += counts[c] as f64 * (m - total_mean) * (m - total_mean);
+        }
+    }
+    let total: f64 = values.iter().map(|v| (v - total_mean) * (v - total_mean)).sum();
+    if total <= 0.0 {
+        0.0
+    } else {
+        (between / total).sqrt()
+    }
+}
+
+/// Theil's U (uncertainty coefficient) U(x|y): how much knowing y reduces
+/// uncertainty about x. Asymmetric, in [0,1].
+pub fn theils_u(xs: &[usize], ys: &[usize]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let hx = entropy_of(xs);
+    if hx <= 0.0 {
+        return 1.0; // x is constant: fully determined
+    }
+    // conditional entropy H(x|y)
+    use std::collections::HashMap;
+    let mut joint: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut ycount: HashMap<usize, usize> = HashMap::new();
+    for (&x, &y) in xs.iter().zip(ys) {
+        *joint.entry((x, y)).or_insert(0) += 1;
+        *ycount.entry(y).or_insert(0) += 1;
+    }
+    let mut hxy = 0.0;
+    for (&(_, y), &c) in &joint {
+        let pxy = c as f64 / n as f64;
+        let py = ycount[&y] as f64 / n as f64;
+        hxy -= pxy * (pxy / py).ln();
+    }
+    ((hx - hxy) / hx).clamp(0.0, 1.0)
+}
+
+fn entropy_of(xs: &[usize]) -> f64 {
+    use std::collections::HashMap;
+    let mut counts: HashMap<usize, usize> = HashMap::new();
+    for &x in xs {
+        *counts.entry(x).or_insert(0) += 1;
+    }
+    let n = xs.len() as f64;
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// Shannon entropy (nats) of a discrete sample.
+pub fn entropy(xs: &[usize]) -> f64 {
+    entropy_of(xs)
+}
+
+/// Jensen–Shannon divergence between two discrete distributions given as
+/// unnormalized histograms over the same bins. Returns a value in [0, ln 2].
+pub fn js_divergence(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    if sp <= 0.0 || sq <= 0.0 {
+        return std::f64::consts::LN_2;
+    }
+    let mut jsd = 0.0;
+    for i in 0..p.len() {
+        let pi = p[i] / sp;
+        let qi = q[i] / sq;
+        let mi = 0.5 * (pi + qi);
+        if pi > 0.0 {
+            jsd += 0.5 * pi * (pi / mi).ln();
+        }
+        if qi > 0.0 {
+            jsd += 0.5 * qi * (qi / mi).ln();
+        }
+    }
+    jsd.max(0.0)
+}
+
+/// Normalized JS distance in [0,1]: sqrt(JSD / ln2).
+pub fn js_distance(p: &[f64], q: &[f64]) -> f64 {
+    (js_divergence(p, q) / std::f64::consts::LN_2).sqrt().clamp(0.0, 1.0)
+}
+
+/// Histogram with fixed equal-width bins over [lo, hi].
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<f64> {
+    let mut h = vec![0.0; bins.max(1)];
+    if hi <= lo {
+        h[0] = xs.len() as f64;
+        return h;
+    }
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1.0;
+    }
+    h
+}
+
+/// Empirical CDF evaluated at sorted sample points: returns (sorted xs, F).
+pub fn ecdf(xs: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = s.len();
+    let f: Vec<f64> = (1..=n).map(|i| i as f64 / n as f64).collect();
+    (s, f)
+}
+
+/// Gini coefficient of a non-negative sample (degree inequality in Table 10).
+pub fn gini(xs: &[f64]) -> f64 {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| *x >= 0.0).collect();
+    if s.is_empty() {
+        return 0.0;
+    }
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len() as f64;
+    let total: f64 = s.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut cum = 0.0;
+    let mut weighted = 0.0;
+    for (i, x) in s.iter().enumerate() {
+        cum += x;
+        weighted += (i as f64 + 1.0) * x;
+    }
+    let _ = cum;
+    (2.0 * weighted) / (n * total) - (n + 1.0) / n
+}
+
+/// In-place Cholesky factorization of a symmetric positive-definite matrix
+/// stored row-major; returns the lower-triangular factor L (A = L Lᵀ).
+/// Adds jitter to the diagonal if needed.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    let mut l = vec![0.0; n * n];
+    for j in 0..n {
+        for i in j..n {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                let d = if sum > 1e-12 { sum } else { 1e-12 };
+                l[j * n + j] = d.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Quantile of a sample (linear interpolation), q in [0,1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg = [-2.0, -4.0, -6.0, -8.0];
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn correlation_ratio_extremes() {
+        // y fully determined by category
+        let cats = [0, 0, 1, 1];
+        let ys = [1.0, 1.0, 5.0, 5.0];
+        assert!((correlation_ratio(&cats, &ys) - 1.0).abs() < 1e-12);
+        // y independent of category
+        let ys2 = [1.0, 5.0, 1.0, 5.0];
+        assert!(correlation_ratio(&cats, &ys2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theils_u_extremes() {
+        let x = [0, 0, 1, 1, 2, 2];
+        assert!((theils_u(&x, &x) - 1.0).abs() < 1e-12);
+        let y = [0, 1, 0, 1, 0, 1];
+        assert!(theils_u(&x, &y) < 0.15);
+    }
+
+    #[test]
+    fn jsd_properties() {
+        let p = [0.5, 0.5, 0.0];
+        let q = [0.0, 0.5, 0.5];
+        let d = js_divergence(&p, &q);
+        assert!(d > 0.0 && d <= std::f64::consts::LN_2 + 1e-12);
+        assert!((js_divergence(&p, &p)).abs() < 1e-12);
+        // symmetric
+        assert!((js_divergence(&p, &q) - js_divergence(&q, &p)).abs() < 1e-12);
+        // disjoint support saturates at ln 2
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        assert!((js_divergence(&a, &b) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let h = histogram(&[0.0, 0.5, 1.0, 2.0, 10.0], 0.0, 10.0, 5);
+        assert_eq!(h.iter().sum::<f64>(), 5.0);
+        assert_eq!(h[0], 3.0); // 0, 0.5, 1.0 in [0,2)
+        assert_eq!(h[4], 1.0); // 10 clamps into last bin
+    }
+
+    #[test]
+    fn gini_known() {
+        // perfectly equal -> 0
+        assert!(gini(&[1.0, 1.0, 1.0, 1.0]).abs() < 1e-9);
+        // one holder of everything -> (n-1)/n
+        let g = gini(&[0.0, 0.0, 0.0, 10.0]);
+        assert!((g - 0.75).abs() < 1e-9, "g={g}");
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        // A = [[4,2],[2,3]]
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2).unwrap();
+        // L*L^T
+        let mut re = [0.0; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    re[i * 2 + j] += l[i * 2 + k] * l[j * 2 + k];
+                }
+            }
+        }
+        for i in 0..4 {
+            assert!((re[i] - a[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn quantile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_monotone() {
+        let (xs, f) = ecdf(&[3.0, 1.0, 2.0]);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0]);
+        assert!((f[2] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,268 @@
+//! Data-parallel helpers over `std::thread::scope` (no rayon offline):
+//! parallel map over index chunks and a bounded SPSC/MPSC channel used by
+//! the streaming pipeline for backpressure.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Number of worker threads to use: respects `SGG_THREADS`, defaults to
+/// available parallelism capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SGG_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parallel map over `0..n`: runs `f(i)` on `threads` workers and returns
+/// results in index order. `f` must be `Sync`; results are written into
+/// pre-allocated slots so no ordering pass is needed.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|v| v.expect("par_map slot unfilled")).collect()
+}
+
+/// Parallel for-each over disjoint mutable chunks of a slice.
+/// Splits `data` into `threads` contiguous chunks and runs
+/// `f(chunk_index, start_offset, chunk)` on each in parallel.
+pub fn par_chunks_mut<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let threads = threads.max(1);
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, (off, slice)) in data
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(i, c)| (i, (i * chunk, c)))
+        {
+            let f = &f;
+            s.spawn(move || f(ci, off, slice));
+        }
+    });
+}
+
+/// A bounded multi-producer multi-consumer channel built on
+/// Mutex+Condvar. `send` blocks when the queue is full — this is the
+/// backpressure mechanism of the streaming generation pipeline.
+pub struct Bounded<T> {
+    inner: Arc<BoundedInner<T>>,
+}
+
+struct BoundedInner<T> {
+    q: Mutex<BoundedState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct BoundedState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// peak queue occupancy, for pipeline introspection/tests
+    high_water: usize,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Bounded { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Bounded<T> {
+    /// Create a channel with capacity `cap` (≥1).
+    pub fn new(cap: usize) -> Self {
+        Bounded {
+            inner: Arc::new(BoundedInner {
+                q: Mutex::new(BoundedState {
+                    items: VecDeque::new(),
+                    closed: false,
+                    high_water: 0,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                cap: cap.max(1),
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err(item) if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.inner.cap {
+                st.items.push_back(item);
+                let n = st.items.len();
+                st.high_water = st.high_water.max(n);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking receive; None when the channel is closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the channel: senders fail, receivers drain then get None.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    /// Highest queue occupancy observed (bounded by capacity).
+    pub fn high_water(&self) -> usize {
+        self.inner.q.lock().unwrap().high_water
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_ordered() {
+        let out = par_map(100, 8, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let out: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut data = vec![0u64; 1000];
+        par_chunks_mut(&mut data, 7, |_ci, off, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (off + i) as u64;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn bounded_backpressure_and_order() {
+        let ch: Bounded<usize> = Bounded::new(4);
+        let tx = ch.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000 {
+                tx.send(i).unwrap();
+            }
+            tx.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = ch.recv() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+        assert!(ch.high_water() <= 4, "bound violated: {}", ch.high_water());
+    }
+
+    #[test]
+    fn bounded_close_unblocks() {
+        let ch: Bounded<usize> = Bounded::new(1);
+        let rx = ch.clone();
+        let h = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        ch.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn send_after_close_fails() {
+        let ch: Bounded<u8> = Bounded::new(2);
+        ch.close();
+        assert!(ch.send(1).is_err());
+    }
+
+    #[test]
+    fn multi_producer_consumer_counts() {
+        let ch: Bounded<u64> = Bounded::new(8);
+        let n_prod = 4;
+        let per = 500u64;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for p in 0..n_prod {
+                let tx = ch.clone();
+                handles.push(s.spawn(move || {
+                    for i in 0..per {
+                        tx.send(p * per + i).unwrap();
+                    }
+                }));
+            }
+            let rx = ch.clone();
+            let consumer = s.spawn(move || {
+                let mut sum = 0u64;
+                let mut count = 0u64;
+                while let Some(v) = rx.recv() {
+                    sum += v;
+                    count += 1;
+                }
+                (sum, count)
+            });
+            for h in handles {
+                h.join().unwrap();
+            }
+            ch.close();
+            let (sum, count) = consumer.join().unwrap();
+            let total = n_prod * per;
+            assert_eq!(count, total);
+            assert_eq!(sum, (0..total).sum::<u64>());
+        });
+    }
+}

@@ -1,0 +1,183 @@
+//! Randomized property tests over coordinator invariants (hand-rolled
+//! driver in `sgg::util::proptest` — the proptest crate is unavailable
+//! offline). Each property runs across many seeded cases and reports the
+//! failing seed for replay.
+
+use sgg::graph::{EdgeList, PartiteSpec};
+use sgg::prop_assert;
+use sgg::structgen::chunked::{generate_chunked_collect, ChunkConfig};
+use sgg::structgen::kronecker::KroneckerGen;
+use sgg::structgen::theta::ThetaS;
+use sgg::structgen::StructureGenerator;
+use sgg::util::proptest::check;
+use sgg::util::rng::Pcg64;
+
+fn random_theta(rng: &mut Pcg64) -> ThetaS {
+    ThetaS::new(
+        rng.range(0.1, 0.7),
+        rng.range(0.05, 0.3),
+        rng.range(0.05, 0.3),
+        rng.range(0.02, 0.2),
+    )
+}
+
+#[test]
+fn prop_kronecker_respects_bounds_and_count() {
+    check("kronecker bounds", 25, |rng| {
+        let theta = random_theta(rng);
+        let n_src = 1u64 << (3 + rng.below(8));
+        let n_dst = 1u64 << (3 + rng.below(8));
+        let edges = 500 + rng.below(5_000);
+        let gen = KroneckerGen::new(theta, PartiteSpec::bipartite(n_src, n_dst), edges);
+        let g = gen.generate(1, rng.next_u64()).map_err(|e| e.to_string())?;
+        prop_assert!(g.len() as u64 == edges, "count {} != {edges}", g.len());
+        prop_assert!(g.validate().is_ok(), "bounds violated");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_equals_direct_as_multiset() {
+    check("chunked == direct multiset", 10, |rng| {
+        let theta = random_theta(rng);
+        let n = 1u64 << (6 + rng.below(5));
+        let edges = 2_000 + rng.below(6_000);
+        let seed = rng.next_u64();
+        let gen = KroneckerGen::new(theta, PartiteSpec::square(n), edges);
+        let cfg = ChunkConfig {
+            prefix_levels: 1 + rng.below(3) as u32,
+            workers: 1 + rng.below_usize(6),
+            queue_capacity: 1 + rng.below_usize(4),
+        };
+        let chunked = generate_chunked_collect(&gen, n, n, edges, seed, cfg)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(chunked.len() as u64 == edges, "chunked count");
+        prop_assert!(chunked.validate().is_ok(), "chunked bounds");
+        // determinism across worker counts
+        let cfg2 = ChunkConfig { workers: 1, ..cfg };
+        let mut a = generate_chunked_collect(&gen, n, n, edges, seed, cfg)
+            .map_err(|e| e.to_string())?;
+        let mut b = generate_chunked_collect(&gen, n, n, edges, seed, cfg2)
+            .map_err(|e| e.to_string())?;
+        a.sort_dedup();
+        b.sort_dedup();
+        prop_assert!(a.src == b.src && a.dst == b.dst, "worker count changed output");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sort_dedup_idempotent_and_sorted() {
+    check("sort_dedup idempotent", 30, |rng| {
+        let n = 1 + rng.below(200);
+        let mut e = EdgeList::new(PartiteSpec::square(n));
+        for _ in 0..rng.below(2_000) {
+            e.push(rng.below(n), rng.below(n));
+        }
+        e.sort_dedup();
+        let (src1, dst1) = (e.src.clone(), e.dst.clone());
+        let removed = e.sort_dedup();
+        prop_assert!(removed == 0, "second dedup removed {removed}");
+        prop_assert!(e.src == src1 && e.dst == dst1, "not idempotent");
+        for w in e.iter().collect::<Vec<_>>().windows(2) {
+            prop_assert!(w[0] <= w[1], "not sorted: {:?}", w);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_identity_and_range() {
+    check("metric identity/range", 12, |rng| {
+        let theta = random_theta(rng);
+        let n = 1u64 << (6 + rng.below(4));
+        let gen = KroneckerGen::new(theta, PartiteSpec::square(n), 3_000);
+        let g = gen.generate(1, rng.next_u64()).map_err(|e| e.to_string())?;
+        let s = sgg::metrics::degree::degree_dist_score(&g, &g);
+        prop_assert!((s - 1.0).abs() < 1e-9, "self-score {s} != 1");
+        let h = gen.generate(1, rng.next_u64()).map_err(|e| e.to_string())?;
+        let s2 = sgg::metrics::degree::degree_dist_score(&g, &h);
+        prop_assert!((0.0..=1.0).contains(&s2), "score {s2} out of range");
+        let d = sgg::metrics::degree::dcc(&g, &h, 12);
+        prop_assert!((0.0..=1.0).contains(&d), "dcc {d} out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feature_generators_preserve_schema() {
+    use sgg::featgen::kde::KdeFeatureGen;
+    use sgg::featgen::random::RandomFeatureGen;
+    use sgg::featgen::table::{Column, FeatureTable};
+    use sgg::featgen::FeatureGenerator;
+    check("featgen schema", 15, |rng| {
+        let n = 50 + rng.below_usize(500);
+        let k = 2 + rng.below(6) as u32;
+        let t = FeatureTable::new(vec![
+            Column::continuous("a", (0..n).map(|_| rng.normal()).collect()),
+            Column::categorical("b", (0..n).map(|_| rng.below(k as u64) as u32).collect()),
+        ])
+        .map_err(|e| e.to_string())?;
+        for (name, g) in [
+            ("kde", Box::new(KdeFeatureGen::fit(&t)) as Box<dyn FeatureGenerator>),
+            ("random", Box::new(RandomFeatureGen::fit(&t))),
+        ] {
+            let m = 10 + rng.below_usize(200);
+            let s = g.sample(m, rng.next_u64()).map_err(|e| e.to_string())?;
+            prop_assert!(s.n_rows() == m, "{name} rows");
+            prop_assert!(s.n_cols() == 2, "{name} cols");
+            let (codes, card) = s.columns[1].as_categorical();
+            prop_assert!(card <= k, "{name} cardinality grew");
+            prop_assert!(codes.iter().all(|&c| c < k), "{name} code out of range");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use sgg::util::json::Json;
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.next_u64() % 100_000) as f64 / 8.0),
+            3 => {
+                let len = rng.below_usize(12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below_usize(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below_usize(5) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check("json roundtrip", 100, |rng| {
+        let v = random_json(rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).map_err(|e| format!("{e} in `{s}`"))?;
+        prop_assert!(back == v, "roundtrip mismatch: {s}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_density_preserved_across_scales() {
+    check("density preservation", 20, |rng| {
+        let spec = PartiteSpec::bipartite(1 + rng.below(10_000), 1 + rng.below(10_000));
+        let e = 1 + rng.below(1_000_000);
+        let k = 1 + rng.below(8);
+        let d0 = spec.density(e);
+        let d1 = spec.scaled(k).density(spec.density_preserving_edges(e, k));
+        prop_assert!((d0 - d1).abs() < 1e-12 * d0.max(1.0), "{d0} vs {d1}");
+        Ok(())
+    });
+}
