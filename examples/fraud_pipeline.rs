@@ -15,11 +15,8 @@
 //! Run: `make artifacts && cargo run --release --example fraud_pipeline`
 //! The output is recorded in EXPERIMENTS.md §End-to-end.
 
-use sgg::aligner::AlignKind;
-use sgg::featgen::FeatKind;
 use sgg::metrics;
-use sgg::pipeline::{Pipeline, PipelineConfig};
-use sgg::structgen::StructKind;
+use sgg::pipeline::{Pipeline, PipelineBuilder};
 
 fn main() -> sgg::Result<()> {
     let ds = sgg::datasets::load("ieee-fraud", 42)?;
@@ -28,27 +25,29 @@ fn main() -> sgg::Result<()> {
     println!("artifacts available: {have_artifacts} (GAN backend: {})",
              if have_artifacts { "PJRT/Pallas" } else { "resample fallback" });
 
-    let arms = vec![
-        ("random", PipelineConfig {
-            struct_kind: StructKind::Random,
-            feat_kind: FeatKind::Random,
-            align_kind: AlignKind::Random,
-            ..Default::default()
-        }),
-        ("graphworld", PipelineConfig {
-            struct_kind: StructKind::Sbm,
-            feat_kind: FeatKind::Gaussian,
-            align_kind: AlignKind::Random,
-            ..Default::default()
-        }),
-        ("ours", PipelineConfig::default()),
+    let arms: Vec<(&str, PipelineBuilder)> = vec![
+        (
+            "random",
+            Pipeline::builder()
+                .structure("erdos-renyi")
+                .edge_features("random")
+                .aligner("random"),
+        ),
+        (
+            "graphworld",
+            Pipeline::builder()
+                .structure("graphworld") // alias for "sbm"
+                .edge_features("gaussian")
+                .aligner("random"),
+        ),
+        ("ours", Pipeline::builder()),
     ];
 
     let mut ours_beats_baselines = true;
     let mut scores = Vec::new();
-    for (name, cfg) in arms {
+    for (name, builder) in arms {
         let t0 = std::time::Instant::now();
-        let fitted = Pipeline::fit(&ds, &cfg)?;
+        let fitted = builder.fit(&ds)?;
         let synth = fitted.generate(1, 7)?;
         let r = metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features);
         println!(
@@ -71,14 +70,12 @@ fn main() -> sgg::Result<()> {
     // GAN demonstration leg: the L1/L2 compute path (Pallas ResNet blocks
     // inside the AOT train-step HLO, driven step-by-step from Rust)
     if have_artifacts {
-        let gan_cfg = PipelineConfig {
-            struct_kind: StructKind::Kronecker,
-            feat_kind: FeatKind::Gan,
-            align_kind: AlignKind::Learned,
-            ..Default::default()
-        };
         let t0 = std::time::Instant::now();
-        let fitted = Pipeline::fit(&ds, &gan_cfg)?;
+        let fitted = Pipeline::builder()
+            .structure("kronecker")
+            .edge_features("gan")
+            .aligner("learned")
+            .fit(&ds)?;
         let synth = fitted.generate(1, 7)?;
         let r = metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features);
         println!(
@@ -89,7 +86,7 @@ fn main() -> sgg::Result<()> {
     }
 
     // scale-up leg: 2x nodes / 4x edges through the streaming path
-    let fitted = Pipeline::fit(&ds, &PipelineConfig::default())?;
+    let fitted = Pipeline::builder().fit(&ds)?;
     let t0 = std::time::Instant::now();
     let big = fitted.generate(2, 9)?;
     println!(

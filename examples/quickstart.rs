@@ -5,22 +5,30 @@
 //! Run: `cargo run --release --example quickstart`
 
 use sgg::metrics;
-use sgg::pipeline::{Pipeline, PipelineConfig};
+use sgg::pipeline::Pipeline;
 
 fn main() -> sgg::Result<()> {
     // 1. load a dataset (seeded stand-in for the paper's IEEE-Fraud set)
     let ds = sgg::datasets::load("ieee-fraud", 42)?;
     println!("input: {}", ds.summary());
 
-    // 2. fit the three components (structure / features / aligner)
-    let cfg = PipelineConfig::default();
-    let fitted = Pipeline::fit(&ds, &cfg)?;
+    // 2. fit the three components (structure / features / aligner) by
+    //    registry name — swap any backend by changing a string
+    let fitted = Pipeline::builder()
+        .structure("kronecker")
+        .edge_features("kde")
+        .aligner("learned")
+        .fit(&ds)?;
     let (s, f, a) = fitted.component_names();
     println!("fitted components: structure={s} features={f} aligner={a}");
 
     // 3. generate a synthetic dataset of the same size...
     let synth = fitted.generate(1, 7)?;
-    println!("synthetic: {} edges", synth.edges.len());
+    println!(
+        "synthetic: {} edges, node features: {}",
+        synth.edges.len(),
+        synth.node_features.is_some()
+    );
 
     // 4. ...and evaluate it with the paper's Table-2 metrics
     let report = metrics::evaluate(

@@ -12,6 +12,10 @@
 //! Generation: compute the same structural features on the *generated*
 //! graph, predict each edge/node's expected features, and rank-assign the
 //! generated feature rows by similarity (eq. 17–19) — [`ranking`].
+//!
+//! Both the learned and the trivial random assignment implement the
+//! [`Aligner`] trait; backends register in the pipeline's aligner
+//! [`Registry`] via [`register_builtins`].
 
 pub mod gbt;
 pub mod node2vec;
@@ -20,19 +24,128 @@ pub mod structfeat;
 
 use crate::featgen::FeatureTable;
 use crate::graph::EdgeList;
+use crate::pipeline::registry::Registry;
+use crate::pipeline::spec::Params;
 use crate::util::rng::Pcg64;
 use crate::Result;
+use gbt::GbtConfig;
 
-pub use ranking::LearnedAligner;
+pub use ranking::{LearnedAligner, Target};
 pub use structfeat::{StructFeatConfig, StructFeatures};
 
-/// Which aligner a pipeline uses (ablation axis of Table 6).
+/// A fitted aligner: assigns rows from a generated feature pool onto a
+/// generated structure (one row per edge, or per source node for the
+/// node-feature leg).
+pub trait Aligner {
+    /// Name used in experiment tables ("xgboost" / "random").
+    fn name(&self) -> &'static str;
+
+    /// Assign `pool` rows onto `structure`.
+    fn align(&self, structure: &EdgeList, pool: &FeatureTable, seed: u64)
+        -> Result<FeatureTable>;
+}
+
+impl Aligner for LearnedAligner {
+    fn name(&self) -> &'static str {
+        "xgboost"
+    }
+
+    fn align(
+        &self,
+        structure: &EdgeList,
+        pool: &FeatureTable,
+        seed: u64,
+    ) -> Result<FeatureTable> {
+        LearnedAligner::align(self, structure, pool, seed)
+    }
+}
+
+/// The trivial aligner of §3.4: a random permutation of the pool.
+pub struct RandomAligner {
+    /// What the rows attach to (decides the output row count).
+    pub target: Target,
+}
+
+impl Aligner for RandomAligner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn align(
+        &self,
+        structure: &EdgeList,
+        pool: &FeatureTable,
+        seed: u64,
+    ) -> Result<FeatureTable> {
+        let n_targets = match self.target {
+            Target::Edges => structure.len(),
+            Target::Nodes => structure.spec.n_src as usize,
+        };
+        random_alignment(pool, n_targets, seed)
+    }
+}
+
+/// Everything an aligner factory sees at fit time.
+pub struct AlignerFitContext<'a> {
+    /// Original structure to learn structure↔feature coupling from.
+    pub edges: &'a EdgeList,
+    /// Original features (one row per edge, or per source node).
+    pub features: &'a FeatureTable,
+    /// Edge- or node-feature leg.
+    pub target: Target,
+    /// Backend parameters from the scenario spec / builder.
+    pub params: &'a Params,
+    /// Typed GBT override (set by the legacy shim / builder); scalar
+    /// params like `trees` still apply on top.
+    pub gbt: Option<&'a GbtConfig>,
+    /// Typed structural-feature override.
+    pub struct_feats: Option<&'a StructFeatConfig>,
+}
+
+/// Factory signature for registry-registered aligner backends.
+pub type AlignerFactory = fn(&AlignerFitContext<'_>) -> Result<Box<dyn Aligner>>;
+
+fn make_learned(ctx: &AlignerFitContext<'_>) -> Result<Box<dyn Aligner>> {
+    let mut gbt = ctx.gbt.cloned().unwrap_or_else(GbtConfig::fast);
+    gbt.n_trees = ctx.params.usize_or("trees", gbt.n_trees)?.max(1);
+    gbt.max_depth = ctx.params.usize_or("depth", gbt.max_depth)?.max(1);
+    let feat_cfg = ctx.struct_feats.cloned().unwrap_or_default();
+    let mut aligner =
+        LearnedAligner::fit(ctx.edges, ctx.features, ctx.target, feat_cfg, &gbt)?;
+    aligner.exact_below = ctx.params.usize_or("exact_below", aligner.exact_below)?;
+    Ok(Box::new(aligner))
+}
+
+fn make_random(ctx: &AlignerFitContext<'_>) -> Result<Box<dyn Aligner>> {
+    Ok(Box::new(RandomAligner { target: ctx.target }))
+}
+
+/// Register every built-in aligner backend into `reg`.
+pub fn register_builtins(reg: &mut Registry<AlignerFactory>) {
+    reg.register("learned", make_learned);
+    reg.register("random", make_random);
+    reg.alias("xgboost", "learned");
+    reg.alias("gbt", "learned");
+}
+
+/// Which aligner a pipeline uses (ablation axis of Table 6). Legacy
+/// closed enum — new code names backends by registry string.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AlignKind {
     /// Learned XGBoost-style aligner ("xgboost").
     Learned,
     /// Random assignment ("random").
     Random,
+}
+
+impl AlignKind {
+    /// Canonical registry name of this kind.
+    pub fn registry_name(&self) -> &'static str {
+        match self {
+            AlignKind::Learned => "learned",
+            AlignKind::Random => "random",
+        }
+    }
 }
 
 impl std::str::FromStr for AlignKind {

@@ -56,6 +56,21 @@ pub fn transaction_schema(n_extra: usize) -> DatasetSchema {
     DatasetSchema { edge_cols, node_cols: vec![] }
 }
 
+/// Fraud-profile schema: transaction edges plus card/account profile
+/// columns on the source partite (Table 11: the IEEE original carries
+/// identity/profile features per card), so the node-feature pipeline leg
+/// has something to fit.
+pub fn fraud_profile_schema(n_extra: usize) -> DatasetSchema {
+    let mut schema = transaction_schema(n_extra);
+    schema.node_cols = vec![
+        ColSpec::LogNormal { name: "credit_limit", mu: 8.5, sigma: 0.9, deg_corr: 0.45 },
+        ColSpec::Normal { name: "account_age", mean: 48.0, std: 20.0, deg_corr: 0.3 },
+        ColSpec::Categorical { name: "region", k: 12, alpha: 1.4, deg_corr: 0.3 },
+        ColSpec::Categorical { name: "card_tier", k: 4, alpha: 1.1, deg_corr: 0.2 },
+    ];
+    schema
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,6 +1,6 @@
 //! Stand-in dataset constructors (see module docs of [`super`]).
 
-use super::schema::{transaction_schema, ColSpec, DatasetSchema};
+use super::schema::{fraud_profile_schema, transaction_schema, ColSpec, DatasetSchema};
 use super::Dataset;
 use crate::featgen::table::{Column, ColumnData, FeatureTable};
 use crate::graph::{EdgeList, PartiteSpec};
@@ -126,15 +126,16 @@ pub fn tabformer(seed: u64) -> Dataset {
 }
 
 /// IEEE-Fraud stand-in: bipartite card-profile × address-profile graph,
-/// 12 features (scaled from 48) + fraud edge labels (~3.5% positive,
-/// degree- and feature-correlated so a GNN can learn it).
+/// 12 edge features (scaled from 48), 4 card-profile node features, and
+/// fraud edge labels (~3.5% positive, degree- and feature-correlated so
+/// a GNN can learn it).
 pub fn ieee_fraud(seed: u64) -> Dataset {
     let mut ds = build(
         "ieee-fraud",
         PartiteSpec::bipartite(1 << 10, 1 << 8),
         26_000,
         ThetaS::new(0.45, 0.25, 0.2, 0.1),
-        &transaction_schema(7),
+        &fraud_profile_schema(7),
         seed,
     );
     // fraud labels: logistic in amount + degree signal

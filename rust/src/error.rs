@@ -1,35 +1,62 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline build has no `thiserror`).
+
+use crate::xla;
 
 /// Unified error type for the SGG framework.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O failure (dataset files, artifact files, output shards).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// XLA / PJRT runtime failure.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// An artifact referenced by the runtime is missing on disk.
-    #[error("missing artifact `{0}` — run `make artifacts` first")]
     MissingArtifact(String),
 
-    /// Configuration / CLI argument problem.
-    #[error("config error: {0}")]
+    /// Configuration / CLI argument / scenario-spec problem.
     Config(String),
 
     /// Malformed input data (dataset schema mismatch, parse failure, ...).
-    #[error("data error: {0}")]
     Data(String),
 
     /// A model was used before it was fitted.
-    #[error("model not fitted: {0}")]
     NotFitted(String),
 
     /// Numerical failure (non-convergence, singular matrix, ...).
-    #[error("numeric error: {0}")]
     Numeric(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::MissingArtifact(m) => {
+                write!(f, "missing artifact `{m}` — run `make artifacts` first")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::NotFitted(m) => write!(f, "model not fitted: {m}"),
+            Error::Numeric(m) => write!(f, "numeric error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -40,3 +67,25 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_legacy_format() {
+        assert_eq!(Error::Config("bad".into()).to_string(), "config error: bad");
+        assert_eq!(Error::Data("x".into()).to_string(), "data error: x");
+        assert_eq!(
+            Error::MissingArtifact("gan".into()).to_string(),
+            "missing artifact `gan` — run `make artifacts` first"
+        );
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

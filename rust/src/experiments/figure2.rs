@@ -4,7 +4,6 @@
 
 use super::{print_table, save};
 use crate::metrics::{degree::log_binned_degree_hist, hopplot::hop_plot};
-use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -12,8 +11,8 @@ pub fn run(quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("tabformer", 1)?;
     let mut series: Vec<(String, crate::graph::EdgeList)> =
         vec![("original".into(), ds.edges.clone())];
-    for (method, cfg) in super::table2::methods() {
-        let synth = Pipeline::fit(&ds, &cfg)?.generate(1, 7)?;
+    for (method, builder) in super::table2::methods() {
+        let synth = builder.fit(&ds)?.generate(1, 7)?;
         series.push((method.to_string(), synth.edges));
     }
     let bins = 20;

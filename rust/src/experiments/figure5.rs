@@ -4,7 +4,6 @@
 
 use super::save;
 use crate::metrics::joint::heatmap;
-use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -26,8 +25,8 @@ pub fn run(_quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("ieee-fraud", 1)?;
     let mut variants: Vec<(String, crate::datasets::Dataset)> =
         vec![("original".into(), ds.clone())];
-    for (method, cfg) in super::table2::methods() {
-        variants.push((method.to_string(), Pipeline::fit(&ds, &cfg)?.generate(1, 13)?));
+    for (method, builder) in super::table2::methods() {
+        variants.push((method.to_string(), builder.fit(&ds)?.generate(1, 13)?));
     }
     let mut records = Vec::new();
     println!("\n=== Figure 5: degree × feature heat maps (rows = degree bins, cols = feature bins) ===");

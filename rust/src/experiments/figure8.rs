@@ -52,7 +52,7 @@ pub fn run(quick: bool) -> Result<Json> {
         // parallel chunked RMAT
         let cfg = ChunkConfig::default();
         let t0 = std::time::Instant::now();
-        generate_chunked(&kron, n, n, e, 3, cfg, |_c| {})?;
+        generate_chunked(&kron, n, n, e, 3, cfg, |_c| Ok(()))?;
         let rmat_par = e as f64 / t0.elapsed().as_secs_f64();
         // TrillionG-style
         let t0 = std::time::Instant::now();

@@ -3,43 +3,38 @@
 //! Paysim} stand-ins.
 
 use super::{print_table, save};
-use crate::aligner::AlignKind;
-use crate::featgen::FeatKind;
 use crate::metrics;
-use crate::pipeline::{Pipeline, PipelineConfig};
-use crate::structgen::StructKind;
+use crate::pipeline::{Pipeline, PipelineBuilder};
 use crate::util::json::Json;
 use crate::Result;
 
-/// The three method arms of Table 2.
-pub fn methods() -> Vec<(&'static str, PipelineConfig)> {
+/// The three method arms of Table 2, as registry-backed builders. The
+/// node-feature leg is off: Table 2 scores edge metrics only.
+pub fn methods() -> Vec<(&'static str, PipelineBuilder)> {
     vec![
         (
             "random",
-            PipelineConfig {
-                struct_kind: StructKind::Random,
-                feat_kind: FeatKind::Random,
-                align_kind: AlignKind::Random,
-                ..Default::default()
-            },
+            Pipeline::builder()
+                .structure("erdos-renyi")
+                .edge_features("random")
+                .aligner("random")
+                .no_node_features(),
         ),
         (
             "graphworld",
-            PipelineConfig {
-                struct_kind: StructKind::Sbm,
-                feat_kind: FeatKind::Gaussian,
-                align_kind: AlignKind::Random,
-                ..Default::default()
-            },
+            Pipeline::builder()
+                .structure("sbm")
+                .edge_features("gaussian")
+                .aligner("random")
+                .no_node_features(),
         ),
         (
             "ours",
-            PipelineConfig {
-                struct_kind: StructKind::Kronecker,
-                feat_kind: FeatKind::Kde,
-                align_kind: AlignKind::Learned,
-                ..Default::default()
-            },
+            Pipeline::builder()
+                .structure("kronecker")
+                .edge_features("kde")
+                .aligner("learned")
+                .no_node_features(),
         ),
     ]
 }
@@ -47,10 +42,10 @@ pub fn methods() -> Vec<(&'static str, PipelineConfig)> {
 /// Evaluate one (dataset, method) cell.
 pub fn evaluate_cell(
     ds: &crate::datasets::Dataset,
-    cfg: &PipelineConfig,
+    builder: &PipelineBuilder,
     seed: u64,
 ) -> Result<metrics::QualityReport> {
-    let fitted = Pipeline::fit(ds, cfg)?;
+    let fitted = builder.fit(ds)?;
     let synth = fitted.generate(1, seed)?;
     Ok(metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features))
 }

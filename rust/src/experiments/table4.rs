@@ -6,9 +6,8 @@
 
 use super::{print_table, save};
 use crate::gnn::{node_task, node_task_on_structure};
-use crate::pipeline::{Pipeline, PipelineConfig};
+use crate::pipeline::Pipeline;
 use crate::runtime::gnn_exec::{GnnKind, NodeClfRunner};
-use crate::structgen::StructKind;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -24,9 +23,12 @@ pub fn run(quick: bool) -> Result<Json> {
     // structures: original + per-method synthetic of the same size
     let mut variants: Vec<(String, crate::graph::EdgeList)> =
         vec![("original".into(), ds.edges.clone())];
-    for (name, kind) in [("random", StructKind::Random), ("ours", StructKind::Kronecker)] {
-        let cfg = PipelineConfig { struct_kind: kind, ..Default::default() };
-        let synth = Pipeline::fit(&ds, &cfg)?.generate(1, 5)?;
+    for (name, backend) in [("random", "erdos-renyi"), ("ours", "kronecker")] {
+        let synth = Pipeline::builder()
+            .structure(backend)
+            .no_node_features()
+            .fit(&ds)?
+            .generate(1, 5)?;
         variants.push((name.to_string(), synth.edges));
     }
 

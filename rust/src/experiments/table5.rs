@@ -3,7 +3,7 @@
 
 use super::{print_table, save};
 use crate::metrics;
-use crate::pipeline::{Pipeline, PipelineConfig};
+use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -18,7 +18,7 @@ pub fn run(quick: bool) -> Result<Json> {
     let mut records = Vec::new();
     for name in &datasets {
         let ds = crate::datasets::load(name, 1)?;
-        let fitted = Pipeline::fit(&ds, &PipelineConfig::default())?;
+        let fitted = Pipeline::builder().no_node_features().fit(&ds)?;
         for &s in &scales {
             let synth = fitted.generate(s, 11 + s)?;
             let r = metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features);

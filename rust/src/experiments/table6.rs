@@ -1,41 +1,39 @@
 //! Paper Table 6: component ablation on the IEEE dataset —
 //! {ours, TrillionG, Random} × {GAN, KDE, Random} × {xgboost, random}.
+//! Runs on the registry API: every arm is just a triple of backend names.
 
 use super::{print_table, save};
-use crate::aligner::AlignKind;
-use crate::featgen::FeatKind;
 use crate::metrics;
-use crate::pipeline::{Pipeline, PipelineConfig};
-use crate::structgen::StructKind;
+use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::Result;
 
 pub fn run(quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("ieee-fraud", 1)?;
     let structs = [
-        ("ours", StructKind::Kronecker),
-        ("trilliong", StructKind::TrillionG),
-        ("random", StructKind::Random),
+        ("ours", "kronecker"),
+        ("trilliong", "trilliong"),
+        ("random", "erdos-renyi"),
     ];
-    let feats = if quick {
-        vec![("kde", FeatKind::Kde), ("random", FeatKind::Random)]
+    let feats: Vec<(&str, &str)> = if quick {
+        vec![("kde", "kde"), ("random", "random")]
     } else {
-        vec![("gan", FeatKind::Gan), ("kde", FeatKind::Kde), ("random", FeatKind::Random)]
+        vec![("gan", "gan"), ("kde", "kde"), ("random", "random")]
     };
-    let aligns = [("xgboost", AlignKind::Learned), ("random", AlignKind::Random)];
+    let aligns = [("xgboost", "learned"), ("random", "random")];
 
     let mut rows = Vec::new();
     let mut records = Vec::new();
-    for (s_name, sk) in structs {
-        for (f_name, fk) in &feats {
-            for (a_name, ak) in aligns {
-                let cfg = PipelineConfig {
-                    struct_kind: sk,
-                    feat_kind: *fk,
-                    align_kind: ak,
-                    ..Default::default()
-                };
-                let synth = Pipeline::fit(&ds, &cfg)?.generate(1, 21)?;
+    for (s_name, s_backend) in structs {
+        for (f_name, f_backend) in &feats {
+            for (a_name, a_backend) in aligns {
+                let synth = Pipeline::builder()
+                    .structure(s_backend)
+                    .edge_features(*f_backend)
+                    .aligner(a_backend)
+                    .no_node_features()
+                    .fit(&ds)?
+                    .generate(1, 21)?;
                 let r = metrics::evaluate(
                     &ds.edges,
                     &ds.edge_features,

@@ -4,9 +4,8 @@
 
 use super::{print_table, save};
 use crate::gnn::node_task_on_structure;
-use crate::pipeline::{Pipeline, PipelineConfig};
+use crate::pipeline::Pipeline;
 use crate::runtime::gnn_exec::{EdgeClfRunner, GnnKind, NodeClfRunner};
-use crate::structgen::StructKind;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -29,18 +28,20 @@ pub fn run(quick: bool) -> Result<Json> {
         (
             "random",
             Some(
-                Pipeline::fit(&cora, &PipelineConfig {
-                    struct_kind: StructKind::Random,
-                    ..Default::default()
-                })?
-                .generate(1, 3)?
-                .edges,
+                Pipeline::builder()
+                    .structure("erdos-renyi")
+                    .no_node_features()
+                    .fit(&cora)?
+                    .generate(1, 3)?
+                    .edges,
             ),
         ),
         (
             "ours",
             Some(
-                Pipeline::fit(&cora, &PipelineConfig::default())?
+                Pipeline::builder()
+                    .no_node_features()
+                    .fit(&cora)?
                     .generate(1, 3)?
                     .edges,
             ),
@@ -79,8 +80,11 @@ pub fn run(quick: bool) -> Result<Json> {
     for (gen_name, pretrain) in [("no-pretraining", false), ("random", true), ("ours", true)] {
         edge_runner.reset()?;
         if pretrain {
-            let kind = if gen_name == "ours" { StructKind::Kronecker } else { StructKind::Random };
-            let synth = Pipeline::fit(&ieee, &PipelineConfig { struct_kind: kind, ..Default::default() })?
+            let backend = if gen_name == "ours" { "kronecker" } else { "erdos-renyi" };
+            let synth = Pipeline::builder()
+                .structure(backend)
+                .no_node_features()
+                .fit(&ieee)?
                 .generate(1, 9)?;
             // transplanted labels onto the synthetic structure
             let task = edge_runner.prepare(&synth.edges, &synth.edge_features, &labels, 7)?;

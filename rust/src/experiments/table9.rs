@@ -5,9 +5,9 @@
 use super::{print_table, save};
 use crate::aligner::node2vec::Node2VecConfig;
 use crate::aligner::ranking::{LearnedAligner, Target};
-use crate::aligner::{AlignKind, StructFeatConfig};
+use crate::aligner::StructFeatConfig;
 use crate::metrics::joint::degree_feature_distance;
-use crate::pipeline::{Pipeline, PipelineConfig};
+use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::util::stats;
 use crate::Result;
@@ -43,8 +43,10 @@ pub fn run(quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("ieee-fraud", 1)?;
     let trials: u64 = if quick { 2 } else { 5 };
     // one fitted structure+features pipeline; only the aligner varies
-    let base_cfg = PipelineConfig { align_kind: AlignKind::Random, ..Default::default() };
-    let fitted = Pipeline::fit(&ds, &base_cfg)?;
+    let fitted = Pipeline::builder()
+        .aligner("random")
+        .no_node_features()
+        .fit(&ds)?;
 
     let mut rows = Vec::new();
     let mut records = Vec::new();

@@ -13,6 +13,10 @@
 //! * [`random`] — ranges-only random generator (the paper's "random").
 //! * [`gaussian`] — multivariate Gaussian (the feature model used when
 //!   integrating GraphWorld into the framework, §4.4).
+//!
+//! Backends register in the pipeline's feature [`Registry`] via
+//! [`register_builtins`]; the same registry entry serves edge- and
+//! node-feature legs (a factory is handed whichever table it must fit).
 
 pub mod encoder;
 pub mod gan;
@@ -24,6 +28,8 @@ pub mod table;
 
 pub use table::{Column, ColumnData, FeatureTable};
 
+use crate::pipeline::registry::Registry;
+use crate::pipeline::spec::Params;
 use crate::Result;
 
 /// A fitted tabular feature generator.
@@ -35,7 +41,64 @@ pub trait FeatureGenerator {
     fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable>;
 }
 
+/// Everything a feature factory sees at fit time.
+pub struct FeatureFitContext<'a> {
+    /// The feature table to fit on (edge or node features).
+    pub table: &'a FeatureTable,
+    /// Backend parameters from the scenario spec / builder.
+    pub params: &'a Params,
+    /// Fitting seed.
+    pub seed: u64,
+}
+
+/// Factory signature for registry-registered feature backends.
+pub type FeatureGeneratorFactory =
+    fn(&FeatureFitContext<'_>) -> Result<Box<dyn FeatureGenerator>>;
+
+fn make_random(ctx: &FeatureFitContext<'_>) -> Result<Box<dyn FeatureGenerator>> {
+    Ok(Box::new(random::RandomFeatureGen::fit(ctx.table)))
+}
+
+fn make_kde(ctx: &FeatureFitContext<'_>) -> Result<Box<dyn FeatureGenerator>> {
+    Ok(Box::new(kde::KdeFeatureGen::fit(ctx.table)))
+}
+
+fn make_gaussian(ctx: &FeatureFitContext<'_>) -> Result<Box<dyn FeatureGenerator>> {
+    Ok(Box::new(gaussian::GaussianFeatureGen::fit(ctx.table)?))
+}
+
+fn make_gan(ctx: &FeatureFitContext<'_>) -> Result<Box<dyn FeatureGenerator>> {
+    let use_pjrt = ctx.params.bool_or("use_pjrt", true)?;
+    if use_pjrt && crate::runtime::artifacts_available() {
+        let rt = crate::runtime::global()?;
+        let backend = crate::runtime::gan_exec::PjrtGanBackend::new(
+            rt,
+            crate::runtime::gan_exec::GanTrainConfig::default(),
+        )?;
+        Ok(Box::new(gan::GanFeatureGen::fit_with_backend(
+            ctx.table,
+            Box::new(backend),
+            ctx.seed,
+        )?))
+    } else {
+        if use_pjrt {
+            crate::warn_log!("artifacts missing: GAN falls back to resample backend");
+        }
+        Ok(Box::new(gan::GanFeatureGen::fit_resample(ctx.table, ctx.seed)?))
+    }
+}
+
+/// Register every built-in feature backend into `reg`.
+pub fn register_builtins(reg: &mut Registry<FeatureGeneratorFactory>) {
+    reg.register("random", make_random);
+    reg.register("kde", make_kde);
+    reg.register("gaussian", make_gaussian);
+    reg.register("gan", make_gan);
+    reg.alias("mvg", "gaussian");
+}
+
 /// Which feature generator a pipeline uses (ablation axis of Table 6).
+/// Legacy closed enum — new code names backends by registry string.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FeatKind {
     /// CTGAN-style GAN (requires AOT artifacts).
@@ -46,6 +109,18 @@ pub enum FeatKind {
     Random,
     /// Multivariate Gaussian.
     Gaussian,
+}
+
+impl FeatKind {
+    /// Canonical registry name of this kind.
+    pub fn registry_name(&self) -> &'static str {
+        match self {
+            FeatKind::Gan => "gan",
+            FeatKind::Kde => "kde",
+            FeatKind::Random => "random",
+            FeatKind::Gaussian => "gaussian",
+        }
+    }
 }
 
 impl std::str::FromStr for FeatKind {

@@ -22,13 +22,47 @@
 //!    that rank generated feature rows onto generated structure
 //!    (eq. 15–19).
 //!
-//! [`pipeline`] wires the three together into a streaming fit → generate →
-//! align → emit pipeline; [`metrics`] implements every evaluation metric in
-//! the paper (§4.3 + appendix), and [`experiments`] regenerates every table
-//! and figure.
+//! ## The scenario API
+//!
+//! Components are wired together through a **string-keyed registry** and a
+//! declarative **[`pipeline::ScenarioSpec`]** rather than closed enums, so
+//! new backends plug in without touching the pipeline. Three entry points,
+//! from most to least declarative:
+//!
+//! * **Spec file** — `sgg run scenario.toml` parses a minimal TOML-subset
+//!   scenario (dataset, per-component backends + params, scale or explicit
+//!   sizes, seed, and a sink) and executes it end to end.
+//! * **Builder** — [`pipeline::Pipeline::builder`] gives the same knobs
+//!   programmatically:
+//!
+//!   ```no_run
+//!   use sgg::pipeline::Pipeline;
+//!   # fn main() -> sgg::Result<()> {
+//!   let ds = sgg::datasets::load("ieee-fraud", 1)?;
+//!   let fitted = Pipeline::builder()
+//!       .structure("kronecker")
+//!       .edge_features("kde")
+//!       .aligner("learned")
+//!       .fit(&ds)?;
+//!   let synth = fitted.generate(2, 7)?;
+//!   # let _ = synth;
+//!   # Ok(())
+//!   # }
+//!   ```
+//!
+//! * **Legacy enums** — [`pipeline::PipelineConfig`] still compiles and
+//!   lowers onto the registry path.
+//!
+//! Datasets with node features get a second feature-generation + alignment
+//! leg automatically; output goes to an in-memory [`datasets::Dataset`] or
+//! streams to disk shards through the unified [`pipeline::Sink`] trait.
+//!
+//! [`metrics`] implements every evaluation metric in the paper (§4.3 +
+//! appendix), and [`experiments`] regenerates every table and figure.
 
 pub mod error;
 pub mod util;
+pub mod xla;
 pub mod graph;
 pub mod structgen;
 pub mod featgen;

@@ -2,14 +2,19 @@
 //!
 //! ```text
 //! sgg datasets                          list the dataset registry
+//! sgg run scenario.toml                 execute a declarative scenario spec
 //! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
 //! sgg evaluate --dataset tabformer      fit + generate + Table-2 metrics
 //! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards
 //! sgg experiment table2 [--quick]       regenerate one paper table/figure
 //! sgg experiment all [--quick]          regenerate everything
 //! ```
+//!
+//! Components are selected by registry name (`--struct kronecker|
+//! erdos-renyi|sbm|trilliong ...`); historical aliases (`ours`, `random`,
+//! `graphworld`, `xgboost`) keep working.
 
-use sgg::pipeline::{Pipeline, PipelineConfig};
+use sgg::pipeline::{self, ComponentSpec, Pipeline, PipelineBuilder, ScenarioSpec, SinkOutput};
 use sgg::util::args::Args;
 use sgg::Result;
 
@@ -25,20 +30,26 @@ fn main() {
     std::process::exit(code);
 }
 
-fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
-    let mut cfg = PipelineConfig::default();
+/// Build a pipeline from `--struct/--feat/--align/--noise/--seed` flags.
+fn builder_from_args(args: &Args) -> PipelineBuilder {
+    let mut builder = Pipeline::builder();
     if let Some(s) = args.get("struct") {
-        cfg.struct_kind = s.parse().map_err(sgg::Error::Config)?;
+        let mut c = ComponentSpec::new(s);
+        if let Some(noise) = args.get("noise").and_then(|v| v.parse::<f64>().ok()) {
+            c = c.with("noise", noise);
+        }
+        if let Some(blocks) = args.get("sbm-blocks").and_then(|v| v.parse::<u64>().ok()) {
+            c = c.with("blocks", blocks);
+        }
+        builder = builder.structure(c);
     }
     if let Some(s) = args.get("feat") {
-        cfg.feat_kind = s.parse().map_err(sgg::Error::Config)?;
+        builder = builder.edge_features(s);
     }
     if let Some(s) = args.get("align") {
-        cfg.align_kind = s.parse().map_err(sgg::Error::Config)?;
+        builder = builder.aligner(s);
     }
-    cfg.noise = args.get_or("noise", cfg.noise);
-    cfg.seed = args.get_or("seed", cfg.seed);
-    Ok(cfg)
+    builder.seed(args.get_or("seed", 0x5a6e))
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -50,13 +61,30 @@ fn run(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        Some("run") => {
+            let path = args.positional.get(1).ok_or_else(|| {
+                sgg::Error::Config("usage: sgg run <scenario.toml> [--seed N]".into())
+            })?;
+            let mut spec = ScenarioSpec::from_file(std::path::Path::new(path))?;
+            if let Some(seed) = args.get("seed").and_then(|v| v.parse().ok()) {
+                spec.seed = seed;
+            }
+            let out = pipeline::run_scenario(&spec)?;
+            println!("scenario `{}`: {}", spec.name, out.summary());
+            if let (SinkOutput::Dataset(ds), Some(dir)) = (&out, args.get("out")) {
+                let dir = std::path::Path::new(dir);
+                std::fs::create_dir_all(dir)?;
+                sgg::graph::io::write_binary(&dir.join("edges.sgg"), &ds.edges)?;
+                println!("wrote {}", dir.join("edges.sgg").display());
+            }
+            Ok(())
+        }
         Some("fit-generate") => {
             let name = args.get("dataset").unwrap_or("ieee-fraud");
             let scale = args.get_or("scale", 1u64);
             let seed = args.get_or("seed", 42u64);
             let ds = sgg::datasets::load(name, 1)?;
-            let cfg = pipeline_config(args)?;
-            let fitted = Pipeline::fit(&ds, &cfg)?;
+            let fitted = builder_from_args(args).fit(&ds)?;
             let synth = fitted.generate(scale, seed)?;
             println!(
                 "generated `{}`: {} nodes, {} edges, {} feature cols",
@@ -76,8 +104,7 @@ fn run(args: &Args) -> Result<()> {
         Some("evaluate") => {
             let name = args.get("dataset").unwrap_or("ieee-fraud");
             let ds = sgg::datasets::load(name, 1)?;
-            let cfg = pipeline_config(args)?;
-            let fitted = Pipeline::fit(&ds, &cfg)?;
+            let fitted = builder_from_args(args).fit(&ds)?;
             let synth = fitted.generate(args.get_or("scale", 1u64), args.get_or("seed", 42u64))?;
             let report = sgg::metrics::evaluate(
                 &ds.edges,
@@ -127,10 +154,11 @@ fn run(args: &Args) -> Result<()> {
         }
         _ => {
             println!(
-                "usage: sgg <datasets|fit-generate|evaluate|stream|experiment> [--options]\n\
+                "usage: sgg <datasets|run|fit-generate|evaluate|stream|experiment> [--options]\n\
                  experiments: {:?}\n\
-                 components: --struct kronecker|random|sbm|trilliong  \
-                 --feat gan|kde|random|gaussian  --align xgboost|random",
+                 components: --struct kronecker|kronecker-noisy|erdos-renyi|sbm|trilliong  \
+                 --feat gan|kde|random|gaussian  --align learned|random\n\
+                 spec files: sgg run examples/fraud.toml (see README §Scenario specs)",
                 sgg::experiments::ALL
             );
             Ok(())

@@ -1,27 +1,44 @@
-//! The end-to-end SynGen pipeline (paper Figure 1): fit the structure
-//! generator, the feature generator, and the aligner on an input
-//! [`Dataset`]; generate at any scale; align; return a synthetic
-//! [`Dataset`]. [`orchestrator`] adds the streaming/out-of-core path.
+//! The end-to-end SynGen pipeline (paper Figure 1), redesigned around a
+//! declarative [`ScenarioSpec`] and string-keyed component [`Registry`]s.
+//!
+//! Fitting resolves each component (structure / edge features / node
+//! features / aligner) by name against [`Registries`], producing a
+//! [`FittedPipeline`]; generation routes structure chunks through a
+//! [`Sink`] — [`MemorySink`] assembles an in-memory [`Dataset`] (features
+//! generated and aligned, node features included when the source dataset
+//! has them), [`ShardSink`] streams shards to disk (paper §4.5) — so the
+//! in-memory and out-of-core paths share one code path.
+//!
+//! Entry points:
+//!
+//! * [`run_scenario`] — execute a parsed [`ScenarioSpec`] end to end.
+//! * [`Pipeline::builder`] — fluent programmatic configuration.
+//! * [`Pipeline::fit`] + [`PipelineConfig`] — the legacy enum-based API,
+//!   kept as a thin shim that lowers onto the builder.
 
 pub mod orchestrator;
+pub mod registry;
+pub mod sink;
+pub mod spec;
+
+pub use registry::{Registries, Registry};
+pub use sink::{MemorySink, ShardSink, Sink, SinkFinish, SinkOutput, StreamReport};
+pub use spec::{
+    ComponentSpec, NodeFeatureSpec, Params, ScenarioSpec, SinkSpec, SizeSpec, Value,
+};
 
 use crate::aligner::gbt::GbtConfig;
-use crate::aligner::ranking::{LearnedAligner, Target};
-use crate::aligner::{random_alignment, AlignKind, StructFeatConfig};
+use crate::aligner::{Aligner, AlignerFitContext, AlignKind, StructFeatConfig, Target};
 use crate::datasets::Dataset;
-use crate::featgen::gan::GanFeatureGen;
-use crate::featgen::gaussian::GaussianFeatureGen;
-use crate::featgen::kde::KdeFeatureGen;
-use crate::featgen::random::RandomFeatureGen;
-use crate::featgen::{FeatKind, FeatureGenerator};
-use crate::structgen::erdos_renyi::ErdosRenyi;
-use crate::structgen::sbm::DcSbm;
-use crate::structgen::trilliong::TrillionG;
-use crate::structgen::{fit::fit_kronecker, StructKind, StructureGenerator};
-use crate::Result;
+use crate::featgen::{FeatKind, FeatureFitContext, FeatureGenerator};
+use crate::graph::EdgeList;
+use crate::structgen::chunked::ChunkConfig;
+use crate::structgen::{StructKind, StructureFitContext, StructureGenerator};
+use crate::{Error, Result};
 
-/// Pipeline configuration: the three swappable components (the ablation
-/// axes of paper Table 6) plus fitting hyper-parameters.
+/// Legacy pipeline configuration: the three swappable components as
+/// closed enums. Kept as a compatibility shim — [`PipelineConfig::to_builder`]
+/// lowers it onto the registry-based [`PipelineBuilder`].
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
     pub struct_kind: StructKind,
@@ -57,88 +74,253 @@ impl Default for PipelineConfig {
     }
 }
 
+impl PipelineConfig {
+    /// Lower the closed-enum config onto the registry-based builder. The
+    /// node-feature leg stays off for parity: the legacy API never
+    /// generated node features, so unchanged callers keep the exact
+    /// output shape (opt in via the builder's `node_features`).
+    pub fn to_builder(&self) -> PipelineBuilder {
+        let structure = match self.struct_kind {
+            StructKind::Kronecker => ComponentSpec::new("kronecker"),
+            StructKind::KroneckerNoisy => {
+                ComponentSpec::new("kronecker-noisy").with("noise", self.noise.max(0.3))
+            }
+            StructKind::Random => ComponentSpec::new("erdos-renyi"),
+            StructKind::Sbm => ComponentSpec::new("sbm").with("blocks", self.sbm_blocks),
+            StructKind::TrillionG => ComponentSpec::new("trilliong"),
+        };
+        let edge_features = match self.feat_kind {
+            FeatKind::Gan => ComponentSpec::new("gan").with("use_pjrt", self.use_pjrt_gan),
+            other => ComponentSpec::new(other.registry_name()),
+        };
+        Pipeline::builder()
+            .structure(structure)
+            .edge_features(edge_features)
+            .aligner(self.align_kind.registry_name())
+            .gbt(self.gbt.clone())
+            .struct_feats(self.struct_feats.clone())
+            .no_node_features()
+            .seed(self.seed)
+    }
+}
+
+/// Fluent, registry-backed pipeline configuration. Obtain via
+/// [`Pipeline::builder`]; component arguments accept a plain name
+/// (`"kde"`) or a parameterized [`ComponentSpec`].
+#[derive(Clone, Debug)]
+pub struct PipelineBuilder {
+    structure: ComponentSpec,
+    edge_features: ComponentSpec,
+    node_features: NodeFeatureSpec,
+    aligner: ComponentSpec,
+    gbt: Option<GbtConfig>,
+    struct_feats: Option<StructFeatConfig>,
+    seed: u64,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        PipelineBuilder {
+            structure: ComponentSpec::new("kronecker"),
+            edge_features: ComponentSpec::new("kde"),
+            node_features: NodeFeatureSpec::Auto,
+            aligner: ComponentSpec::new("learned"),
+            gbt: None,
+            struct_feats: None,
+            seed: 0x5a6e,
+        }
+    }
+}
+
+impl PipelineBuilder {
+    /// Structure backend (registry name or parameterized spec).
+    pub fn structure(mut self, c: impl Into<ComponentSpec>) -> Self {
+        self.structure = c.into();
+        self
+    }
+
+    /// Edge-feature backend.
+    pub fn edge_features(mut self, c: impl Into<ComponentSpec>) -> Self {
+        self.edge_features = c.into();
+        self
+    }
+
+    /// Node-feature backend (errors at fit time if the dataset has no
+    /// node features to learn from).
+    pub fn node_features(mut self, c: impl Into<ComponentSpec>) -> Self {
+        self.node_features = NodeFeatureSpec::Component(c.into());
+        self
+    }
+
+    /// Disable the node-feature leg (default is auto: generate node
+    /// features iff the source dataset has them).
+    pub fn no_node_features(mut self) -> Self {
+        self.node_features = NodeFeatureSpec::Off;
+        self
+    }
+
+    /// Explicit node-feature mode.
+    pub fn node_feature_spec(mut self, spec: NodeFeatureSpec) -> Self {
+        self.node_features = spec;
+        self
+    }
+
+    /// Aligner backend.
+    pub fn aligner(mut self, c: impl Into<ComponentSpec>) -> Self {
+        self.aligner = c.into();
+        self
+    }
+
+    /// Typed GBT override for the learned aligner.
+    pub fn gbt(mut self, cfg: GbtConfig) -> Self {
+        self.gbt = Some(cfg);
+        self
+    }
+
+    /// Typed structural-feature override for the learned aligner.
+    pub fn struct_feats(mut self, cfg: StructFeatConfig) -> Self {
+        self.struct_feats = Some(cfg);
+        self
+    }
+
+    /// Fitting seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Fit against the built-in registries.
+    pub fn fit(&self, ds: &Dataset) -> Result<FittedPipeline> {
+        self.fit_with(ds, &Registries::builtin())
+    }
+
+    /// Fit against caller-supplied registries (custom backends).
+    pub fn fit_with(&self, ds: &Dataset, regs: &Registries) -> Result<FittedPipeline> {
+        crate::info!("fit[{}]: structure=`{}`", ds.name, self.structure.name);
+        let struct_gen = regs.structure.resolve(&self.structure.name)?(&StructureFitContext {
+            edges: &ds.edges,
+            params: &self.structure.params,
+            seed: self.seed,
+        })?;
+
+        crate::info!("fit[{}]: edge features=`{}`", ds.name, self.edge_features.name);
+        let edge_feat_gen = regs.features.resolve(&self.edge_features.name)?(
+            &FeatureFitContext {
+                table: &ds.edge_features,
+                params: &self.edge_features.params,
+                seed: self.seed,
+            },
+        )?;
+
+        let align_factory = regs.aligners.resolve(&self.aligner.name)?;
+        let edge_aligner = align_factory(&AlignerFitContext {
+            edges: &ds.edges,
+            features: &ds.edge_features,
+            target: Target::Edges,
+            params: &self.aligner.params,
+            gbt: self.gbt.as_ref(),
+            struct_feats: self.struct_feats.as_ref(),
+        })?;
+
+        let node_component = match &self.node_features {
+            NodeFeatureSpec::Off => None,
+            NodeFeatureSpec::Auto => {
+                ds.node_features.as_ref().map(|_| self.edge_features.clone())
+            }
+            NodeFeatureSpec::Component(c) => Some(c.clone()),
+        };
+        let (node_feat_gen, node_aligner) = match node_component {
+            None => (None, None),
+            Some(c) => {
+                let nf = ds.node_features.as_ref().ok_or_else(|| {
+                    Error::Config(format!(
+                        "node-feature backend `{}` requested but dataset `{}` has no \
+                         node features to fit on",
+                        c.name, ds.name
+                    ))
+                })?;
+                crate::info!("fit[{}]: node features=`{}`", ds.name, c.name);
+                let gen = regs.features.resolve(&c.name)?(&FeatureFitContext {
+                    table: nf,
+                    params: &c.params,
+                    seed: self.seed ^ 0x6e0de,
+                })?;
+                let aligner = align_factory(&AlignerFitContext {
+                    edges: &ds.edges,
+                    features: nf,
+                    target: Target::Nodes,
+                    params: &self.aligner.params,
+                    gbt: self.gbt.as_ref(),
+                    struct_feats: self.struct_feats.as_ref(),
+                })?;
+                (Some(gen), Some(aligner))
+            }
+        };
+
+        Ok(FittedPipeline {
+            name: ds.name.clone(),
+            struct_gen,
+            edge_feat_gen,
+            edge_aligner,
+            node_feat_gen,
+            node_aligner,
+            seed: self.seed,
+        })
+    }
+}
+
 /// A fitted pipeline ready to generate synthetic datasets.
 pub struct FittedPipeline {
     pub name: String,
     struct_gen: Box<dyn StructureGenerator>,
-    feat_gen: Box<dyn FeatureGenerator>,
-    aligner: Option<LearnedAligner>,
-    cfg: PipelineConfig,
+    edge_feat_gen: Box<dyn FeatureGenerator>,
+    edge_aligner: Box<dyn Aligner>,
+    node_feat_gen: Option<Box<dyn FeatureGenerator>>,
+    node_aligner: Option<Box<dyn Aligner>>,
+    seed: u64,
 }
 
 /// Entry point matching the paper's fit→generate workflow.
 pub struct Pipeline;
 
 impl Pipeline {
-    /// Fit all three components on a dataset.
+    /// Fluent registry-backed configuration.
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::default()
+    }
+
+    /// Fit all components from a legacy enum config (compatibility shim).
+    #[deprecated(note = "use Pipeline::builder() or a ScenarioSpec")]
     pub fn fit(ds: &Dataset, cfg: &PipelineConfig) -> Result<FittedPipeline> {
-        crate::info!("fit[{}]: structure={:?}", ds.name, cfg.struct_kind);
-        let struct_gen: Box<dyn StructureGenerator> = match cfg.struct_kind {
-            StructKind::Kronecker => Box::new(fit_kronecker(&ds.edges)),
-            StructKind::KroneckerNoisy => {
-                Box::new(fit_kronecker(&ds.edges).with_noise(cfg.noise.max(0.3)))
-            }
-            StructKind::Random => Box::new(ErdosRenyi::fit(&ds.edges)),
-            StructKind::Sbm => Box::new(DcSbm::fit(&ds.edges, cfg.sbm_blocks)),
-            StructKind::TrillionG => Box::new(TrillionG::fit(&ds.edges)),
-        };
-        crate::info!("fit[{}]: features={:?}", ds.name, cfg.feat_kind);
-        let feat_gen: Box<dyn FeatureGenerator> = match cfg.feat_kind {
-            FeatKind::Random => Box::new(RandomFeatureGen::fit(&ds.edge_features)),
-            FeatKind::Kde => Box::new(KdeFeatureGen::fit(&ds.edge_features)),
-            FeatKind::Gaussian => Box::new(GaussianFeatureGen::fit(&ds.edge_features)?),
-            FeatKind::Gan => {
-                if cfg.use_pjrt_gan && crate::runtime::artifacts_available() {
-                    let rt = crate::runtime::global()?;
-                    let backend = crate::runtime::gan_exec::PjrtGanBackend::new(
-                        rt,
-                        crate::runtime::gan_exec::GanTrainConfig::default(),
-                    )?;
-                    Box::new(GanFeatureGen::fit_with_backend(
-                        &ds.edge_features,
-                        Box::new(backend),
-                        cfg.seed,
-                    )?)
-                } else {
-                    crate::warn_log!("artifacts missing: GAN falls back to resample backend");
-                    Box::new(GanFeatureGen::fit_resample(&ds.edge_features, cfg.seed)?)
-                }
-            }
-        };
-        let aligner = match cfg.align_kind {
-            AlignKind::Learned => Some(LearnedAligner::fit(
-                &ds.edges,
-                &ds.edge_features,
-                Target::Edges,
-                cfg.struct_feats.clone(),
-                &cfg.gbt,
-            )?),
-            AlignKind::Random => None,
-        };
-        Ok(FittedPipeline {
-            name: ds.name.clone(),
-            struct_gen,
-            feat_gen,
-            aligner,
-            cfg: cfg.clone(),
-        })
+        cfg.to_builder().fit(ds)
     }
 }
 
 impl FittedPipeline {
-    /// Component names (for experiment tables).
+    /// Component names (for experiment tables): structure, edge features,
+    /// aligner.
     pub fn component_names(&self) -> (String, String, String) {
         (
             self.struct_gen.name().to_string(),
-            self.feat_gen.name().to_string(),
-            if self.aligner.is_some() { "xgboost".into() } else { "random".into() },
+            self.edge_feat_gen.name().to_string(),
+            self.edge_aligner.name().to_string(),
         )
+    }
+
+    /// True when the pipeline fitted a node-feature leg.
+    pub fn has_node_features(&self) -> bool {
+        self.node_feat_gen.is_some()
+    }
+
+    /// The fitting seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     /// Generate a synthetic dataset at integer `scale` (1 = same size).
     pub fn generate(&self, scale: u64, seed: u64) -> Result<Dataset> {
         let structure = self.struct_gen.generate(scale, seed)?;
-        self.finish(structure, seed)
+        self.assemble(structure, seed)
     }
 
     /// Generate with explicit sizes.
@@ -150,31 +332,103 @@ impl FittedPipeline {
         seed: u64,
     ) -> Result<Dataset> {
         let structure = self.struct_gen.generate_sized(n_src, n_dst, edges, seed)?;
-        self.finish(structure, seed)
+        self.assemble(structure, seed)
     }
 
-    fn finish(&self, structure: crate::graph::EdgeList, seed: u64) -> Result<Dataset> {
+    /// One code path for in-memory and streamed generation: resolve
+    /// `size`, stream structure chunks into `sink` (out-of-core backends
+    /// chunk with bounded memory), then let the sink finish — a
+    /// [`MemorySink`] hands the structure back for feature assembly, a
+    /// [`ShardSink`] reports what it persisted.
+    pub fn run(
+        &self,
+        size: SizeSpec,
+        chunks: ChunkConfig,
+        sink: &mut dyn Sink,
+        seed: u64,
+    ) -> Result<SinkOutput> {
+        let (n_src, n_dst, edges) = match size {
+            SizeSpec::Scale(s) => self.struct_gen.scaled_size(s.max(1)),
+            SizeSpec::Sized { n_src, n_dst, edges } => (n_src, n_dst, edges),
+        };
+        crate::info!(
+            "run[{}]: {} edges over {}×{} → sink `{}`",
+            self.name,
+            edges,
+            n_src,
+            n_dst,
+            sink.name()
+        );
+        self.struct_gen
+            .generate_into(n_src, n_dst, edges, seed, chunks, &mut |c| sink.edges(c))?;
+        match sink.finish()? {
+            SinkFinish::Collected(structure) => {
+                Ok(SinkOutput::Dataset(self.assemble(structure, seed)?))
+            }
+            SinkFinish::Streamed(report) => Ok(SinkOutput::Streamed(report)),
+        }
+    }
+
+    /// Feature generation + alignment over a generated structure: sample
+    /// an edge-feature pool the size of the edge set, rank it onto the
+    /// structure (paper: the generated feature set is then ranked onto
+    /// the structure), and — when the pipeline fitted a node leg — do the
+    /// same per source node.
+    fn assemble(&self, structure: EdgeList, seed: u64) -> Result<Dataset> {
         let n_edges = structure.len();
-        // sample a feature pool the size of the edge set (paper: the
-        // generated feature set is then ranked onto the structure)
-        let pool = self.feat_gen.sample(n_edges, seed ^ 0xf00d)?;
-        let aligned = match &self.aligner {
-            Some(a) => a.align(&structure, &pool, seed ^ 0xa11)?,
-            None => random_alignment(&pool, n_edges, seed ^ 0xa11)?,
+        let pool = self.edge_feat_gen.sample(n_edges, seed ^ 0xf00d)?;
+        let edge_features = self.edge_aligner.align(&structure, &pool, seed ^ 0xa11)?;
+        let node_features = match (&self.node_feat_gen, &self.node_aligner) {
+            (Some(gen), Some(aligner)) => {
+                let n_nodes = structure.spec.n_src as usize;
+                let pool = gen.sample(n_nodes, seed ^ 0x6e0de)?;
+                Some(aligner.align(&structure, &pool, seed ^ 0x6e0a1)?)
+            }
+            _ => None,
         };
         Ok(Dataset {
             name: format!("{}-synth", self.name),
             edges: structure,
-            edge_features: aligned,
-            node_features: None,
+            edge_features,
+            node_features,
             node_labels: None,
             edge_labels: None,
         })
     }
+}
 
-    /// The active configuration.
-    pub fn config(&self) -> &PipelineConfig {
-        &self.cfg
+/// Execute a scenario end to end against the built-in registries: load
+/// the dataset, fit every component, generate at the requested size, and
+/// route output through the configured sink.
+pub fn run_scenario(spec: &ScenarioSpec) -> Result<SinkOutput> {
+    run_scenario_with(spec, &Registries::builtin())
+}
+
+/// [`run_scenario`] with caller-supplied registries.
+pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkOutput> {
+    let ds = crate::datasets::load(&spec.dataset, spec.dataset_seed)?;
+    let fitted = spec.to_builder().fit_with(&ds, regs)?;
+    match &spec.sink {
+        SinkSpec::Memory => {
+            let mut sink = MemorySink::new();
+            fitted.run(spec.size, ChunkConfig::default(), &mut sink, spec.seed)
+        }
+        SinkSpec::Shards { dir, chunks } => {
+            let mut sink = ShardSink::new(dir, *chunks)?;
+            fitted.run(spec.size, *chunks, &mut sink, spec.seed)
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Lower the declarative spec onto a [`PipelineBuilder`].
+    pub fn to_builder(&self) -> PipelineBuilder {
+        Pipeline::builder()
+            .structure(self.structure.clone())
+            .edge_features(self.edge_features.clone())
+            .node_feature_spec(self.node_features.clone())
+            .aligner(self.aligner.clone())
+            .seed(self.seed)
     }
 }
 
@@ -183,14 +437,10 @@ mod tests {
     use super::*;
     use crate::metrics;
 
-    fn cfg_fast() -> PipelineConfig {
-        PipelineConfig { use_pjrt_gan: false, ..Default::default() }
-    }
-
     #[test]
     fn fit_generate_same_size() {
         let ds = crate::datasets::load("ieee-fraud", 1).unwrap();
-        let p = Pipeline::fit(&ds, &cfg_fast()).unwrap();
+        let p = Pipeline::builder().fit(&ds).unwrap();
         let synth = p.generate(1, 9).unwrap();
         assert_eq!(synth.edges.len(), ds.edges.len());
         assert_eq!(synth.edge_features.n_rows(), ds.edges.len());
@@ -200,14 +450,15 @@ mod tests {
     #[test]
     fn fitted_beats_random_on_degree_metric() {
         let ds = crate::datasets::load("tabformer", 2).unwrap();
-        let ours = Pipeline::fit(&ds, &cfg_fast()).unwrap().generate(1, 5).unwrap();
-        let random_cfg = PipelineConfig {
-            struct_kind: StructKind::Random,
-            feat_kind: FeatKind::Random,
-            align_kind: AlignKind::Random,
-            ..cfg_fast()
-        };
-        let rand = Pipeline::fit(&ds, &random_cfg).unwrap().generate(1, 5).unwrap();
+        let ours = Pipeline::builder().fit(&ds).unwrap().generate(1, 5).unwrap();
+        let rand = Pipeline::builder()
+            .structure("erdos-renyi")
+            .edge_features("random")
+            .aligner("random")
+            .fit(&ds)
+            .unwrap()
+            .generate(1, 5)
+            .unwrap();
         let ours_score = metrics::degree::degree_dist_score(&ds.edges, &ours.edges);
         let rand_score = metrics::degree::degree_dist_score(&ds.edges, &rand.edges);
         assert!(
@@ -219,7 +470,7 @@ mod tests {
     #[test]
     fn scale_two_quadruples_edges() {
         let ds = crate::datasets::load("travel-insurance", 3).unwrap();
-        let p = Pipeline::fit(&ds, &cfg_fast()).unwrap();
+        let p = Pipeline::builder().fit(&ds).unwrap();
         let synth = p.generate(2, 4).unwrap();
         assert_eq!(synth.edges.len(), 4 * ds.edges.len());
         assert_eq!(synth.edges.spec.n_src, 2 * ds.edges.spec.n_src);
@@ -236,21 +487,81 @@ mod tests {
             edges.push(ds.edges.src[i], ds.edges.dst[i]);
         }
         ds.edges = edges;
-        for sk in [StructKind::Kronecker, StructKind::Random, StructKind::Sbm, StructKind::TrillionG] {
-            for fk in [FeatKind::Kde, FeatKind::Random, FeatKind::Gaussian] {
-                for ak in [AlignKind::Learned, AlignKind::Random] {
-                    let cfg = PipelineConfig {
-                        struct_kind: sk,
-                        feat_kind: fk,
-                        align_kind: ak,
-                        gbt: crate::aligner::gbt::GbtConfig { n_trees: 5, ..GbtConfig::fast() },
-                        ..cfg_fast()
-                    };
-                    let p = Pipeline::fit(&ds, &cfg).unwrap();
+        let fast_gbt = GbtConfig { n_trees: 5, ..GbtConfig::fast() };
+        for sk in ["kronecker", "erdos-renyi", "sbm", "trilliong"] {
+            for fk in ["kde", "random", "gaussian"] {
+                for ak in ["learned", "random"] {
+                    let p = Pipeline::builder()
+                        .structure(sk)
+                        .edge_features(fk)
+                        .aligner(ak)
+                        .gbt(fast_gbt.clone())
+                        .fit(&ds)
+                        .unwrap();
                     let s = p.generate(1, 1).unwrap();
-                    assert_eq!(s.edges.len(), ds.edges.len(), "{sk:?}/{fk:?}/{ak:?}");
+                    assert_eq!(s.edges.len(), ds.edges.len(), "{sk}/{fk}/{ak}");
                 }
             }
         }
+    }
+
+    #[test]
+    fn legacy_config_shim_still_works() {
+        let ds = crate::datasets::load("travel-insurance", 5).unwrap();
+        let cfg = PipelineConfig { use_pjrt_gan: false, ..Default::default() };
+        #[allow(deprecated)]
+        let p = Pipeline::fit(&ds, &cfg).unwrap();
+        let (s, f, a) = p.component_names();
+        assert_eq!(s, "kronecker");
+        assert_eq!(f, "kde");
+        assert_eq!(a, "xgboost");
+        let synth = p.generate(1, 2).unwrap();
+        assert_eq!(synth.edges.len(), ds.edges.len());
+    }
+
+    #[test]
+    fn node_features_generated_when_source_has_them() {
+        let ds = crate::datasets::load("cora", 1).unwrap();
+        let nf_cols = ds.node_features.as_ref().unwrap().n_cols();
+        let p = Pipeline::builder()
+            .node_features("kde")
+            .gbt(GbtConfig { n_trees: 4, ..GbtConfig::fast() })
+            .fit(&ds)
+            .unwrap();
+        assert!(p.has_node_features());
+        let synth = p.generate(1, 3).unwrap();
+        let nf = synth.node_features.expect("node features missing");
+        assert_eq!(nf.n_rows(), synth.edges.spec.n_src as usize);
+        assert_eq!(nf.n_cols(), nf_cols);
+    }
+
+    #[test]
+    fn unknown_backend_lists_registered_names() {
+        let ds = crate::datasets::load("travel-insurance", 6).unwrap();
+        let err = Pipeline::builder().structure("warp").fit(&ds).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("warp") && msg.contains("kronecker"), "{msg}");
+    }
+
+    #[test]
+    fn memory_sink_run_matches_generate() {
+        let ds = crate::datasets::load("travel-insurance", 7).unwrap();
+        // erdos-renyi has no chunked override, so both paths sample the
+        // exact same sequence and the outputs must match edge-for-edge
+        let p = Pipeline::builder()
+            .structure("erdos-renyi")
+            .aligner("random")
+            .edge_features("random")
+            .fit(&ds)
+            .unwrap();
+        let direct = p.generate(1, 11).unwrap();
+        let mut sink = MemorySink::new();
+        let via_sink = p
+            .run(SizeSpec::Scale(1), ChunkConfig::default(), &mut sink, 11)
+            .unwrap()
+            .into_dataset()
+            .unwrap();
+        assert_eq!(direct.edges.src, via_sink.edges.src);
+        assert_eq!(direct.edges.dst, via_sink.edges.dst);
     }
 }

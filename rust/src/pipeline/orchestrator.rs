@@ -1,44 +1,24 @@
 //! Streaming, out-of-core generation (paper §4.5 / Table 3 path).
 //!
-//! Wraps [`crate::structgen::chunked`] with a disk-shard sink: worker
-//! threads sample prefix-partitioned chunks; the writer (caller thread)
-//! serializes each chunk to its own shard file. The bounded channel
-//! between them is the backpressure mechanism — peak memory is
-//! `queue_capacity × chunk` edges regardless of total graph size.
+//! Since the sink redesign this module is a thin compatibility wrapper:
+//! the actual streaming lives in the unified [`Sink`] path —
+//! [`StructureGenerator::generate_into`] chunks the structure with
+//! bounded memory and [`ShardSink`] persists each chunk as its own shard
+//! file, aborting generation early on the first write error. The bounded
+//! channel between workers and writer remains the backpressure mechanism.
 
-use crate::graph::io;
-use crate::structgen::chunked::{generate_chunked, ChunkConfig};
+use crate::pipeline::sink::{ShardSink, Sink, SinkFinish};
 use crate::structgen::kronecker::KroneckerGen;
-use crate::Result;
+use crate::structgen::chunked::ChunkConfig;
+use crate::structgen::StructureGenerator;
+use crate::{Error, Result};
 use std::path::PathBuf;
 
-/// Streaming run report (rows of paper Table 3).
-#[derive(Clone, Debug)]
-pub struct StreamReport {
-    pub edges_written: u64,
-    pub shards: usize,
-    pub wall_secs: f64,
-    /// Peak resident edge-buffer bytes (chunks in flight × 16 B/edge).
-    pub peak_buffer_bytes: u64,
-    pub out_dir: PathBuf,
-}
-
-impl std::fmt::Display for StreamReport {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "{} edges in {} shards, {:.2}s ({:.1} Medges/s), peak buffer {:.1} MB",
-            self.edges_written,
-            self.shards,
-            self.wall_secs,
-            self.edges_written as f64 / self.wall_secs.max(1e-9) / 1e6,
-            self.peak_buffer_bytes as f64 / 1e6
-        )
-    }
-}
+pub use crate::pipeline::sink::StreamReport;
 
 /// Generate `edges` edges at (n_src × n_dst) and stream them to binary
-/// shards under `out_dir` (one file per chunk).
+/// shards under `out_dir` (one file per chunk). A shard-write failure
+/// aborts generation at the next chunk boundary and returns the error.
 pub fn stream_to_shards(
     gen: &KroneckerGen,
     n_src: u64,
@@ -48,34 +28,12 @@ pub fn stream_to_shards(
     cfg: ChunkConfig,
     out_dir: &std::path::Path,
 ) -> Result<StreamReport> {
-    std::fs::create_dir_all(out_dir)?;
-    let t0 = std::time::Instant::now();
-    let mut shards = 0usize;
-    let mut write_err: Option<crate::Error> = None;
-    let total = generate_chunked(gen, n_src, n_dst, edges, seed, cfg, |chunk| {
-        if write_err.is_some() {
-            return;
-        }
-        let path = out_dir.join(format!("shard-{:05}.sgg", chunk.index));
-        if let Err(e) = io::write_binary(&path, &chunk.edges) {
-            write_err = Some(e);
-            return;
-        }
-        shards += 1;
-    })?;
-    if let Some(e) = write_err {
-        return Err(e);
+    let mut sink = ShardSink::new(out_dir, cfg)?;
+    gen.generate_into(n_src, n_dst, edges, seed, cfg, &mut |chunk| sink.edges(chunk))?;
+    match sink.finish()? {
+        SinkFinish::Streamed(report) => Ok(report),
+        SinkFinish::Collected(_) => unreachable!("shard sink never collects"),
     }
-    let peak = (cfg.queue_capacity as u64 + cfg.workers as u64)
-        * (edges / 4u64.pow(cfg.prefix_levels).max(1)).max(1)
-        * 16;
-    Ok(StreamReport {
-        edges_written: total,
-        shards,
-        wall_secs: t0.elapsed().as_secs_f64(),
-        peak_buffer_bytes: peak,
-        out_dir: out_dir.to_path_buf(),
-    })
 }
 
 /// Read every shard back into one edge list (for validation / tests).
@@ -87,13 +45,13 @@ pub fn read_shards(dir: &std::path::Path) -> Result<crate::graph::EdgeList> {
     paths.sort();
     let mut out: Option<crate::graph::EdgeList> = None;
     for p in paths {
-        let e = io::read_binary(&p)?;
+        let e = crate::graph::io::read_binary(&p)?;
         match &mut out {
             None => out = Some(e),
             Some(acc) => acc.extend_from(&e),
         }
     }
-    out.ok_or_else(|| crate::Error::Data(format!("no shards in {}", dir.display())))
+    out.ok_or_else(|| Error::Data(format!("no shards in {}", dir.display())))
 }
 
 #[cfg(test)]
@@ -117,6 +75,10 @@ mod tests {
         let report = stream_to_shards(&gen, 1 << 10, 1 << 10, 10_000, 3, cfg, &dir).unwrap();
         assert_eq!(report.edges_written, 10_000);
         assert!(report.shards > 1);
+        // peak estimate comes from real chunk sizes: bounded by the whole
+        // graph, and at least the largest shard
+        assert!(report.peak_buffer_bytes <= 10_000 * 16);
+        assert!(report.peak_buffer_bytes > 0);
         let back = read_shards(&dir).unwrap();
         assert_eq!(back.len(), 10_000);
         assert!(back.validate().is_ok());
@@ -138,5 +100,20 @@ mod tests {
         assert_eq!(streamed.src, collected.src);
         assert_eq!(streamed.dst, collected.dst);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_error_aborts_stream() {
+        let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(1 << 9), 20_000);
+        let dir = tmp_dir("abort");
+        let cfg = ChunkConfig { prefix_levels: 3, workers: 2, queue_capacity: 1 };
+        let mut sink = ShardSink::new(&dir, cfg).unwrap();
+        // sabotage the output directory mid-stream: replace it with a
+        // file so the first shard write fails and generation aborts
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::write(&dir, b"not a directory").unwrap();
+        let err = gen.generate_into(1 << 9, 1 << 9, 20_000, 5, cfg, &mut |c| sink.edges(c));
+        assert!(err.is_err(), "writes into a file path must fail");
+        std::fs::remove_file(&dir).ok();
     }
 }

@@ -1,0 +1,130 @@
+//! String-keyed component registries: the open counterpart of the old
+//! closed `StructKind`/`FeatKind`/`AlignKind` enums. Components register a
+//! factory under a canonical name (plus aliases); scenario specs and the
+//! pipeline builder resolve them by name, and unknown names fail with the
+//! full list of registered backends.
+
+use crate::aligner::AlignerFactory;
+use crate::featgen::FeatureGeneratorFactory;
+use crate::structgen::StructureGeneratorFactory;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A name → factory table for one component kind.
+pub struct Registry<F> {
+    kind: &'static str,
+    entries: BTreeMap<String, F>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl<F> Registry<F> {
+    /// Empty registry; `kind` labels error messages ("structure", ...).
+    pub fn new(kind: &'static str) -> Registry<F> {
+        Registry { kind, entries: BTreeMap::new(), aliases: BTreeMap::new() }
+    }
+
+    /// Register (or replace) a factory under its canonical name.
+    pub fn register(&mut self, name: &str, factory: F) {
+        self.entries.insert(name.to_string(), factory);
+    }
+
+    /// Register an alias for a canonical name.
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.aliases.insert(alias.to_string(), canonical.to_string());
+    }
+
+    /// Canonical names, sorted (aliases not listed).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// True when `name` (or an alias) is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.resolve(name).is_ok()
+    }
+
+    /// Look up a factory by name or alias. Unknown names produce a
+    /// [`Error::Config`] listing every registered backend.
+    pub fn resolve(&self, name: &str) -> Result<&F> {
+        let canonical = self.aliases.get(name).map(String::as_str).unwrap_or(name);
+        self.entries.get(canonical).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown {} backend `{name}`; registered: {}",
+                self.kind,
+                self.names().join(", ")
+            ))
+        })
+    }
+}
+
+/// The three component registries a pipeline resolves against.
+pub struct Registries {
+    pub structure: Registry<StructureGeneratorFactory>,
+    pub features: Registry<FeatureGeneratorFactory>,
+    pub aligners: Registry<AlignerFactory>,
+}
+
+impl Registries {
+    /// Empty registries (for fully custom component sets).
+    pub fn empty() -> Registries {
+        Registries {
+            structure: Registry::new("structure"),
+            features: Registry::new("feature"),
+            aligners: Registry::new("aligner"),
+        }
+    }
+
+    /// Registries pre-loaded with every built-in backend.
+    pub fn builtin() -> Registries {
+        let mut r = Registries::empty();
+        crate::structgen::register_builtins(&mut r.structure);
+        crate::featgen::register_builtins(&mut r.features);
+        crate::aligner::register_builtins(&mut r.aligners);
+        r
+    }
+}
+
+impl Default for Registries {
+    fn default() -> Self {
+        Registries::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_structure_names_and_aliases() {
+        let r = Registries::builtin();
+        for name in ["kronecker", "kronecker-noisy", "erdos-renyi", "sbm", "trilliong"] {
+            assert!(r.structure.contains(name), "missing {name}");
+        }
+        for alias in ["ours", "random", "er", "graphworld"] {
+            assert!(r.structure.contains(alias), "missing alias {alias}");
+        }
+    }
+
+    #[test]
+    fn builtin_feature_and_aligner_names() {
+        let r = Registries::builtin();
+        for name in ["kde", "random", "gaussian", "gan"] {
+            assert!(r.features.contains(name), "missing {name}");
+        }
+        assert!(r.features.contains("mvg"));
+        for name in ["learned", "random"] {
+            assert!(r.aligners.contains(name), "missing {name}");
+        }
+        assert!(r.aligners.contains("xgboost"));
+    }
+
+    #[test]
+    fn unknown_name_lists_registered() {
+        let r = Registries::builtin();
+        let err = r.structure.resolve("warp-drive").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("warp-drive"), "{msg}");
+        assert!(msg.contains("kronecker"), "{msg}");
+        assert!(msg.contains("sbm"), "{msg}");
+    }
+}

@@ -1,0 +1,263 @@
+//! Output sinks: where generated structure goes. One [`Sink`] trait
+//! serves both the in-memory path (collect chunks, then assemble a full
+//! [`Dataset`] with features) and the out-of-core path (write each chunk
+//! to its own disk shard, paper §4.5 / Table 3) — `generate` and the
+//! streaming orchestrator share one code path through it.
+
+use crate::datasets::Dataset;
+use crate::graph::{io, EdgeList};
+use crate::structgen::chunked::{Chunk, ChunkConfig};
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// What a sink hands back after the last chunk.
+pub enum SinkFinish {
+    /// The sink retained the structure in memory; the pipeline should run
+    /// feature generation + alignment over it.
+    Collected(EdgeList),
+    /// Everything is already persisted; only a report remains.
+    Streamed(StreamReport),
+}
+
+/// Final output of a pipeline run.
+#[derive(Debug)]
+pub enum SinkOutput {
+    /// Fully assembled in-memory dataset (memory sink).
+    Dataset(Dataset),
+    /// Stream report (shard sink).
+    Streamed(StreamReport),
+}
+
+impl SinkOutput {
+    /// Unwrap the in-memory dataset; errors for streamed runs.
+    pub fn into_dataset(self) -> Result<Dataset> {
+        match self {
+            SinkOutput::Dataset(ds) => Ok(ds),
+            SinkOutput::Streamed(r) => Err(Error::Config(format!(
+                "scenario streamed to shards under {} — no in-memory dataset",
+                r.out_dir.display()
+            ))),
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        match self {
+            SinkOutput::Dataset(ds) => format!(
+                "{}: {} nodes, {} edges, {} edge feature cols, {} node feature cols",
+                ds.name,
+                ds.edges.n_nodes(),
+                ds.edges.len(),
+                ds.edge_features.n_cols(),
+                ds.node_features.as_ref().map(|f| f.n_cols()).unwrap_or(0)
+            ),
+            SinkOutput::Streamed(r) => r.to_string(),
+        }
+    }
+}
+
+/// A consumer of generated structure chunks.
+///
+/// [`Sink::edges`] errors abort generation early (workers stop at their
+/// next chunk boundary) and propagate out of the pipeline run.
+pub trait Sink {
+    /// Sink name (for logs / registry-style selection).
+    fn name(&self) -> &'static str;
+
+    /// Receive one structure chunk.
+    fn edges(&mut self, chunk: Chunk) -> Result<()>;
+
+    /// Called once after the last chunk.
+    fn finish(&mut self) -> Result<SinkFinish>;
+}
+
+/// Collects every chunk into one in-memory edge list. Chunks are
+/// reassembled in chunk-index order at finish time, so the output is
+/// deterministic in the seed even though parallel workers deliver chunks
+/// in scheduling-dependent order.
+#[derive(Default)]
+pub struct MemorySink {
+    chunks: Vec<Chunk>,
+}
+
+impl MemorySink {
+    /// Empty sink.
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+}
+
+impl Sink for MemorySink {
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+
+    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+        self.chunks.push(chunk);
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkFinish> {
+        self.chunks.sort_by_key(|c| c.index);
+        let total: usize = self.chunks.iter().map(|c| c.edges.len()).sum();
+        let mut out: Option<EdgeList> = None;
+        for chunk in self.chunks.drain(..) {
+            match &mut out {
+                None => {
+                    let mut first = EdgeList::with_capacity(chunk.edges.spec, total);
+                    first.extend_from(&chunk.edges);
+                    out = Some(first);
+                }
+                Some(acc) => acc.extend_from(&chunk.edges),
+            }
+        }
+        Ok(SinkFinish::Collected(out.unwrap_or_default()))
+    }
+}
+
+/// Streaming run report (rows of paper Table 3).
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub edges_written: u64,
+    pub shards: usize,
+    pub wall_secs: f64,
+    /// Peak resident edge-buffer bytes, derived from the actual sizes of
+    /// the largest chunks that can be in flight at once (queue +
+    /// workers + the writer's chunk), at 16 B/edge.
+    pub peak_buffer_bytes: u64,
+    pub out_dir: PathBuf,
+}
+
+impl std::fmt::Display for StreamReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} edges in {} shards, {:.2}s ({:.1} Medges/s), peak buffer {:.1} MB",
+            self.edges_written,
+            self.shards,
+            self.wall_secs,
+            self.edges_written as f64 / self.wall_secs.max(1e-9) / 1e6,
+            self.peak_buffer_bytes as f64 / 1e6
+        )
+    }
+}
+
+/// Writes each chunk to its own binary shard file under a directory.
+pub struct ShardSink {
+    out_dir: PathBuf,
+    /// Upper bound on simultaneously resident chunks: full queue + one
+    /// finished chunk per worker + the one the writer holds.
+    max_inflight: usize,
+    /// Largest `max_inflight` chunk edge-counts seen, descending.
+    top_sizes: Vec<usize>,
+    shards: usize,
+    written: u64,
+    t0: Instant,
+}
+
+impl ShardSink {
+    /// Create the output directory and an empty sink.
+    pub fn new(out_dir: &Path, chunks: ChunkConfig) -> Result<ShardSink> {
+        std::fs::create_dir_all(out_dir)?;
+        Ok(ShardSink {
+            out_dir: out_dir.to_path_buf(),
+            max_inflight: chunks.queue_capacity.max(1) + chunks.workers.max(1) + 1,
+            top_sizes: Vec::new(),
+            shards: 0,
+            written: 0,
+            t0: Instant::now(),
+        })
+    }
+
+    /// The report built so far (same data [`Sink::finish`] returns).
+    pub fn report(&self) -> StreamReport {
+        StreamReport {
+            edges_written: self.written,
+            shards: self.shards,
+            wall_secs: self.t0.elapsed().as_secs_f64(),
+            peak_buffer_bytes: self.top_sizes.iter().sum::<usize>() as u64 * 16,
+            out_dir: self.out_dir.clone(),
+        }
+    }
+}
+
+impl Sink for ShardSink {
+    fn name(&self) -> &'static str {
+        "shards"
+    }
+
+    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+        let path = self.out_dir.join(format!("shard-{:05}.sgg", chunk.index));
+        io::write_binary(&path, &chunk.edges)?;
+        self.written += chunk.edges.len() as u64;
+        self.shards += 1;
+        // track the largest `max_inflight` chunk sizes (descending)
+        let n = chunk.edges.len();
+        let pos = self.top_sizes.binary_search_by(|x| n.cmp(x)).unwrap_or_else(|p| p);
+        if pos < self.max_inflight {
+            self.top_sizes.insert(pos, n);
+            self.top_sizes.truncate(self.max_inflight);
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkFinish> {
+        Ok(SinkFinish::Streamed(self.report()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PartiteSpec;
+
+    fn chunk(index: usize, n: usize) -> Chunk {
+        let mut edges = EdgeList::with_capacity(PartiteSpec::square(1 << 10), n);
+        for i in 0..n {
+            edges.push(i as u64 % 1024, (i as u64 * 7) % 1024);
+        }
+        Chunk { index, edges }
+    }
+
+    #[test]
+    fn memory_sink_reassembles_in_chunk_index_order() {
+        let mut sink = MemorySink::new();
+        // chunks arrive out of order (parallel workers race); output must
+        // be deterministic in the index, not the arrival order
+        sink.edges(chunk(1, 5)).unwrap();
+        sink.edges(chunk(0, 10)).unwrap();
+        match sink.finish().unwrap() {
+            SinkFinish::Collected(e) => {
+                assert_eq!(e.len(), 15);
+                // chunk 0's 10 edges come first: its row pattern starts at i=0
+                assert_eq!(e.src[0], 0);
+                assert_eq!(e.src[9], 9);
+            }
+            SinkFinish::Streamed(_) => panic!("memory sink streamed"),
+        }
+    }
+
+    #[test]
+    fn shard_sink_writes_and_reports_actual_peak() {
+        let dir = std::env::temp_dir().join(format!("sgg_sink_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = ChunkConfig { prefix_levels: 2, workers: 2, queue_capacity: 1 };
+        let mut sink = ShardSink::new(&dir, cfg).unwrap();
+        // sizes 100..107; max_inflight = 1 + 2 + 1 = 4 → peak sums the 4
+        // largest actual chunks, not a divisor-based estimate
+        for (i, n) in (100..108).enumerate() {
+            sink.edges(chunk(i, n)).unwrap();
+        }
+        let report = match sink.finish().unwrap() {
+            SinkFinish::Streamed(r) => r,
+            SinkFinish::Collected(_) => panic!("shard sink collected"),
+        };
+        assert_eq!(report.shards, 8);
+        assert_eq!(report.edges_written, (100..108).sum::<usize>() as u64);
+        assert_eq!(report.peak_buffer_bytes, (104 + 105 + 106 + 107) * 16);
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

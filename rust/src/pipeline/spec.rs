@@ -1,0 +1,699 @@
+//! Declarative scenario description: [`ScenarioSpec`] names every choice a
+//! generation job makes — dataset, per-component backends + parameters,
+//! target size, seed, and output sink — and parses from a minimal
+//! TOML-subset config file so `sgg run scenario.toml` works end to end.
+//!
+//! The supported config surface (a strict subset of TOML — no arrays,
+//! tables-in-tables, escapes, or multi-line values):
+//!
+//! ```toml
+//! # top level: job identity + size
+//! name = "fraud-demo"
+//! dataset = "ieee-fraud"     # registry name (see `sgg datasets`)
+//! seed = 42
+//! scale = 2                  # nodes ×2, edges ×4 — or use [size]
+//!
+//! [structure]                # component sections: `backend` + params
+//! backend = "kronecker"
+//! noise = 0.1
+//!
+//! [edge_features]
+//! backend = "kde"
+//!
+//! [node_features]            # omit = auto (mirrors edge_features when
+//! backend = "gaussian"       # the dataset has node features);
+//!                            # backend = "none" disables
+//! [aligner]
+//! backend = "learned"
+//! trees = 30
+//!
+//! [sink]
+//! kind = "shards"            # "memory" (default) or "shards"
+//! dir = "/tmp/sgg-shards"
+//! ```
+
+use crate::structgen::chunked::ChunkConfig;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A scalar parameter value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    /// String payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Num(_) => "number",
+            Value::Bool(_) => "bool",
+        }
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Value {
+        Value::Num(x)
+    }
+}
+
+impl From<u64> for Value {
+    fn from(x: u64) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(x: usize) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+/// Named scalar parameters of one component (or one spec section).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Params(BTreeMap<String, Value>);
+
+impl Params {
+    /// Empty parameter set.
+    pub fn new() -> Params {
+        Params::default()
+    }
+
+    /// Insert (replacing) a parameter.
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.0.insert(key.to_string(), value);
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.0.get(key)
+    }
+
+    /// True when no parameters are set.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Iterate `(key, value)` pairs in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Value)> {
+        self.0.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    fn type_err(&self, key: &str, want: &str, got: &Value) -> Error {
+        Error::Config(format!("param `{key}` must be a {want}, got {}", got.type_name()))
+    }
+
+    /// Float param with default; errors on a non-numeric value.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| self.type_err(key, "number", v)),
+        }
+    }
+
+    /// Unsigned-integer param with default; errors on non-integral values.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let x = v.as_f64().ok_or_else(|| self.type_err(key, "integer", v))?;
+                f64_to_u64(key, x)
+            }
+        }
+    }
+
+    /// `usize` param with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    /// Bool param with default; errors on a non-bool value.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| self.type_err(key, "bool", v)),
+        }
+    }
+
+    /// String param (None when unset); errors on a non-string value.
+    pub fn str_opt(&self, key: &str) -> Result<Option<&str>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_str().map(Some).ok_or_else(|| self.type_err(key, "string", v)),
+        }
+    }
+}
+
+/// One pipeline component: a registry name plus its parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComponentSpec {
+    /// Registry name (or alias) of the backend.
+    pub name: String,
+    /// Backend-specific scalar parameters.
+    pub params: Params,
+}
+
+impl ComponentSpec {
+    /// Component with no parameters.
+    pub fn new(name: &str) -> ComponentSpec {
+        ComponentSpec { name: name.to_string(), params: Params::new() }
+    }
+
+    /// Builder-style parameter attachment.
+    pub fn with(mut self, key: &str, value: impl Into<Value>) -> ComponentSpec {
+        self.params.set(key, value.into());
+        self
+    }
+}
+
+impl From<&str> for ComponentSpec {
+    fn from(name: &str) -> ComponentSpec {
+        ComponentSpec::new(name)
+    }
+}
+
+/// Node-feature handling for a scenario.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum NodeFeatureSpec {
+    /// Generate node features iff the source dataset has them, reusing
+    /// the edge-feature backend.
+    #[default]
+    Auto,
+    /// Never generate node features.
+    Off,
+    /// Generate node features with this component (errors at fit time if
+    /// the dataset has none to learn from).
+    Component(ComponentSpec),
+}
+
+/// Target output size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeSpec {
+    /// Integer scale: nodes ×s, edges ×s² (density preserved, paper
+    /// eq. 22).
+    Scale(u64),
+    /// Explicit node/edge targets.
+    Sized { n_src: u64, n_dst: u64, edges: u64 },
+}
+
+impl Default for SizeSpec {
+    fn default() -> Self {
+        SizeSpec::Scale(1)
+    }
+}
+
+/// Where generated output goes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SinkSpec {
+    /// Assemble an in-memory [`crate::datasets::Dataset`].
+    Memory,
+    /// Stream structure chunks to binary shards under `dir`.
+    Shards { dir: PathBuf, chunks: ChunkConfig },
+}
+
+impl Default for SinkSpec {
+    fn default() -> Self {
+        SinkSpec::Memory
+    }
+}
+
+/// A full declarative generation job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Job name (for logs/reports).
+    pub name: String,
+    /// Dataset registry name (see [`crate::datasets::REGISTRY`]).
+    pub dataset: String,
+    /// Seed used when loading/synthesizing the source dataset.
+    pub dataset_seed: u64,
+    /// Structure backend.
+    pub structure: ComponentSpec,
+    /// Edge-feature backend.
+    pub edge_features: ComponentSpec,
+    /// Node-feature handling.
+    pub node_features: NodeFeatureSpec,
+    /// Aligner backend.
+    pub aligner: ComponentSpec,
+    /// Output size.
+    pub size: SizeSpec,
+    /// Generation seed.
+    pub seed: u64,
+    /// Output sink.
+    pub sink: SinkSpec,
+}
+
+impl ScenarioSpec {
+    /// A same-size, in-memory scenario with default components.
+    pub fn new(dataset: &str) -> ScenarioSpec {
+        ScenarioSpec {
+            name: format!("{dataset}-scenario"),
+            dataset: dataset.to_string(),
+            dataset_seed: 1,
+            structure: ComponentSpec::new("kronecker"),
+            edge_features: ComponentSpec::new("kde"),
+            node_features: NodeFeatureSpec::Auto,
+            aligner: ComponentSpec::new("learned"),
+            size: SizeSpec::default(),
+            seed: 0x5a6e,
+            sink: SinkSpec::Memory,
+        }
+    }
+
+    /// Parse a spec from config text (the TOML subset in the module docs).
+    pub fn parse(text: &str) -> Result<ScenarioSpec> {
+        let raw = RawConfig::parse(text)?;
+        raw.into_spec()
+    }
+
+    /// Parse a spec from a config file.
+    pub fn from_file(path: &Path) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let mut spec = ScenarioSpec::parse(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        if spec.name.is_empty() {
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                spec.name = stem.to_string();
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Line-parsed config: top-level pairs + named sections, before
+/// interpretation.
+struct RawConfig {
+    top: Vec<(String, Value)>,
+    /// `(section name, pairs)` in file order.
+    sections: Vec<(String, Vec<(String, Value)>)>,
+}
+
+impl RawConfig {
+    fn parse(text: &str) -> Result<RawConfig> {
+        let mut top = Vec::new();
+        let mut sections: Vec<(String, Vec<(String, Value)>)> = Vec::new();
+        for (i, raw_line) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .ok_or_else(|| {
+                        Error::Config(format!("line {lineno}: malformed section header `{line}`"))
+                    })?;
+                if sections.iter().any(|(n, _)| n == name) {
+                    return Err(Error::Config(format!(
+                        "line {lineno}: duplicate section `[{name}]`"
+                    )));
+                }
+                sections.push((name.to_string(), Vec::new()));
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim();
+                if key.is_empty()
+                    || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+                {
+                    return Err(Error::Config(format!("line {lineno}: bad key `{key}`")));
+                }
+                let value = parse_value(v.trim(), lineno)?;
+                match sections.last_mut() {
+                    Some((_, pairs)) => pairs.push((key.to_string(), value)),
+                    None => top.push((key.to_string(), value)),
+                }
+            } else {
+                return Err(Error::Config(format!(
+                    "line {lineno}: expected `key = value` or `[section]`, got `{line}`"
+                )));
+            }
+        }
+        Ok(RawConfig { top, sections })
+    }
+
+    fn into_spec(self) -> Result<ScenarioSpec> {
+        let mut spec = ScenarioSpec::new("");
+        spec.name = String::new();
+        let mut scale: Option<u64> = None;
+        let mut dataset = None;
+        for (key, value) in &self.top {
+            match key.as_str() {
+                "name" => {
+                    spec.name = expect_str(key, value)?.to_string();
+                }
+                "dataset" => {
+                    dataset = Some(expect_str(key, value)?.to_string());
+                }
+                "dataset_seed" => spec.dataset_seed = expect_u64(key, value)?,
+                "seed" => spec.seed = expect_u64(key, value)?,
+                "scale" => scale = Some(expect_u64(key, value)?),
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown top-level key `{other}`; known: \
+                         name, dataset, dataset_seed, seed, scale"
+                    )));
+                }
+            }
+        }
+        spec.dataset = dataset.ok_or_else(|| Error::Config("spec is missing `dataset`".into()))?;
+
+        let mut sized: Option<SizeSpec> = None;
+        for (name, pairs) in self.sections {
+            match name.as_str() {
+                "structure" => spec.structure = component_section(&pairs, "kronecker")?,
+                "edge_features" => spec.edge_features = component_section(&pairs, "kde")?,
+                "node_features" => {
+                    let c = component_section(&pairs, "none")?;
+                    spec.node_features = match c.name.as_str() {
+                        "none" | "off" => NodeFeatureSpec::Off,
+                        "auto" => NodeFeatureSpec::Auto,
+                        _ => NodeFeatureSpec::Component(c),
+                    };
+                }
+                "aligner" => spec.aligner = component_section(&pairs, "learned")?,
+                "size" => {
+                    let p = params_of(&pairs);
+                    let n_src = p.u64_or("n_src", 0)?;
+                    let n_dst = p.u64_or("n_dst", n_src)?;
+                    let edges = p.u64_or("edges", 0)?;
+                    if n_src == 0 || edges == 0 {
+                        return Err(Error::Config(
+                            "[size] needs positive `n_src` and `edges` (and optional `n_dst`)"
+                                .into(),
+                        ));
+                    }
+                    sized = Some(SizeSpec::Sized { n_src, n_dst, edges });
+                }
+                "sink" => {
+                    let p = params_of(&pairs);
+                    let kind = p.str_opt("kind")?.unwrap_or("memory");
+                    spec.sink = match kind {
+                        "memory" => SinkSpec::Memory,
+                        "shards" => {
+                            let defaults = ChunkConfig::default();
+                            SinkSpec::Shards {
+                                dir: PathBuf::from(p.str_opt("dir")?.unwrap_or("sgg-shards")),
+                                chunks: ChunkConfig {
+                                    prefix_levels: p
+                                        .u64_or("prefix_levels", defaults.prefix_levels as u64)?
+                                        as u32,
+                                    workers: p.usize_or("workers", defaults.workers)?,
+                                    queue_capacity: p
+                                        .usize_or("queue_capacity", defaults.queue_capacity)?,
+                                },
+                            }
+                        }
+                        other => {
+                            return Err(Error::Config(format!(
+                                "unknown sink kind `{other}`; known: memory, shards"
+                            )));
+                        }
+                    };
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown section `[{other}]`; known: structure, edge_features, \
+                         node_features, aligner, size, sink"
+                    )));
+                }
+            }
+        }
+        spec.size = match (scale, sized) {
+            (Some(_), Some(_)) => {
+                return Err(Error::Config("give either `scale` or `[size]`, not both".into()));
+            }
+            (Some(0), None) => {
+                return Err(Error::Config("`scale` must be at least 1".into()));
+            }
+            (Some(s), None) => SizeSpec::Scale(s),
+            (None, Some(s)) => s,
+            (None, None) => SizeSpec::Scale(1),
+        };
+        if spec.name.is_empty() {
+            spec.name = format!("{}-scenario", spec.dataset);
+        }
+        Ok(spec)
+    }
+}
+
+fn params_of(pairs: &[(String, Value)]) -> Params {
+    let mut p = Params::new();
+    for (k, v) in pairs {
+        p.set(k, v.clone());
+    }
+    p
+}
+
+fn component_section(pairs: &[(String, Value)], default_backend: &str) -> Result<ComponentSpec> {
+    let mut c = ComponentSpec::new(default_backend);
+    for (k, v) in pairs {
+        if k == "backend" {
+            c.name = expect_str(k, v)?.to_string();
+        } else {
+            c.params.set(k, v.clone());
+        }
+    }
+    Ok(c)
+}
+
+fn expect_str<'v>(key: &str, value: &'v Value) -> Result<&'v str> {
+    value
+        .as_str()
+        .ok_or_else(|| Error::Config(format!("`{key}` must be a string, got {value:?}")))
+}
+
+fn expect_u64(key: &str, value: &Value) -> Result<u64> {
+    let x = value
+        .as_f64()
+        .ok_or_else(|| Error::Config(format!("`{key}` must be an integer, got {value:?}")))?;
+    f64_to_u64(key, x)
+}
+
+/// Exact f64 → u64 conversion. Values are stored as f64, which holds
+/// integers exactly only below 2^53 — anything at or above that bound is
+/// rejected rather than silently rounded (2^53 itself is refused because
+/// it is indistinguishable from a rounded 2^53 + 1).
+fn f64_to_u64(key: &str, x: f64) -> Result<u64> {
+    const EXACT_BOUND: f64 = 9_007_199_254_740_992.0; // 2^53
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(Error::Config(format!(
+            "`{key}` must be a non-negative integer, got {x}"
+        )));
+    }
+    if x >= EXACT_BOUND {
+        return Err(Error::Config(format!(
+            "`{key}` = {x} is at or above 2^53 and cannot be represented exactly \
+             in a spec value"
+        )));
+    }
+    Ok(x as u64)
+}
+
+/// Cut a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse one scalar: `"string"`, `true`/`false`, or a number
+/// (underscore separators allowed).
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        return body
+            .strip_suffix('"')
+            .filter(|inner| !inner.contains('"'))
+            .map(|inner| Value::Str(inner.to_string()))
+            .ok_or_else(|| Error::Config(format!("line {lineno}: malformed string `{s}`")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| Error::Config(format!("line {lineno}: unparseable value `{s}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_spec_parses() {
+        let text = r#"
+            # demo scenario
+            name = "demo"
+            dataset = "ieee-fraud"   # trailing comment
+            seed = 42
+            scale = 2
+
+            [structure]
+            backend = "kronecker"
+            noise = 0.25
+
+            [edge_features]
+            backend = "kde"
+
+            [node_features]
+            backend = "gaussian"
+
+            [aligner]
+            backend = "learned"
+            trees = 10
+
+            [sink]
+            kind = "shards"
+            dir = "/tmp/demo-shards"
+            prefix_levels = 3
+        "#;
+        let spec = ScenarioSpec::parse(text).unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.dataset, "ieee-fraud");
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.size, SizeSpec::Scale(2));
+        assert_eq!(spec.structure.name, "kronecker");
+        assert_eq!(spec.structure.params.f64_or("noise", 0.0).unwrap(), 0.25);
+        assert_eq!(spec.edge_features.name, "kde");
+        assert!(matches!(&spec.node_features, NodeFeatureSpec::Component(c) if c.name == "gaussian"));
+        assert_eq!(spec.aligner.params.u64_or("trees", 0).unwrap(), 10);
+        match &spec.sink {
+            SinkSpec::Shards { dir, chunks } => {
+                assert_eq!(dir, &PathBuf::from("/tmp/demo-shards"));
+                assert_eq!(chunks.prefix_levels, 3);
+            }
+            other => panic!("wrong sink {other:?}"),
+        }
+    }
+
+    #[test]
+    fn minimal_spec_uses_defaults() {
+        let spec = ScenarioSpec::parse("dataset = \"cora\"").unwrap();
+        assert_eq!(spec.dataset, "cora");
+        assert_eq!(spec.name, "cora-scenario");
+        assert_eq!(spec.size, SizeSpec::Scale(1));
+        assert_eq!(spec.structure.name, "kronecker");
+        assert_eq!(spec.edge_features.name, "kde");
+        assert_eq!(spec.aligner.name, "learned");
+        assert_eq!(spec.node_features, NodeFeatureSpec::Auto);
+        assert_eq!(spec.sink, SinkSpec::Memory);
+    }
+
+    #[test]
+    fn missing_dataset_is_config_error() {
+        let err = ScenarioSpec::parse("seed = 1").unwrap_err();
+        assert!(err.to_string().contains("dataset"), "{err}");
+    }
+
+    #[test]
+    fn unknown_section_and_key_error() {
+        assert!(ScenarioSpec::parse("dataset = \"cora\"\n[bogus]\n").is_err());
+        assert!(ScenarioSpec::parse("dataset = \"cora\"\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn scale_and_size_conflict() {
+        let text = "dataset = \"cora\"\nscale = 2\n[size]\nn_src = 10\nedges = 40\n";
+        assert!(ScenarioSpec::parse(text).is_err());
+    }
+
+    #[test]
+    fn explicit_size_parses() {
+        let text = "dataset = \"cora\"\n[size]\nn_src = 1_000\nn_dst = 500\nedges = 9000\n";
+        let spec = ScenarioSpec::parse(text).unwrap();
+        assert_eq!(spec.size, SizeSpec::Sized { n_src: 1000, n_dst: 500, edges: 9000 });
+    }
+
+    #[test]
+    fn node_features_off() {
+        let text = "dataset = \"cora\"\n[node_features]\nbackend = \"none\"\n";
+        let spec = ScenarioSpec::parse(text).unwrap();
+        assert_eq!(spec.node_features, NodeFeatureSpec::Off);
+    }
+
+    #[test]
+    fn value_types() {
+        let text = "dataset = \"d\"\n[structure]\nnoise = 0.5\n[edge_features]\nbackend = \"gan\"\nuse_pjrt = false\n";
+        let spec = ScenarioSpec::parse(text).unwrap();
+        assert_eq!(spec.structure.params.f64_or("noise", 0.0).unwrap(), 0.5);
+        assert!(!spec.edge_features.params.bool_or("use_pjrt", true).unwrap());
+        assert!(spec.edge_features.params.u64_or("use_pjrt", 1).is_err());
+    }
+
+    #[test]
+    fn zero_scale_is_rejected() {
+        let err = ScenarioSpec::parse("dataset = \"cora\"\nscale = 0\n").unwrap_err();
+        assert!(err.to_string().contains("scale"), "{err}");
+    }
+
+    #[test]
+    fn integers_beyond_2_pow_53_are_rejected_not_rounded() {
+        // 2^53 + 1 rounds to 2^53 in f64; both must be refused
+        for v in ["9007199254740993", "9007199254740992"] {
+            let err = ScenarioSpec::parse(&format!("dataset = \"cora\"\nseed = {v}\n"))
+                .unwrap_err();
+            assert!(err.to_string().contains("2^53"), "{v}: {err}");
+        }
+        // the largest exactly-representable integer is accepted
+        let spec =
+            ScenarioSpec::parse("dataset = \"cora\"\nseed = 9007199254740991\n").unwrap();
+        assert_eq!(spec.seed, (1u64 << 53) - 1);
+    }
+
+    #[test]
+    fn malformed_lines_report_line_numbers() {
+        let err = ScenarioSpec::parse("dataset = \"d\"\nnot a pair\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+}

@@ -11,6 +11,7 @@ use super::{ParamSpec, Runtime};
 use crate::error::{Error, Result};
 use crate::featgen::gan::GanBackend;
 use crate::util::rng::Pcg64;
+use crate::xla;
 use std::rc::Rc;
 
 /// Training hyper-parameters (paper §12: Adam, lr 1e-3, ~5 epochs

@@ -10,6 +10,7 @@ use super::{ParamSpec, Runtime};
 use crate::error::{Error, Result};
 use crate::graph::{Csr, EdgeList};
 use crate::util::rng::Pcg64;
+use crate::xla;
 use std::rc::Rc;
 
 /// Feature width / class count compiled into the GNN artifacts.

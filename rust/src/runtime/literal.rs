@@ -1,6 +1,7 @@
 //! Literal packing helpers: Rust buffers ↔ XLA literals.
 
 use crate::error::Result;
+use crate::xla;
 
 /// f32 tensor literal from a flat slice + shape.
 pub fn f32_tensor(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {

@@ -13,6 +13,7 @@ pub mod literal;
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
+use crate::xla;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::cell::RefCell;

@@ -31,7 +31,7 @@ pub struct Chunk {
 }
 
 /// Configuration for chunked generation.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkConfig {
     /// Number of square levels consumed by the prefix (chunks = 4^levels).
     pub prefix_levels: u32,
@@ -76,6 +76,10 @@ pub fn prefix_weights(levels: &[Level], prefix_levels: u32) -> Vec<f64> {
 /// Run chunked generation, streaming chunks into `sink`. Returns the total
 /// number of edges produced. The sink runs on the caller thread; workers
 /// block when `queue_capacity` chunks are waiting (backpressure).
+///
+/// A sink error aborts generation early: in-flight workers stop at their
+/// next chunk boundary, remaining chunks are never sampled, and the error
+/// is returned.
 pub fn generate_chunked<F>(
     gen: &KroneckerGen,
     n_src: u64,
@@ -86,7 +90,7 @@ pub fn generate_chunked<F>(
     mut sink: F,
 ) -> Result<u64>
 where
-    F: FnMut(Chunk),
+    F: FnMut(Chunk) -> Result<()>,
 {
     let (rb, db) = KroneckerGen::bits(n_src, n_dst);
     let shared = rb.min(db);
@@ -126,6 +130,8 @@ where
     let chan: Bounded<Chunk> = Bounded::new(cfg.queue_capacity.max(1));
     let next = std::sync::atomic::AtomicUsize::new(0);
     let total_out = std::sync::atomic::AtomicU64::new(0);
+    let abort = std::sync::atomic::AtomicBool::new(false);
+    let mut sink_err: Option<crate::Error> = None;
 
     // suffix space: chunk-local ids before the prefix is prepended
     let suf_rb = rb - prefix_levels;
@@ -138,10 +144,11 @@ where
             let suffix_levels = &suffix_levels;
             let next = &next;
             let total_out = &total_out;
+            let abort = &abort;
             s.spawn(move || {
                 loop {
                     let ci = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if ci >= n_chunks {
+                    if ci >= n_chunks || abort.load(std::sync::atomic::Ordering::Relaxed) {
                         break;
                     }
                     let count = budgets[ci];
@@ -198,7 +205,13 @@ where
             match consumer_chan.recv() {
                 Some(chunk) => {
                     consumed += 1;
-                    sink(chunk);
+                    if let Err(e) = sink(chunk) {
+                        // abort early: stop workers at their next chunk
+                        // boundary instead of sampling the rest into a void
+                        sink_err = Some(e);
+                        abort.store(true, std::sync::atomic::Ordering::Relaxed);
+                        break;
+                    }
                 }
                 None => break,
             }
@@ -206,6 +219,9 @@ where
         chan.close();
     });
 
+    if let Some(e) = sink_err {
+        return Err(e);
+    }
     Ok(total_out.load(std::sync::atomic::Ordering::Relaxed))
 }
 
@@ -226,6 +242,7 @@ pub fn generate_chunked_collect(
     let mut out = EdgeList::with_capacity(spec, total_edges as usize);
     generate_chunked(gen, n_src, n_dst, total_edges, seed, cfg, |chunk| {
         out.extend_from(&chunk.edges);
+        Ok(())
     })?;
     Ok(out)
 }
@@ -274,6 +291,7 @@ mod tests {
                 let entry = seen_prefix.entry(chunk.index).or_insert(key);
                 assert_eq!(*entry, key, "chunk {} mixes prefixes", chunk.index);
             }
+            Ok(())
         })
         .unwrap();
         // distinct chunks have distinct prefixes
@@ -295,6 +313,26 @@ mod tests {
         let md = *direct.out_degrees().iter().max().unwrap() as f64;
         let mc = *chunked.out_degrees().iter().max().unwrap() as f64;
         assert!(mc / md < 1.7 && md / mc < 1.7, "md={md} mc={mc}");
+    }
+
+    #[test]
+    fn sink_error_aborts_early() {
+        let g = gen();
+        // many small chunks so the abort has room to cut generation short
+        let cfg = ChunkConfig { prefix_levels: 3, workers: 2, queue_capacity: 1 };
+        let mut seen = 0usize;
+        let err = generate_chunked(&g, 1 << 10, 1 << 10, 50_000, 11, cfg, |_chunk| {
+            seen += 1;
+            if seen == 2 {
+                Err(crate::Error::Data("sink full".into()))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("sink full"), "{err}");
+        // consumer stopped right after the failing chunk
+        assert_eq!(seen, 2);
     }
 
     #[test]

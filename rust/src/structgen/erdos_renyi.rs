@@ -28,10 +28,8 @@ impl StructureGenerator for ErdosRenyi {
         "random"
     }
 
-    fn generate(&self, scale: u64, seed: u64) -> Result<EdgeList> {
-        let spec = self.spec.scaled(scale);
-        let edges = self.spec.density_preserving_edges(self.edges, scale);
-        self.generate_sized(spec.n_src, spec.n_dst, edges, seed)
+    fn base(&self) -> (PartiteSpec, u64) {
+        (self.spec, self.edges)
     }
 
     fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {

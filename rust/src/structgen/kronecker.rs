@@ -231,10 +231,22 @@ impl StructureGenerator for KroneckerGen {
         }
     }
 
-    fn generate(&self, scale: u64, seed: u64) -> Result<EdgeList> {
-        let spec = self.spec.scaled(scale);
-        let edges = self.spec.density_preserving_edges(self.edges, scale);
-        self.generate_sized(spec.n_src, spec.n_dst, edges, seed)
+    fn base(&self) -> (PartiteSpec, u64) {
+        (self.spec, self.edges)
+    }
+
+    /// Out-of-core override: prefix-partitioned chunked sampling
+    /// ([`super::chunked`], paper §10) with bounded peak memory.
+    fn generate_into(
+        &self,
+        n_src: u64,
+        n_dst: u64,
+        edges: u64,
+        seed: u64,
+        chunks: super::chunked::ChunkConfig,
+        sink: &mut dyn FnMut(super::chunked::Chunk) -> Result<()>,
+    ) -> Result<u64> {
+        super::chunked::generate_chunked(self, n_src, n_dst, edges, seed, chunks, sink)
     }
 
     fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {

@@ -20,6 +20,10 @@
 //! Baselines: [`erdos_renyi`] (the paper's "random"), [`sbm`]
 //! (degree-corrected SBM standing in for GraphWorld, with the fitting step
 //! the paper adds), and [`trilliong`] (recursive-vector model).
+//!
+//! Backends register in the pipeline's structure [`Registry`] via
+//! [`register_builtins`]; [`StructureGeneratorFactory`] is the plug-in
+//! point for new ones.
 
 pub mod chunked;
 pub mod erdos_renyi;
@@ -30,8 +34,11 @@ pub mod sbm;
 pub mod theta;
 pub mod trilliong;
 
-use crate::graph::EdgeList;
+use crate::graph::{EdgeList, PartiteSpec};
+use crate::pipeline::registry::Registry;
+use crate::pipeline::spec::Params;
 use crate::Result;
+use chunked::{Chunk, ChunkConfig};
 
 /// A fitted structure generator that can produce a graph at any scale.
 ///
@@ -41,16 +48,111 @@ pub trait StructureGenerator: Send + Sync {
     /// Human-readable name used in experiment tables.
     fn name(&self) -> &'static str;
 
-    /// Generate a graph at integer `scale` (1 = same size as the input).
-    fn generate(&self, scale: u64, seed: u64) -> Result<EdgeList>;
+    /// The fitted reference frame: scale-1 partite spec and edge count.
+    /// [`Self::generate`] and the streaming planner derive every scaled
+    /// size from this.
+    fn base(&self) -> (PartiteSpec, u64);
 
     /// Generate with explicit node/edge targets (used by the chunked
     /// pipeline and the scaling studies with non-integer factors).
     fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList>;
+
+    /// Resolve integer `scale` into explicit `(n_src, n_dst, edges)`
+    /// targets (nodes linear, edges quadratic, density preserved).
+    fn scaled_size(&self, scale: u64) -> (u64, u64, u64) {
+        let (spec, edges) = self.base();
+        let scaled = spec.scaled(scale);
+        (scaled.n_src, scaled.n_dst, spec.density_preserving_edges(edges, scale))
+    }
+
+    /// Generate a graph at integer `scale` (1 = same size as the input).
+    fn generate(&self, scale: u64, seed: u64) -> Result<EdgeList> {
+        let (n_src, n_dst, edges) = self.scaled_size(scale);
+        self.generate_sized(n_src, n_dst, edges, seed)
+    }
+
+    /// Stream generation into `sink` chunk by chunk, returning the total
+    /// edge count. The default produces one chunk (whole graph in memory);
+    /// out-of-core generators override it with bounded-memory chunking.
+    /// A sink error aborts generation and propagates.
+    fn generate_into(
+        &self,
+        n_src: u64,
+        n_dst: u64,
+        edges: u64,
+        seed: u64,
+        _chunks: ChunkConfig,
+        sink: &mut dyn FnMut(Chunk) -> Result<()>,
+    ) -> Result<u64> {
+        let out = self.generate_sized(n_src, n_dst, edges, seed)?;
+        let n = out.len() as u64;
+        sink(Chunk { index: 0, edges: out })?;
+        Ok(n)
+    }
+}
+
+/// Everything a structure factory sees at fit time.
+pub struct StructureFitContext<'a> {
+    /// The source graph to fit on.
+    pub edges: &'a EdgeList,
+    /// Backend parameters from the scenario spec / builder.
+    pub params: &'a Params,
+    /// Fitting seed.
+    pub seed: u64,
+}
+
+/// Factory signature for registry-registered structure backends.
+pub type StructureGeneratorFactory =
+    fn(&StructureFitContext<'_>) -> Result<Box<dyn StructureGenerator>>;
+
+fn make_kronecker(ctx: &StructureFitContext<'_>) -> Result<Box<dyn StructureGenerator>> {
+    let noise = ctx.params.f64_or("noise", 0.0)?;
+    let fitted = fit::fit_kronecker(ctx.edges);
+    if noise > 0.0 {
+        Ok(Box::new(fitted.with_noise(noise)))
+    } else {
+        Ok(Box::new(fitted))
+    }
+}
+
+fn make_kronecker_noisy(ctx: &StructureFitContext<'_>) -> Result<Box<dyn StructureGenerator>> {
+    // paper §9 default amplitude when the spec doesn't pick one
+    let noise = ctx.params.f64_or("noise", 0.3)?.max(1e-6);
+    Ok(Box::new(fit::fit_kronecker(ctx.edges).with_noise(noise)))
+}
+
+fn make_erdos_renyi(ctx: &StructureFitContext<'_>) -> Result<Box<dyn StructureGenerator>> {
+    Ok(Box::new(erdos_renyi::ErdosRenyi::fit(ctx.edges)))
+}
+
+fn make_sbm(ctx: &StructureFitContext<'_>) -> Result<Box<dyn StructureGenerator>> {
+    let blocks = ctx.params.usize_or("blocks", 16)?.max(1);
+    Ok(Box::new(sbm::DcSbm::fit(ctx.edges, blocks)))
+}
+
+fn make_trilliong(ctx: &StructureFitContext<'_>) -> Result<Box<dyn StructureGenerator>> {
+    Ok(Box::new(trilliong::TrillionG::fit(ctx.edges)))
+}
+
+/// Register every built-in structure backend (plus the historical CLI
+/// aliases) into `reg`.
+pub fn register_builtins(reg: &mut Registry<StructureGeneratorFactory>) {
+    reg.register("kronecker", make_kronecker);
+    reg.register("kronecker-noisy", make_kronecker_noisy);
+    reg.register("erdos-renyi", make_erdos_renyi);
+    reg.register("sbm", make_sbm);
+    reg.register("trilliong", make_trilliong);
+    reg.alias("ours", "kronecker");
+    reg.alias("rmat", "kronecker");
+    reg.alias("ours-noisy", "kronecker-noisy");
+    reg.alias("random", "erdos-renyi");
+    reg.alias("er", "erdos-renyi");
+    reg.alias("graphworld", "sbm");
 }
 
 /// Which structural generator to use in a pipeline (ablation axis of
-/// paper Table 6).
+/// paper Table 6). Legacy closed enum — new code names backends by
+/// registry string instead.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StructKind {
     /// The paper's fitted Kronecker generator ("ours").
@@ -63,6 +165,19 @@ pub enum StructKind {
     Sbm,
     /// TrillionG-style recursive vector model.
     TrillionG,
+}
+
+impl StructKind {
+    /// Canonical registry name of this kind.
+    pub fn registry_name(&self) -> &'static str {
+        match self {
+            StructKind::Kronecker => "kronecker",
+            StructKind::KroneckerNoisy => "kronecker-noisy",
+            StructKind::Random => "erdos-renyi",
+            StructKind::Sbm => "sbm",
+            StructKind::TrillionG => "trilliong",
+        }
+    }
 }
 
 impl std::str::FromStr for StructKind {

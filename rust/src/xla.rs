@@ -1,0 +1,215 @@
+//! In-tree stub of the `xla` (PJRT) crate surface the runtime uses.
+//!
+//! The offline build environment has no crates.io access, so instead of a
+//! `Cargo.toml` dependency the crate ships this API-compatible shim:
+//! [`Literal`] is a real in-memory tensor container (everything the
+//! literal-packing helpers and their tests need), while the client /
+//! executable types compile and load fine but report a clear error the
+//! moment an HLO execution is attempted. All PJRT call sites are already
+//! gated on [`crate::runtime::artifacts_available`], so the stub only
+//! surfaces when someone ships artifacts without the real backend.
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (stringly, like the real binding).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!(
+        "{what}: PJRT backend unavailable (sgg was built with the in-tree xla stub; \
+         link the real `xla` crate to execute HLO artifacts)"
+    )))
+}
+
+/// Element storage for [`Literal`].
+#[derive(Debug, Clone)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Scalar types a [`Literal`] can hold. Sealed to the two element types
+/// the runtime actually moves across the boundary.
+pub trait Element: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            Storage::I32(_) => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            Storage::F32(_) => None,
+        }
+    }
+}
+
+/// An in-memory tensor literal (flat data + dims), API-compatible with
+/// the subset of `xla::Literal` used by [`crate::runtime::literal`].
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-0 f32 literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { storage: Storage::F32(vec![x]), dims: Vec::new() }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        Literal { storage: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match; empty dims = rank-0
+    /// scalar, one element).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let numel: i64 = dims.iter().product();
+        let have = match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        };
+        if numel < 0 || numel as usize != have {
+            return Err(Error(format!("reshape: {have} elements into dims {dims:?}")));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the flat data out as `Vec<T>`.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.storage).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come out of executions), so this is always an error here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing but proves the file exists).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// "Parse" an HLO text file. Only existence/readability is checked —
+    /// compilation fails later with a clear message.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        std::fs::read_to_string(path.as_ref())
+            .map(|_| HloModuleProto)
+            .map_err(|e| Error(format!("{}: {e}", path.as_ref().display())))
+    }
+}
+
+/// Computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub: constructs, never executes).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client. Construction succeeds so artifact-free code paths
+    /// (manifest/constants loading) keep working.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    /// Compilation is where the stub stops.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle (stub: cannot be constructed, so `execute`
+/// is unreachable in practice).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_type_mismatch_errors() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_numel() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        // zero-element mismatches are rejected too
+        let empty = Literal::vec1::<f32>(&[]);
+        assert!(empty.reshape(&[1]).is_err());
+        assert!(empty.reshape(&[0]).is_ok());
+        assert!(Literal::scalar(1.0).reshape(&[0]).is_err());
+    }
+
+    #[test]
+    fn execution_paths_report_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        let err = client.compile(&XlaComputation).err().unwrap();
+        assert!(err.to_string().contains("stub"));
+    }
+}

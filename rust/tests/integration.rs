@@ -1,5 +1,6 @@
 //! Integration tests across modules: dataset → pipeline → metrics, the
-//! streaming orchestrator, and CLI-level component parsing.
+//! streaming orchestrator, CLI-level component parsing, and the legacy
+//! enum-config shim.
 
 use sgg::aligner::AlignKind;
 use sgg::featgen::FeatKind;
@@ -25,17 +26,15 @@ fn pipeline_reproduces_table2_ordering() {
     // the paper's headline: fitted pipeline beats the random baseline on
     // degree-dist and joint degree-feature metrics
     let ds = small("tabformer");
-    let ours = Pipeline::fit(&ds, &PipelineConfig::default())
+    let ours = Pipeline::builder().fit(&ds).unwrap().generate(1, 5).unwrap();
+    let rand = Pipeline::builder()
+        .structure("erdos-renyi")
+        .edge_features("random")
+        .aligner("random")
+        .fit(&ds)
         .unwrap()
         .generate(1, 5)
         .unwrap();
-    let random_cfg = PipelineConfig {
-        struct_kind: StructKind::Random,
-        feat_kind: FeatKind::Random,
-        align_kind: AlignKind::Random,
-        ..Default::default()
-    };
-    let rand = Pipeline::fit(&ds, &random_cfg).unwrap().generate(1, 5).unwrap();
     let r_ours = metrics::evaluate(&ds.edges, &ds.edge_features, &ours.edges, &ours.edge_features);
     let r_rand = metrics::evaluate(&ds.edges, &ds.edge_features, &rand.edges, &rand.edge_features);
     assert!(
@@ -61,7 +60,7 @@ fn pipeline_reproduces_table2_ordering() {
 #[test]
 fn generated_graph_is_valid_at_scale() {
     let ds = small("travel-insurance");
-    let fitted = Pipeline::fit(&ds, &PipelineConfig::default()).unwrap();
+    let fitted = Pipeline::builder().fit(&ds).unwrap();
     for scale in [1u64, 2, 3] {
         let synth = fitted.generate(scale, scale).unwrap();
         assert!(synth.edges.validate().is_ok());
@@ -69,6 +68,25 @@ fn generated_graph_is_valid_at_scale() {
         assert_eq!(synth.edges.len() as u64, ds.edges.len() as u64 * scale * scale);
         assert_eq!(synth.edge_features.n_rows(), synth.edges.len());
     }
+}
+
+#[test]
+fn legacy_enum_config_compiles_and_runs() {
+    // old enum-based callers keep working through the shim
+    let ds = small("tabformer");
+    let random_cfg = PipelineConfig {
+        struct_kind: StructKind::Random,
+        feat_kind: FeatKind::Random,
+        align_kind: AlignKind::Random,
+        use_pjrt_gan: false,
+        ..Default::default()
+    };
+    #[allow(deprecated)]
+    let fitted = Pipeline::fit(&ds, &random_cfg).unwrap();
+    let synth = fitted.generate(1, 5).unwrap();
+    assert_eq!(synth.edges.len(), ds.edges.len());
+    let (s, f, a) = fitted.component_names();
+    assert_eq!((s.as_str(), f.as_str(), a.as_str()), ("random", "random", "random"));
 }
 
 #[test]

@@ -1,0 +1,145 @@
+//! Integration tests for the declarative scenario API: spec file →
+//! registry-resolved components → fit → generate, through both sinks.
+
+use sgg::pipeline::{run_scenario, Registries, ScenarioSpec, SinkOutput, SinkSpec};
+
+fn write_spec(name: &str, text: &str) -> std::path::PathBuf {
+    let path = std::env::temp_dir().join(format!("sgg_spec_{}_{name}.toml", std::process::id()));
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+#[test]
+fn spec_file_fit_generate_roundtrip() {
+    let path = write_spec(
+        "roundtrip",
+        r#"
+        name = "roundtrip"
+        dataset = "travel-insurance"
+        seed = 9
+
+        [structure]
+        backend = "erdos-renyi"
+
+        [edge_features]
+        backend = "random"
+
+        [aligner]
+        backend = "random"
+        "#,
+    );
+    let spec = ScenarioSpec::from_file(&path).unwrap();
+    let ds = sgg::datasets::load(&spec.dataset, spec.dataset_seed).unwrap();
+    let out = run_scenario(&spec).unwrap();
+    let synth = out.into_dataset().unwrap();
+    assert_eq!(synth.edges.len(), ds.edges.len());
+    assert_eq!(synth.edge_features.n_rows(), ds.edges.len());
+    assert_eq!(synth.edge_features.n_cols(), ds.edge_features.n_cols());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn checked_in_fraud_spec_generates_node_and_edge_features() {
+    // the repo's example spec must stay runnable end to end
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/fraud.toml");
+    let mut spec = ScenarioSpec::from_file(&path).unwrap();
+    assert_eq!(spec.dataset, "ieee-fraud");
+    // shrink to scale 1 to keep CI fast; components stay as checked in
+    spec.size = sgg::pipeline::SizeSpec::Scale(1);
+    let ds = sgg::datasets::load(&spec.dataset, spec.dataset_seed).unwrap();
+    let src_nf_cols = ds.node_features.as_ref().expect("ieee-fraud has node features").n_cols();
+    let synth = run_scenario(&spec).unwrap().into_dataset().unwrap();
+    assert_eq!(synth.edge_features.n_rows(), synth.edges.len());
+    let nf = synth.node_features.expect("spec requests node features");
+    assert_eq!(nf.n_rows(), synth.edges.spec.n_src as usize);
+    assert_eq!(nf.n_cols(), src_nf_cols);
+}
+
+#[test]
+fn shards_sink_streams_through_unified_path() {
+    let dir = std::env::temp_dir().join(format!("sgg_spec_shards_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let path = write_spec(
+        "shards",
+        &format!(
+            r#"
+            dataset = "travel-insurance"
+            seed = 4
+
+            [aligner]
+            backend = "random"
+
+            [edge_features]
+            backend = "random"
+
+            [sink]
+            kind = "shards"
+            dir = "{}"
+            prefix_levels = 2
+            workers = 2
+            queue_capacity = 2
+            "#,
+            dir.display()
+        ),
+    );
+    let spec = ScenarioSpec::from_file(&path).unwrap();
+    assert!(matches!(spec.sink, SinkSpec::Shards { .. }));
+    let ds = sgg::datasets::load(&spec.dataset, spec.dataset_seed).unwrap();
+    match run_scenario(&spec).unwrap() {
+        SinkOutput::Streamed(report) => {
+            assert_eq!(report.edges_written, ds.edges.len() as u64);
+            assert!(report.shards >= 1);
+            assert!(report.peak_buffer_bytes > 0);
+            let back = sgg::pipeline::orchestrator::read_shards(&dir).unwrap();
+            assert_eq!(back.len(), ds.edges.len());
+            assert!(back.validate().is_ok());
+        }
+        SinkOutput::Dataset(_) => panic!("shards sink returned a dataset"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn unknown_component_is_helpful_config_error() {
+    let path = write_spec(
+        "unknown",
+        r#"
+        dataset = "travel-insurance"
+
+        [structure]
+        backend = "quantum-annealer"
+        "#,
+    );
+    let spec = ScenarioSpec::from_file(&path).unwrap();
+    let err = run_scenario(&spec).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("quantum-annealer"), "{msg}");
+    // the error lists what IS registered
+    for known in ["kronecker", "erdos-renyi", "sbm", "trilliong"] {
+        assert!(msg.contains(known), "missing `{known}` in: {msg}");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn custom_backend_registers_and_resolves() {
+    // the registry is open: a downstream crate can plug a backend in
+    fn tiny(
+        ctx: &sgg::structgen::StructureFitContext<'_>,
+    ) -> sgg::Result<Box<dyn sgg::structgen::StructureGenerator>> {
+        Ok(Box::new(sgg::structgen::erdos_renyi::ErdosRenyi::fit(ctx.edges)))
+    }
+    let mut regs = Registries::builtin();
+    regs.structure.register("tiny-er", tiny);
+    let ds = sgg::datasets::load("travel-insurance", 2).unwrap();
+    let fitted = sgg::pipeline::Pipeline::builder()
+        .structure("tiny-er")
+        .edge_features("random")
+        .aligner("random")
+        .fit_with(&ds, &regs)
+        .unwrap();
+    assert_eq!(fitted.component_names().0, "random"); // ER's display name
+    assert_eq!(fitted.generate(1, 1).unwrap().edges.len(), ds.edges.len());
+}
