@@ -1,0 +1,94 @@
+//! Bench: sequential vs multi-worker chunked generation throughput.
+//!
+//! Runs the same seeded Kronecker scenario (R-MAT θ, 2²⁰ nodes) through
+//! the parallel chunk runner at 1/2/4/8 workers, verifies every run
+//! produces the identical edge stream (checksum), and emits
+//! `BENCH_parallel.json` with edges/sec per worker count — CI uploads it
+//! as an artifact.
+//!
+//! Run: `cargo bench --bench bench_parallel`
+//! Knobs: `SGG_BENCH_EDGES` (default 8_000_000), `SGG_BENCH_NODES`
+//! (default 1 << 20).
+
+use sgg::graph::PartiteSpec;
+use sgg::structgen::chunked::{generate_chunked, ChunkConfig};
+use sgg::structgen::kronecker::KroneckerGen;
+use sgg::structgen::theta::ThetaS;
+use sgg::util::json::Json;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let nodes = env_u64("SGG_BENCH_NODES", 1 << 20);
+    let edges = env_u64("SGG_BENCH_EDGES", 8_000_000);
+    let seed = 0x5a6e;
+    let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(nodes), edges);
+
+    let mut runs: Vec<Json> = Vec::new();
+    let mut seq_eps = 0.0f64;
+    let mut checksum0: Option<u64> = None;
+    let mut speedup_at_4 = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = ChunkConfig { prefix_levels: 3, workers, queue_capacity: 4 };
+        // cheap order-sensitive checksum proves runs are bit-identical
+        let mut checksum = 0u64;
+        let t0 = std::time::Instant::now();
+        let total = generate_chunked(&gen, nodes, nodes, edges, seed, cfg, |chunk| {
+            for (s, d) in chunk.edges.iter() {
+                checksum = checksum
+                    .rotate_left(1)
+                    .wrapping_add(s.wrapping_mul(0x9e37_79b9).wrapping_add(d));
+            }
+            Ok(())
+        })
+        .expect("bench generation failed");
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(total, edges, "wrong edge count at {workers} workers");
+        match checksum0 {
+            None => checksum0 = Some(checksum),
+            Some(c) => assert_eq!(
+                c, checksum,
+                "output changed at {workers} workers — determinism broken"
+            ),
+        }
+        let eps = edges as f64 / secs.max(1e-9);
+        if workers == 1 {
+            seq_eps = eps;
+        }
+        let speedup = eps / seq_eps.max(1e-9);
+        if workers == 4 {
+            speedup_at_4 = speedup;
+        }
+        println!(
+            "[bench] workers={workers:2}  {secs:6.2}s  {:8.2} Medges/s  speedup {speedup:.2}x",
+            eps / 1e6
+        );
+        runs.push(Json::obj(vec![
+            ("workers", Json::from(workers)),
+            ("secs", Json::from(secs)),
+            ("edges_per_sec", Json::from(eps)),
+            ("speedup_vs_sequential", Json::from(speedup)),
+        ]));
+    }
+
+    let out = Json::obj(vec![
+        (
+            "scenario",
+            Json::obj(vec![
+                ("generator", Json::from("kronecker (rmat default theta)")),
+                ("nodes", Json::from(nodes)),
+                ("edges", Json::from(edges)),
+                ("seed", Json::from(seed as u64)),
+                ("prefix_levels", Json::from(3u64)),
+                ("queue_capacity", Json::from(4u64)),
+            ]),
+        ),
+        ("bit_identical_across_worker_counts", Json::from(true)),
+        ("speedup_at_4_workers", Json::from(speedup_at_4)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    std::fs::write("BENCH_parallel.json", format!("{out}\n")).expect("write BENCH_parallel.json");
+    println!("[bench] wrote BENCH_parallel.json (speedup@4 = {speedup_at_4:.2}x)");
+}

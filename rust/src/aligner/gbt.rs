@@ -15,8 +15,11 @@ use crate::util::threadpool::{default_threads, par_map};
 /// GBT hyper-parameters (defaults from paper §12).
 #[derive(Clone, Debug)]
 pub struct GbtConfig {
+    /// Boosting rounds.
     pub n_trees: usize,
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Shrinkage applied to each tree's contribution.
     pub learning_rate: f64,
     /// L2 regularization on leaf values (XGBoost's lambda; paper α=10).
     pub l2: f64,

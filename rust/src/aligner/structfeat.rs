@@ -8,10 +8,15 @@ use crate::graph::{Csr, EdgeList};
 /// Which structural features to extract (Table 9's rows toggle these).
 #[derive(Clone, Debug)]
 pub struct StructFeatConfig {
+    /// In/out degree columns.
     pub degrees: bool,
+    /// PageRank column.
     pub pagerank: bool,
+    /// Katz centrality column.
     pub katz: bool,
+    /// Local clustering-coefficient column.
     pub clustering: bool,
+    /// Optional node2vec embedding columns.
     pub node2vec: Option<Node2VecConfig>,
     /// PageRank/Katz iteration count.
     pub iterations: usize,
@@ -36,7 +41,9 @@ impl Default for StructFeatConfig {
 pub struct StructFeatures {
     /// Row-major `n_nodes × dim` matrix.
     pub data: Vec<f64>,
+    /// Number of rows (global node count).
     pub n_nodes: usize,
+    /// Number of feature columns.
     pub dim: usize,
     /// Column labels.
     pub names: Vec<String>,

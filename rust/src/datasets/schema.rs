@@ -32,7 +32,9 @@ impl ColSpec {
 /// Schema of a stand-in: edge columns + optional node columns.
 #[derive(Clone, Debug)]
 pub struct DatasetSchema {
+    /// Per-edge feature columns.
     pub edge_cols: Vec<ColSpec>,
+    /// Per-node feature columns (empty when the stand-in has none).
     pub node_cols: Vec<ColSpec>,
 }
 

@@ -7,6 +7,7 @@ use crate::metrics::{degree::log_binned_degree_hist, hopplot::hop_plot};
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Figure 2 (degree distributions); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("tabformer", 1)?;
     let mut series: Vec<(String, crate::graph::EdgeList)> =

@@ -34,6 +34,7 @@ fn gbt_accuracy(ds: &crate::datasets::Dataset, seed: u64) -> f64 {
     pred.iter().zip(&yte).filter(|(a, b)| a == b).count() as f64 / yte.len().max(1) as f64
 }
 
+/// Regenerate Figure 4 (which component matters when); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let settings = [
         ("H^ SNR^", 0.85, 1.5),

@@ -21,6 +21,7 @@ fn render(h: &[f64], rows: usize, cols: usize) -> String {
     out
 }
 
+/// Regenerate Figure 5 (degree x feature distribution grids); `quick` shrinks the sweep.
 pub fn run(_quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("ieee-fraud", 1)?;
     let mut variants: Vec<(String, crate::datasets::Dataset)> =

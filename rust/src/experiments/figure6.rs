@@ -10,6 +10,7 @@ use crate::util::json::Json;
 use crate::util::stats;
 use crate::Result;
 
+/// Regenerate Figure 6 (feature-column CDF comparison); `quick` shrinks the sweep.
 pub fn run(_quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("ieee-fraud", 1)?;
     let col = "amount"; // the C11-like heavy-tailed column

@@ -10,6 +10,7 @@ use crate::structgen::StructureGenerator;
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Figure 7 (DCC coefficient across scales); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let datasets = if quick { vec!["ieee-fraud"] } else { vec!["tabformer", "ieee-fraud"] };
     let factors: Vec<i32> = if quick { vec![-2, 0, 2] } else { vec![-3, -2, -1, 0, 1, 2, 3] };

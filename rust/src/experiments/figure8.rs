@@ -25,6 +25,7 @@ pub const PUBLISHED: &[(&str, f64)] = &[
     ("FastKronecker (quoted)", 1.5e6),
 ];
 
+/// Regenerate Figure 8 (generation throughput); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let n: u64 = 1 << 20;
     let sweep: Vec<u64> = if quick {

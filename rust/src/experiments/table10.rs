@@ -64,6 +64,7 @@ fn stat_row(name: &str, stats_list: &[GraphStats]) -> (Vec<String>, Json) {
     (row, rec)
 }
 
+/// Regenerate Table 10 (graph statistics); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("cora-ml", 1)?;
     let trials: u64 = if quick { 2 } else { 5 };

@@ -50,6 +50,7 @@ pub fn evaluate_cell(
     Ok(metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features))
 }
 
+/// Regenerate Table 2 (fidelity metrics per dataset); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let datasets = if quick {
         vec!["tabformer", "ieee-fraud"]

@@ -13,6 +13,7 @@ use crate::structgen::fit::fit_kronecker;
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Table 3 (big-graph streaming run); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let scales: Vec<u64> = if quick { vec![1, 2] } else { vec![1, 2, 4, 8] };
     let base = crate::datasets::load("mag-mini", 1)?;

@@ -11,6 +11,7 @@ use crate::runtime::gnn_exec::{GnnKind, NodeClfRunner};
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Table 4 (GNN seconds/epoch); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     if !crate::runtime::artifacts_available() {
         println!("table4: artifacts missing — run `make artifacts` first (skipped)");

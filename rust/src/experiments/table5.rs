@@ -7,6 +7,7 @@ use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Table 5 (scale sweep); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let datasets: Vec<&str> = if quick {
         vec!["ieee-fraud", "travel-insurance"]

@@ -8,6 +8,7 @@ use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Table 6 (component ablations); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("ieee-fraud", 1)?;
     let structs = [

@@ -9,6 +9,7 @@ use crate::runtime::gnn_exec::{EdgeClfRunner, GnnKind, NodeClfRunner};
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Table 7 (synthetic pretraining + fine-tuning); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     if !crate::runtime::artifacts_available() {
         println!("table7: artifacts missing — run `make artifacts` first (skipped)");

@@ -9,6 +9,7 @@ use crate::structgen::StructureGenerator;
 use crate::util::json::Json;
 use crate::Result;
 
+/// Regenerate Table 8 (Erdos-Renyi generation timings); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let nodes: u64 = 1_000_000;
     let edge_sweep: Vec<u64> = if quick {

@@ -39,6 +39,7 @@ fn feature_sets(quick: bool) -> Vec<(&'static str, StructFeatConfig)> {
     ]
 }
 
+/// Regenerate Table 9 (structural-feature ablation); `quick` shrinks the sweep.
 pub fn run(quick: bool) -> Result<Json> {
     let ds = crate::datasets::load("ieee-fraud", 1)?;
     let trials: u64 = if quick { 2 } else { 5 };

@@ -16,7 +16,9 @@ pub enum ColumnData {
 /// A named, typed feature column.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Column {
+    /// Column name (unique within a table).
     pub name: String,
+    /// Typed values.
     pub data: ColumnData,
 }
 
@@ -70,6 +72,7 @@ impl Column {
 /// A table of equally long feature columns.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct FeatureTable {
+    /// Columns, all of equal length.
     pub columns: Vec<Column>,
 }
 

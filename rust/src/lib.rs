@@ -57,8 +57,24 @@
 //! leg automatically; output goes to an in-memory [`datasets::Dataset`] or
 //! streams to disk shards through the unified [`pipeline::Sink`] trait.
 //!
+//! ## Parallel generation
+//!
+//! Structure generation is chunked and runs on the
+//! [`pipeline::parallel::ParallelChunkRunner`]: a worker pool samples
+//! chunks concurrently (each chunk on its own deterministic PRNG stream),
+//! a bounded channel applies backpressure, and a writer feeds the sink in
+//! chunk-index order — so output is **bit-identical for any worker
+//! count**. Pick the worker count with `workers = N` in a scenario spec,
+//! `--workers N` on the CLI, or `ChunkConfig::workers` programmatically.
+//! See `docs/ARCHITECTURE.md` for the full dataflow.
+//!
 //! [`metrics`] implements every evaluation metric in the paper (§4.3 +
 //! appendix), and [`experiments`] regenerates every table and figure.
+
+// Docs are part of the public API contract: every public item must carry
+// rustdoc, and regressions surface as build warnings (CI runs `cargo doc`
+// with warnings denied).
+#![warn(missing_docs)]
 
 pub mod error;
 pub mod util;

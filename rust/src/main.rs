@@ -2,13 +2,17 @@
 //!
 //! ```text
 //! sgg datasets                          list the dataset registry
-//! sgg run scenario.toml                 execute a declarative scenario spec
+//! sgg run scenario.toml [--workers N]   execute a declarative scenario spec
 //! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
 //! sgg evaluate --dataset tabformer      fit + generate + Table-2 metrics
-//! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards
+//! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards --workers 8
 //! sgg experiment table2 [--quick]       regenerate one paper table/figure
 //! sgg experiment all [--quick]          regenerate everything
 //! ```
+//!
+//! `--workers N` drives the parallel chunk runner (N sampling threads;
+//! 0 = one per core). Output is bit-identical for every worker count —
+//! the flag only changes wall-clock time.
 //!
 //! Components are selected by registry name (`--struct kronecker|
 //! erdos-renyi|sbm|trilliong ...`); historical aliases (`ours`, `random`,
@@ -63,11 +67,20 @@ fn run(args: &Args) -> Result<()> {
         }
         Some("run") => {
             let path = args.positional.get(1).ok_or_else(|| {
-                sgg::Error::Config("usage: sgg run <scenario.toml> [--seed N]".into())
+                sgg::Error::Config(
+                    "usage: sgg run <scenario.toml> [--seed N] [--workers N]".into(),
+                )
             })?;
             let mut spec = ScenarioSpec::from_file(std::path::Path::new(path))?;
             if let Some(seed) = args.get("seed").and_then(|v| v.parse().ok()) {
                 spec.seed = seed;
+            }
+            if let Some(workers) = args.get("workers").and_then(|v| v.parse().ok()) {
+                spec.workers = workers;
+                // the CLI override beats any [sink] stanza setting too
+                if let sgg::pipeline::SinkSpec::Shards { chunks, .. } = &mut spec.sink {
+                    chunks.workers = workers;
+                }
             }
             let out = pipeline::run_scenario(&spec)?;
             println!("scenario `{}`: {}", spec.name, out.summary());
@@ -124,13 +137,23 @@ fn run(args: &Args) -> Result<()> {
                 sgg::graph::PartiteSpec::square(nodes),
                 edges,
             );
+            let defaults = sgg::structgen::chunked::ChunkConfig::default();
+            let workers = match args.get_or("workers", defaults.workers) {
+                0 => sgg::util::threadpool::default_threads(),
+                w => w,
+            };
+            let cfg = sgg::structgen::chunked::ChunkConfig {
+                prefix_levels: args.get_or("prefix-levels", defaults.prefix_levels),
+                workers,
+                queue_capacity: args.get_or("queue-capacity", defaults.queue_capacity),
+            };
             let report = sgg::pipeline::orchestrator::stream_to_shards(
                 &gen,
                 nodes,
                 nodes,
                 edges,
                 args.get_or("seed", 7u64),
-                sgg::structgen::chunked::ChunkConfig::default(),
+                cfg,
                 std::path::Path::new(&out),
             )?;
             println!("{report}");
@@ -158,7 +181,8 @@ fn run(args: &Args) -> Result<()> {
                  experiments: {:?}\n\
                  components: --struct kronecker|kronecker-noisy|erdos-renyi|sbm|trilliong  \
                  --feat gan|kde|random|gaussian  --align learned|random\n\
-                 spec files: sgg run examples/fraud.toml (see README §Scenario specs)",
+                 parallelism: --workers N (run/stream; 0 = one per core)\n\
+                 spec files: sgg run examples/fraud.toml (see docs/scenario-reference.md)",
                 sgg::experiments::ALL
             );
             Ok(())

@@ -13,17 +13,29 @@ use crate::util::stats;
 /// All Table 10 statistics for one graph (+ edge overlap vs a reference).
 #[derive(Clone, Debug, Default)]
 pub struct GraphStats {
+    /// Maximum degree.
     pub max_degree: f64,
+    /// Degree assortativity coefficient.
     pub assortativity: f64,
+    /// Triangle count.
     pub triangles: u64,
+    /// Fitted power-law exponent of the degree distribution.
     pub power_law_exp: f64,
+    /// Average local clustering coefficient.
     pub avg_clustering: f64,
+    /// Wedge (2-path) count.
     pub wedges: u64,
+    /// Claw (star with 3 leaves) count.
     pub claws: u64,
+    /// Edge-distribution entropy relative to uniform.
     pub rel_edge_entropy: f64,
+    /// Size of the largest connected component.
     pub largest_cc: usize,
+    /// Gini coefficient of the degree distribution.
     pub gini: f64,
+    /// Fraction of edges shared with the reference graph.
     pub edge_overlap: f64,
+    /// Characteristic path length.
     pub char_path_len: f64,
 }
 

@@ -1,11 +1,16 @@
 //! Streaming, out-of-core generation (paper §4.5 / Table 3 path).
 //!
-//! Since the sink redesign this module is a thin compatibility wrapper:
-//! the actual streaming lives in the unified [`Sink`] path —
-//! [`StructureGenerator::generate_into`] chunks the structure with
-//! bounded memory and [`ShardSink`] persists each chunk as its own shard
-//! file, aborting generation early on the first write error. The bounded
-//! channel between workers and writer remains the backpressure mechanism.
+//! This module is a thin convenience wrapper over the unified [`Sink`]
+//! path — there is no separate streaming engine here anymore.
+//! [`StructureGenerator::generate_into`] decomposes the job into chunks,
+//! the [`ParallelChunkRunner`](crate::pipeline::parallel::ParallelChunkRunner)
+//! samples them (concurrently when `workers > 1`, with bounded-channel
+//! backpressure and in-order delivery), and [`ShardSink`] persists each
+//! chunk as its own shard file, aborting generation early on the first
+//! write error. Prefer [`crate::pipeline::FittedPipeline::run`] with a
+//! [`ShardSink`] (or a `[sink]` stanza in a scenario spec) in new code;
+//! [`stream_to_shards`] remains for direct generator-level streaming and
+//! the Table 3 experiment.
 
 use crate::pipeline::sink::{ShardSink, Sink, SinkFinish};
 use crate::structgen::kronecker::KroneckerGen;

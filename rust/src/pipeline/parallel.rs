@@ -1,0 +1,523 @@
+//! Multi-threaded chunked generation engine (the "fast as the hardware
+//! allows" path of the ROADMAP, paper §10 / SANGEA-style shared-nothing
+//! scaling).
+//!
+//! A generation job is first *decomposed* into a deterministic
+//! [`ChunkPlan`]: a fixed list of chunks, each sampleable independently of
+//! every other chunk. The decomposition depends only on the job (sizes,
+//! seed, `prefix_levels`) — never on the worker count — and every chunk
+//! derives its PRNG stream from `hash(seed, chunk_index)` (see
+//! [`chunk_seed`]) or an equivalent per-chunk stream. Together these two
+//! rules make the output **bit-identical for any worker count and any
+//! scheduling interleaving**.
+//!
+//! [`ParallelChunkRunner`] then executes the plan:
+//!
+//! ```text
+//!                 ┌─ worker 0 ─ sample(chunk i) ─┐
+//!   chunk index   ├─ worker 1 ─ sample(chunk j) ─┤   bounded      writer
+//!   (atomic) ────▶│        ...                   │──▶ channel ──▶ (caller
+//!                 └─ worker W ─ sample(chunk k) ─┘  (capacity Q)  thread)
+//!                                                                   │
+//!                                      reorder buffer, emits chunks │
+//!                                      in index order ──▶ Sink ◀────┘
+//! ```
+//!
+//! * Workers claim chunk indices from an atomic counter and block while
+//!   their index is further than `workers + queue_capacity` chunks ahead
+//!   of the last index the writer emitted — this caps the reorder buffer
+//!   and bounds peak memory at `(workers + queue_capacity + 1)` chunks.
+//! * The bounded channel provides backpressure: a slow sink (e.g. a disk
+//!   writer) stalls the pool instead of buffering unboundedly.
+//! * The writer (running on the caller's thread) re-orders arriving
+//!   chunks and feeds the sink strictly in chunk-index order, so sinks
+//!   never need their own ordering pass.
+//! * The first worker or sink error cancels the pool: in-flight workers
+//!   stop at their next chunk boundary, remaining chunks are never
+//!   sampled, and the error propagates to the caller.
+
+use crate::graph::EdgeList;
+use crate::structgen::chunked::{Chunk, ChunkConfig};
+use crate::util::threadpool::Bounded;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Deterministic per-chunk seed: a splitmix64-style hash of the job seed
+/// and the chunk index. Chunk streams are independent of each other and
+/// of the worker that happens to sample them.
+pub fn chunk_seed(seed: u64, index: usize) -> u64 {
+    let mut z = seed.wrapping_add((index as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Largest-remainder apportionment of `total` units over relative
+/// `weights`: every chunk gets `floor(total · wᵢ / Σw)`, and the leftover
+/// units go to the chunks with the largest fractional parts (stable on
+/// ties). The budgets always sum to exactly `total`.
+pub fn apportion(weights: &[f64], total: u64) -> Vec<u64> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let sum: f64 = weights.iter().sum();
+    if sum <= 0.0 || !sum.is_finite() {
+        let mut budgets = vec![0u64; n];
+        budgets[0] = total;
+        return budgets;
+    }
+    let targets: Vec<f64> = weights.iter().map(|w| w / sum * total as f64).collect();
+    let mut budgets: Vec<u64> = targets.iter().map(|t| t.floor() as u64).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| {
+        let fi = targets[i] - budgets[i] as f64;
+        let fj = targets[j] - budgets[j] as f64;
+        fj.partial_cmp(&fi).unwrap()
+    });
+    // `total as f64` is inexact above 2^53, so the floored budgets can
+    // land on either side of `total` (and their u64 sum can even
+    // overflow, e.g. two targets of exactly 2^63); account in u128 and
+    // correct in whichever direction the rounding landed
+    let assigned: u128 = budgets.iter().map(|&b| b as u128).sum();
+    let remainder = u128::from(total).saturating_sub(assigned);
+    // remainder can exceed n when f64 ulp error dwarfs the fractional
+    // parts (totals near 2^63+), so distribute it evenly rather than one
+    // unit per chunk: base share everywhere, one extra for the largest
+    // fractional parts. Per-chunk additions total `remainder`, so sums
+    // stay exact and no individual budget can overflow past `total`.
+    if remainder > 0 {
+        let base = (remainder / n as u128) as u64;
+        let extra = remainder % n as u128;
+        for (rank, &i) in order.iter().enumerate() {
+            budgets[i] += base + u64::from((rank as u128) < extra);
+        }
+    }
+    let mut excess = assigned.saturating_sub(u128::from(total));
+    for &i in order.iter().rev() {
+        if excess == 0 {
+            break;
+        }
+        let take = excess.min(u128::from(budgets[i]));
+        budgets[i] -= take as u64;
+        excess -= take;
+    }
+    budgets
+}
+
+/// A deterministic decomposition of one generation job into independently
+/// sampleable chunks.
+///
+/// Implementations must satisfy the runner's determinism contract:
+/// `sample(i)` depends only on the plan and `i` (its own PRNG stream,
+/// typically seeded with [`chunk_seed`]), never on which worker runs it
+/// or in what order.
+pub trait ChunkPlan: Sync {
+    /// Number of chunks in the decomposition (fixed at plan build time).
+    fn n_chunks(&self) -> usize;
+
+    /// Sample chunk `index`. May return an empty edge list for chunks
+    /// with a zero edge budget; empty chunks are counted for ordering but
+    /// never forwarded to the sink.
+    fn sample(&self, index: usize) -> Result<EdgeList>;
+}
+
+/// Generic even-split decomposition for edge-i.i.d. generators: the total
+/// edge budget is split into `4^prefix_levels` near-equal chunks (the
+/// same chunk count the Kronecker prefix scheme uses), each sampled by a
+/// caller-supplied function with its own [`chunk_seed`] stream.
+///
+/// A single-chunk plan (`prefix_levels = 0`) degenerates to one sample
+/// with the *raw* job seed, i.e. exactly the pre-chunking sequential
+/// behaviour of `generate_sized`.
+pub struct SplitPlan<F> {
+    budgets: Vec<u64>,
+    seed: u64,
+    sample: F,
+}
+
+impl<F> SplitPlan<F>
+where
+    F: Fn(usize, u64, u64) -> Result<EdgeList> + Sync,
+{
+    /// Build an even split of `total_edges` into `4^prefix_levels` chunks
+    /// (trailing zero-budget chunks are trimmed). `sample` receives
+    /// `(chunk_index, edge_budget, chunk_seed)`.
+    pub fn even(total_edges: u64, prefix_levels: u32, seed: u64, sample: F) -> SplitPlan<F> {
+        let n = 4usize.saturating_pow(prefix_levels.min(10)).max(1);
+        let per = total_edges / n as u64;
+        let rem = (total_edges % n as u64) as usize;
+        let n_eff = if per == 0 { rem.max(1) } else { n };
+        let budgets = (0..n_eff)
+            .map(|i| per + u64::from(i < rem))
+            .collect();
+        SplitPlan { budgets, seed, sample }
+    }
+}
+
+impl<F> ChunkPlan for SplitPlan<F>
+where
+    F: Fn(usize, u64, u64) -> Result<EdgeList> + Sync,
+{
+    fn n_chunks(&self) -> usize {
+        self.budgets.len()
+    }
+
+    fn sample(&self, index: usize) -> Result<EdgeList> {
+        let seed = if self.budgets.len() == 1 {
+            self.seed
+        } else {
+            chunk_seed(self.seed, index)
+        };
+        (self.sample)(index, self.budgets[index], seed)
+    }
+}
+
+/// The multi-threaded chunked generation engine: samples a [`ChunkPlan`]
+/// on a worker pool and feeds a sink in chunk-index order. See the
+/// module docs for the full dataflow and the determinism contract.
+pub struct ParallelChunkRunner {
+    workers: usize,
+    queue_capacity: usize,
+}
+
+impl ParallelChunkRunner {
+    /// Runner with an explicit worker count and channel capacity (both
+    /// clamped to ≥ 1). `workers == 1` runs the plan sequentially on the
+    /// caller thread — same output, no threads spawned.
+    pub fn new(workers: usize, queue_capacity: usize) -> ParallelChunkRunner {
+        ParallelChunkRunner {
+            workers: workers.max(1),
+            queue_capacity: queue_capacity.max(1),
+        }
+    }
+
+    /// Runner configured from the `workers` / `queue_capacity` fields of
+    /// a [`ChunkConfig`].
+    pub fn from_config(cfg: ChunkConfig) -> ParallelChunkRunner {
+        ParallelChunkRunner::new(cfg.workers, cfg.queue_capacity)
+    }
+
+    /// Execute `plan`, streaming non-empty chunks into `sink` in
+    /// chunk-index order. Returns the total number of edges produced.
+    ///
+    /// The first error — from a worker's `sample` or from the sink —
+    /// cancels the pool and propagates; the sink never sees another chunk
+    /// after returning an error.
+    pub fn run(
+        &self,
+        plan: &dyn ChunkPlan,
+        sink: &mut dyn FnMut(Chunk) -> Result<()>,
+    ) -> Result<u64> {
+        let n = plan.n_chunks();
+        if n == 0 {
+            return Ok(0);
+        }
+        if self.workers == 1 {
+            return run_sequential(plan, sink);
+        }
+
+        // Reorder window: a worker may run at most this many chunks ahead
+        // of the writer, which caps chunks alive at once (in workers'
+        // hands + queued + reorder-buffered) at `window`, plus the one
+        // the writer holds.
+        let window = self.workers + self.queue_capacity;
+        let chan: Bounded<Chunk> = Bounded::new(self.queue_capacity);
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let emitted = Mutex::new(0usize);
+        let advanced = Condvar::new();
+        let worker_err: Mutex<Option<crate::Error>> = Mutex::new(None);
+        let mut sink_err: Option<crate::Error> = None;
+        let mut total = 0u64;
+
+        std::thread::scope(|s| {
+            for w in 0..self.workers {
+                let tx = chan.clone();
+                let (next, abort) = (&next, &abort);
+                let (emitted, advanced, worker_err) = (&emitted, &advanced, &worker_err);
+                s.spawn(move || loop {
+                    let ci = next.fetch_add(1, Ordering::Relaxed);
+                    if ci >= n {
+                        break;
+                    }
+                    {
+                        // stay inside the reorder window
+                        let mut done = emitted.lock().unwrap();
+                        while ci >= *done + window && !abort.load(Ordering::Relaxed) {
+                            done = advanced.wait(done).unwrap();
+                        }
+                    }
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    match plan.sample(ci) {
+                        Ok(edges) => {
+                            let chunk = Chunk {
+                                index: ci,
+                                worker: w,
+                                sample_secs: t0.elapsed().as_secs_f64(),
+                                edges,
+                            };
+                            if tx.send(chunk).is_err() {
+                                break; // channel closed: run is over
+                            }
+                        }
+                        Err(e) => {
+                            let mut slot = worker_err.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            drop(slot);
+                            abort.store(true, Ordering::Relaxed);
+                            tx.close(); // wake the writer and fail other senders
+                            advanced.notify_all();
+                            break;
+                        }
+                    }
+                });
+            }
+
+            // Writer, on the caller thread: reorder arriving chunks and
+            // emit strictly in index order.
+            let rx = chan.clone();
+            let mut pending: BTreeMap<usize, Chunk> = BTreeMap::new();
+            let mut expect = 0usize;
+            'writer: while expect < n {
+                let chunk = match rx.recv() {
+                    Some(c) => c,
+                    None => break, // a worker failed and closed the channel
+                };
+                pending.insert(chunk.index, chunk);
+                while let Some(c) = pending.remove(&expect) {
+                    expect += 1;
+                    *emitted.lock().unwrap() = expect;
+                    advanced.notify_all();
+                    if c.edges.is_empty() {
+                        continue; // ordered, but nothing for the sink
+                    }
+                    total += c.edges.len() as u64;
+                    if let Err(e) = sink(c) {
+                        sink_err = Some(e);
+                        abort.store(true, Ordering::Relaxed);
+                        rx.close();
+                        advanced.notify_all();
+                        break 'writer;
+                    }
+                }
+            }
+            chan.close();
+            advanced.notify_all();
+        });
+
+        if let Some(e) = sink_err {
+            return Err(e);
+        }
+        if let Some(e) = worker_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        Ok(total)
+    }
+}
+
+/// Sequential execution of a plan on the caller thread: identical chunk
+/// decomposition and seeds, so the output matches any parallel run
+/// byte for byte.
+fn run_sequential(
+    plan: &dyn ChunkPlan,
+    sink: &mut dyn FnMut(Chunk) -> Result<()>,
+) -> Result<u64> {
+    let mut total = 0u64;
+    for index in 0..plan.n_chunks() {
+        let t0 = Instant::now();
+        let edges = plan.sample(index)?;
+        if edges.is_empty() {
+            continue;
+        }
+        total += edges.len() as u64;
+        sink(Chunk {
+            index,
+            worker: 0,
+            sample_secs: t0.elapsed().as_secs_f64(),
+            edges,
+        })?;
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::PartiteSpec;
+    use crate::util::rng::Pcg64;
+    use crate::Error;
+
+    /// Plan whose chunks are small seeded random edge lists.
+    struct TestPlan {
+        n: usize,
+        per: usize,
+        seed: u64,
+        fail_at: Option<usize>,
+    }
+
+    impl ChunkPlan for TestPlan {
+        fn n_chunks(&self) -> usize {
+            self.n
+        }
+
+        fn sample(&self, index: usize) -> Result<EdgeList> {
+            if self.fail_at == Some(index) {
+                return Err(Error::Data(format!("chunk {index} exploded")));
+            }
+            let mut rng = Pcg64::new(chunk_seed(self.seed, index));
+            let mut e = EdgeList::with_capacity(PartiteSpec::square(1 << 10), self.per);
+            for _ in 0..self.per {
+                e.push(rng.below(1 << 10), rng.below(1 << 10));
+            }
+            Ok(e)
+        }
+    }
+
+    fn collect(workers: usize, plan: &TestPlan) -> Result<(Vec<usize>, EdgeList)> {
+        let runner = ParallelChunkRunner::new(workers, 2);
+        let mut order = Vec::new();
+        let mut all = EdgeList::new(PartiteSpec::square(1 << 10));
+        runner.run(plan, &mut |c| {
+            order.push(c.index);
+            all.extend_from(&c.edges);
+            Ok(())
+        })?;
+        Ok((order, all))
+    }
+
+    #[test]
+    fn chunks_arrive_in_index_order_for_any_worker_count() {
+        let plan = TestPlan { n: 37, per: 100, seed: 5, fail_at: None };
+        for workers in [1, 2, 4, 8] {
+            let (order, _) = collect(workers, &plan).unwrap();
+            assert_eq!(order, (0..37).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn output_bit_identical_across_worker_counts() {
+        let plan = TestPlan { n: 23, per: 250, seed: 9, fail_at: None };
+        let (_, base) = collect(1, &plan).unwrap();
+        for workers in [2, 3, 4, 8] {
+            let (_, out) = collect(workers, &plan).unwrap();
+            assert_eq!(base.src, out.src, "workers={workers}");
+            assert_eq!(base.dst, out.dst, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn worker_error_cancels_pool_and_propagates() {
+        let plan = TestPlan { n: 64, per: 50, seed: 1, fail_at: Some(10) };
+        for workers in [1, 4] {
+            let err = collect(workers, &plan).unwrap_err();
+            assert!(err.to_string().contains("chunk 10 exploded"), "{err}");
+        }
+    }
+
+    #[test]
+    fn sink_error_cancels_pool_and_propagates() {
+        let plan = TestPlan { n: 64, per: 50, seed: 2, fail_at: None };
+        let runner = ParallelChunkRunner::new(4, 1);
+        let mut seen = 0usize;
+        let err = runner
+            .run(&plan, &mut |_c| {
+                seen += 1;
+                if seen == 3 {
+                    Err(Error::Data("sink full".into()))
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("sink full"), "{err}");
+        // in-order delivery: the sink saw exactly the chunks before the
+        // failure, then nothing
+        assert_eq!(seen, 3);
+    }
+
+    #[test]
+    fn apportion_sums_exactly_and_follows_weights() {
+        let w = [0.5, 0.25, 0.125, 0.125];
+        let b = apportion(&w, 1_001);
+        assert_eq!(b.iter().sum::<u64>(), 1_001);
+        assert!(b[0] > b[1] && b[1] > b[2]);
+        // degenerate weights: everything lands on the first chunk
+        assert_eq!(apportion(&[0.0, 0.0], 7), vec![7, 0]);
+        assert_eq!(apportion(&[], 7), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn apportion_exact_above_f64_integer_precision() {
+        // above 2^53 `total as f64` is inexact and the floored budgets
+        // can land on either side of the target (off by far more than
+        // one unit per chunk near 2^63); the sum must stay exact
+        let totals = [
+            (1u64 << 54) - 1,
+            (1u64 << 54) + 1,
+            (1u64 << 63) + 1023,
+            u64::MAX - 3,
+        ];
+        for total in totals {
+            let b = apportion(&[1.0], total);
+            assert_eq!(b.iter().sum::<u64>(), total);
+            let b = apportion(&[0.4, 0.3, 0.3], total);
+            assert_eq!(b.iter().sum::<u64>(), total);
+        }
+        // floored budgets of exactly 2^63 each: their u64 sum would
+        // overflow if the accounting were not u128
+        let b = apportion(&[0.5, 0.5], u64::MAX);
+        assert_eq!(b.iter().sum::<u64>(), u64::MAX);
+    }
+
+    #[test]
+    fn split_plan_even_budgets_and_single_chunk_seed() {
+        let plan = SplitPlan::even(10, 1, 42, |_i, budget, seed| {
+            let mut e = EdgeList::new(PartiteSpec::square(4));
+            e.push(budget, seed);
+            Ok(e)
+        });
+        assert_eq!(plan.n_chunks(), 4);
+        let budgets: Vec<u64> = (0..4).map(|i| plan.sample(i).unwrap().src[0]).collect();
+        assert_eq!(budgets.iter().sum::<u64>(), 10);
+        // single-chunk plans degenerate to the raw seed
+        let one = SplitPlan::even(10, 0, 42, |_i, _b, seed| {
+            let mut e = EdgeList::new(PartiteSpec::square(4));
+            e.push(seed, seed);
+            Ok(e)
+        });
+        assert_eq!(one.n_chunks(), 1);
+        assert_eq!(one.sample(0).unwrap().src[0], 42);
+    }
+
+    #[test]
+    fn empty_and_tiny_budgets() {
+        // fewer edges than chunks: trailing zero chunks are trimmed
+        let plan = SplitPlan::even(3, 2, 7, |_i, budget, _s| {
+            let mut e = EdgeList::new(PartiteSpec::square(4));
+            for _ in 0..budget {
+                e.push(0, 0);
+            }
+            Ok(e)
+        });
+        assert_eq!(plan.n_chunks(), 3);
+        let runner = ParallelChunkRunner::new(4, 2);
+        let mut total = 0usize;
+        let got = runner
+            .run(&plan, &mut |c| {
+                total += c.edges.len();
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(got, 3);
+        assert_eq!(total, 3);
+    }
+}

@@ -59,8 +59,11 @@ impl<F> Registry<F> {
 
 /// The three component registries a pipeline resolves against.
 pub struct Registries {
+    /// Structure-generator factories, keyed by backend name.
     pub structure: Registry<StructureGeneratorFactory>,
+    /// Feature-generator factories (serve both the edge and node legs).
     pub features: Registry<FeatureGeneratorFactory>,
+    /// Aligner factories.
     pub aligners: Registry<AlignerFactory>,
 }
 

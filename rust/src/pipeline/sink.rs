@@ -60,7 +60,12 @@ impl SinkOutput {
 /// A consumer of generated structure chunks.
 ///
 /// [`Sink::edges`] errors abort generation early (workers stop at their
-/// next chunk boundary) and propagate out of the pipeline run.
+/// next chunk boundary) and propagate out of the pipeline run. When
+/// generation is driven by the
+/// [`ParallelChunkRunner`](crate::pipeline::parallel::ParallelChunkRunner)
+/// chunks arrive strictly in chunk-index order regardless of the worker
+/// count; sinks should nevertheless stay order-agnostic (as
+/// [`MemorySink`] is) so they also work when fed directly.
 pub trait Sink {
     /// Sink name (for logs / registry-style selection).
     fn name(&self) -> &'static str;
@@ -119,13 +124,23 @@ impl Sink for MemorySink {
 /// Streaming run report (rows of paper Table 3).
 #[derive(Clone, Debug)]
 pub struct StreamReport {
+    /// Total edges persisted.
     pub edges_written: u64,
+    /// Number of shard files written.
     pub shards: usize,
+    /// End-to-end wall-clock seconds.
     pub wall_secs: f64,
     /// Peak resident edge-buffer bytes, derived from the actual sizes of
-    /// the largest chunks that can be in flight at once (queue +
-    /// workers + the writer's chunk), at 16 B/edge.
+    /// the largest chunks that can be in flight at once (the parallel
+    /// runner's reorder window: queue + workers, plus the writer's
+    /// chunk), at 16 B/edge.
     pub peak_buffer_bytes: u64,
+    /// Seconds each pool worker spent sampling (indexed by worker id;
+    /// one entry on the sequential path). Lets throughput reports
+    /// attribute time to sampling vs. writing and keeps
+    /// `peak_buffer_bytes` honest about how many workers were live.
+    pub worker_busy_secs: Vec<f64>,
+    /// Shard output directory.
     pub out_dir: PathBuf,
 }
 
@@ -139,18 +154,31 @@ impl std::fmt::Display for StreamReport {
             self.wall_secs,
             self.edges_written as f64 / self.wall_secs.max(1e-9) / 1e6,
             self.peak_buffer_bytes as f64 / 1e6
-        )
+        )?;
+        if !self.worker_busy_secs.is_empty() {
+            let busiest = self.worker_busy_secs.iter().cloned().fold(0.0f64, f64::max);
+            write!(
+                f,
+                ", {} workers (busiest {:.2}s sampling)",
+                self.worker_busy_secs.len(),
+                busiest
+            )?;
+        }
+        Ok(())
     }
 }
 
 /// Writes each chunk to its own binary shard file under a directory.
 pub struct ShardSink {
     out_dir: PathBuf,
-    /// Upper bound on simultaneously resident chunks: full queue + one
-    /// finished chunk per worker + the one the writer holds.
+    /// Upper bound on simultaneously resident chunks: the parallel
+    /// runner's reorder window (full queue + one chunk per worker) + the
+    /// one the writer holds.
     max_inflight: usize,
     /// Largest `max_inflight` chunk edge-counts seen, descending.
     top_sizes: Vec<usize>,
+    /// Sampling seconds per worker id, aggregated from chunk provenance.
+    worker_busy: Vec<f64>,
     shards: usize,
     written: u64,
     t0: Instant,
@@ -164,6 +192,7 @@ impl ShardSink {
             out_dir: out_dir.to_path_buf(),
             max_inflight: chunks.queue_capacity.max(1) + chunks.workers.max(1) + 1,
             top_sizes: Vec::new(),
+            worker_busy: Vec::new(),
             shards: 0,
             written: 0,
             t0: Instant::now(),
@@ -177,6 +206,7 @@ impl ShardSink {
             shards: self.shards,
             wall_secs: self.t0.elapsed().as_secs_f64(),
             peak_buffer_bytes: self.top_sizes.iter().sum::<usize>() as u64 * 16,
+            worker_busy_secs: self.worker_busy.clone(),
             out_dir: self.out_dir.clone(),
         }
     }
@@ -192,6 +222,10 @@ impl Sink for ShardSink {
         io::write_binary(&path, &chunk.edges)?;
         self.written += chunk.edges.len() as u64;
         self.shards += 1;
+        if self.worker_busy.len() <= chunk.worker {
+            self.worker_busy.resize(chunk.worker + 1, 0.0);
+        }
+        self.worker_busy[chunk.worker] += chunk.sample_secs;
         // track the largest `max_inflight` chunk sizes (descending)
         let n = chunk.edges.len();
         let pos = self.top_sizes.binary_search_by(|x| n.cmp(x)).unwrap_or_else(|p| p);
@@ -217,7 +251,7 @@ mod tests {
         for i in 0..n {
             edges.push(i as u64 % 1024, (i as u64 * 7) % 1024);
         }
-        Chunk { index, edges }
+        Chunk { index, worker: index % 2, sample_secs: 0.25, edges }
     }
 
     #[test]
@@ -256,6 +290,10 @@ mod tests {
         assert_eq!(report.shards, 8);
         assert_eq!(report.edges_written, (100..108).sum::<usize>() as u64);
         assert_eq!(report.peak_buffer_bytes, (104 + 105 + 106 + 107) * 16);
+        // chunk provenance aggregates into per-worker busy time
+        assert_eq!(report.worker_busy_secs.len(), 2);
+        assert!((report.worker_busy_secs[0] - 1.0).abs() < 1e-9);
+        assert!((report.worker_busy_secs[1] - 1.0).abs() < 1e-9);
         let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
         assert_eq!(files.len(), 8);
         std::fs::remove_dir_all(&dir).ok();

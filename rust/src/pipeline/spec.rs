@@ -12,6 +12,8 @@
 //! dataset = "ieee-fraud"     # registry name (see `sgg datasets`)
 //! seed = 42
 //! scale = 2                  # nodes ×2, edges ×4 — or use [size]
+//! workers = 4                # parallel chunk-sampling threads
+//!                            # (default 1 = sequential, 0 = all cores)
 //!
 //! [structure]                # component sections: `backend` + params
 //! backend = "kronecker"
@@ -40,8 +42,11 @@ use std::path::{Path, PathBuf};
 /// A scalar parameter value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// Quoted string.
     Str(String),
+    /// Number (every TOML-subset numeric parses as f64).
     Num(f64),
+    /// `true` / `false`.
     Bool(bool),
 }
 
@@ -278,6 +283,10 @@ pub struct ScenarioSpec {
     pub size: SizeSpec,
     /// Generation seed.
     pub seed: u64,
+    /// Worker threads for chunked structure generation (the parallel
+    /// runner). 1 = sequential, 0 = one per core. Output is identical
+    /// for every value — only wall-clock changes.
+    pub workers: usize,
     /// Output sink.
     pub sink: SinkSpec,
 }
@@ -295,6 +304,7 @@ impl ScenarioSpec {
             aligner: ComponentSpec::new("learned"),
             size: SizeSpec::default(),
             seed: 0x5a6e,
+            workers: 1,
             sink: SinkSpec::Memory,
         }
     }
@@ -389,10 +399,11 @@ impl RawConfig {
                 "dataset_seed" => spec.dataset_seed = expect_u64(key, value)?,
                 "seed" => spec.seed = expect_u64(key, value)?,
                 "scale" => scale = Some(expect_u64(key, value)?),
+                "workers" => spec.workers = expect_u64(key, value)? as usize,
                 other => {
                     return Err(Error::Config(format!(
                         "unknown top-level key `{other}`; known: \
-                         name, dataset, dataset_seed, seed, scale"
+                         name, dataset, dataset_seed, seed, scale, workers"
                     )));
                 }
             }
@@ -439,7 +450,9 @@ impl RawConfig {
                                     prefix_levels: p
                                         .u64_or("prefix_levels", defaults.prefix_levels as u64)?
                                         as u32,
-                                    workers: p.usize_or("workers", defaults.workers)?,
+                                    // 0 = inherit the top-level `workers`
+                                    // key (resolved below)
+                                    workers: p.usize_or("workers", 0)?,
                                     queue_capacity: p
                                         .usize_or("queue_capacity", defaults.queue_capacity)?,
                                 },
@@ -473,6 +486,13 @@ impl RawConfig {
         };
         if spec.name.is_empty() {
             spec.name = format!("{}-scenario", spec.dataset);
+        }
+        // a [sink] section without its own `workers` inherits the
+        // top-level worker count
+        if let SinkSpec::Shards { chunks, .. } = &mut spec.sink {
+            if chunks.workers == 0 {
+                chunks.workers = spec.workers;
+            }
         }
         Ok(spec)
     }
@@ -689,6 +709,29 @@ mod tests {
         let spec =
             ScenarioSpec::parse("dataset = \"cora\"\nseed = 9007199254740991\n").unwrap();
         assert_eq!(spec.seed, (1u64 << 53) - 1);
+    }
+
+    #[test]
+    fn workers_key_parses_and_flows_into_shard_chunks() {
+        // default: sequential
+        let spec = ScenarioSpec::parse("dataset = \"cora\"").unwrap();
+        assert_eq!(spec.workers, 1);
+        // top-level key
+        let spec = ScenarioSpec::parse("dataset = \"cora\"\nworkers = 6\n").unwrap();
+        assert_eq!(spec.workers, 6);
+        // a [sink] without its own workers inherits the top-level count
+        let text = "dataset = \"cora\"\nworkers = 6\n[sink]\nkind = \"shards\"\n";
+        match ScenarioSpec::parse(text).unwrap().sink {
+            SinkSpec::Shards { chunks, .. } => assert_eq!(chunks.workers, 6),
+            other => panic!("wrong sink {other:?}"),
+        }
+        // an explicit [sink] workers wins over the top-level key
+        let text =
+            "dataset = \"cora\"\nworkers = 6\n[sink]\nkind = \"shards\"\nworkers = 2\n";
+        match ScenarioSpec::parse(text).unwrap().sink {
+            SinkSpec::Shards { chunks, .. } => assert_eq!(chunks.workers, 2),
+            other => panic!("wrong sink {other:?}"),
+        }
     }
 
     #[test]

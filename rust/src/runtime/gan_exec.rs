@@ -18,7 +18,9 @@ use std::rc::Rc;
 /// suffices for most datasets).
 #[derive(Clone, Copy, Debug)]
 pub struct GanTrainConfig {
+    /// Training epochs.
     pub epochs: usize,
+    /// Adam learning rate.
     pub lr: f32,
     /// Cap on train steps (keeps big sweeps bounded).
     pub max_steps: usize,

@@ -15,17 +15,22 @@ use std::rc::Rc;
 
 /// Feature width / class count compiled into the GNN artifacts.
 pub const FEAT: usize = 32;
+/// Class count compiled into the node-classification artifacts.
 pub const CLASSES: usize = 8;
+/// Edge-feature width compiled into the edge-classifier artifacts.
 pub const EDGE_FEAT: usize = 16;
 
 /// Which node-classification model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GnnKind {
+    /// Graph convolutional network.
     Gcn,
+    /// Graph attention network.
     Gat,
 }
 
 impl GnnKind {
+    /// Registry/artifact name (`"gcn"` / `"gat"`).
     pub fn name(&self) -> &'static str {
         match self {
             GnnKind::Gcn => "gcn",
@@ -42,6 +47,7 @@ pub struct DenseGraph {
     pub n_real: usize,
     /// Dense adjacency: normalized Â for GCN, 0/1 mask (+self loops) for GAT.
     pub a_gcn: Vec<f32>,
+    /// 0/1 adjacency mask (+ self loops) for GAT attention.
     pub a_mask: Vec<f32>,
     /// Node features (n × FEAT).
     pub x: Vec<f32>,
@@ -49,6 +55,7 @@ pub struct DenseGraph {
     pub y: Vec<f32>,
     /// Train/val masks.
     pub train_mask: Vec<f32>,
+    /// Validation mask.
     pub val_mask: Vec<f32>,
 }
 
@@ -121,11 +128,15 @@ pub fn prepare_dense(
 /// Result of one training run.
 #[derive(Clone, Debug, Default)]
 pub struct TrainResult {
+    /// Final training loss.
     pub loss: f32,
+    /// Final train accuracy.
     pub train_acc: f32,
+    /// Final validation accuracy.
     pub val_acc: f32,
     /// Seconds per epoch (mean over epochs) — the Table 4 measurement.
     pub secs_per_epoch: f64,
+    /// Epochs actually executed.
     pub epochs_run: usize,
 }
 
@@ -238,17 +249,26 @@ pub struct EdgeClfRunner {
 
 /// Inputs for the edge classifier, padded to (n, e).
 pub struct EdgeTask {
+    /// Normalized dense adjacency (n x n).
     pub a_gcn: Vec<f32>,
+    /// Node features (n x FEAT).
     pub x: Vec<f32>,
+    /// Edge source indices (padded to e).
     pub src: Vec<i32>,
+    /// Edge destination indices (padded to e).
     pub dst: Vec<i32>,
+    /// Edge features (e x EDGE_FEAT).
     pub edge_feat: Vec<f32>,
+    /// One-hot edge labels.
     pub y: Vec<f32>,
+    /// Train mask over edges.
     pub train_mask: Vec<f32>,
+    /// Validation mask over edges.
     pub val_mask: Vec<f32>,
 }
 
 impl EdgeClfRunner {
+    /// Build from the runtime's edge-classifier artifacts.
     pub fn new(rt: Rc<Runtime>) -> Result<Self> {
         let consts = rt.constants()?;
         let n = consts
@@ -267,6 +287,7 @@ impl EdgeClfRunner {
         Ok(EdgeClfRunner { rt, name, n, e, manifest, params })
     }
 
+    /// (node, edge) padding buckets of the compiled artifacts.
     pub fn buckets(&self) -> (usize, usize) {
         (self.n, self.e)
     }
@@ -349,6 +370,7 @@ impl EdgeClfRunner {
         Ok(EdgeTask { a_gcn: a, x, src, dst, edge_feat: ef, y, train_mask, val_mask })
     }
 
+    /// Re-initialize parameters for a fresh training run.
     pub fn reset(&mut self) -> Result<()> {
         self.params = self.rt.init_params(&self.name, &self.manifest)?;
         Ok(())

@@ -22,7 +22,9 @@ use std::cell::RefCell;
 /// side (`*.manifest.json`).
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
+    /// Parameter name.
     pub name: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 

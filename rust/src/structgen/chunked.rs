@@ -1,4 +1,4 @@
-//! Chunked, shared-nothing parallel generation (paper §10 / Appendix 10).
+//! Chunked, shared-nothing Kronecker generation (paper §10 / Appendix 10).
 //!
 //! For graphs that don't fit in memory, θ is factored as
 //! `θ_pref ⊗ θ_gen`: the first `prefix_levels` square levels form a prefix
@@ -9,23 +9,30 @@
 //! so chunk id spaces never overlap and the final graph is the
 //! concatenation of the chunks.
 //!
-//! Workers push finished chunks into a bounded channel ([`crate::util::
-//! threadpool::Bounded`]); a slow consumer (e.g. a disk writer) therefore
-//! back-pressures generation, bounding peak memory at
-//! `capacity × chunk_size` edges.
+//! The decomposition lives in [`KroneckerChunkPlan`]; execution —
+//! worker pool, bounded-channel backpressure, in-order delivery, error
+//! cancellation — is the shared
+//! [`ParallelChunkRunner`](crate::pipeline::parallel::ParallelChunkRunner)
+//! engine. Output is bit-identical for any worker count.
 
-use super::kronecker::KroneckerGen;
+use super::kronecker::{KroneckerGen, SamplerPlan};
 use super::theta::Level;
 use crate::graph::{EdgeList, PartiteSpec};
+use crate::pipeline::parallel::{apportion, ChunkPlan, ParallelChunkRunner};
 use crate::util::rng::Pcg64;
-use crate::util::threadpool::Bounded;
 use crate::Result;
 
-/// One generated chunk: edges whose ids already include the prefix.
+/// One generated chunk: edges whose ids already include the prefix, plus
+/// provenance the streaming report aggregates.
 #[derive(Debug)]
 pub struct Chunk {
     /// Chunk index in [0, 4^prefix_levels).
     pub index: usize,
+    /// Pool worker that sampled this chunk (0 on the sequential path).
+    pub worker: usize,
+    /// Wall-clock seconds the worker spent sampling this chunk; feeds the
+    /// per-worker timing in [`crate::pipeline::StreamReport`].
+    pub sample_secs: f64,
     /// Edges of this chunk (global ids).
     pub edges: EdgeList,
 }
@@ -35,7 +42,7 @@ pub struct Chunk {
 pub struct ChunkConfig {
     /// Number of square levels consumed by the prefix (chunks = 4^levels).
     pub prefix_levels: u32,
-    /// Worker thread count.
+    /// Worker thread count (1 = sequential on the caller thread).
     pub workers: usize,
     /// Bounded channel capacity (chunks in flight) — the backpressure knob.
     pub queue_capacity: usize,
@@ -73,9 +80,119 @@ pub fn prefix_weights(levels: &[Level], prefix_levels: u32) -> Vec<f64> {
     weights
 }
 
-/// Run chunked generation, streaming chunks into `sink`. Returns the total
-/// number of edges produced. The sink runs on the caller thread; workers
-/// block when `queue_capacity` chunks are waiting (backpressure).
+/// The Kronecker prefix decomposition as a [`ChunkPlan`]: per-chunk
+/// integer edge budgets (largest-remainder apportionment of the prefix
+/// weights), the compiled suffix sampler shared by every chunk, and the
+/// per-chunk prefix bits. Each chunk samples on its own PRNG stream
+/// (`Pcg64::with_stream(seed, index + 1)`), so the plan is deterministic
+/// in the seed regardless of scheduling.
+pub struct KroneckerChunkPlan {
+    spec: PartiteSpec,
+    budgets: Vec<u64>,
+    sampler: SamplerPlan,
+    prefix_levels: u32,
+    /// Suffix (chunk-local) source / destination address bits.
+    suf_rb: u32,
+    suf_db: u32,
+    n_src: u64,
+    n_dst: u64,
+    seed: u64,
+}
+
+impl KroneckerChunkPlan {
+    /// Build the decomposition for `total_edges` edges over an
+    /// `n_src × n_dst` id space. `prefix_levels` is clamped to the shared
+    /// (square) levels of the cascade.
+    pub fn new(
+        gen: &KroneckerGen,
+        n_src: u64,
+        n_dst: u64,
+        total_edges: u64,
+        seed: u64,
+        prefix_levels: u32,
+    ) -> KroneckerChunkPlan {
+        let (rb, db) = KroneckerGen::bits(n_src, n_dst);
+        let shared = rb.min(db);
+        let prefix_levels = prefix_levels.min(shared);
+        let mut level_rng = Pcg64::new(seed);
+        let levels = gen.levels(rb, db, &mut level_rng);
+        let weights = prefix_weights(&levels, prefix_levels);
+        let budgets = apportion(&weights, total_edges);
+        let suffix_levels: Vec<Level> =
+            levels.iter().skip(prefix_levels as usize).copied().collect();
+        let spec = if gen.spec.square {
+            PartiteSpec::square(n_src)
+        } else {
+            PartiteSpec::bipartite(n_src, n_dst)
+        };
+        KroneckerChunkPlan {
+            spec,
+            budgets,
+            sampler: KroneckerGen::plan(&suffix_levels),
+            prefix_levels,
+            suf_rb: rb - prefix_levels,
+            suf_db: db - prefix_levels,
+            n_src,
+            n_dst,
+            seed,
+        }
+    }
+}
+
+impl ChunkPlan for KroneckerChunkPlan {
+    fn n_chunks(&self) -> usize {
+        self.budgets.len()
+    }
+
+    fn sample(&self, ci: usize) -> Result<EdgeList> {
+        let count = self.budgets[ci];
+        let mut edges = EdgeList::with_capacity(self.spec, count as usize);
+        if count == 0 {
+            return Ok(edges);
+        }
+        // prefix bits of this chunk: pairs of (src, dst) bits, most
+        // significant first
+        let mut pre_s = 0u64;
+        let mut pre_d = 0u64;
+        for l in 0..self.prefix_levels {
+            let quad = (ci >> (2 * (self.prefix_levels - 1 - l))) & 3;
+            pre_s = (pre_s << 1) | (quad >> 1) as u64;
+            pre_d = (pre_d << 1) | (quad & 1) as u64;
+        }
+        let mut rng = Pcg64::with_stream(self.seed, ci as u64 + 1);
+        // sample in chunk-local suffix space, then prepend the prefix
+        let mut produced = 0u64;
+        let max_attempts = count.saturating_mul(64).max(1024);
+        let mut attempts = 0u64;
+        while produced < count && attempts < max_attempts {
+            attempts += 1;
+            let (su, sv) = self.sampler.sample(&mut rng);
+            let u = (pre_s << self.suf_rb) | su;
+            let v = (pre_d << self.suf_db) | sv;
+            if u < self.n_src && v < self.n_dst {
+                edges.push(u, v);
+                produced += 1;
+            }
+        }
+        // pathological rejection: fill uniformly inside the chunk's own
+        // id range so prefixes never collide
+        while produced < count {
+            let u = ((pre_s << self.suf_rb) | rng.below(1u64 << self.suf_rb))
+                .min(self.n_src - 1);
+            let v = ((pre_d << self.suf_db) | rng.below(1u64 << self.suf_db))
+                .min(self.n_dst - 1);
+            edges.push(u, v);
+            produced += 1;
+        }
+        Ok(edges)
+    }
+}
+
+/// Run chunked generation, streaming chunks into `sink` in chunk-index
+/// order. Returns the total number of edges produced. With
+/// `cfg.workers > 1` chunks are sampled concurrently on a worker pool;
+/// the output is bit-identical to `workers == 1` because every chunk has
+/// its own PRNG stream and the writer re-orders delivery.
 ///
 /// A sink error aborts generation early: in-flight workers stop at their
 /// next chunk boundary, remaining chunks are never sampled, and the error
@@ -92,137 +209,8 @@ pub fn generate_chunked<F>(
 where
     F: FnMut(Chunk) -> Result<()>,
 {
-    let (rb, db) = KroneckerGen::bits(n_src, n_dst);
-    let shared = rb.min(db);
-    let prefix_levels = cfg.prefix_levels.min(shared);
-    let mut level_rng = Pcg64::new(seed);
-    let levels = gen.levels(rb, db, &mut level_rng);
-    let weights = prefix_weights(&levels, prefix_levels);
-    let n_chunks = weights.len();
-
-    // integer edge budget per chunk: floor + largest-remainder correction
-    let mut budgets: Vec<u64> = weights
-        .iter()
-        .map(|w| (w * total_edges as f64).floor() as u64)
-        .collect();
-    let assigned: u64 = budgets.iter().sum();
-    let mut remainder = total_edges - assigned;
-    let mut order: Vec<usize> = (0..n_chunks).collect();
-    order.sort_by(|&i, &j| {
-        let fi = weights[i] * total_edges as f64 - budgets[i] as f64;
-        let fj = weights[j] * total_edges as f64 - budgets[j] as f64;
-        fj.partial_cmp(&fi).unwrap()
-    });
-    for &i in &order {
-        if remainder == 0 {
-            break;
-        }
-        budgets[i] += 1;
-        remainder -= 1;
-    }
-
-    let spec = if gen.spec.square {
-        PartiteSpec::square(n_src)
-    } else {
-        PartiteSpec::bipartite(n_src, n_dst)
-    };
-    let suffix_levels: Vec<Level> = levels.iter().skip(prefix_levels as usize).copied().collect();
-    let chan: Bounded<Chunk> = Bounded::new(cfg.queue_capacity.max(1));
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let total_out = std::sync::atomic::AtomicU64::new(0);
-    let abort = std::sync::atomic::AtomicBool::new(false);
-    let mut sink_err: Option<crate::Error> = None;
-
-    // suffix space: chunk-local ids before the prefix is prepended
-    let suf_rb = rb - prefix_levels;
-    let suf_db = db - prefix_levels;
-
-    std::thread::scope(|s| {
-        for _ in 0..cfg.workers.max(1) {
-            let tx = chan.clone();
-            let budgets = &budgets;
-            let suffix_levels = &suffix_levels;
-            let next = &next;
-            let total_out = &total_out;
-            let abort = &abort;
-            s.spawn(move || {
-                loop {
-                    let ci = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if ci >= n_chunks || abort.load(std::sync::atomic::Ordering::Relaxed) {
-                        break;
-                    }
-                    let count = budgets[ci];
-                    if count == 0 {
-                        continue;
-                    }
-                    // prefix bits of this chunk: pairs of (src,dst) bits,
-                    // most significant first
-                    let mut pre_s = 0u64;
-                    let mut pre_d = 0u64;
-                    for l in 0..prefix_levels {
-                        let quad = (ci >> (2 * (prefix_levels - 1 - l))) & 3;
-                        pre_s = (pre_s << 1) | (quad >> 1) as u64;
-                        pre_d = (pre_d << 1) | (quad & 1) as u64;
-                    }
-                    let mut rng = Pcg64::with_stream(seed, ci as u64 + 1);
-                    let mut edges = EdgeList::with_capacity(spec, count as usize);
-                    let plan = KroneckerGen::plan(suffix_levels);
-                    // sample in chunk-local suffix space, then prepend prefix
-                    let mut produced = 0u64;
-                    let max_attempts = count.saturating_mul(64).max(1024);
-                    let mut attempts = 0u64;
-                    while produced < count && attempts < max_attempts {
-                        attempts += 1;
-                        let (su, sv) = plan.sample(&mut rng);
-                        let u = (pre_s << suf_rb) | su;
-                        let v = (pre_d << suf_db) | sv;
-                        if u < n_src && v < n_dst {
-                            edges.push(u, v);
-                            produced += 1;
-                        }
-                    }
-                    // pathological rejection: fill uniformly inside the
-                    // chunk's own id range so prefixes never collide
-                    while produced < count {
-                        let u = ((pre_s << suf_rb) | rng.below(1u64 << suf_rb)).min(n_src - 1);
-                        let v = ((pre_d << suf_db) | rng.below(1u64 << suf_db)).min(n_dst - 1);
-                        edges.push(u, v);
-                        produced += 1;
-                    }
-                    total_out.fetch_add(produced, std::sync::atomic::Ordering::Relaxed);
-                    if tx.send(Chunk { index: ci, edges }).is_err() {
-                        break;
-                    }
-                }
-            });
-        }
-        // consume on the caller thread; completion is detected by counting
-        // chunks (workers send exactly one chunk per nonzero budget)
-        let consumer_chan = chan.clone();
-        let mut consumed = 0usize;
-        let expected: usize = budgets.iter().filter(|&&b| b > 0).count();
-        while consumed < expected {
-            match consumer_chan.recv() {
-                Some(chunk) => {
-                    consumed += 1;
-                    if let Err(e) = sink(chunk) {
-                        // abort early: stop workers at their next chunk
-                        // boundary instead of sampling the rest into a void
-                        sink_err = Some(e);
-                        abort.store(true, std::sync::atomic::Ordering::Relaxed);
-                        break;
-                    }
-                }
-                None => break,
-            }
-        }
-        chan.close();
-    });
-
-    if let Some(e) = sink_err {
-        return Err(e);
-    }
-    Ok(total_out.load(std::sync::atomic::Ordering::Relaxed))
+    let plan = KroneckerChunkPlan::new(gen, n_src, n_dst, total_edges, seed, cfg.prefix_levels);
+    ParallelChunkRunner::from_config(cfg).run(&plan, &mut sink)
 }
 
 /// Convenience: chunked generation collected into a single [`EdgeList`].
@@ -336,15 +324,27 @@ mod tests {
     }
 
     #[test]
-    fn deterministic_given_seed() {
+    fn deterministic_given_seed_and_in_order() {
         let g = gen();
         let cfg = ChunkConfig { prefix_levels: 2, workers: 4, queue_capacity: 2 };
-        let mut a = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, cfg).unwrap();
-        let mut b = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, cfg).unwrap();
-        // chunk arrival order may differ; compare as sorted sets
-        a.sort_dedup();
-        b.sort_dedup();
+        let a = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, cfg).unwrap();
+        let b = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, cfg).unwrap();
+        // the runner delivers chunks in index order, so runs are equal
+        // edge-for-edge — no multiset normalization needed
         assert_eq!(a.src, b.src);
         assert_eq!(a.dst, b.dst);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_output() {
+        let g = gen();
+        let base = ChunkConfig { prefix_levels: 2, workers: 1, queue_capacity: 2 };
+        let seq = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, base).unwrap();
+        for workers in [2, 4, 8] {
+            let cfg = ChunkConfig { workers, ..base };
+            let par = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, cfg).unwrap();
+            assert_eq!(seq.src, par.src, "workers={workers}");
+            assert_eq!(seq.dst, par.dst, "workers={workers}");
+        }
     }
 }

@@ -236,7 +236,9 @@ impl StructureGenerator for KroneckerGen {
     }
 
     /// Out-of-core override: prefix-partitioned chunked sampling
-    /// ([`super::chunked`], paper §10) with bounded peak memory.
+    /// ([`super::chunked::KroneckerChunkPlan`], paper §10) executed by the
+    /// shared [`crate::pipeline::parallel::ParallelChunkRunner`] — bounded
+    /// peak memory, and bit-identical output for any worker count.
     fn generate_into(
         &self,
         n_src: u64,

@@ -35,6 +35,7 @@ pub mod theta;
 pub mod trilliong;
 
 use crate::graph::{EdgeList, PartiteSpec};
+use crate::pipeline::parallel::{ParallelChunkRunner, SplitPlan};
 use crate::pipeline::registry::Registry;
 use crate::pipeline::spec::Params;
 use crate::Result;
@@ -72,22 +73,33 @@ pub trait StructureGenerator: Send + Sync {
     }
 
     /// Stream generation into `sink` chunk by chunk, returning the total
-    /// edge count. The default produces one chunk (whole graph in memory);
-    /// out-of-core generators override it with bounded-memory chunking.
-    /// A sink error aborts generation and propagates.
+    /// edge count. A sink error aborts generation and propagates.
+    ///
+    /// The default decomposition splits the edge budget into
+    /// `4^prefix_levels` near-equal chunks, each sampled independently by
+    /// [`Self::generate_sized`] on its own
+    /// [`chunk_seed`](crate::pipeline::parallel::chunk_seed) stream, and
+    /// executes the plan on the shared [`ParallelChunkRunner`] — so every
+    /// backend parallelizes when `chunks.workers > 1`, with output
+    /// bit-identical across worker counts. This even split is only
+    /// distribution-faithful for edge-i.i.d. samplers; generators with
+    /// sequential structure override it (Kronecker uses the §10 prefix
+    /// partition, TrillionG partitions the source-node space). With
+    /// `prefix_levels = 0` the plan has a single chunk on the raw seed —
+    /// exactly the old one-shot `generate_sized` behaviour.
     fn generate_into(
         &self,
         n_src: u64,
         n_dst: u64,
         edges: u64,
         seed: u64,
-        _chunks: ChunkConfig,
+        chunks: ChunkConfig,
         sink: &mut dyn FnMut(Chunk) -> Result<()>,
     ) -> Result<u64> {
-        let out = self.generate_sized(n_src, n_dst, edges, seed)?;
-        let n = out.len() as u64;
-        sink(Chunk { index: 0, edges: out })?;
-        Ok(n)
+        let plan = SplitPlan::even(edges, chunks.prefix_levels, seed, |_i, budget, seed| {
+            self.generate_sized(n_src, n_dst, budget, seed)
+        });
+        ParallelChunkRunner::from_config(chunks).run(&plan, sink)
     }
 }
 

@@ -15,6 +15,7 @@ use crate::util::rng::Pcg64;
 /// `n_f` of eq. 25 (0 = no noise, 1 = full range).
 #[derive(Clone, Copy, Debug)]
 pub struct NoiseConfig {
+    /// Fraction of the maximal admissible noise range to use.
     pub amplitude: f64,
 }
 

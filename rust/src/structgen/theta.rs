@@ -7,9 +7,13 @@
 /// marginal, θ_H).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ThetaS {
+    /// Top-left quadrant mass.
     pub a: f64,
+    /// Top-right quadrant mass.
     pub b: f64,
+    /// Bottom-left quadrant mass.
     pub c: f64,
+    /// Bottom-right quadrant mass.
     pub d: f64,
 }
 

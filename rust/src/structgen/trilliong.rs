@@ -10,11 +10,13 @@
 //! multinomial over the per-source probabilities implied by θ, and
 //! destination descent reuses the source's quadrant path conditioning.
 
+use super::chunked::{Chunk, ChunkConfig};
 use super::kronecker::KroneckerGen;
 use super::theta::ThetaS;
 use super::StructureGenerator;
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
+use crate::pipeline::parallel::{apportion, ChunkPlan, ParallelChunkRunner};
 use crate::util::rng::Pcg64;
 
 /// TrillionG-style generator with a fitted (or default R-MAT) seed.
@@ -39,42 +41,44 @@ impl TrillionG {
     pub fn with_default_seed(spec: PartiteSpec, edges: u64) -> Self {
         TrillionG { theta: ThetaS::rmat_default(), spec, edges }
     }
-}
 
-impl StructureGenerator for TrillionG {
-    fn name(&self) -> &'static str {
-        "trilliong"
-    }
-
-    fn base(&self) -> (PartiteSpec, u64) {
-        (self.spec, self.edges)
-    }
-
-    fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {
-        if n_src == 0 || n_dst == 0 {
-            return Err(Error::Config("empty partite".into()));
-        }
-        let (rb, db) = KroneckerGen::bits(n_src, n_dst);
-        let p = self.theta.p(); // P(source bit = 0)
-        let q = self.theta.q();
-        let mut rng = Pcg64::new(seed);
-        let spec = if self.spec.square {
+    /// Output partite spec for the requested sizes.
+    fn out_spec(&self, n_src: u64, n_dst: u64) -> PartiteSpec {
+        if self.spec.square {
             PartiteSpec::square(n_src)
         } else {
             PartiteSpec::bipartite(n_src, n_dst)
-        };
-        let mut out = EdgeList::with_capacity(spec, edges as usize);
+        }
+    }
 
-        // Node-centric pass: walk source nodes; expected out-degree of u is
-        // E * pi_u with pi_u = prod over bits. Draw Binomial via Poisson
-        // approximation (exact for the sparse regime TrillionG targets),
-        // then sample destinations conditioned on u's path: per square
-        // level, P(dst bit = 0 | src bit) = a/(a+b) or c/(c+d).
+    /// Node-centric sampling over the source range `[lo, hi)` with an
+    /// exact `budget` edge count: expected out-degree of u is
+    /// `total_edges · π_u` with `π_u` a product over u's address bits;
+    /// out-degrees are Poisson draws clamped to the range budget, the
+    /// range's last node absorbs the remainder, and destinations descend
+    /// the column distribution conditioned on u's bits. Both the one-shot
+    /// path (`lo = 0`, `hi = n_src`) and the chunked plan share this loop,
+    /// so chunked output at one chunk equals the sequential output.
+    #[allow(clippy::too_many_arguments)]
+    fn sample_range(
+        &self,
+        rb: u32,
+        db: u32,
+        n_dst: u64,
+        lo: u64,
+        hi: u64,
+        budget: u64,
+        total_edges: u64,
+        rng: &mut Pcg64,
+        out: &mut EdgeList,
+    ) {
+        let p = self.theta.p(); // P(source bit = 0)
+        let q = self.theta.q();
         let t = self.theta;
         let cond0 = t.a / (t.a + t.b); // src bit 0
         let cond1 = t.c / (t.c + t.d); // src bit 1
-        let mut remaining = edges;
-        for u in 0..n_src {
+        let mut remaining = budget;
+        for u in lo..hi {
             if remaining == 0 {
                 break;
             }
@@ -82,10 +86,10 @@ impl StructureGenerator for TrillionG {
             let ones = (u & ((1u64 << rb) - 1)).count_ones() as f64;
             let zeros = rb as f64 - ones;
             let ln_pi = zeros * p.ln() + ones * (1.0 - p).ln();
-            let lambda = edges as f64 * ln_pi.exp();
+            let lambda = total_edges as f64 * ln_pi.exp();
             let mut d_u = rng.poisson(lambda).min(remaining);
-            if u == n_src - 1 {
-                d_u = remaining; // exact total edge count
+            if u == hi - 1 {
+                d_u = remaining; // exact edge count for this range
             }
             for _ in 0..d_u {
                 // destination descent conditioned on u's source bits
@@ -108,7 +112,135 @@ impl StructureGenerator for TrillionG {
             }
             remaining -= d_u;
         }
+    }
+}
+
+/// TrillionG's chunk decomposition: the source-id space is partitioned by
+/// its top `pb` address bits into `2^pb` contiguous ranges (so chunk
+/// concatenation stays source-sorted, like the sequential node walk), and
+/// the edge budget is apportioned by each range's closed-form expected
+/// mass `p^zeros(c) · (1-p)^ones(c)`. Each chunk samples its range on its
+/// own PRNG stream.
+struct TrillionGChunkPlan {
+    gen: TrillionG,
+    spec: PartiteSpec,
+    budgets: Vec<u64>,
+    rb: u32,
+    db: u32,
+    /// Source address bits left to the suffix (range width = 2^suf_bits).
+    suf_bits: u32,
+    n_src: u64,
+    n_dst: u64,
+    total_edges: u64,
+    seed: u64,
+}
+
+impl ChunkPlan for TrillionGChunkPlan {
+    fn n_chunks(&self) -> usize {
+        self.budgets.len()
+    }
+
+    fn sample(&self, ci: usize) -> Result<EdgeList> {
+        let budget = self.budgets[ci];
+        let lo = (ci as u64) << self.suf_bits;
+        let hi = ((ci as u64 + 1) << self.suf_bits).min(self.n_src);
+        let mut out = EdgeList::with_capacity(self.spec, budget as usize);
+        if budget == 0 || lo >= self.n_src {
+            return Ok(out);
+        }
+        // a single-chunk plan degenerates to the raw job seed so that
+        // `generate_into` at `prefix_levels = 0` reproduces
+        // `generate_sized` exactly (same contract as `SplitPlan::even`)
+        let mut rng = if self.budgets.len() == 1 {
+            Pcg64::new(self.seed)
+        } else {
+            Pcg64::with_stream(self.seed, ci as u64 + 1)
+        };
+        self.gen.sample_range(
+            self.rb,
+            self.db,
+            self.n_dst,
+            lo,
+            hi,
+            budget,
+            self.total_edges,
+            &mut rng,
+            &mut out,
+        );
         Ok(out)
+    }
+}
+
+impl StructureGenerator for TrillionG {
+    fn name(&self) -> &'static str {
+        "trilliong"
+    }
+
+    fn base(&self) -> (PartiteSpec, u64) {
+        (self.spec, self.edges)
+    }
+
+    /// Node-centric pass over all source nodes (see
+    /// `TrillionG::sample_range` for the per-node Poisson out-degree +
+    /// conditioned destination descent).
+    fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {
+        if n_src == 0 || n_dst == 0 {
+            return Err(Error::Config("empty partite".into()));
+        }
+        let (rb, db) = KroneckerGen::bits(n_src, n_dst);
+        let mut rng = Pcg64::new(seed);
+        let mut out = EdgeList::with_capacity(self.out_spec(n_src, n_dst), edges as usize);
+        self.sample_range(rb, db, n_dst, 0, n_src, edges, edges, &mut rng, &mut out);
+        Ok(out)
+    }
+
+    /// Out-of-core override: node-centric chunking. The source space is
+    /// partitioned into contiguous bit-prefix ranges (TrillionG's
+    /// "recursive vector" workers own disjoint node ranges), each sampled
+    /// independently on its own PRNG stream and executed by the shared
+    /// [`ParallelChunkRunner`]. Chunk concatenation stays source-sorted
+    /// and the output is bit-identical for any worker count.
+    fn generate_into(
+        &self,
+        n_src: u64,
+        n_dst: u64,
+        edges: u64,
+        seed: u64,
+        chunks: ChunkConfig,
+        sink: &mut dyn FnMut(Chunk) -> Result<()>,
+    ) -> Result<u64> {
+        if n_src == 0 || n_dst == 0 {
+            return Err(Error::Config("empty partite".into()));
+        }
+        let (rb, db) = KroneckerGen::bits(n_src, n_dst);
+        // two source bits per prefix level matches the 4^levels chunk
+        // count of the Kronecker prefix scheme
+        let pb = (2 * chunks.prefix_levels).min(rb);
+        let n_chunks = 1usize << pb;
+        let suf_bits = rb - pb;
+        let p = self.theta.p();
+        let weights: Vec<f64> = (0..n_chunks)
+            .map(|c| {
+                if (c as u64) << suf_bits >= n_src {
+                    return 0.0; // range entirely above the id space
+                }
+                let ones = (c as u64).count_ones();
+                p.powi((pb - ones) as i32) * (1.0 - p).powi(ones as i32)
+            })
+            .collect();
+        let plan = TrillionGChunkPlan {
+            gen: *self,
+            spec: self.out_spec(n_src, n_dst),
+            budgets: apportion(&weights, edges),
+            rb,
+            db,
+            suf_bits,
+            n_src,
+            n_dst,
+            total_edges: edges,
+            seed,
+        };
+        ParallelChunkRunner::from_config(chunks).run(&plan, sink)
     }
 }
 
@@ -152,5 +284,46 @@ mod tests {
         assert!(fitted.theta.p() > 0.5);
         let g2 = fitted.generate(1, 4).unwrap();
         assert_eq!(g2.len(), 8_000);
+    }
+
+    #[test]
+    fn generate_into_is_worker_count_invariant() {
+        let g = TrillionG::with_default_seed(PartiteSpec::square(1 << 10), 20_000);
+        let collect = |workers: usize| {
+            let cfg = ChunkConfig { prefix_levels: 2, workers, queue_capacity: 2 };
+            let mut out = EdgeList::new(PartiteSpec::square(1 << 10));
+            let total = g
+                .generate_into(1 << 10, 1 << 10, 20_000, 11, cfg, &mut |c| {
+                    out.extend_from(&c.edges);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(total, 20_000);
+            out
+        };
+        let seq = collect(1);
+        assert_eq!(seq.len(), 20_000);
+        // a single-chunk plan (prefix_levels = 0) reproduces the
+        // one-shot sequential path exactly
+        let one_chunk_cfg = ChunkConfig { prefix_levels: 0, workers: 1, queue_capacity: 2 };
+        let mut one = EdgeList::new(PartiteSpec::square(1 << 10));
+        g.generate_into(1 << 10, 1 << 10, 20_000, 11, one_chunk_cfg, &mut |c| {
+            one.extend_from(&c.edges);
+            Ok(())
+        })
+        .unwrap();
+        let direct = g.generate_sized(1 << 10, 1 << 10, 20_000, 11).unwrap();
+        assert_eq!(one.src, direct.src);
+        assert_eq!(one.dst, direct.dst);
+        // node-range chunking keeps the concatenation source-sorted,
+        // like the sequential node walk
+        let mut sorted = seq.src.clone();
+        sorted.sort_unstable();
+        assert_eq!(seq.src, sorted);
+        for workers in [2, 4] {
+            let par = collect(workers);
+            assert_eq!(seq.src, par.src, "workers={workers}");
+            assert_eq!(seq.dst, par.dst, "workers={workers}");
+        }
     }
 }

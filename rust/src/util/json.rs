@@ -11,10 +11,15 @@ use std::fmt;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number (f64, like real JSON).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
     /// Object. BTreeMap gives deterministic serialization order.
     Obj(BTreeMap<String, Json>),
@@ -26,6 +31,7 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -33,6 +39,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -40,6 +47,7 @@ impl Json {
         }
     }
 
+    /// Bool value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -47,6 +55,7 @@ impl Json {
         }
     }
 
+    /// Array slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -54,6 +63,7 @@ impl Json {
         }
     }
 
+    /// Key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),

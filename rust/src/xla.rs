@@ -40,7 +40,9 @@ enum Storage {
 /// Scalar types a [`Literal`] can hold. Sealed to the two element types
 /// the runtime actually moves across the boundary.
 pub trait Element: Copy + Sized {
+    /// Move a typed vector into untyped storage.
     fn wrap(data: Vec<Self>) -> Storage;
+    /// Copy the typed vector back out (`None` on element-type mismatch).
     fn unwrap(storage: &Storage) -> Option<Vec<Self>>;
 }
 
@@ -135,6 +137,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap an HLO proto (stub: the proto is not retained).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -161,6 +164,7 @@ impl PjRtClient {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Unreachable in the stub: no executable can be constructed.
     pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         unavailable("PjRtLoadedExecutable::execute")
     }
@@ -170,6 +174,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Unreachable in the stub: no buffer can be constructed.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         unavailable("PjRtBuffer::to_literal_sync")
     }
