@@ -1,0 +1,81 @@
+//! Bench: `.sggm` model-artifact save/load throughput.
+//!
+//! Fits the default pipeline on a stand-in dataset, then measures
+//! `FittedPipeline::save` and `FittedPipeline::load` wall-clock over
+//! several repetitions, verifies generate-after-load is bit-identical to
+//! generate-after-fit, and emits `BENCH_artifact.json` — CI uploads it
+//! as an artifact and a snapshot is tracked at the repo root.
+//!
+//! Run: `cargo bench --bench bench_artifact`
+//! Knobs: `SGG_BENCH_DATASET` (default "ieee-fraud"), `SGG_BENCH_REPS`
+//! (default 5).
+
+use sgg::pipeline::{FittedPipeline, Pipeline, Registries};
+use sgg::util::json::Json;
+
+fn main() {
+    let dataset =
+        std::env::var("SGG_BENCH_DATASET").unwrap_or_else(|_| "ieee-fraud".to_string());
+    let reps: usize = std::env::var("SGG_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+
+    let ds = sgg::datasets::load(&dataset, 1).expect("load dataset");
+    let t0 = std::time::Instant::now();
+    let fitted = Pipeline::builder().fit(&ds).expect("fit");
+    let fit_secs = t0.elapsed().as_secs_f64();
+
+    let path = std::env::temp_dir().join(format!("sgg_bench_artifact_{}.sggm", std::process::id()));
+    let regs = Registries::builtin();
+
+    let mut save_secs = 0.0f64;
+    let mut load_secs = 0.0f64;
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        fitted.save(&path).expect("save");
+        save_secs += t.elapsed().as_secs_f64();
+        let t = std::time::Instant::now();
+        let _loaded = FittedPipeline::load(&path, &regs).expect("load");
+        load_secs += t.elapsed().as_secs_f64();
+    }
+    save_secs /= reps as f64;
+    load_secs /= reps as f64;
+    let artifact_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+
+    // contract check: load-then-generate == fit-then-generate, bit-exact
+    let loaded = FittedPipeline::load(&path, &regs).expect("load");
+    let a = fitted.generate(1, 7).expect("generate (fit)");
+    let b = loaded.generate(1, 7).expect("generate (load)");
+    let identical = a.edges.src == b.edges.src
+        && a.edges.dst == b.edges.dst
+        && a.edge_features == b.edge_features
+        && a.node_features == b.node_features;
+    assert!(identical, "artifact round-trip changed the generated output");
+    std::fs::remove_file(&path).ok();
+
+    println!(
+        "[bench] {dataset}: fit {fit_secs:.2}s, save {:.1}ms, load {:.1}ms, {artifact_bytes} bytes",
+        save_secs * 1e3,
+        load_secs * 1e3
+    );
+    let out = Json::obj(vec![
+        ("dataset", Json::from(dataset.as_str())),
+        ("fit_secs", Json::from(fit_secs)),
+        ("save_ms", Json::from(save_secs * 1e3)),
+        ("load_ms", Json::from(load_secs * 1e3)),
+        ("artifact_bytes", Json::from(artifact_bytes)),
+        (
+            "artifact_mb_per_sec_save",
+            Json::from(artifact_bytes as f64 / 1e6 / save_secs.max(1e-9)),
+        ),
+        (
+            "artifact_mb_per_sec_load",
+            Json::from(artifact_bytes as f64 / 1e6 / load_secs.max(1e-9)),
+        ),
+        ("roundtrip_bit_identical", Json::from(identical)),
+        ("reps", Json::from(reps)),
+    ]);
+    std::fs::write("BENCH_artifact.json", format!("{out}\n")).expect("write BENCH_artifact.json");
+    println!("[bench] wrote BENCH_artifact.json");
+}

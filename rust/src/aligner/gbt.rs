@@ -10,7 +10,9 @@
 //! Categorical targets are handled one-vs-rest by
 //! [`GbtClassifier`], matching "a separate model per feature" in App. 7.
 
+use crate::util::json::Json;
 use crate::util::threadpool::{default_threads, par_map};
+use crate::{Error, Result};
 
 /// GBT hyper-parameters (defaults from paper §12).
 #[derive(Clone, Debug)]
@@ -68,6 +70,77 @@ struct Tree {
 }
 
 impl Tree {
+    /// Parallel-array artifact encoding (one entry per node).
+    fn to_json(&self) -> Json {
+        fn col<T: Into<Json>>(nodes: &[Node], f: impl Fn(&Node) -> T) -> Json {
+            Json::Arr(nodes.iter().map(|n| f(n).into()).collect())
+        }
+        Json::obj(vec![
+            ("feature", col(&self.nodes, |n| n.feature)),
+            ("threshold", col(&self.nodes, |n| n.threshold as u32)),
+            ("left", col(&self.nodes, |n| n.left)),
+            ("right", col(&self.nodes, |n| n.right)),
+            ("value", col(&self.nodes, |n| n.value)),
+            ("leaf", col(&self.nodes, |n| n.is_leaf)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Tree> {
+        let feature = v.req_u32s("feature")?;
+        let threshold = v.req_u32s("threshold")?;
+        let left = v.req_u32s("left")?;
+        let right = v.req_u32s("right")?;
+        let value = v.req_f64s("value")?;
+        let leaf = v
+            .req_arr("leaf")?
+            .iter()
+            .map(|b| {
+                b.as_bool()
+                    .ok_or_else(|| Error::Data("artifact: tree `leaf` must hold bools".into()))
+            })
+            .collect::<Result<Vec<bool>>>()?;
+        let n = feature.len();
+        if [threshold.len(), left.len(), right.len(), value.len(), leaf.len()]
+            .iter()
+            .any(|&l| l != n)
+            || n == 0
+        {
+            return Err(Error::Data("artifact: tree node arrays empty or mismatched".into()));
+        }
+        let nodes = (0..n)
+            .map(|i| {
+                // children must point strictly forward: `grow` always
+                // pushes children after their parent, and enforcing it
+                // here makes `predict_binned`'s descent provably finite
+                // even on corrupted or adversarial artifacts
+                if !leaf[i]
+                    && (left[i] as usize >= n
+                        || right[i] as usize >= n
+                        || left[i] as usize <= i
+                        || right[i] as usize <= i)
+                {
+                    return Err(Error::Data(format!(
+                        "artifact: tree node {i} has non-forward child links"
+                    )));
+                }
+                if feature[i] > u16::MAX as u32 || threshold[i] > u8::MAX as u32 {
+                    return Err(Error::Data(format!(
+                        "artifact: tree node {i} feature/threshold out of range"
+                    )));
+                }
+                Ok(Node {
+                    feature: feature[i] as u16,
+                    threshold: threshold[i] as u8,
+                    left: left[i],
+                    right: right[i],
+                    value: value[i],
+                    is_leaf: leaf[i],
+                })
+            })
+            .collect::<Result<Vec<Node>>>()?;
+        Ok(Tree { nodes })
+    }
+
     fn predict_binned(&self, row: &[u8]) -> f64 {
         let mut i = 0usize;
         loop {
@@ -132,6 +205,33 @@ impl Binner {
     fn n_cols(&self) -> usize {
         self.edges.len()
     }
+
+    /// Artifact encoding: the per-feature bin-edge arrays.
+    fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "edges",
+            Json::Arr(self.edges.iter().map(|e| Json::from(e.clone())).collect()),
+        )])
+    }
+
+    fn from_json(v: &Json) -> Result<Binner> {
+        let edges = v
+            .req_arr("edges")?
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .ok_or_else(|| Error::Data("artifact: binner `edges` must hold arrays".into()))?
+                    .iter()
+                    .map(|x| {
+                        x.as_f64().ok_or_else(|| {
+                            Error::Data("artifact: binner edges must be numbers".into())
+                        })
+                    })
+                    .collect()
+            })
+            .collect::<Result<Vec<Vec<f64>>>>()?;
+        Ok(Binner { edges })
+    }
 }
 
 /// Gradient-boosted regressor with squared loss.
@@ -180,6 +280,51 @@ impl GbtRegressor {
                     .sum::<f64>()
     }
 
+    /// Serialize the fitted model for a `.sggm` artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("binner", self.binner.to_json()),
+            ("trees", Json::Arr(self.trees.iter().map(Tree::to_json).collect())),
+            ("base", Json::from(self.base)),
+            ("lr", Json::from(self.lr)),
+            ("n_cols", Json::from(self.n_cols)),
+        ])
+    }
+
+    /// Inverse of [`GbtRegressor::to_json`] — predictions of the loaded
+    /// model are bit-identical to the fitted one.
+    pub fn from_json(v: &Json) -> Result<GbtRegressor> {
+        let binner = Binner::from_json(v.req("binner")?)?;
+        let n_cols = v.req_usize("n_cols")?;
+        if binner.n_cols() != n_cols {
+            return Err(Error::Data(format!(
+                "artifact: gbt binner has {} feature columns, expected {n_cols}",
+                binner.n_cols()
+            )));
+        }
+        let trees = v
+            .req_arr("trees")?
+            .iter()
+            .map(Tree::from_json)
+            .collect::<Result<Vec<Tree>>>()?;
+        for t in &trees {
+            if let Some(node) = t.nodes.iter().find(|n| !n.is_leaf && n.feature as usize >= n_cols)
+            {
+                return Err(Error::Data(format!(
+                    "artifact: tree split on feature {} but model has {n_cols} columns",
+                    node.feature
+                )));
+            }
+        }
+        Ok(GbtRegressor {
+            binner,
+            trees,
+            base: v.req_f64("base")?,
+            lr: v.req_f64("lr")?,
+            n_cols,
+        })
+    }
+
     /// Predict many rows (row-major), parallelized.
     pub fn predict(&self, x: &[f64], n_rows: usize) -> Vec<f64> {
         let xb = self.binner.transform(x, n_rows, self.n_cols);
@@ -221,6 +366,25 @@ impl GbtClassifier {
             })
             .collect();
         GbtClassifier { models }
+    }
+
+    /// Serialize the one-vs-rest ensemble for a `.sggm` artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "models",
+            Json::Arr(self.models.iter().map(GbtRegressor::to_json).collect()),
+        )])
+    }
+
+    /// Inverse of [`GbtClassifier::to_json`].
+    pub fn from_json(v: &Json) -> Result<GbtClassifier> {
+        Ok(GbtClassifier {
+            models: v
+                .req_arr("models")?
+                .iter()
+                .map(GbtRegressor::from_json)
+                .collect::<Result<Vec<GbtRegressor>>>()?,
+        })
     }
 
     /// Per-class scores for many rows: row-major `n_rows × cardinality`.
@@ -440,6 +604,16 @@ mod tests {
         let m = GbtRegressor::fit(&x, &y, 3, &cfg);
         // depth-2 tree has at most 7 nodes
         assert!(m.trees[0].nodes.len() <= 7);
+    }
+
+    #[test]
+    fn json_roundtrip_predicts_identically() {
+        let (x, y) = make_xy(500, 11);
+        let m = GbtRegressor::fit(&x, &y, 3, &GbtConfig::fast());
+        // through the serialized *text*, like a real artifact on disk
+        let text = m.to_json().to_string();
+        let re = GbtRegressor::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m.predict(&x, 500), re.predict(&x, 500));
     }
 
     #[test]

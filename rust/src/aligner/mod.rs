@@ -26,6 +26,7 @@ use crate::featgen::FeatureTable;
 use crate::graph::EdgeList;
 use crate::pipeline::registry::Registry;
 use crate::pipeline::spec::Params;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::Result;
 use gbt::GbtConfig;
@@ -43,6 +44,11 @@ pub trait Aligner {
     /// Assign `pool` rows onto `structure`.
     fn align(&self, structure: &EdgeList, pool: &FeatureTable, seed: u64)
         -> Result<FeatureTable>;
+
+    /// Serialize the fitted state for a `.sggm` model artifact. The
+    /// state loader registered under [`Self::name`] must reconstruct an
+    /// aligner whose assignments are bit-identical for every seed.
+    fn save_state(&self) -> Result<Json>;
 }
 
 impl Aligner for LearnedAligner {
@@ -57,6 +63,10 @@ impl Aligner for LearnedAligner {
         seed: u64,
     ) -> Result<FeatureTable> {
         LearnedAligner::align(self, structure, pool, seed)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        LearnedAligner::save_state(self)
     }
 }
 
@@ -83,6 +93,10 @@ impl Aligner for RandomAligner {
         };
         random_alignment(pool, n_targets, seed)
     }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![("target", Json::from(self.target.as_state_str()))]))
+    }
 }
 
 /// Everything an aligner factory sees at fit time.
@@ -95,8 +109,8 @@ pub struct AlignerFitContext<'a> {
     pub target: Target,
     /// Backend parameters from the scenario spec / builder.
     pub params: &'a Params,
-    /// Typed GBT override (set by the legacy shim / builder); scalar
-    /// params like `trees` still apply on top.
+    /// Typed GBT override (set by the builder); scalar params like
+    /// `trees` still apply on top.
     pub gbt: Option<&'a GbtConfig>,
     /// Typed structural-feature override.
     pub struct_feats: Option<&'a StructFeatConfig>,
@@ -124,6 +138,31 @@ fn make_random(ctx: &AlignerFitContext<'_>) -> Result<Box<dyn Aligner>> {
 pub fn register_builtins(reg: &mut Registry<AlignerFactory>) {
     reg.register("learned", make_learned);
     reg.register("random", make_random);
+    reg.alias("xgboost", "learned");
+    reg.alias("gbt", "learned");
+}
+
+/// Loader signature for `.sggm` artifact state: the inverse of
+/// [`Aligner::save_state`], keyed by backend name.
+pub type AlignerStateLoader = fn(&Json) -> Result<Box<dyn Aligner>>;
+
+fn load_learned(state: &Json) -> Result<Box<dyn Aligner>> {
+    Ok(Box::new(LearnedAligner::load_state(state)?))
+}
+
+fn load_random(state: &Json) -> Result<Box<dyn Aligner>> {
+    Ok(Box::new(RandomAligner {
+        target: ranking::Target::from_state_str(state.req_str("target")?)?,
+    }))
+}
+
+/// Register every built-in aligner state loader. Keys mirror
+/// [`register_builtins`], with the extra `xgboost` alias matching the
+/// learned aligner's display name (what [`Aligner::name`] writes into an
+/// artifact).
+pub fn register_state_loaders(reg: &mut Registry<AlignerStateLoader>) {
+    reg.register("learned", load_learned);
+    reg.register("random", load_random);
     reg.alias("xgboost", "learned");
     reg.alias("gbt", "learned");
 }

@@ -7,7 +7,9 @@
 //! consumes the embeddings as GBT input features.
 
 use crate::graph::Csr;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+use crate::Result;
 
 /// node2vec hyper-parameters.
 #[derive(Clone, Debug)]
@@ -48,6 +50,40 @@ impl Default for Node2VecConfig {
             lr: 0.025,
             seed: 0x6e32_7665, // "n2ve"
         }
+    }
+}
+
+impl Node2VecConfig {
+    /// Serialize for a `.sggm` model artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::from(self.dim)),
+            ("walks_per_node", Json::from(self.walks_per_node)),
+            ("walk_length", Json::from(self.walk_length)),
+            ("window", Json::from(self.window)),
+            ("negatives", Json::from(self.negatives)),
+            ("epochs", Json::from(self.epochs)),
+            ("p", Json::from(self.p)),
+            ("q", Json::from(self.q)),
+            ("lr", Json::from(self.lr)),
+            ("seed", Json::u64_exact(self.seed)),
+        ])
+    }
+
+    /// Inverse of [`Node2VecConfig::to_json`].
+    pub fn from_json(v: &Json) -> Result<Node2VecConfig> {
+        Ok(Node2VecConfig {
+            dim: v.req_usize("dim")?,
+            walks_per_node: v.req_usize("walks_per_node")?,
+            walk_length: v.req_usize("walk_length")?,
+            window: v.req_usize("window")?,
+            negatives: v.req_usize("negatives")?,
+            epochs: v.req_usize("epochs")?,
+            p: v.req_f64("p")?,
+            q: v.req_f64("q")?,
+            lr: v.req_f64("lr")? as f32,
+            seed: v.req_u64("seed")?,
+        })
     }
 }
 

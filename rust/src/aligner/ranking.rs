@@ -19,8 +19,9 @@ use super::gbt::{GbtClassifier, GbtConfig, GbtRegressor};
 use super::structfeat::{compute, StructFeatConfig, StructFeatures};
 use crate::featgen::table::{Column, ColumnData, FeatureTable};
 use crate::graph::EdgeList;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
-use crate::Result;
+use crate::{Error, Result};
 
 /// One model per feature column.
 enum ColModel {
@@ -35,6 +36,25 @@ pub enum Target {
     Edges,
     /// Node features over source-partite nodes: inputs are F_S(v).
     Nodes,
+}
+
+impl Target {
+    /// Artifact encoding (`"edges"` / `"nodes"`).
+    pub fn as_state_str(&self) -> &'static str {
+        match self {
+            Target::Edges => "edges",
+            Target::Nodes => "nodes",
+        }
+    }
+
+    /// Inverse of [`Target::as_state_str`].
+    pub fn from_state_str(s: &str) -> Result<Target> {
+        match s {
+            "edges" => Ok(Target::Edges),
+            "nodes" => Ok(Target::Nodes),
+            other => Err(Error::Data(format!("artifact: unknown aligner target `{other}`"))),
+        }
+    }
 }
 
 /// Fitted learned aligner.
@@ -87,6 +107,67 @@ impl LearnedAligner {
             })
             .collect();
         Ok(LearnedAligner { models, feat_cfg, target, exact_below: 2048 })
+    }
+
+    /// Serialize the fitted aligner (per-column GBT models + structural
+    /// feature config) for a `.sggm` model artifact.
+    pub fn save_state(&self) -> Result<Json> {
+        let models = self
+            .models
+            .iter()
+            .map(|m| match m {
+                ColModel::Continuous { name, model } => Json::obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("kind", Json::from("continuous")),
+                    ("model", model.to_json()),
+                ]),
+                ColModel::Categorical { name, model, cardinality } => Json::obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("kind", Json::from("categorical")),
+                    ("cardinality", Json::from(*cardinality)),
+                    ("model", model.to_json()),
+                ]),
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("models", Json::Arr(models)),
+            ("struct_feats", self.feat_cfg.to_json()),
+            ("target", Json::from(self.target.as_state_str())),
+            ("exact_below", Json::from(self.exact_below)),
+        ]))
+    }
+
+    /// Inverse of [`LearnedAligner::save_state`] — the loaded aligner's
+    /// predictions and rank assignments are bit-identical to the fitted
+    /// one's for every seed.
+    pub fn load_state(state: &Json) -> Result<LearnedAligner> {
+        let models = state
+            .req_arr("models")?
+            .iter()
+            .map(|m| {
+                let name = m.req_str("name")?.to_string();
+                match m.req_str("kind")? {
+                    "continuous" => Ok(ColModel::Continuous {
+                        name,
+                        model: GbtRegressor::from_json(m.req("model")?)?,
+                    }),
+                    "categorical" => Ok(ColModel::Categorical {
+                        name,
+                        model: GbtClassifier::from_json(m.req("model")?)?,
+                        cardinality: m.req_u32("cardinality")?,
+                    }),
+                    other => Err(Error::Data(format!(
+                        "artifact: unknown aligner column kind `{other}`"
+                    ))),
+                }
+            })
+            .collect::<Result<Vec<ColModel>>>()?;
+        Ok(LearnedAligner {
+            models,
+            feat_cfg: StructFeatConfig::from_json(state.req("struct_feats")?)?,
+            target: Target::from_state_str(state.req_str("target")?)?,
+            exact_below: state.req_usize("exact_below")?,
+        })
     }
 
     /// Align `generated_features` onto `generated_structure`: returns a

@@ -4,6 +4,8 @@
 
 use super::node2vec::{node2vec_embeddings, Node2VecConfig};
 use crate::graph::{Csr, EdgeList};
+use crate::util::json::Json;
+use crate::Result;
 
 /// Which structural features to extract (Table 9's rows toggle these).
 #[derive(Clone, Debug)]
@@ -33,6 +35,41 @@ impl Default for StructFeatConfig {
             node2vec: None,
             iterations: 20,
         }
+    }
+}
+
+impl StructFeatConfig {
+    /// Serialize for a `.sggm` model artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("degrees", Json::from(self.degrees)),
+            ("pagerank", Json::from(self.pagerank)),
+            ("katz", Json::from(self.katz)),
+            ("clustering", Json::from(self.clustering)),
+            (
+                "node2vec",
+                match &self.node2vec {
+                    Some(cfg) => cfg.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("iterations", Json::from(self.iterations)),
+        ])
+    }
+
+    /// Inverse of [`StructFeatConfig::to_json`].
+    pub fn from_json(v: &Json) -> Result<StructFeatConfig> {
+        Ok(StructFeatConfig {
+            degrees: v.req_bool("degrees")?,
+            pagerank: v.req_bool("pagerank")?,
+            katz: v.req_bool("katz")?,
+            clustering: v.req_bool("clustering")?,
+            node2vec: match v.opt("node2vec") {
+                Some(cfg) => Some(Node2VecConfig::from_json(cfg)?),
+                None => None,
+            },
+            iterations: v.req_usize("iterations")?,
+        })
     }
 }
 

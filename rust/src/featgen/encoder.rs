@@ -10,6 +10,7 @@
 use super::gmm::Gmm;
 use super::table::{Column, ColumnData, FeatureTable};
 use crate::error::{Error, Result};
+use crate::util::json::Json;
 
 /// Per-column encoding metadata.
 #[derive(Clone, Debug)]
@@ -57,6 +58,55 @@ impl ModeSpecificEncoder {
     /// Encoded row width.
     pub fn width(&self) -> usize {
         self.width
+    }
+
+    /// Serialize the fitted codecs for a `.sggm` model artifact.
+    pub fn to_json(&self) -> Json {
+        let codecs = self
+            .codecs
+            .iter()
+            .map(|c| match c {
+                ColCodec::Continuous { name, gmm } => Json::obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("kind", Json::from("continuous")),
+                    ("gmm", gmm.to_json()),
+                ]),
+                ColCodec::Categorical { name, cardinality } => Json::obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("kind", Json::from("categorical")),
+                    ("cardinality", Json::from(*cardinality)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![("codecs", Json::Arr(codecs))])
+    }
+
+    /// Inverse of [`ModeSpecificEncoder::to_json`]; the encoded width is
+    /// re-derived from the codecs.
+    pub fn from_json(v: &Json) -> Result<ModeSpecificEncoder> {
+        let mut codecs = Vec::new();
+        let mut width = 0usize;
+        for c in v.req_arr("codecs")? {
+            let name = c.req_str("name")?.to_string();
+            match c.req_str("kind")? {
+                "continuous" => {
+                    let gmm = Gmm::from_json(c.req("gmm")?)?;
+                    width += 1 + gmm.n_components();
+                    codecs.push(ColCodec::Continuous { name, gmm });
+                }
+                "categorical" => {
+                    let cardinality = c.req_u32("cardinality")?;
+                    width += cardinality.max(1) as usize;
+                    codecs.push(ColCodec::Categorical { name, cardinality });
+                }
+                other => {
+                    return Err(Error::Data(format!(
+                        "artifact: unknown encoder codec kind `{other}`"
+                    )))
+                }
+            }
+        }
+        Ok(ModeSpecificEncoder { codecs, width })
     }
 
     /// Encode the table into a row-major f32 matrix `n_rows × width`.

@@ -13,8 +13,9 @@
 use super::encoder::ModeSpecificEncoder;
 use super::table::FeatureTable;
 use super::FeatureGenerator;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Abstract GAN compute backend over encoded rows.
 pub trait GanBackend {
@@ -26,6 +27,17 @@ pub trait GanBackend {
 
     /// Generate `n` encoded rows of the given width.
     fn sample(&self, n: usize, width: usize, seed: u64) -> Result<Vec<f32>>;
+
+    /// Serialize the trained backend for a `.sggm` model artifact.
+    /// Backends whose state lives outside the process (PJRT device
+    /// buffers) keep this default rejection — their pipelines cannot be
+    /// exported until the weights are host-transferable.
+    fn save_state(&self) -> Result<Json> {
+        Err(Error::Config(format!(
+            "gan backend `{}` cannot be serialized into a model artifact",
+            self.name()
+        )))
+    }
 }
 
 /// Test/fallback backend: memorizes the encoded training rows and samples
@@ -63,6 +75,30 @@ impl GanBackend for ResampleBackend {
         }
         Ok(out)
     }
+
+    fn save_state(&self) -> Result<Json> {
+        // f32 → f64 is exact, so the memorized rows round-trip bit-exact
+        Ok(Json::obj(vec![
+            ("rows", Json::Arr(self.rows.iter().map(|&x| Json::from(x)).collect())),
+            ("width", Json::from(self.width)),
+        ]))
+    }
+}
+
+impl ResampleBackend {
+    /// Reconstruct from a `.sggm` artifact state.
+    pub fn from_state(state: &Json) -> Result<ResampleBackend> {
+        let rows = state
+            .req_arr("rows")?
+            .iter()
+            .map(|v| {
+                v.as_f64().map(|x| x as f32).ok_or_else(|| {
+                    Error::Data("artifact: gan `rows` must hold numbers".into())
+                })
+            })
+            .collect::<Result<Vec<f32>>>()?;
+        Ok(ResampleBackend { rows, width: state.req_usize("width")? })
+    }
 }
 
 /// Feature GAN: encoder + backend.
@@ -98,11 +134,41 @@ impl GanFeatureGen {
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
+
+    /// Reconstruct from a `.sggm` artifact state (encoder + serialized
+    /// backend). Only host-resident backends appear in artifacts — see
+    /// [`GanBackend::save_state`].
+    pub fn from_state(state: &Json) -> Result<GanFeatureGen> {
+        let encoder = ModeSpecificEncoder::from_json(state.req("encoder")?)?;
+        let b = state.req("backend")?;
+        let backend: Box<dyn GanBackend> = match b.req_str("kind")? {
+            "resample" => Box::new(ResampleBackend::from_state(b.req("state")?)?),
+            other => {
+                return Err(Error::Data(format!(
+                    "artifact: unknown gan backend `{other}`; loadable: resample"
+                )))
+            }
+        };
+        Ok(GanFeatureGen { encoder, backend })
+    }
 }
 
 impl FeatureGenerator for GanFeatureGen {
     fn name(&self) -> &'static str {
         "gan"
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("encoder", self.encoder.to_json()),
+            (
+                "backend",
+                Json::obj(vec![
+                    ("kind", Json::from(self.backend.name())),
+                    ("state", self.backend.save_state()?),
+                ]),
+            ),
+        ]))
     }
 
     fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {

@@ -7,9 +7,10 @@
 
 use super::table::{Column, ColumnData, FeatureTable};
 use super::FeatureGenerator;
+use crate::util::json::Json;
 use crate::util::rng::{AliasTable, Pcg64};
 use crate::util::stats;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Fitted multivariate Gaussian over the continuous columns.
 #[derive(Clone, Debug)]
@@ -80,11 +81,109 @@ impl GaussianFeatureGen {
             order,
         })
     }
+
+    /// Reconstruct from a `.sggm` artifact state. The categorical alias
+    /// tables are restored from their internal `(prob, alias)` arrays,
+    /// bit-exact w.r.t. the fitted generator.
+    pub fn from_state(state: &Json) -> Result<GaussianFeatureGen> {
+        let cats = state
+            .req_arr("cats")?
+            .iter()
+            .map(|c| {
+                let prob = c.req_f64s("prob")?;
+                let alias = c.req_u32s("alias")?;
+                if prob.len() != alias.len() {
+                    return Err(Error::Data(
+                        "artifact: alias-table prob/alias length mismatch".into(),
+                    ));
+                }
+                Ok((
+                    c.req_str("name")?.to_string(),
+                    AliasTable::from_parts(prob, alias),
+                    c.req_u32("cardinality")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let order = state
+            .req_arr("order")?
+            .iter()
+            .map(|o| Ok((o.req_bool("continuous")?, o.req_usize("index")?)))
+            .collect::<Result<Vec<(bool, usize)>>>()?;
+        let g = GaussianFeatureGen {
+            cont_names: state.req_strs("cont_names")?,
+            mean: state.req_f64s("mean")?,
+            chol: state.req_f64s("chol")?,
+            d: state.req_usize("d")?,
+            cats,
+            order,
+        };
+        // cross-field shape invariants: reject at load time rather than
+        // panicking with an index error at sample time
+        let d = g.d;
+        if g.mean.len() != d || g.chol.len() != d * d || g.cont_names.len() != d {
+            return Err(Error::Data(format!(
+                "artifact: gaussian state shapes inconsistent (d={d}, mean={}, chol={}, \
+                 cont_names={})",
+                g.mean.len(),
+                g.chol.len(),
+                g.cont_names.len()
+            )));
+        }
+        let bad_order = g.order.iter().any(|&(is_cont, idx)| {
+            if is_cont {
+                idx >= d
+            } else {
+                idx >= g.cats.len()
+            }
+        });
+        if bad_order || g.order.len() != d + g.cats.len() {
+            return Err(Error::Data(
+                "artifact: gaussian column order indices out of range".into(),
+            ));
+        }
+        Ok(g)
+    }
 }
 
 impl FeatureGenerator for GaussianFeatureGen {
     fn name(&self) -> &'static str {
         "gaussian"
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        let cats = self
+            .cats
+            .iter()
+            .map(|(name, table, card)| {
+                let (prob, alias) = table.to_parts();
+                Json::obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("prob", Json::from(prob.to_vec())),
+                    ("alias", Json::from(alias.to_vec())),
+                    ("cardinality", Json::from(*card)),
+                ])
+            })
+            .collect();
+        let order = self
+            .order
+            .iter()
+            .map(|&(is_cont, idx)| {
+                Json::obj(vec![
+                    ("continuous", Json::from(is_cont)),
+                    ("index", Json::from(idx)),
+                ])
+            })
+            .collect();
+        let cont_names =
+            Json::Arr(self.cont_names.iter().map(|n| Json::from(n.as_str())).collect());
+        Ok(Json::obj(vec![
+            ("cont_names", cont_names),
+            ("mean", Json::from(self.mean.clone())),
+            ("chol", Json::from(self.chol.clone())),
+            ("d", Json::from(self.d)),
+            ("cats", Json::Arr(cats)),
+            ("order", Json::Arr(order)),
+        ]))
     }
 
     fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {

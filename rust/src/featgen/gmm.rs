@@ -6,7 +6,9 @@
 //! pruned, mimicking the sparsity the variational Dirichlet prior
 //! induces, so the number of active modes adapts to the data.
 
+use crate::util::json::Json;
 use crate::util::rng::{AliasTable, Pcg64};
+use crate::Result;
 
 /// A fitted 1-D Gaussian mixture.
 #[derive(Clone, Debug)]
@@ -149,6 +151,31 @@ impl Gmm {
                 return;
             }
         }
+    }
+
+    /// Serialize the fitted mixture for a `.sggm` model artifact.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weights", Json::from(self.weights.clone())),
+            ("means", Json::from(self.means.clone())),
+            ("stds", Json::from(self.stds.clone())),
+        ])
+    }
+
+    /// Inverse of [`Gmm::to_json`] — parameters restored verbatim.
+    pub fn from_json(v: &Json) -> Result<Gmm> {
+        let g = Gmm {
+            weights: v.req_f64s("weights")?,
+            means: v.req_f64s("means")?,
+            stds: v.req_f64s("stds")?,
+        };
+        if g.weights.is_empty() || g.weights.len() != g.means.len() || g.means.len() != g.stds.len()
+        {
+            return Err(crate::Error::Data(
+                "artifact: gmm component arrays empty or mismatched".into(),
+            ));
+        }
+        Ok(g)
     }
 
     /// Number of (surviving) components.

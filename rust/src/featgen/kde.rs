@@ -9,6 +9,7 @@
 
 use super::table::{Column, ColumnData, FeatureTable};
 use super::FeatureGenerator;
+use crate::util::json::Json;
 use crate::util::rng::{AliasTable, Pcg64};
 use crate::util::stats;
 use crate::Result;
@@ -73,11 +74,25 @@ impl KdeFeatureGen {
         }
         KdeFeatureGen { support, bandwidths, marginals }
     }
+
+    /// Reconstruct from a `.sggm` artifact state. The artifact carries
+    /// only the bootstrap support table; bandwidths and categorical
+    /// marginals are re-derived by refitting, which is deterministic in
+    /// the support (the support is already ≤ the subsample cap, so no
+    /// further subsampling happens).
+    pub fn from_state(state: &Json) -> Result<KdeFeatureGen> {
+        let support = FeatureTable::from_json(state.req("support")?)?;
+        Ok(KdeFeatureGen::fit(&support))
+    }
 }
 
 impl FeatureGenerator for KdeFeatureGen {
     fn name(&self) -> &'static str {
         "kde"
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![("support", self.support.to_json())]))
     }
 
     fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {

@@ -30,6 +30,7 @@ pub use table::{Column, ColumnData, FeatureTable};
 
 use crate::pipeline::registry::Registry;
 use crate::pipeline::spec::Params;
+use crate::util::json::Json;
 use crate::Result;
 
 /// A fitted tabular feature generator.
@@ -39,6 +40,11 @@ pub trait FeatureGenerator {
 
     /// Sample `n` feature rows.
     fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable>;
+
+    /// Serialize the fitted state for a `.sggm` model artifact. The
+    /// state loader registered under [`Self::name`] must reconstruct a
+    /// generator whose sampling is bit-identical for every seed.
+    fn save_state(&self) -> Result<Json>;
 }
 
 /// Everything a feature factory sees at fit time.
@@ -94,6 +100,36 @@ pub fn register_builtins(reg: &mut Registry<FeatureGeneratorFactory>) {
     reg.register("kde", make_kde);
     reg.register("gaussian", make_gaussian);
     reg.register("gan", make_gan);
+    reg.alias("mvg", "gaussian");
+}
+
+/// Loader signature for `.sggm` artifact state: the inverse of
+/// [`FeatureGenerator::save_state`], keyed by backend name.
+pub type FeatureStateLoader = fn(&Json) -> Result<Box<dyn FeatureGenerator>>;
+
+fn load_random(state: &Json) -> Result<Box<dyn FeatureGenerator>> {
+    Ok(Box::new(random::RandomFeatureGen::from_state(state)?))
+}
+
+fn load_kde(state: &Json) -> Result<Box<dyn FeatureGenerator>> {
+    Ok(Box::new(kde::KdeFeatureGen::from_state(state)?))
+}
+
+fn load_gaussian(state: &Json) -> Result<Box<dyn FeatureGenerator>> {
+    Ok(Box::new(gaussian::GaussianFeatureGen::from_state(state)?))
+}
+
+fn load_gan(state: &Json) -> Result<Box<dyn FeatureGenerator>> {
+    Ok(Box::new(gan::GanFeatureGen::from_state(state)?))
+}
+
+/// Register every built-in feature state loader (keys mirror
+/// [`register_builtins`]).
+pub fn register_state_loaders(reg: &mut Registry<FeatureStateLoader>) {
+    reg.register("random", load_random);
+    reg.register("kde", load_kde);
+    reg.register("gaussian", load_gaussian);
+    reg.register("gan", load_gan);
     reg.alias("mvg", "gaussian");
 }
 

@@ -4,8 +4,9 @@
 
 use super::table::{Column, ColumnData, FeatureTable};
 use super::FeatureGenerator;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Per-column fitted ranges.
 #[derive(Clone, Debug)]
@@ -37,11 +38,58 @@ impl RandomFeatureGen {
             .collect();
         RandomFeatureGen { specs }
     }
+
+    /// Reconstruct from a `.sggm` artifact state.
+    pub fn from_state(state: &Json) -> Result<RandomFeatureGen> {
+        let specs = state
+            .req_arr("columns")?
+            .iter()
+            .map(|c| {
+                let name = c.req_str("name")?.to_string();
+                match c.req_str("kind")? {
+                    "continuous" => Ok(ColumnSpec::Continuous {
+                        name,
+                        lo: c.req_f64("lo")?,
+                        hi: c.req_f64("hi")?,
+                    }),
+                    "categorical" => Ok(ColumnSpec::Categorical {
+                        name,
+                        cardinality: c.req_u32("cardinality")?,
+                    }),
+                    other => Err(Error::Data(format!(
+                        "artifact: unknown random-featgen column kind `{other}`"
+                    ))),
+                }
+            })
+            .collect::<Result<Vec<ColumnSpec>>>()?;
+        Ok(RandomFeatureGen { specs })
+    }
 }
 
 impl FeatureGenerator for RandomFeatureGen {
     fn name(&self) -> &'static str {
         "random"
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        let columns = self
+            .specs
+            .iter()
+            .map(|s| match s {
+                ColumnSpec::Continuous { name, lo, hi } => Json::obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("kind", Json::from("continuous")),
+                    ("lo", Json::from(*lo)),
+                    ("hi", Json::from(*hi)),
+                ]),
+                ColumnSpec::Categorical { name, cardinality } => Json::obj(vec![
+                    ("name", Json::from(name.as_str())),
+                    ("kind", Json::from("categorical")),
+                    ("cardinality", Json::from(*cardinality)),
+                ]),
+            })
+            .collect();
+        Ok(Json::obj(vec![("columns", Json::Arr(columns))]))
     }
 
     fn sample(&self, n: usize, seed: u64) -> Result<FeatureTable> {

@@ -3,6 +3,7 @@
 //! (the multi-modal setting of §3.3).
 
 use crate::error::{Error, Result};
+use crate::util::json::Json;
 
 /// Column payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -157,6 +158,60 @@ impl FeatureTable {
     /// Look up a column by name.
     pub fn column(&self, name: &str) -> Option<&Column> {
         self.columns.iter().find(|c| c.name == name)
+    }
+
+    /// Column names in order.
+    pub fn column_names(&self) -> Vec<String> {
+        self.columns.iter().map(|c| c.name.clone()).collect()
+    }
+
+    /// Serialize for a `.sggm` model artifact (KDE support tables).
+    pub fn to_json(&self) -> Json {
+        let columns = self
+            .columns
+            .iter()
+            .map(|c| match &c.data {
+                ColumnData::Continuous(v) => Json::obj(vec![
+                    ("name", Json::from(c.name.as_str())),
+                    ("kind", Json::from("continuous")),
+                    ("values", Json::from(v.clone())),
+                ]),
+                ColumnData::Categorical { codes, cardinality } => Json::obj(vec![
+                    ("name", Json::from(c.name.as_str())),
+                    ("kind", Json::from("categorical")),
+                    ("cardinality", Json::from(*cardinality)),
+                    ("codes", Json::from(codes.clone())),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![("columns", Json::Arr(columns))])
+    }
+
+    /// Inverse of [`FeatureTable::to_json`]. Cardinalities are restored
+    /// verbatim (not re-inferred from the codes), so a loaded table is
+    /// indistinguishable from the one that was saved.
+    pub fn from_json(v: &Json) -> Result<FeatureTable> {
+        let columns = v
+            .req_arr("columns")?
+            .iter()
+            .map(|c| {
+                let name = c.req_str("name")?.to_string();
+                let data = match c.req_str("kind")? {
+                    "continuous" => ColumnData::Continuous(c.req_f64s("values")?),
+                    "categorical" => ColumnData::Categorical {
+                        codes: c.req_u32s("codes")?,
+                        cardinality: c.req_u32("cardinality")?,
+                    },
+                    other => {
+                        return Err(Error::Data(format!(
+                            "artifact: unknown column kind `{other}`"
+                        )))
+                    }
+                };
+                Ok(Column { name, data })
+            })
+            .collect::<Result<Vec<Column>>>()?;
+        FeatureTable::new(columns)
     }
 }
 

@@ -80,6 +80,24 @@ impl PartiteSpec {
     pub fn density_preserving_edges(&self, edges: u64, k: u64) -> u64 {
         edges.saturating_mul(k).saturating_mul(k)
     }
+
+    /// Serialize for a `.sggm` model artifact.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("n_src", crate::util::json::Json::u64_exact(self.n_src)),
+            ("n_dst", crate::util::json::Json::u64_exact(self.n_dst)),
+            ("square", crate::util::json::Json::from(self.square)),
+        ])
+    }
+
+    /// Inverse of [`PartiteSpec::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> crate::Result<PartiteSpec> {
+        Ok(PartiteSpec {
+            n_src: v.req_u64("n_src")?,
+            n_dst: v.req_u64("n_dst")?,
+            square: v.req_bool("square")?,
+        })
+    }
 }
 
 #[cfg(test)]

@@ -22,7 +22,7 @@
 //!    that rank generated feature rows onto generated structure
 //!    (eq. 15–19).
 //!
-//! ## The scenario API
+//! ## The fit → artifact → generate lifecycle
 //!
 //! Components are wired together through a **string-keyed registry** and a
 //! declarative **[`pipeline::ScenarioSpec`]** rather than closed enums, so
@@ -30,8 +30,9 @@
 //! from most to least declarative:
 //!
 //! * **Spec file** — `sgg run scenario.toml` parses a minimal TOML-subset
-//!   scenario (dataset, per-component backends + params, scale or explicit
-//!   sizes, seed, and a sink) and executes it end to end.
+//!   scenario (dataset *or* a fitted `model` artifact, per-component
+//!   backends + params, scale or explicit sizes, seed, and a sink) and
+//!   executes it end to end.
 //! * **Builder** — [`pipeline::Pipeline::builder`] gives the same knobs
 //!   programmatically:
 //!
@@ -50,8 +51,27 @@
 //!   # }
 //!   ```
 //!
-//! * **Legacy enums** — [`pipeline::PipelineConfig`] still compiles and
-//!   lowers onto the registry path.
+//! * **Model artifacts** — a fitted pipeline serializes to a versioned
+//!   `.sggm` document ([`pipeline::artifact`]): every component
+//!   implements the **ModelState** capability (`save_state` + a
+//!   registry-registered state loader), so the *models* — not the
+//!   possibly proprietary data — are the shareable unit (the paper's
+//!   release premise). `sgg fit` writes the artifact, `sgg generate
+//!   --model` samples from it anywhere, bit-identical to the
+//!   fit-and-generate path for the same seed and any worker count:
+//!
+//!   ```no_run
+//!   use sgg::pipeline::{FittedPipeline, Pipeline, Registries};
+//!   # fn main() -> sgg::Result<()> {
+//!   let ds = sgg::datasets::load("ieee-fraud", 1)?;
+//!   Pipeline::builder().fit(&ds)?.save(std::path::Path::new("fraud.sggm"))?;
+//!   // ... on any other machine, without the dataset:
+//!   let p = FittedPipeline::load(std::path::Path::new("fraud.sggm"), &Registries::builtin())?;
+//!   let synth = p.generate(2, 7)?;
+//!   # let _ = synth;
+//!   # Ok(())
+//!   # }
+//!   ```
 //!
 //! Datasets with node features get a second feature-generation + alignment
 //! leg automatically; output goes to an in-memory [`datasets::Dataset`] or

@@ -3,12 +3,21 @@
 //! ```text
 //! sgg datasets                          list the dataset registry
 //! sgg run scenario.toml [--workers N]   execute a declarative scenario spec
+//! sgg fit --dataset ieee-fraud --out model.sggm
+//! sgg generate --model model.sggm --scale 2 --out /tmp/synth [--workers N]
 //! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
 //! sgg evaluate --dataset tabformer      fit + generate + Table-2 metrics
 //! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards --workers 8
 //! sgg experiment table2 [--quick]       regenerate one paper table/figure
 //! sgg experiment all [--quick]          regenerate everything
 //! ```
+//!
+//! The fit/artifact/generate lifecycle: `sgg fit` learns every component
+//! from a dataset and writes a versioned `.sggm` model artifact; `sgg
+//! generate` loads the artifact — **no source dataset needed** — and
+//! samples a synthetic dataset at any scale. For the same seed the
+//! output is bit-identical to `sgg fit-generate` in one process, for any
+//! `--workers` value.
 //!
 //! `--workers N` drives the parallel chunk runner (N sampling threads;
 //! 0 = one per core). Output is bit-identical for every worker count —
@@ -18,9 +27,15 @@
 //! erdos-renyi|sbm|trilliong ...`); historical aliases (`ours`, `random`,
 //! `graphworld`, `xgboost`) keep working.
 
-use sgg::pipeline::{self, ComponentSpec, Pipeline, PipelineBuilder, ScenarioSpec, SinkOutput};
+use sgg::datasets::Dataset;
+use sgg::pipeline::{
+    self, ComponentSpec, FittedPipeline, MemorySink, Pipeline, PipelineBuilder, Registries,
+    ScenarioSpec, SinkOutput, SizeSpec,
+};
+use sgg::structgen::chunked::ChunkConfig;
 use sgg::util::args::Args;
 use sgg::Result;
+use std::path::Path;
 
 fn main() {
     let args = Args::from_env();
@@ -54,6 +69,47 @@ fn builder_from_args(args: &Args) -> PipelineBuilder {
         builder = builder.aligner(s);
     }
     builder.seed(args.get_or("seed", 0x5a6e))
+}
+
+/// Shared fit phase for `fit`, `fit-generate` and `evaluate`: load the
+/// `--dataset` stand-in and fit a pipeline from the component flags.
+fn fit_from_args(args: &Args) -> Result<(Dataset, FittedPipeline)> {
+    let name = args.get("dataset").unwrap_or("ieee-fraud");
+    let ds = sgg::datasets::load(name, args.get_or("dataset-seed", 1u64))?;
+    let fitted = builder_from_args(args).fit(&ds)?;
+    Ok((ds, fitted))
+}
+
+/// Shared generate phase: run the fitted (or artifact-loaded) pipeline
+/// through the memory sink on the parallel chunk runner. One code path
+/// for every CLI entry point, so `fit`+`generate` is bit-identical to
+/// `fit-generate` for the same seed at any worker count.
+fn generate_dataset(fitted: &FittedPipeline, args: &Args) -> Result<Dataset> {
+    let workers = match args.get_or("workers", 1usize) {
+        0 => sgg::util::threadpool::default_threads(),
+        w => w,
+    };
+    let chunks = ChunkConfig { workers, ..ChunkConfig::default() };
+    let mut sink = MemorySink::new();
+    fitted
+        .run(
+            SizeSpec::Scale(args.get_or("scale", 1u64)),
+            chunks,
+            &mut sink,
+            args.get_or("seed", 42u64),
+        )?
+        .into_dataset()
+}
+
+/// Write the generated edge list under `--out` (if given).
+fn write_edges_out(ds: &Dataset, args: &Args) -> Result<()> {
+    if let Some(out) = args.get("out") {
+        let dir = Path::new(out);
+        std::fs::create_dir_all(dir)?;
+        sgg::graph::io::write_binary(&dir.join("edges.sgg"), &ds.edges)?;
+        println!("wrote {}", dir.join("edges.sgg").display());
+    }
+    Ok(())
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -92,13 +148,41 @@ fn run(args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        Some("fit-generate") => {
-            let name = args.get("dataset").unwrap_or("ieee-fraud");
-            let scale = args.get_or("scale", 1u64);
-            let seed = args.get_or("seed", 42u64);
-            let ds = sgg::datasets::load(name, 1)?;
-            let fitted = builder_from_args(args).fit(&ds)?;
-            let synth = fitted.generate(scale, seed)?;
+        Some("fit") => {
+            let out = args.get("out").unwrap_or("model.sggm");
+            let (ds, fitted) = fit_from_args(args)?;
+            fitted.save(Path::new(out))?;
+            let bytes = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+            let (s, f, a) = fitted.component_names();
+            println!(
+                "fitted `{}` (structure={s}, features={f}, aligner={a}) → {out} ({bytes} bytes)",
+                ds.name
+            );
+            Ok(())
+        }
+        Some("generate") => {
+            let model = args.get("model").ok_or_else(|| {
+                sgg::Error::Config(
+                    "usage: sgg generate --model model.sggm [--scale N] [--seed N] \
+                     [--workers N] [--out dir]"
+                        .into(),
+                )
+            })?;
+            for flag in ["struct", "feat", "align", "dataset", "noise", "sbm-blocks"] {
+                if args.get(flag).is_some() {
+                    return Err(sgg::Error::Config(format!(
+                        "--{flag} has no effect with --model: the artifact already carries \
+                         the fitted components (use `sgg fit` to change them)"
+                    )));
+                }
+            }
+            let fitted = FittedPipeline::load(Path::new(model), &Registries::builtin())?;
+            let src = fitted.source();
+            println!(
+                "loaded `{}` (fitted on `{}`: {} edges over {}×{})",
+                model, src.dataset, src.edges, src.spec.n_src, src.spec.n_dst
+            );
+            let synth = generate_dataset(&fitted, args)?;
             println!(
                 "generated `{}`: {} nodes, {} edges, {} feature cols",
                 synth.name,
@@ -106,26 +190,32 @@ fn run(args: &Args) -> Result<()> {
                 synth.edges.len(),
                 synth.edge_features.n_cols()
             );
-            if let Some(out) = args.get("out") {
-                let dir = std::path::Path::new(out);
-                std::fs::create_dir_all(dir)?;
-                sgg::graph::io::write_binary(&dir.join("edges.sgg"), &synth.edges)?;
-                println!("wrote {}", dir.join("edges.sgg").display());
-            }
+            write_edges_out(&synth, args)?;
+            Ok(())
+        }
+        Some("fit-generate") => {
+            let (_ds, fitted) = fit_from_args(args)?;
+            let synth = generate_dataset(&fitted, args)?;
+            println!(
+                "generated `{}`: {} nodes, {} edges, {} feature cols",
+                synth.name,
+                synth.edges.n_nodes(),
+                synth.edges.len(),
+                synth.edge_features.n_cols()
+            );
+            write_edges_out(&synth, args)?;
             Ok(())
         }
         Some("evaluate") => {
-            let name = args.get("dataset").unwrap_or("ieee-fraud");
-            let ds = sgg::datasets::load(name, 1)?;
-            let fitted = builder_from_args(args).fit(&ds)?;
-            let synth = fitted.generate(args.get_or("scale", 1u64), args.get_or("seed", 42u64))?;
+            let (ds, fitted) = fit_from_args(args)?;
+            let synth = generate_dataset(&fitted, args)?;
             let report = sgg::metrics::evaluate(
                 &ds.edges,
                 &ds.edge_features,
                 &synth.edges,
                 &synth.edge_features,
             );
-            println!("{name}: {report}");
+            println!("{}: {report}", ds.name);
             Ok(())
         }
         Some("stream") => {
@@ -177,11 +267,13 @@ fn run(args: &Args) -> Result<()> {
         }
         _ => {
             println!(
-                "usage: sgg <datasets|run|fit-generate|evaluate|stream|experiment> [--options]\n\
+                "usage: sgg <datasets|run|fit|generate|fit-generate|evaluate|stream|experiment> [--options]\n\
+                 lifecycle: sgg fit --dataset ieee-fraud --out m.sggm && \
+                 sgg generate --model m.sggm --scale 2 --out /tmp/synth\n\
                  experiments: {:?}\n\
                  components: --struct kronecker|kronecker-noisy|erdos-renyi|sbm|trilliong  \
                  --feat gan|kde|random|gaussian  --align learned|random\n\
-                 parallelism: --workers N (run/stream; 0 = one per core)\n\
+                 parallelism: --workers N (run/generate/fit-generate/stream; 0 = one per core)\n\
                  spec files: sgg run examples/fraud.toml (see docs/scenario-reference.md)",
                 sgg::experiments::ALL
             );

@@ -1,0 +1,246 @@
+//! The `.sggm` model artifact: a serialized [`FittedPipeline`].
+//!
+//! The paper's central premise is that the framework "learns a series of
+//! parametric models from proprietary datasets *that can be released* to
+//! researchers" — the fitted models, not the data, are the shareable
+//! unit. This module implements that release format: every fitted
+//! component serializes its state (`save_state`, the **ModelState**
+//! capability on the three component traits) into a single versioned,
+//! self-describing JSON document, and [`FittedPipeline::load`]
+//! reconstructs the pipeline through the state-loader registries without
+//! ever touching the source dataset.
+//!
+//! Layout (format version 1):
+//!
+//! ```json
+//! {
+//!   "format": "sggm", "version": 1,
+//!   "name": "ieee-fraud", "seed": 23134,
+//!   "source": { "dataset": "...", "spec": {...}, "edges": N,
+//!               "edge_feature_cols": [...], "node_feature_cols": [...] },
+//!   "structure":     { "backend": "kronecker", "state": {...} },
+//!   "edge_features": { "backend": "kde",       "state": {...} },
+//!   "edge_aligner":  { "backend": "xgboost",   "state": {...} },
+//!   "node_features": { ... } | null,
+//!   "node_aligner":  { ... } | null
+//! }
+//! ```
+//!
+//! Guarantees:
+//!
+//! * **Bit-identical generation** — for the same seed (and any worker
+//!   count), `load(...).run(...)` produces exactly the output
+//!   `fit(...).run(...)` would have.
+//! * **Versioned** — a wrong `format` or unsupported `version` is
+//!   rejected with a clear error before any component is touched.
+//! * **Open** — backend names resolve through the same open registries
+//!   as fit-time factories, so custom components can participate by
+//!   registering a state loader under their display name.
+
+use super::registry::Registries;
+use super::FittedPipeline;
+use crate::aligner::Aligner;
+use crate::featgen::FeatureGenerator;
+use crate::graph::PartiteSpec;
+use crate::structgen::StructureGenerator;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Artifact format identifier (the `format` header field).
+pub const SGGM_FORMAT: &str = "sggm";
+
+/// Artifact format version this build reads and writes.
+pub const SGGM_VERSION: u64 = 1;
+
+/// Summary of the dataset a pipeline was fitted on, carried in the
+/// artifact so a consumer can sanity-check provenance and shape without
+/// access to the (possibly proprietary) source data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SourceSummary {
+    /// Registry name of the source dataset.
+    pub dataset: String,
+    /// Partite layout of the source graph.
+    pub spec: PartiteSpec,
+    /// Edge count of the source graph.
+    pub edges: u64,
+    /// Edge-feature column names, in order.
+    pub edge_feature_cols: Vec<String>,
+    /// Node-feature column names (None when the source had none).
+    pub node_feature_cols: Option<Vec<String>>,
+}
+
+impl SourceSummary {
+    /// Serialize into the artifact's `source` field.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::from(self.dataset.as_str())),
+            ("spec", self.spec.to_json()),
+            ("edges", Json::u64_exact(self.edges)),
+            (
+                "edge_feature_cols",
+                Json::Arr(self.edge_feature_cols.iter().map(|n| Json::from(n.as_str())).collect()),
+            ),
+            (
+                "node_feature_cols",
+                match &self.node_feature_cols {
+                    Some(cols) => {
+                        Json::Arr(cols.iter().map(|n| Json::from(n.as_str())).collect())
+                    }
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Inverse of [`SourceSummary::to_json`].
+    pub fn from_json(v: &Json) -> Result<SourceSummary> {
+        Ok(SourceSummary {
+            dataset: v.req_str("dataset")?.to_string(),
+            spec: PartiteSpec::from_json(v.req("spec")?)?,
+            edges: v.req_u64("edges")?,
+            edge_feature_cols: v.req_strs("edge_feature_cols")?,
+            node_feature_cols: match v.opt("node_feature_cols") {
+                Some(_) => Some(v.req_strs("node_feature_cols")?),
+                None => None,
+            },
+        })
+    }
+}
+
+/// One serialized component: its backend name plus opaque state.
+fn component_json(backend: &str, state: Json) -> Json {
+    Json::obj(vec![("backend", Json::from(backend)), ("state", state)])
+}
+
+impl FittedPipeline {
+    /// Serialize the whole fitted pipeline into the `.sggm` JSON
+    /// document (see the module docs for the layout).
+    pub fn to_artifact_json(&self) -> Result<Json> {
+        let node_features = match &self.node_feat_gen {
+            Some(gen) => component_json(gen.name(), gen.save_state()?),
+            None => Json::Null,
+        };
+        let node_aligner = match &self.node_aligner {
+            Some(a) => component_json(a.name(), a.save_state()?),
+            None => Json::Null,
+        };
+        let doc = Json::obj(vec![
+            ("format", Json::from(SGGM_FORMAT)),
+            ("version", Json::from(SGGM_VERSION)),
+            ("name", Json::from(self.name.as_str())),
+            ("seed", Json::u64_exact(self.seed)),
+            ("source", self.source.to_json()),
+            (
+                "structure",
+                component_json(self.struct_gen.name(), self.struct_gen.save_state()?),
+            ),
+            (
+                "edge_features",
+                component_json(self.edge_feat_gen.name(), self.edge_feat_gen.save_state()?),
+            ),
+            (
+                "edge_aligner",
+                component_json(self.edge_aligner.name(), self.edge_aligner.save_state()?),
+            ),
+            ("node_features", node_features),
+            ("node_aligner", node_aligner),
+        ]);
+        // JSON cannot represent NaN/inf — fail the export now, with the
+        // source data still at hand, rather than shipping an artifact
+        // that only errors when someone tries to load it elsewhere
+        if doc.has_non_finite() {
+            return Err(Error::Data(
+                "refusing to export artifact: a fitted component contains a non-finite \
+                 parameter (NaN or infinity) — refit before saving"
+                    .into(),
+            ));
+        }
+        Ok(doc)
+    }
+
+    /// Write the pipeline to a `.sggm` model artifact at `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let doc = self.to_artifact_json()?;
+        std::fs::write(path, format!("{doc}\n")).map_err(|e| {
+            Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+        })?;
+        crate::info!("saved model artifact {}", path.display());
+        Ok(())
+    }
+
+    /// Reconstruct a pipeline from a parsed artifact document,
+    /// resolving each component's backend against `regs`' state-loader
+    /// registries. Rejects wrong/missing format headers, unsupported
+    /// versions, and unknown backends with descriptive errors.
+    pub fn from_artifact_json(doc: &Json, regs: &Registries) -> Result<FittedPipeline> {
+        let format = doc
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Data("not a .sggm model artifact (no `format` header)".into()))?;
+        if format != SGGM_FORMAT {
+            return Err(Error::Data(format!(
+                "not a .sggm model artifact (format `{format}`)"
+            )));
+        }
+        let version = doc.req_u64("version")?;
+        if version != SGGM_VERSION {
+            return Err(Error::Data(format!(
+                "unsupported .sggm format version {version} (this build reads version \
+                 {SGGM_VERSION}); re-export the artifact with a matching build"
+            )));
+        }
+
+        let structure = doc.req("structure")?;
+        let struct_gen =
+            regs.structure_states.resolve(structure.req_str("backend")?)?(structure.req("state")?)?;
+        let ef = doc.req("edge_features")?;
+        let edge_feat_gen = regs.feature_states.resolve(ef.req_str("backend")?)?(ef.req("state")?)?;
+        let ea = doc.req("edge_aligner")?;
+        let edge_aligner = regs.aligner_states.resolve(ea.req_str("backend")?)?(ea.req("state")?)?;
+
+        let node_feat_gen = match doc.opt("node_features") {
+            Some(nf) => {
+                Some(regs.feature_states.resolve(nf.req_str("backend")?)?(nf.req("state")?)?)
+            }
+            None => None,
+        };
+        let node_aligner = match doc.opt("node_aligner") {
+            Some(na) => {
+                Some(regs.aligner_states.resolve(na.req_str("backend")?)?(na.req("state")?)?)
+            }
+            None => None,
+        };
+        if node_feat_gen.is_some() != node_aligner.is_some() {
+            return Err(Error::Data(
+                "artifact: `node_features` and `node_aligner` must both be present or both null"
+                    .into(),
+            ));
+        }
+
+        Ok(FittedPipeline {
+            name: doc.req_str("name")?.to_string(),
+            struct_gen,
+            edge_feat_gen,
+            edge_aligner,
+            node_feat_gen,
+            node_aligner,
+            seed: doc.req_u64("seed")?,
+            source: SourceSummary::from_json(doc.req("source")?)?,
+        })
+    }
+
+    /// Load a pipeline from a `.sggm` model artifact. The source dataset
+    /// is *not* needed — this is the paper's release path: fit once where
+    /// the data lives, ship the artifact, generate anywhere. Generation
+    /// from the loaded pipeline is bit-identical to generation from the
+    /// originally fitted one for the same seed and any worker count.
+    pub fn load(path: &Path, regs: &Registries) -> Result<FittedPipeline> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| Error::Data(format!("{}: invalid artifact JSON: {e}", path.display())))?;
+        Self::from_artifact_json(&doc, regs)
+            .map_err(|e| Error::Data(format!("{}: {e}", path.display())))
+    }
+}

@@ -1,31 +1,42 @@
-//! The end-to-end SynGen pipeline (paper Figure 1), redesigned around a
-//! declarative [`ScenarioSpec`] and string-keyed component [`Registry`]s.
+//! The end-to-end SynGen pipeline (paper Figure 1), built around a
+//! three-phase **fit → artifact → generate** lifecycle, a declarative
+//! [`ScenarioSpec`], and string-keyed component [`Registry`]s.
 //!
-//! Fitting resolves each component (structure / edge features / node
+//! **Fit** resolves each component (structure / edge features / node
 //! features / aligner) by name against [`Registries`], producing a
-//! [`FittedPipeline`]; generation routes structure chunks through a
-//! [`Sink`] — [`MemorySink`] assembles an in-memory [`Dataset`] (features
-//! generated and aligned, node features included when the source dataset
-//! has them), [`ShardSink`] streams shards to disk (paper §4.5) — so the
-//! in-memory and out-of-core paths share one code path. Chunk sampling
-//! itself runs on the [`parallel`] engine: with `workers > 1` the
-//! [`parallel::ParallelChunkRunner`] samples chunks concurrently and
-//! feeds the sink in chunk-index order, bit-identical to the sequential
-//! path (see `docs/ARCHITECTURE.md` for the full dataflow).
+//! [`FittedPipeline`]. **Artifact**: the fitted pipeline serializes to a
+//! versioned `.sggm` document ([`FittedPipeline::save`] /
+//! [`FittedPipeline::load`], module [`artifact`]) so the *models* — not
+//! the possibly proprietary data — are the shareable unit; fit once
+//! where the data lives, generate anywhere. **Generate** routes
+//! structure chunks through a [`Sink`] — [`MemorySink`] assembles an
+//! in-memory [`Dataset`] (features generated and aligned, node features
+//! included when the source dataset has them), [`ShardSink`] streams
+//! shards to disk (paper §4.5) — so the in-memory and out-of-core paths
+//! share one code path. Chunk sampling itself runs on the [`parallel`]
+//! engine: with `workers > 1` the [`parallel::ParallelChunkRunner`]
+//! samples chunks concurrently and feeds the sink in chunk-index order,
+//! bit-identical to the sequential path (see `docs/ARCHITECTURE.md` for
+//! the full dataflow). Generation from a loaded artifact is
+//! bit-identical to generation from the originally fitted pipeline for
+//! the same seed and any worker count.
 //!
 //! Entry points:
 //!
-//! * [`run_scenario`] — execute a parsed [`ScenarioSpec`] end to end.
+//! * [`run_scenario`] — execute a parsed [`ScenarioSpec`] end to end
+//!   (fitting from its `dataset`, or loading its `model` artifact).
 //! * [`Pipeline::builder`] — fluent programmatic configuration.
-//! * [`Pipeline::fit`] + [`PipelineConfig`] — the legacy enum-based API,
-//!   kept as a thin shim that lowers onto the builder.
+//! * [`FittedPipeline::load`] — reconstruct a pipeline from a `.sggm`
+//!   artifact without the source dataset.
 
+pub mod artifact;
 pub mod orchestrator;
 pub mod parallel;
 pub mod registry;
 pub mod sink;
 pub mod spec;
 
+pub use artifact::{SourceSummary, SGGM_FORMAT, SGGM_VERSION};
 pub use parallel::{ChunkPlan, ParallelChunkRunner, SplitPlan};
 pub use registry::{Registries, Registry};
 pub use sink::{MemorySink, ShardSink, Sink, SinkFinish, SinkOutput, StreamReport};
@@ -34,90 +45,13 @@ pub use spec::{
 };
 
 use crate::aligner::gbt::GbtConfig;
-use crate::aligner::{Aligner, AlignerFitContext, AlignKind, StructFeatConfig, Target};
+use crate::aligner::{Aligner, AlignerFitContext, StructFeatConfig, Target};
 use crate::datasets::Dataset;
-use crate::featgen::{FeatKind, FeatureFitContext, FeatureGenerator};
+use crate::featgen::{FeatureFitContext, FeatureGenerator};
 use crate::graph::EdgeList;
 use crate::structgen::chunked::ChunkConfig;
-use crate::structgen::{StructKind, StructureFitContext, StructureGenerator};
+use crate::structgen::{StructureFitContext, StructureGenerator};
 use crate::{Error, Result};
-
-/// Legacy (pre-registry) pipeline configuration: the three swappable
-/// components as closed enums. New code should use [`Pipeline::builder`]
-/// (programmatic) or a [`ScenarioSpec`] file (declarative) — both resolve
-/// open registry names instead of these enums, support per-component
-/// parameters, and reach the [`Sink`]/parallel-runner generation path.
-/// This shim survives only so pre-redesign callers keep compiling:
-/// [`PipelineConfig::to_builder`] lowers it onto the registry-based
-/// [`PipelineBuilder`] with unchanged output.
-#[derive(Clone, Debug)]
-pub struct PipelineConfig {
-    /// Structure backend (closed enum; builder equivalent: `.structure`).
-    pub struct_kind: StructKind,
-    /// Edge-feature backend (builder equivalent: `.edge_features`).
-    pub feat_kind: FeatKind,
-    /// Aligner backend (builder equivalent: `.aligner`).
-    pub align_kind: AlignKind,
-    /// GBT settings for the learned aligner.
-    pub gbt: GbtConfig,
-    /// Structural features used by the aligner.
-    pub struct_feats: StructFeatConfig,
-    /// Kronecker noise amplitude (0 disables; paper §9).
-    pub noise: f64,
-    /// DC-SBM blocks for the graphworld baseline.
-    pub sbm_blocks: usize,
-    /// Use the PJRT GAN backend when artifacts are present (otherwise the
-    /// in-process resample backend keeps the pipeline runnable).
-    pub use_pjrt_gan: bool,
-    /// Fitting seed.
-    pub seed: u64,
-}
-
-impl Default for PipelineConfig {
-    fn default() -> Self {
-        PipelineConfig {
-            struct_kind: StructKind::Kronecker,
-            feat_kind: FeatKind::Kde,
-            align_kind: AlignKind::Learned,
-            gbt: GbtConfig::fast(),
-            struct_feats: StructFeatConfig::default(),
-            noise: 0.0,
-            sbm_blocks: 16,
-            use_pjrt_gan: true,
-            seed: 0x5a6e,
-        }
-    }
-}
-
-impl PipelineConfig {
-    /// Lower the closed-enum config onto the registry-based builder. The
-    /// node-feature leg stays off for parity: the legacy API never
-    /// generated node features, so unchanged callers keep the exact
-    /// output shape (opt in via the builder's `node_features`).
-    pub fn to_builder(&self) -> PipelineBuilder {
-        let structure = match self.struct_kind {
-            StructKind::Kronecker => ComponentSpec::new("kronecker"),
-            StructKind::KroneckerNoisy => {
-                ComponentSpec::new("kronecker-noisy").with("noise", self.noise.max(0.3))
-            }
-            StructKind::Random => ComponentSpec::new("erdos-renyi"),
-            StructKind::Sbm => ComponentSpec::new("sbm").with("blocks", self.sbm_blocks),
-            StructKind::TrillionG => ComponentSpec::new("trilliong"),
-        };
-        let edge_features = match self.feat_kind {
-            FeatKind::Gan => ComponentSpec::new("gan").with("use_pjrt", self.use_pjrt_gan),
-            other => ComponentSpec::new(other.registry_name()),
-        };
-        Pipeline::builder()
-            .structure(structure)
-            .edge_features(edge_features)
-            .aligner(self.align_kind.registry_name())
-            .gbt(self.gbt.clone())
-            .struct_feats(self.struct_feats.clone())
-            .no_node_features()
-            .seed(self.seed)
-    }
-}
 
 /// Fluent, registry-backed pipeline configuration. Obtain via
 /// [`Pipeline::builder`]; component arguments accept a plain name
@@ -280,11 +214,20 @@ impl PipelineBuilder {
             node_feat_gen,
             node_aligner,
             seed: self.seed,
+            source: SourceSummary {
+                dataset: ds.name.clone(),
+                spec: ds.edges.spec,
+                edges: ds.edges.len() as u64,
+                edge_feature_cols: ds.edge_features.column_names(),
+                node_feature_cols: ds.node_features.as_ref().map(|t| t.column_names()),
+            },
         })
     }
 }
 
-/// A fitted pipeline ready to generate synthetic datasets.
+/// A fitted pipeline ready to generate synthetic datasets — obtained by
+/// fitting ([`PipelineBuilder::fit`]) or by loading a `.sggm` model
+/// artifact ([`FittedPipeline::load`]); the two are interchangeable.
 pub struct FittedPipeline {
     /// Scenario/pipeline label (used in logs and experiment tables).
     pub name: String,
@@ -294,6 +237,7 @@ pub struct FittedPipeline {
     node_feat_gen: Option<Box<dyn FeatureGenerator>>,
     node_aligner: Option<Box<dyn Aligner>>,
     seed: u64,
+    source: SourceSummary,
 }
 
 /// Entry point matching the paper's fit→generate workflow.
@@ -303,12 +247,6 @@ impl Pipeline {
     /// Fluent registry-backed configuration.
     pub fn builder() -> PipelineBuilder {
         PipelineBuilder::default()
-    }
-
-    /// Fit all components from a legacy enum config (compatibility shim).
-    #[deprecated(note = "use Pipeline::builder() or a ScenarioSpec")]
-    pub fn fit(ds: &Dataset, cfg: &PipelineConfig) -> Result<FittedPipeline> {
-        cfg.to_builder().fit(ds)
     }
 }
 
@@ -331,6 +269,12 @@ impl FittedPipeline {
     /// The fitting seed.
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// Summary of the dataset this pipeline was fitted on (carried into
+    /// `.sggm` artifacts as provenance).
+    pub fn source(&self) -> &SourceSummary {
+        &self.source
     }
 
     /// Generate a synthetic dataset at integer `scale` (1 = same size).
@@ -415,17 +359,23 @@ impl FittedPipeline {
     }
 }
 
-/// Execute a scenario end to end against the built-in registries: load
-/// the dataset, fit every component, generate at the requested size, and
-/// route output through the configured sink.
+/// Execute a scenario end to end against the built-in registries:
+/// obtain a fitted pipeline (loading the spec's `model` artifact, or
+/// loading the dataset and fitting every component), generate at the
+/// requested size, and route output through the configured sink.
 pub fn run_scenario(spec: &ScenarioSpec) -> Result<SinkOutput> {
     run_scenario_with(spec, &Registries::builtin())
 }
 
 /// [`run_scenario`] with caller-supplied registries.
 pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkOutput> {
-    let ds = crate::datasets::load(&spec.dataset, spec.dataset_seed)?;
-    let fitted = spec.to_builder().fit_with(&ds, regs)?;
+    let fitted = match &spec.model {
+        Some(path) => FittedPipeline::load(path, regs)?,
+        None => {
+            let ds = crate::datasets::load(&spec.dataset, spec.dataset_seed)?;
+            spec.to_builder().fit_with(&ds, regs)?
+        }
+    };
     // `workers = 0` means "one per core" at run time
     let workers = match spec.workers {
         0 => crate::util::threadpool::default_threads(),
@@ -534,15 +484,17 @@ mod tests {
     }
 
     #[test]
-    fn legacy_config_shim_still_works() {
+    fn default_builder_matches_paper_components() {
+        // the default component set the removed enum shim used to pin:
+        // kronecker structure, kde features, learned (xgboost) aligner
         let ds = crate::datasets::load("travel-insurance", 5).unwrap();
-        let cfg = PipelineConfig { use_pjrt_gan: false, ..Default::default() };
-        #[allow(deprecated)]
-        let p = Pipeline::fit(&ds, &cfg).unwrap();
+        let p = Pipeline::builder().no_node_features().fit(&ds).unwrap();
         let (s, f, a) = p.component_names();
         assert_eq!(s, "kronecker");
         assert_eq!(f, "kde");
         assert_eq!(a, "xgboost");
+        assert_eq!(p.source().dataset, "travel-insurance");
+        assert_eq!(p.source().edges, ds.edges.len() as u64);
         let synth = p.generate(1, 2).unwrap();
         assert_eq!(synth.edges.len(), ds.edges.len());
     }

@@ -4,9 +4,9 @@
 //! pipeline builder resolve them by name, and unknown names fail with the
 //! full list of registered backends.
 
-use crate::aligner::AlignerFactory;
-use crate::featgen::FeatureGeneratorFactory;
-use crate::structgen::StructureGeneratorFactory;
+use crate::aligner::{AlignerFactory, AlignerStateLoader};
+use crate::featgen::{FeatureGeneratorFactory, FeatureStateLoader};
+use crate::structgen::{StructureGeneratorFactory, StructureStateLoader};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
 
@@ -57,7 +57,9 @@ impl<F> Registry<F> {
     }
 }
 
-/// The three component registries a pipeline resolves against.
+/// The component registries a pipeline resolves against: fit-time
+/// factories (dataset → fitted component) plus `.sggm` state loaders
+/// (artifact JSON → fitted component), both keyed by backend name.
 pub struct Registries {
     /// Structure-generator factories, keyed by backend name.
     pub structure: Registry<StructureGeneratorFactory>,
@@ -65,6 +67,12 @@ pub struct Registries {
     pub features: Registry<FeatureGeneratorFactory>,
     /// Aligner factories.
     pub aligners: Registry<AlignerFactory>,
+    /// Structure state loaders for `.sggm` artifacts.
+    pub structure_states: Registry<StructureStateLoader>,
+    /// Feature-generator state loaders for `.sggm` artifacts.
+    pub feature_states: Registry<FeatureStateLoader>,
+    /// Aligner state loaders for `.sggm` artifacts.
+    pub aligner_states: Registry<AlignerStateLoader>,
 }
 
 impl Registries {
@@ -74,6 +82,9 @@ impl Registries {
             structure: Registry::new("structure"),
             features: Registry::new("feature"),
             aligners: Registry::new("aligner"),
+            structure_states: Registry::new("structure-state"),
+            feature_states: Registry::new("feature-state"),
+            aligner_states: Registry::new("aligner-state"),
         }
     }
 
@@ -83,6 +94,9 @@ impl Registries {
         crate::structgen::register_builtins(&mut r.structure);
         crate::featgen::register_builtins(&mut r.features);
         crate::aligner::register_builtins(&mut r.aligners);
+        crate::structgen::register_state_loaders(&mut r.structure_states);
+        crate::featgen::register_state_loaders(&mut r.feature_states);
+        crate::aligner::register_state_loaders(&mut r.aligner_states);
         r
     }
 }
@@ -119,6 +133,23 @@ mod tests {
             assert!(r.aligners.contains(name), "missing {name}");
         }
         assert!(r.aligners.contains("xgboost"));
+    }
+
+    #[test]
+    fn state_loaders_cover_every_backend_display_name() {
+        // artifacts record `Component::name()` — every display name
+        // (including "random"/"graphworld"/"xgboost") must resolve to a
+        // state loader
+        let r = Registries::builtin();
+        for name in ["kronecker", "kronecker-noisy", "random", "graphworld", "trilliong"] {
+            assert!(r.structure_states.contains(name), "missing structure loader {name}");
+        }
+        for name in ["kde", "random", "gaussian", "gan"] {
+            assert!(r.feature_states.contains(name), "missing feature loader {name}");
+        }
+        for name in ["xgboost", "learned", "random"] {
+            assert!(r.aligner_states.contains(name), "missing aligner loader {name}");
+        }
     }
 
     #[test]

@@ -10,6 +10,11 @@
 //! # top level: job identity + size
 //! name = "fraud-demo"
 //! dataset = "ieee-fraud"     # registry name (see `sgg datasets`)
+//!                            # — or generate from a fitted artifact:
+//!                            # model = "fraud.sggm" (makes `dataset` and
+//!                            # every component section invalid: the
+//!                            # artifact already carries the fitted
+//!                            # components)
 //! seed = 42
 //! scale = 2                  # nodes ×2, edges ×4 — or use [size]
 //! workers = 4                # parallel chunk-sampling threads
@@ -268,7 +273,13 @@ pub struct ScenarioSpec {
     /// Job name (for logs/reports).
     pub name: String,
     /// Dataset registry name (see [`crate::datasets::REGISTRY`]).
+    /// Empty when [`ScenarioSpec::model`] is set — a loaded artifact
+    /// needs no source data.
     pub dataset: String,
+    /// Path to a `.sggm` model artifact to generate from instead of
+    /// fitting. Mutually exclusive with `dataset` and the component
+    /// sections (the artifact already carries the fitted components).
+    pub model: Option<PathBuf>,
     /// Seed used when loading/synthesizing the source dataset.
     pub dataset_seed: u64,
     /// Structure backend.
@@ -297,6 +308,7 @@ impl ScenarioSpec {
         ScenarioSpec {
             name: format!("{dataset}-scenario"),
             dataset: dataset.to_string(),
+            model: None,
             dataset_seed: 1,
             structure: ComponentSpec::new("kronecker"),
             edge_features: ComponentSpec::new("kde"),
@@ -388,6 +400,8 @@ impl RawConfig {
         spec.name = String::new();
         let mut scale: Option<u64> = None;
         let mut dataset = None;
+        let mut model: Option<PathBuf> = None;
+        let mut dataset_seed_given = false;
         for (key, value) in &self.top {
             match key.as_str() {
                 "name" => {
@@ -396,22 +410,58 @@ impl RawConfig {
                 "dataset" => {
                     dataset = Some(expect_str(key, value)?.to_string());
                 }
-                "dataset_seed" => spec.dataset_seed = expect_u64(key, value)?,
+                "model" => {
+                    model = Some(PathBuf::from(expect_str(key, value)?));
+                }
+                "dataset_seed" => {
+                    dataset_seed_given = true;
+                    spec.dataset_seed = expect_u64(key, value)?;
+                }
                 "seed" => spec.seed = expect_u64(key, value)?,
                 "scale" => scale = Some(expect_u64(key, value)?),
                 "workers" => spec.workers = expect_u64(key, value)? as usize,
                 other => {
                     return Err(Error::Config(format!(
                         "unknown top-level key `{other}`; known: \
-                         name, dataset, dataset_seed, seed, scale, workers"
+                         name, dataset, model, dataset_seed, seed, scale, workers"
                     )));
                 }
             }
         }
-        spec.dataset = dataset.ok_or_else(|| Error::Config("spec is missing `dataset`".into()))?;
+        spec.dataset = match (&model, dataset) {
+            (Some(_), Some(_)) => {
+                return Err(Error::Config(
+                    "give either `dataset` (fit) or `model` (load artifact), not both".into(),
+                ));
+            }
+            (Some(_), None) => String::new(),
+            (None, Some(d)) => d,
+            (None, None) => {
+                return Err(Error::Config("spec is missing `dataset` (or `model`)".into()));
+            }
+        };
+        spec.model = model;
+        if spec.model.is_some() && dataset_seed_given {
+            return Err(Error::Config(
+                "`dataset_seed` has no effect with a `model` artifact (no dataset is \
+                 loaded) — drop it"
+                    .into(),
+            ));
+        }
 
         let mut sized: Option<SizeSpec> = None;
         for (name, pairs) in self.sections {
+            if spec.model.is_some()
+                && matches!(
+                    name.as_str(),
+                    "structure" | "edge_features" | "node_features" | "aligner"
+                )
+            {
+                return Err(Error::Config(format!(
+                    "`[{name}]` configures fitting, but a `model` artifact already carries \
+                     the fitted components — drop the section or the `model` key"
+                )));
+            }
             match name.as_str() {
                 "structure" => spec.structure = component_section(&pairs, "kronecker")?,
                 "edge_features" => spec.edge_features = component_section(&pairs, "kde")?,
@@ -485,7 +535,13 @@ impl RawConfig {
             (None, None) => SizeSpec::Scale(1),
         };
         if spec.name.is_empty() {
-            spec.name = format!("{}-scenario", spec.dataset);
+            spec.name = match &spec.model {
+                Some(path) => format!(
+                    "{}-generate",
+                    path.file_stem().and_then(|s| s.to_str()).unwrap_or("model")
+                ),
+                None => format!("{}-scenario", spec.dataset),
+            };
         }
         // a [sink] section without its own `workers` inherits the
         // top-level worker count
@@ -732,6 +788,49 @@ mod tests {
             SinkSpec::Shards { chunks, .. } => assert_eq!(chunks.workers, 2),
             other => panic!("wrong sink {other:?}"),
         }
+    }
+
+    #[test]
+    fn model_key_makes_dataset_optional() {
+        let spec = ScenarioSpec::parse("model = \"fraud.sggm\"\nscale = 2\n").unwrap();
+        assert_eq!(spec.model, Some(PathBuf::from("fraud.sggm")));
+        assert!(spec.dataset.is_empty());
+        assert_eq!(spec.size, SizeSpec::Scale(2));
+        assert_eq!(spec.name, "fraud-generate");
+    }
+
+    #[test]
+    fn model_and_dataset_conflict() {
+        let err =
+            ScenarioSpec::parse("model = \"m.sggm\"\ndataset = \"cora\"\n").unwrap_err();
+        assert!(err.to_string().contains("not both"), "{err}");
+    }
+
+    #[test]
+    fn model_rejects_dataset_seed() {
+        let err =
+            ScenarioSpec::parse("model = \"m.sggm\"\ndataset_seed = 9\n").unwrap_err();
+        assert!(err.to_string().contains("dataset_seed"), "{err}");
+    }
+
+    #[test]
+    fn model_forbids_component_sections() {
+        let err = ScenarioSpec::parse("model = \"m.sggm\"\n[structure]\nbackend = \"sbm\"\n")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("structure") && msg.contains("model"), "{msg}");
+        // size/sink sections stay allowed with a model
+        let spec = ScenarioSpec::parse(
+            "model = \"m.sggm\"\n[sink]\nkind = \"shards\"\ndir = \"/tmp/x\"\n",
+        )
+        .unwrap();
+        assert!(matches!(spec.sink, SinkSpec::Shards { .. }));
+    }
+
+    #[test]
+    fn missing_dataset_mentions_model_alternative() {
+        let err = ScenarioSpec::parse("seed = 1").unwrap_err();
+        assert!(err.to_string().contains("model"), "{err}");
     }
 
     #[test]

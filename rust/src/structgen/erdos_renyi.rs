@@ -4,6 +4,7 @@
 use super::StructureGenerator;
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::{default_threads, par_map};
 
@@ -21,6 +22,14 @@ impl ErdosRenyi {
     pub fn fit(edges: &EdgeList) -> Self {
         ErdosRenyi { spec: edges.spec, edges: edges.len() as u64 }
     }
+
+    /// Reconstruct from a `.sggm` artifact state.
+    pub fn from_state(state: &Json) -> Result<ErdosRenyi> {
+        Ok(ErdosRenyi {
+            spec: PartiteSpec::from_json(state.req("spec")?)?,
+            edges: state.req_u64("edges")?,
+        })
+    }
 }
 
 impl StructureGenerator for ErdosRenyi {
@@ -30,6 +39,13 @@ impl StructureGenerator for ErdosRenyi {
 
     fn base(&self) -> (PartiteSpec, u64) {
         (self.spec, self.edges)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            ("spec", self.spec.to_json()),
+            ("edges", Json::u64_exact(self.edges)),
+        ]))
     }
 
     fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {

@@ -10,6 +10,7 @@ use super::theta::{Level, ThetaS};
 use super::{noise::NoiseConfig, StructureGenerator};
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// Fitted generalized-Kronecker structure generator.
@@ -36,6 +37,34 @@ impl KroneckerGen {
     pub fn with_noise(mut self, amplitude: f64) -> Self {
         self.noise = Some(NoiseConfig { amplitude });
         self
+    }
+
+    /// Reconstruct from a `.sggm` artifact state (inverse of
+    /// [`StructureGenerator::save_state`]). θ entries are restored
+    /// verbatim — no renormalization — so sampling is bit-identical to
+    /// the generator that was saved.
+    pub fn from_state(state: &Json) -> Result<KroneckerGen> {
+        let t = state.req("theta")?;
+        let theta = ThetaS {
+            a: t.req_f64("a")?,
+            b: t.req_f64("b")?,
+            c: t.req_f64("c")?,
+            d: t.req_f64("d")?,
+        };
+        let noise = match state.opt("noise") {
+            None => None,
+            Some(v) => Some(NoiseConfig {
+                amplitude: v
+                    .as_f64()
+                    .ok_or_else(|| Error::Data("artifact: `noise` must be a number".into()))?,
+            }),
+        };
+        Ok(KroneckerGen {
+            theta,
+            spec: PartiteSpec::from_json(state.req("spec")?)?,
+            edges: state.req_u64("edges")?,
+            noise,
+        })
     }
 
     /// Number of source/destination address bits for given partite sizes.
@@ -249,6 +278,29 @@ impl StructureGenerator for KroneckerGen {
         sink: &mut dyn FnMut(super::chunked::Chunk) -> Result<()>,
     ) -> Result<u64> {
         super::chunked::generate_chunked(self, n_src, n_dst, edges, seed, chunks, sink)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            (
+                "theta",
+                Json::obj(vec![
+                    ("a", Json::from(self.theta.a)),
+                    ("b", Json::from(self.theta.b)),
+                    ("c", Json::from(self.theta.c)),
+                    ("d", Json::from(self.theta.d)),
+                ]),
+            ),
+            ("spec", self.spec.to_json()),
+            ("edges", Json::u64_exact(self.edges)),
+            (
+                "noise",
+                match &self.noise {
+                    Some(cfg) => Json::from(cfg.amplitude),
+                    None => Json::Null,
+                },
+            ),
+        ]))
     }
 
     fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {

@@ -38,6 +38,7 @@ use crate::graph::{EdgeList, PartiteSpec};
 use crate::pipeline::parallel::{ParallelChunkRunner, SplitPlan};
 use crate::pipeline::registry::Registry;
 use crate::pipeline::spec::Params;
+use crate::util::json::Json;
 use crate::Result;
 use chunked::{Chunk, ChunkConfig};
 
@@ -101,6 +102,13 @@ pub trait StructureGenerator: Send + Sync {
         });
         ParallelChunkRunner::from_config(chunks).run(&plan, sink)
     }
+
+    /// Serialize the fitted state for a `.sggm` model artifact (the
+    /// [`ModelState`](crate::pipeline::artifact) capability). The state
+    /// loader registered under this generator's [`Self::name`] must
+    /// reconstruct a generator whose sampling is bit-identical to this
+    /// one for every seed.
+    fn save_state(&self) -> Result<Json>;
 }
 
 /// Everything a structure factory sees at fit time.
@@ -154,6 +162,44 @@ pub fn register_builtins(reg: &mut Registry<StructureGeneratorFactory>) {
     reg.register("erdos-renyi", make_erdos_renyi);
     reg.register("sbm", make_sbm);
     reg.register("trilliong", make_trilliong);
+    reg.alias("ours", "kronecker");
+    reg.alias("rmat", "kronecker");
+    reg.alias("ours-noisy", "kronecker-noisy");
+    reg.alias("random", "erdos-renyi");
+    reg.alias("er", "erdos-renyi");
+    reg.alias("graphworld", "sbm");
+}
+
+/// Loader signature for `.sggm` artifact state: the inverse of
+/// [`StructureGenerator::save_state`], keyed by backend name.
+pub type StructureStateLoader = fn(&Json) -> Result<Box<dyn StructureGenerator>>;
+
+fn load_kronecker(state: &Json) -> Result<Box<dyn StructureGenerator>> {
+    Ok(Box::new(kronecker::KroneckerGen::from_state(state)?))
+}
+
+fn load_erdos_renyi(state: &Json) -> Result<Box<dyn StructureGenerator>> {
+    Ok(Box::new(erdos_renyi::ErdosRenyi::from_state(state)?))
+}
+
+fn load_sbm(state: &Json) -> Result<Box<dyn StructureGenerator>> {
+    Ok(Box::new(sbm::DcSbm::from_state(state)?))
+}
+
+fn load_trilliong(state: &Json) -> Result<Box<dyn StructureGenerator>> {
+    Ok(Box::new(trilliong::TrillionG::from_state(state)?))
+}
+
+/// Register every built-in structure state loader. Keys mirror
+/// [`register_builtins`] (including the aliases), so the `backend` name a
+/// [`StructureGenerator::name`] writes into an artifact — `random` for
+/// Erdős–Rényi, `graphworld` for the DC-SBM — resolves here too.
+pub fn register_state_loaders(reg: &mut Registry<StructureStateLoader>) {
+    reg.register("kronecker", load_kronecker);
+    reg.register("kronecker-noisy", load_kronecker);
+    reg.register("erdos-renyi", load_erdos_renyi);
+    reg.register("sbm", load_sbm);
+    reg.register("trilliong", load_trilliong);
     reg.alias("ours", "kronecker");
     reg.alias("rmat", "kronecker");
     reg.alias("ours-noisy", "kronecker-noisy");

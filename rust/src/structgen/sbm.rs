@@ -13,6 +13,7 @@
 use super::StructureGenerator;
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
+use crate::util::json::Json;
 use crate::util::rng::{AliasTable, Pcg64};
 
 /// Fitted degree-corrected SBM.
@@ -91,6 +92,88 @@ impl DcSbm {
         }
     }
 
+    /// Reconstruct from a `.sggm` artifact state: every fitted table
+    /// (block assignments, block-pair mass, per-block members and
+    /// propensities) is restored verbatim.
+    pub fn from_state(state: &Json) -> Result<DcSbm> {
+        let u16s = |key: &str| -> Result<Vec<u16>> {
+            state
+                .req_u32s(key)?
+                .into_iter()
+                .map(|x| {
+                    u16::try_from(x).map_err(|_| {
+                        Error::Data(format!("artifact: `{key}` entry {x} overflows u16"))
+                    })
+                })
+                .collect()
+        };
+        let f64_row = |row: &Json, key: &str| -> Result<Vec<f64>> {
+            row.as_arr()
+                .ok_or_else(|| Error::Data(format!("artifact: `{key}` must hold arrays")))?
+                .iter()
+                .map(|v| {
+                    v.as_f64().ok_or_else(|| {
+                        Error::Data(format!("artifact: `{key}` must hold numbers"))
+                    })
+                })
+                .collect()
+        };
+        let u64_mat = |key: &str| -> Result<Vec<Vec<u64>>> {
+            state
+                .req_arr(key)?
+                .iter()
+                .map(|row| {
+                    f64_row(row, key)?
+                        .into_iter()
+                        .map(|x| {
+                            // strict: negative/fractional/non-finite node
+                            // ids are corruption, not data to truncate
+                            if x >= 0.0 && x.fract() == 0.0 && x < 9_007_199_254_740_992.0 {
+                                Ok(x as u64)
+                            } else {
+                                Err(Error::Data(format!(
+                                    "artifact: `{key}` entry {x} is not a valid node id"
+                                )))
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let f64_mat = |key: &str| -> Result<Vec<Vec<f64>>> {
+            state.req_arr(key)?.iter().map(|row| f64_row(row, key)).collect()
+        };
+        let m = DcSbm {
+            spec: PartiteSpec::from_json(state.req("spec")?)?,
+            edges: state.req_u64("edges")?,
+            blocks: state.req_usize("blocks")?,
+            src_block: u16s("src_block")?,
+            dst_block: u16s("dst_block")?,
+            block_mass: state.req_f64s("block_mass")?,
+            src_members: u64_mat("src_members")?,
+            src_propensity: f64_mat("src_propensity")?,
+            dst_members: u64_mat("dst_members")?,
+            dst_propensity: f64_mat("dst_propensity")?,
+        };
+        // cross-field invariants generate_sized indexes by
+        let b = m.blocks;
+        if b == 0
+            || m.block_mass.len() != b * b
+            || m.src_members.len() != b
+            || m.dst_members.len() != b
+            || m.src_propensity.len() != b
+            || m.dst_propensity.len() != b
+            || m.src_members.iter().zip(&m.src_propensity).any(|(x, p)| x.len() != p.len())
+            || m.dst_members.iter().zip(&m.dst_propensity).any(|(x, p)| x.len() != p.len())
+            || m.src_block.iter().chain(&m.dst_block).any(|&x| x as usize >= b)
+        {
+            return Err(Error::Data(
+                "artifact: sbm state shapes inconsistent with block count".into(),
+            ));
+        }
+        Ok(m)
+    }
+
     /// Replicate a membership list to a scaled node count: node v in the
     /// original becomes nodes {v, v + N, v + 2N, ...} in the scaled graph,
     /// inheriting v's block and propensity.
@@ -125,6 +208,27 @@ impl StructureGenerator for DcSbm {
 
     fn base(&self) -> (PartiteSpec, u64) {
         (self.spec, self.edges)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        let u64_mat = |m: &[Vec<u64>]| {
+            Json::Arr(m.iter().map(|row| Json::from(row.clone())).collect())
+        };
+        let f64_mat = |m: &[Vec<f64>]| {
+            Json::Arr(m.iter().map(|row| Json::from(row.clone())).collect())
+        };
+        Ok(Json::obj(vec![
+            ("spec", self.spec.to_json()),
+            ("edges", Json::u64_exact(self.edges)),
+            ("blocks", Json::from(self.blocks)),
+            ("src_block", Json::from(self.src_block.clone())),
+            ("dst_block", Json::from(self.dst_block.clone())),
+            ("block_mass", Json::from(self.block_mass.clone())),
+            ("src_members", u64_mat(&self.src_members)),
+            ("src_propensity", f64_mat(&self.src_propensity)),
+            ("dst_members", u64_mat(&self.dst_members)),
+            ("dst_propensity", f64_mat(&self.dst_propensity)),
+        ]))
     }
 
     fn generate_sized(&self, n_src: u64, n_dst: u64, edges: u64, seed: u64) -> Result<EdgeList> {

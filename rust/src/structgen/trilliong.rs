@@ -17,6 +17,7 @@ use super::StructureGenerator;
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
 use crate::pipeline::parallel::{apportion, ChunkPlan, ParallelChunkRunner};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// TrillionG-style generator with a fitted (or default R-MAT) seed.
@@ -40,6 +41,21 @@ impl TrillionG {
     /// Default seed (original TrillionG evaluation uses R-MAT parameters).
     pub fn with_default_seed(spec: PartiteSpec, edges: u64) -> Self {
         TrillionG { theta: ThetaS::rmat_default(), spec, edges }
+    }
+
+    /// Reconstruct from a `.sggm` artifact state (θ restored verbatim).
+    pub fn from_state(state: &Json) -> Result<TrillionG> {
+        let t = state.req("theta")?;
+        Ok(TrillionG {
+            theta: ThetaS {
+                a: t.req_f64("a")?,
+                b: t.req_f64("b")?,
+                c: t.req_f64("c")?,
+                d: t.req_f64("d")?,
+            },
+            spec: PartiteSpec::from_json(state.req("spec")?)?,
+            edges: state.req_u64("edges")?,
+        })
     }
 
     /// Output partite spec for the requested sizes.
@@ -178,6 +194,22 @@ impl StructureGenerator for TrillionG {
 
     fn base(&self) -> (PartiteSpec, u64) {
         (self.spec, self.edges)
+    }
+
+    fn save_state(&self) -> Result<Json> {
+        Ok(Json::obj(vec![
+            (
+                "theta",
+                Json::obj(vec![
+                    ("a", Json::from(self.theta.a)),
+                    ("b", Json::from(self.theta.b)),
+                    ("c", Json::from(self.theta.c)),
+                    ("d", Json::from(self.theta.d)),
+                ]),
+            ),
+            ("spec", self.spec.to_json()),
+            ("edges", Json::u64_exact(self.edges)),
+        ]))
     }
 
     /// Node-centric pass over all source nodes (see

@@ -76,6 +76,143 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
 
+    /// Get a field of an object, treating an explicit `null` as absent.
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self.get(key) {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(v),
+        }
+    }
+
+    /// Required object field; [`crate::Error::Data`] when absent.
+    pub fn req(&self, key: &str) -> crate::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| crate::Error::Data(format!("artifact: missing field `{key}`")))
+    }
+
+    /// Required numeric field.
+    pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| crate::Error::Data(format!("artifact: field `{key}` must be a number")))
+    }
+
+    /// Required unsigned-integer field. Accepts an exactly-representable
+    /// number or a decimal string (the encoding [`Json::u64_exact`] uses
+    /// for values at or above 2^53).
+    pub fn req_u64(&self, key: &str) -> crate::Result<u64> {
+        u64_from_json(self.req(key)?).ok_or_else(|| {
+            crate::Error::Data(format!(
+                "artifact: field `{key}` must be a non-negative integer"
+            ))
+        })
+    }
+
+    /// Required `usize` field.
+    pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
+        Ok(self.req_u64(key)? as usize)
+    }
+
+    /// Required `u32` field.
+    pub fn req_u32(&self, key: &str) -> crate::Result<u32> {
+        let x = self.req_u64(key)?;
+        u32::try_from(x).map_err(|_| {
+            crate::Error::Data(format!("artifact: field `{key}` = {x} overflows u32"))
+        })
+    }
+
+    /// Required boolean field.
+    pub fn req_bool(&self, key: &str) -> crate::Result<bool> {
+        self.req(key)?
+            .as_bool()
+            .ok_or_else(|| crate::Error::Data(format!("artifact: field `{key}` must be a bool")))
+    }
+
+    /// Required string field.
+    pub fn req_str(&self, key: &str) -> crate::Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| crate::Error::Data(format!("artifact: field `{key}` must be a string")))
+    }
+
+    /// Required array field.
+    pub fn req_arr(&self, key: &str) -> crate::Result<&[Json]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| crate::Error::Data(format!("artifact: field `{key}` must be an array")))
+    }
+
+    /// Required array of numbers.
+    pub fn req_f64s(&self, key: &str) -> crate::Result<Vec<f64>> {
+        self.req_arr(key)?
+            .iter()
+            .map(|v| {
+                v.as_f64().ok_or_else(|| {
+                    crate::Error::Data(format!("artifact: `{key}` must hold numbers"))
+                })
+            })
+            .collect()
+    }
+
+    /// Required array of unsigned integers.
+    pub fn req_u64s(&self, key: &str) -> crate::Result<Vec<u64>> {
+        self.req_arr(key)?
+            .iter()
+            .map(|v| {
+                u64_from_json(v).ok_or_else(|| {
+                    crate::Error::Data(format!("artifact: `{key}` must hold integers"))
+                })
+            })
+            .collect()
+    }
+
+    /// Required array of `u32`s.
+    pub fn req_u32s(&self, key: &str) -> crate::Result<Vec<u32>> {
+        self.req_u64s(key)?
+            .into_iter()
+            .map(|x| {
+                u32::try_from(x).map_err(|_| {
+                    crate::Error::Data(format!("artifact: `{key}` entry {x} overflows u32"))
+                })
+            })
+            .collect()
+    }
+
+    /// Required array of strings.
+    pub fn req_strs(&self, key: &str) -> crate::Result<Vec<String>> {
+        self.req_arr(key)?
+            .iter()
+            .map(|v| {
+                v.as_str().map(str::to_string).ok_or_else(|| {
+                    crate::Error::Data(format!("artifact: `{key}` must hold strings"))
+                })
+            })
+            .collect()
+    }
+
+    /// Encode a `u64` losslessly: values below 2^53 stay numeric, larger
+    /// ones become decimal strings (JSON numbers are f64).
+    pub fn u64_exact(x: u64) -> Json {
+        if x < (1u64 << 53) {
+            Json::Num(x as f64)
+        } else {
+            Json::Str(x.to_string())
+        }
+    }
+
+    /// True when any number in the tree is NaN or infinite. JSON cannot
+    /// represent non-finite values (serializing one produces an
+    /// unparseable document), so writers that must stay round-trippable
+    /// check this before serializing.
+    pub fn has_non_finite(&self) -> bool {
+        match self {
+            Json::Num(x) => !x.is_finite(),
+            Json::Arr(a) => a.iter().any(Json::has_non_finite),
+            Json::Obj(o) => o.values().any(Json::has_non_finite),
+            _ => false,
+        }
+    }
+
     /// Parse a JSON document.
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
@@ -109,6 +246,21 @@ impl From<i64> for Json {
         Json::Num(x as f64)
     }
 }
+impl From<u32> for Json {
+    fn from(x: u32) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<u16> for Json {
+    fn from(x: u16) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<f32> for Json {
+    fn from(x: f32) -> Self {
+        Json::Num(x as f64)
+    }
+}
 impl From<bool> for Json {
     fn from(x: bool) -> Self {
         Json::Bool(x)
@@ -127,6 +279,18 @@ impl From<String> for Json {
 impl<T: Into<Json>> From<Vec<T>> for Json {
     fn from(xs: Vec<T>) -> Self {
         Json::Arr(xs.into_iter().map(Into::into).collect())
+    }
+}
+
+/// Exact u64 decoding: an integral number below 2^53, or a decimal
+/// string (the [`Json::u64_exact`] wide-value encoding).
+fn u64_from_json(v: &Json) -> Option<u64> {
+    match v {
+        Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9_007_199_254_740_992.0 => {
+            Some(*x as u64)
+        }
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
     }
 }
 
@@ -403,6 +567,30 @@ mod tests {
         assert_eq!(v.to_string(), "42");
         let v = Json::Num(2.5);
         assert_eq!(v.to_string(), "2.5");
+    }
+
+    #[test]
+    fn typed_field_helpers() {
+        let src = r#"{"a": 3, "b": "x", "c": [1, 2], "d": null, "big": "18446744073709551615"}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.req_u64("a").unwrap(), 3);
+        assert_eq!(v.req_str("b").unwrap(), "x");
+        assert_eq!(v.req_u64s("c").unwrap(), vec![1, 2]);
+        assert!(v.opt("d").is_none());
+        assert!(v.opt("missing").is_none());
+        assert_eq!(v.req_u64("big").unwrap(), u64::MAX);
+        assert!(v.req("nope").is_err());
+        assert!(v.req_f64("b").is_err());
+    }
+
+    #[test]
+    fn u64_exact_roundtrips_wide_values() {
+        for x in [0u64, 7, (1 << 53) - 1, 1 << 53, u64::MAX] {
+            let j = Json::u64_exact(x);
+            let re = Json::parse(&j.to_string()).unwrap();
+            let back = Json::obj(vec![("x", re)]).req_u64("x").unwrap();
+            assert_eq!(back, x);
+        }
     }
 
     #[test]

@@ -243,6 +243,20 @@ impl AliasTable {
         AliasTable { prob, alias }
     }
 
+    /// Decompose into the internal `(prob, alias)` arrays for exact
+    /// artifact serialization; rebuild with [`AliasTable::from_parts`].
+    pub fn to_parts(&self) -> (&[f64], &[u32]) {
+        (&self.prob, &self.alias)
+    }
+
+    /// Rebuild a table from arrays captured by [`AliasTable::to_parts`].
+    /// The arrays must be the same length (panics otherwise) — this is a
+    /// bit-exact inverse, not a re-derivation from weights.
+    pub fn from_parts(prob: Vec<f64>, alias: Vec<u32>) -> AliasTable {
+        assert_eq!(prob.len(), alias.len(), "alias table parts length mismatch");
+        AliasTable { prob, alias }
+    }
+
     /// Number of categories.
     pub fn len(&self) -> usize {
         self.prob.len()

@@ -1,11 +1,10 @@
 //! Integration tests across modules: dataset → pipeline → metrics, the
-//! streaming orchestrator, CLI-level component parsing, and the legacy
-//! enum-config shim.
+//! streaming orchestrator, and CLI-level component parsing.
 
 use sgg::aligner::AlignKind;
 use sgg::featgen::FeatKind;
 use sgg::metrics;
-use sgg::pipeline::{Pipeline, PipelineConfig};
+use sgg::pipeline::Pipeline;
 use sgg::structgen::StructKind;
 
 fn small(name: &str) -> sgg::datasets::Dataset {
@@ -71,18 +70,17 @@ fn generated_graph_is_valid_at_scale() {
 }
 
 #[test]
-fn legacy_enum_config_compiles_and_runs() {
-    // old enum-based callers keep working through the shim
+fn enum_kinds_lower_onto_registry_names() {
+    // the closed enums survive as CLI parsing helpers; their
+    // registry_name() strings must keep resolving through the builder
+    // (this replaces the removed `PipelineConfig` shim test)
     let ds = small("tabformer");
-    let random_cfg = PipelineConfig {
-        struct_kind: StructKind::Random,
-        feat_kind: FeatKind::Random,
-        align_kind: AlignKind::Random,
-        use_pjrt_gan: false,
-        ..Default::default()
-    };
-    #[allow(deprecated)]
-    let fitted = Pipeline::fit(&ds, &random_cfg).unwrap();
+    let fitted = Pipeline::builder()
+        .structure(StructKind::Random.registry_name())
+        .edge_features(FeatKind::Random.registry_name())
+        .aligner(AlignKind::Random.registry_name())
+        .fit(&ds)
+        .unwrap();
     let synth = fitted.generate(1, 5).unwrap();
     assert_eq!(synth.edges.len(), ds.edges.len());
     let (s, f, a) = fitted.component_names();
