@@ -3,7 +3,8 @@
 //! as text columns (plot-ready) and records them in results/figure2.json.
 
 use super::{print_table, save};
-use crate::metrics::{degree::log_binned_degree_hist, hopplot::hop_plot};
+use crate::metrics::degree::log_binned_degree_hist;
+use crate::metrics::{hopplot::hop_plot, DegreeProfile};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -23,7 +24,9 @@ pub fn run(quick: bool) -> Result<Json> {
     let mut rec_deg = Vec::new();
     let mut rec_hop = Vec::new();
     for (name, edges) in &series {
-        let hist = log_binned_degree_hist(&edges.out_degrees(), bins);
+        // one shared degree profile per series (the accumulator path)
+        let profile = DegreeProfile::of(edges);
+        let hist = log_binned_degree_hist(profile.out_degrees(), bins);
         let total: f64 = hist.iter().sum::<f64>().max(1.0);
         let hp = hop_plot(edges, samples, 3);
         rows.push(vec![

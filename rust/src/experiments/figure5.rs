@@ -3,7 +3,8 @@
 //! Renders ASCII heat maps and records the normalized matrices.
 
 use super::save;
-use crate::metrics::joint::heatmap;
+use crate::metrics::joint::heatmap_from;
+use crate::metrics::DegreeProfile;
 use crate::util::json::Json;
 use crate::Result;
 
@@ -32,7 +33,9 @@ pub fn run(_quick: bool) -> Result<Json> {
     let mut records = Vec::new();
     println!("\n=== Figure 5: degree × feature heat maps (rows = degree bins, cols = feature bins) ===");
     for (name, d) in &variants {
-        let (h, rows, cols) = heatmap(&d.edges, &d.edge_features)
+        // accumulator path: derive each variant's degree profile once
+        let profile = DegreeProfile::of(&d.edges);
+        let (h, rows, cols) = heatmap_from(&profile, &d.edges, &d.edge_features)
             .ok_or_else(|| crate::Error::Data("no continuous feature".into()))?;
         println!("\n--- {name} ---\n{}", render(&h, rows, cols));
         records.push(Json::obj(vec![

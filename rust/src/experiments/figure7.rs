@@ -3,7 +3,8 @@
 //! IEEE-Fraud stand-ins.
 
 use super::{print_table, save};
-use crate::metrics::degree::dcc;
+use crate::metrics::degree::dcc_profiles;
+use crate::metrics::DegreeProfile;
 use crate::structgen::erdos_renyi::ErdosRenyi;
 use crate::structgen::fit::fit_kronecker;
 use crate::structgen::StructureGenerator;
@@ -18,6 +19,8 @@ pub fn run(quick: bool) -> Result<Json> {
     let mut records = Vec::new();
     for name in &datasets {
         let ds = crate::datasets::load(name, 1)?;
+        // one original profile shared by every (factor, generator) DCC
+        let orig = DegreeProfile::of(&ds.edges);
         let ours = fit_kronecker(&ds.edges);
         let er = ErdosRenyi::fit(&ds.edges);
         for &k in &factors {
@@ -33,8 +36,8 @@ pub fn run(quick: bool) -> Result<Json> {
             let e = shift(shift(ds.edges.len() as u64, k), k);
             let g_ours = ours.generate_sized(n_src, n_dst, e, 31)?;
             let g_er = er.generate_sized(n_src, n_dst, e, 31)?;
-            let d_ours = dcc(&ds.edges, &g_ours, 16);
-            let d_er = dcc(&ds.edges, &g_er, 16);
+            let d_ours = dcc_profiles(&orig, &DegreeProfile::of(&g_ours), 16);
+            let d_er = dcc_profiles(&orig, &DegreeProfile::of(&g_er), 16);
             rows.push(vec![
                 name.to_string(),
                 format!("{k:+}"),

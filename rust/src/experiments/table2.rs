@@ -39,15 +39,18 @@ pub fn methods() -> Vec<(&'static str, PipelineBuilder)> {
     ]
 }
 
-/// Evaluate one (dataset, method) cell.
+/// Evaluate one (dataset, method) cell against a shared [`metrics::Evaluator`]
+/// (the original's degree/association profiles are derived once per
+/// dataset, not once per cell).
 pub fn evaluate_cell(
     ds: &crate::datasets::Dataset,
+    evaluator: &metrics::Evaluator<'_>,
     builder: &PipelineBuilder,
     seed: u64,
 ) -> Result<metrics::QualityReport> {
     let fitted = builder.fit(ds)?;
     let synth = fitted.generate(1, seed)?;
-    Ok(metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features))
+    Ok(evaluator.score(&synth.edges, &synth.edge_features))
 }
 
 /// Regenerate Table 2 (fidelity metrics per dataset); `quick` shrinks the sweep.
@@ -61,8 +64,9 @@ pub fn run(quick: bool) -> Result<Json> {
     let mut records = Vec::new();
     for name in &datasets {
         let ds = crate::datasets::load(name, 1)?;
+        let evaluator = metrics::Evaluator::new(&ds.edges, &ds.edge_features);
         for (method, cfg) in methods() {
-            let r = evaluate_cell(&ds, &cfg, 42)?;
+            let r = evaluate_cell(&ds, &evaluator, &cfg, 42)?;
             rows.push(vec![
                 name.to_string(),
                 method.to_string(),

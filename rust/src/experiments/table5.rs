@@ -19,10 +19,12 @@ pub fn run(quick: bool) -> Result<Json> {
     let mut records = Vec::new();
     for name in &datasets {
         let ds = crate::datasets::load(name, 1)?;
+        // one original profile shared by every scale's score
+        let evaluator = metrics::Evaluator::new(&ds.edges, &ds.edge_features);
         let fitted = Pipeline::builder().no_node_features().fit(&ds)?;
         for &s in &scales {
             let synth = fitted.generate(s, 11 + s)?;
-            let r = metrics::evaluate(&ds.edges, &ds.edge_features, &synth.edges, &synth.edge_features);
+            let r = evaluator.score(&synth.edges, &synth.edge_features);
             rows.push(vec![
                 name.to_string(),
                 format!("{s}"),

@@ -25,6 +25,8 @@ pub fn run(quick: bool) -> Result<Json> {
 
     let mut rows = Vec::new();
     let mut records = Vec::new();
+    // all 12–18 ablation arms score against one shared original profile
+    let evaluator = metrics::Evaluator::new(&ds.edges, &ds.edge_features);
     for (s_name, s_backend) in structs {
         for (f_name, f_backend) in &feats {
             for (a_name, a_backend) in aligns {
@@ -35,12 +37,7 @@ pub fn run(quick: bool) -> Result<Json> {
                     .no_node_features()
                     .fit(&ds)?
                     .generate(1, 21)?;
-                let r = metrics::evaluate(
-                    &ds.edges,
-                    &ds.edge_features,
-                    &synth.edges,
-                    &synth.edge_features,
-                );
+                let r = evaluator.score(&synth.edges, &synth.edge_features);
                 rows.push(vec![
                     s_name.to_string(),
                     f_name.to_string(),

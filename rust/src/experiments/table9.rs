@@ -6,7 +6,7 @@ use super::{print_table, save};
 use crate::aligner::node2vec::Node2VecConfig;
 use crate::aligner::ranking::{LearnedAligner, Target};
 use crate::aligner::StructFeatConfig;
-use crate::metrics::joint::degree_feature_distance;
+use crate::metrics::Evaluator;
 use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::util::stats;
@@ -51,6 +51,9 @@ pub fn run(quick: bool) -> Result<Json> {
 
     let mut rows = Vec::new();
     let mut records = Vec::new();
+    // the original's degree profile is shared across every feature set
+    // and trial instead of being re-derived per score
+    let evaluator = Evaluator::new(&ds.edges, &ds.edge_features);
     for (name, feat_cfg) in feature_sets(quick) {
         let aligner = LearnedAligner::fit(
             &ds.edges,
@@ -63,12 +66,7 @@ pub fn run(quick: bool) -> Result<Json> {
         for trial in 0..trials {
             let synth = fitted.generate(1, 100 + trial)?;
             let aligned = aligner.align(&synth.edges, &synth.edge_features, trial)?;
-            scores.push(degree_feature_distance(
-                &ds.edges,
-                &ds.edge_features,
-                &synth.edges,
-                &aligned,
-            ));
+            scores.push(evaluator.degree_feature_distance(&synth.edges, &aligned));
         }
         let avg = stats::mean(&scores);
         let sd = stats::std_dev(&scores);

@@ -131,21 +131,30 @@ impl EdgeList {
         Ok(())
     }
 
-    /// Edge overlap with another edge list over the same node space:
-    /// |E ∩ E'| / |E| — the "EO" column of paper Table 10.
-    pub fn edge_overlap(&self, other: &EdgeList) -> f64 {
+    /// The edges as a set of packed `(src << 64) | dst` keys — the
+    /// membership structure behind [`EdgeList::edge_overlap`]. Build it
+    /// once when the same reference graph is compared repeatedly.
+    pub fn edge_keys(&self) -> std::collections::HashSet<u128> {
+        self.iter().map(|(s, d)| ((s as u128) << 64) | d as u128).collect()
+    }
+
+    /// Edge overlap against a precomputed reference key set (see
+    /// [`EdgeList::edge_keys`]): |E ∩ ref| / |E|.
+    pub fn edge_overlap_in(&self, reference: &std::collections::HashSet<u128>) -> f64 {
         if self.is_empty() {
             return 0.0;
         }
-        let set: std::collections::HashSet<u128> = other
-            .iter()
-            .map(|(s, d)| ((s as u128) << 64) | d as u128)
-            .collect();
         let hit = self
             .iter()
-            .filter(|(s, d)| set.contains(&(((*s as u128) << 64) | *d as u128)))
+            .filter(|(s, d)| reference.contains(&(((*s as u128) << 64) | *d as u128)))
             .count();
         hit as f64 / self.len() as f64
+    }
+
+    /// Edge overlap with another edge list over the same node space:
+    /// |E ∩ E'| / |E| — the "EO" column of paper Table 10.
+    pub fn edge_overlap(&self, other: &EdgeList) -> f64 {
+        self.edge_overlap_in(&other.edge_keys())
     }
 }
 

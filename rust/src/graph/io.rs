@@ -1,67 +1,237 @@
 //! On-disk edge-list formats: a compact little-endian binary format for
 //! shard outputs (16 bytes/edge) and a TSV text format for interchange.
+//!
+//! Binary reads and writes move data through a reusable ~1 MiB record
+//! buffer (one syscall per batch, not per edge), and every header is
+//! validated against the actual file size before any allocation trusts
+//! it. [`ShardReader`] opens a whole `ShardSink` directory, validates
+//! every shard header up front, and serves shards one at a time — the
+//! substrate of the streaming evaluation path
+//! (`metrics::stream::evaluate_shards`).
 
 use super::bipartite::PartiteSpec;
 use super::edgelist::EdgeList;
 use crate::error::{Error, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"SGGEDGE1";
 
+/// Fixed header size: magic + n_src + n_dst + square + n_edges.
+const HEADER_LEN: usize = 8 + 8 + 8 + 1 + 8;
+
+/// Edges per IO batch (×16 bytes ≈ 1 MiB buffers).
+const IO_BATCH_EDGES: usize = 65_536;
+
 /// Write an edge list in the binary shard format:
 /// `magic | n_src u64 | n_dst u64 | square u8 | n_edges u64 | (src,dst)*`.
+///
+/// Records are staged in a reusable buffer and flushed in ~1 MiB
+/// batches — one `write_all` per batch instead of per edge.
 pub fn write_binary(path: &Path, edges: &EdgeList) -> Result<()> {
-    let f = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&edges.spec.n_src.to_le_bytes())?;
-    w.write_all(&edges.spec.n_dst.to_le_bytes())?;
-    w.write_all(&[edges.spec.square as u8])?;
-    w.write_all(&(edges.len() as u64).to_le_bytes())?;
+    let mut f = std::fs::File::create(path)?;
+    let cap = HEADER_LEN + edges.len().min(IO_BATCH_EDGES) * 16;
+    let mut buf: Vec<u8> = Vec::with_capacity(cap);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&edges.spec.n_src.to_le_bytes());
+    buf.extend_from_slice(&edges.spec.n_dst.to_le_bytes());
+    buf.push(edges.spec.square as u8);
+    buf.extend_from_slice(&(edges.len() as u64).to_le_bytes());
     for (s, d) in edges.iter() {
-        w.write_all(&s.to_le_bytes())?;
-        w.write_all(&d.to_le_bytes())?;
+        buf.extend_from_slice(&s.to_le_bytes());
+        buf.extend_from_slice(&d.to_le_bytes());
+        if buf.len() >= IO_BATCH_EDGES * 16 {
+            f.write_all(&buf)?;
+            buf.clear();
+        }
     }
-    w.flush()?;
+    if !buf.is_empty() {
+        f.write_all(&buf)?;
+    }
     Ok(())
 }
 
-/// Read the binary shard format written by [`write_binary`].
-pub fn read_binary(path: &Path) -> Result<EdgeList> {
-    let f = std::fs::File::open(path)?;
-    let mut r = BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+/// Parse and validate the fixed-size binary header.
+fn parse_header(h: &[u8; HEADER_LEN], path: &Path) -> Result<(PartiteSpec, u64)> {
+    if &h[0..8] != MAGIC {
         return Err(Error::Data(format!("{}: bad magic", path.display())));
     }
-    let mut u64buf = [0u8; 8];
-    let mut read_u64 = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
-        r.read_exact(&mut u64buf)?;
-        Ok(u64::from_le_bytes(u64buf))
-    };
-    let n_src = read_u64(&mut r)?;
-    let n_dst = read_u64(&mut r)?;
-    let mut sq = [0u8; 1];
-    r.read_exact(&mut sq)?;
-    let spec = if sq[0] == 1 {
+    let n_src = u64::from_le_bytes(h[8..16].try_into().unwrap());
+    let n_dst = u64::from_le_bytes(h[16..24].try_into().unwrap());
+    let square = h[24] == 1;
+    let n_edges = u64::from_le_bytes(h[25..33].try_into().unwrap());
+    let spec = if square {
         PartiteSpec::square(n_src)
     } else {
         PartiteSpec::bipartite(n_src, n_dst)
     };
-    let mut buf = [0u8; 8];
-    r.read_exact(&mut buf)?;
-    let n_edges = u64::from_le_bytes(buf) as usize;
+    Ok((spec, n_edges))
+}
+
+/// Check that the header's edge count matches the file's actual size —
+/// a corrupt or truncated header must not drive `with_capacity` or a
+/// silent short read.
+fn validate_file_len(path: &Path, actual: u64, n_edges: u64) -> Result<()> {
+    let expected = n_edges
+        .checked_mul(16)
+        .and_then(|b| b.checked_add(HEADER_LEN as u64))
+        .ok_or_else(|| {
+            Error::Data(format!(
+                "{}: header edge count {n_edges} overflows the file size",
+                path.display()
+            ))
+        })?;
+    if actual != expected {
+        return Err(Error::Data(format!(
+            "{}: header claims {n_edges} edges ({expected} bytes) but file is {actual} bytes",
+            path.display()
+        )));
+    }
+    Ok(())
+}
+
+/// Open a shard, parse its header, and validate the declared edge count
+/// against the file size — the shared prelude of every binary read
+/// path. The returned handle is positioned at the first edge record.
+fn open_validated(path: &Path) -> Result<(std::fs::File, PartiteSpec, u64)> {
+    let mut f = std::fs::File::open(path)?;
+    let actual = f.metadata()?.len();
+    if (actual as usize) < HEADER_LEN {
+        return Err(Error::Data(format!(
+            "{}: {actual} bytes is shorter than the {HEADER_LEN}-byte header",
+            path.display()
+        )));
+    }
+    let mut h = [0u8; HEADER_LEN];
+    f.read_exact(&mut h)?;
+    let (spec, n_edges) = parse_header(&h, path)?;
+    validate_file_len(path, actual, n_edges)?;
+    Ok((f, spec, n_edges))
+}
+
+/// Read and validate only the header of a binary shard: its partite
+/// spec and edge count. The edge count is checked against the file size.
+pub fn read_binary_header(path: &Path) -> Result<(PartiteSpec, u64)> {
+    let (_f, spec, n_edges) = open_validated(path)?;
+    Ok((spec, n_edges))
+}
+
+/// Read the binary shard format written by [`write_binary`]. The header
+/// edge count is validated against the file size before it is trusted
+/// (no blind `with_capacity`, no silent truncation), and records are
+/// read through a reusable ~1 MiB batch buffer.
+pub fn read_binary(path: &Path) -> Result<EdgeList> {
+    let (mut f, spec, n_edges) = open_validated(path)?;
+    let n_edges = n_edges as usize;
     let mut edges = EdgeList::with_capacity(spec, n_edges);
-    let mut pair = [0u8; 16];
-    for _ in 0..n_edges {
-        r.read_exact(&mut pair)?;
-        let s = u64::from_le_bytes(pair[0..8].try_into().unwrap());
-        let d = u64::from_le_bytes(pair[8..16].try_into().unwrap());
-        edges.push(s, d);
+    let mut buf = vec![0u8; n_edges.clamp(1, IO_BATCH_EDGES) * 16];
+    let mut remaining = n_edges;
+    while remaining > 0 {
+        let take = remaining.min(IO_BATCH_EDGES);
+        let bytes = &mut buf[..take * 16];
+        f.read_exact(bytes)?;
+        for rec in bytes.chunks_exact(16) {
+            let s = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+            let d = u64::from_le_bytes(rec[8..16].try_into().unwrap());
+            edges.push(s, d);
+        }
+        remaining -= take;
     }
     Ok(edges)
+}
+
+/// Validated header of one shard in a [`ShardReader`] directory.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardHeader {
+    /// Partite layout declared by the shard.
+    pub spec: PartiteSpec,
+    /// Edge count declared by the shard (verified against its size).
+    pub n_edges: u64,
+}
+
+/// A `ShardSink` output directory opened for chunk-by-chunk reading:
+/// all `*.sgg` shards in path order, every header validated (magic,
+/// size, and cross-shard spec consistency) before any body is read.
+/// Reading one shard at a time keeps the resident set bounded by the
+/// largest shard — the substrate of streamed evaluation.
+pub struct ShardReader {
+    paths: Vec<PathBuf>,
+    headers: Vec<ShardHeader>,
+    spec: PartiteSpec,
+}
+
+impl ShardReader {
+    /// Open a shard directory. Errors if the directory holds no `.sgg`
+    /// files, any header is invalid, or the shards disagree on the
+    /// partite spec.
+    pub fn open(dir: &Path) -> Result<ShardReader> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|x| x == "sgg").unwrap_or(false))
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Data(format!("no shards in {}", dir.display())));
+        }
+        let mut headers = Vec::with_capacity(paths.len());
+        for p in &paths {
+            let (spec, n_edges) = read_binary_header(p)?;
+            headers.push(ShardHeader { spec, n_edges });
+        }
+        let spec = headers[0].spec;
+        for (h, p) in headers.iter().zip(&paths) {
+            if h.spec != spec {
+                return Err(Error::Data(format!(
+                    "{}: shard spec {:?} differs from the directory's first shard {:?}",
+                    p.display(),
+                    h.spec,
+                    spec
+                )));
+            }
+        }
+        Ok(ShardReader { paths, headers, spec })
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// True when the reader holds no shards (never, by construction —
+    /// [`ShardReader::open`] rejects empty directories).
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+
+    /// The partite spec shared by every shard.
+    pub fn spec(&self) -> PartiteSpec {
+        self.spec
+    }
+
+    /// Total edges across all shards (from the validated headers).
+    pub fn total_edges(&self) -> u64 {
+        self.headers.iter().map(|h| h.n_edges).sum()
+    }
+
+    /// Largest single shard's edge count.
+    pub fn max_shard_edges(&self) -> u64 {
+        self.headers.iter().map(|h| h.n_edges).max().unwrap_or(0)
+    }
+
+    /// Validated header of shard `i`.
+    pub fn header(&self, i: usize) -> &ShardHeader {
+        &self.headers[i]
+    }
+
+    /// Path of shard `i`.
+    pub fn path(&self, i: usize) -> &Path {
+        &self.paths[i]
+    }
+
+    /// Read shard `i` into memory.
+    pub fn read(&self, i: usize) -> Result<EdgeList> {
+        read_binary(&self.paths[i])
+    }
 }
 
 /// Write TSV: header `# n_src n_dst square` then `src\tdst` lines.
@@ -147,6 +317,22 @@ mod tests {
     }
 
     #[test]
+    fn binary_roundtrip_across_batch_boundary() {
+        // more edges than one IO batch, with a ragged tail
+        let path = tmp("batch");
+        let n = IO_BATCH_EDGES * 2 + 17;
+        let mut e = EdgeList::with_capacity(PartiteSpec::square(1 << 20), n);
+        for i in 0..n as u64 {
+            e.push(i % (1 << 20), (i * 7) % (1 << 20));
+        }
+        write_binary(&path, &e).unwrap();
+        let r = read_binary(&path).unwrap();
+        assert_eq!(r.src, e.src);
+        assert_eq!(r.dst, e.dst);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn tsv_roundtrip() {
         let path = tmp("tsv");
         let e = sample();
@@ -163,5 +349,65 @@ mod tests {
         std::fs::write(&path, b"NOTMAGIC________").unwrap();
         assert!(read_binary(&path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn binary_rejects_size_mismatch() {
+        let path = tmp("sizemismatch");
+        let e = sample();
+        write_binary(&path, &e).unwrap();
+        // truncate the body: header still claims 3 edges
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(err.to_string().contains("bytes"), "{err}");
+        // inflate the header's edge count without growing the file
+        let mut forged = bytes.clone();
+        forged[25..33].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &forged).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // a plausible but wrong count is also rejected (no huge
+        // allocation, no short read)
+        forged[25..33].copy_from_slice(&1_000u64.to_le_bytes());
+        std::fs::write(&path, &forged).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(err.to_string().contains("1000 edges"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn header_only_read_validates() {
+        let path = tmp("hdr");
+        let e = sample();
+        write_binary(&path, &e).unwrap();
+        let (spec, n) = read_binary_header(&path).unwrap();
+        assert_eq!(spec, e.spec);
+        assert_eq!(n, 3);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn shard_reader_opens_and_validates() {
+        let dir = tmp("shdir");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let e = sample();
+        write_binary(&dir.join("shard-00000.sgg"), &e).unwrap();
+        write_binary(&dir.join("shard-00001.sgg"), &e).unwrap();
+        let r = ShardReader::open(&dir).unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(!r.is_empty());
+        assert_eq!(r.spec(), e.spec);
+        assert_eq!(r.total_edges(), 6);
+        assert_eq!(r.max_shard_edges(), 3);
+        assert_eq!(r.header(0).n_edges, 3);
+        assert!(r.path(1).ends_with("shard-00001.sgg"));
+        assert_eq!(r.read(0).unwrap().src, e.src);
+        // a shard with a different spec is rejected at open
+        let other = EdgeList::from_pairs(PartiteSpec::square(4), &[(0, 1)]);
+        write_binary(&dir.join("shard-00002.sgg"), &other).unwrap();
+        assert!(ShardReader::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

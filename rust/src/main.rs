@@ -7,10 +7,19 @@
 //! sgg generate --model model.sggm --scale 2 --out /tmp/synth [--workers N]
 //! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
 //! sgg evaluate --dataset tabformer      fit + generate + Table-2 metrics
+//! sgg eval --shards DIR --dataset X     streamed evaluation of shard output
 //! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards --workers 8
 //! sgg experiment table2 [--quick]       regenerate one paper table/figure
 //! sgg experiment all [--quick]          regenerate everything
 //! ```
+//!
+//! `sgg eval` scores `ShardSink` output **without materializing it**:
+//! shards stream chunk-by-chunk through the mergeable degree
+//! accumulators (`--workers N` reads shards in parallel), and the
+//! structural scores are bit-identical to the in-memory
+//! `metrics::evaluate` values for any worker or shard count. The
+//! reference side is `--dataset NAME` (a stand-in) or `--model m.sggm`
+//! (the artifact's provenance names the dataset to reload).
 //!
 //! The fit/artifact/generate lifecycle: `sgg fit` learns every component
 //! from a dataset and writes a versioned `.sggm` model artifact; `sgg
@@ -140,6 +149,17 @@ fn run(args: &Args) -> Result<()> {
             }
             let out = pipeline::run_scenario(&spec)?;
             println!("scenario `{}`: {}", spec.name, out.summary());
+            if spec.evaluate {
+                if let SinkOutput::Dataset(synth) = &out {
+                    // the shard path prints its tapped quality via the
+                    // stream report; the memory path scores the full
+                    // Table-2 metrics here
+                    let ds = sgg::datasets::load(&spec.dataset, spec.dataset_seed)?;
+                    let report = sgg::metrics::Evaluator::new(&ds.edges, &ds.edge_features)
+                        .score(&synth.edges, &synth.edge_features);
+                    println!("quality[{}]: {report}", spec.name);
+                }
+            }
             if let (SinkOutput::Dataset(ds), Some(dir)) = (&out, args.get("out")) {
                 let dir = std::path::Path::new(dir);
                 std::fs::create_dir_all(dir)?;
@@ -209,13 +229,47 @@ fn run(args: &Args) -> Result<()> {
         Some("evaluate") => {
             let (ds, fitted) = fit_from_args(args)?;
             let synth = generate_dataset(&fitted, args)?;
-            let report = sgg::metrics::evaluate(
-                &ds.edges,
-                &ds.edge_features,
-                &synth.edges,
-                &synth.edge_features,
-            );
+            let report = sgg::metrics::Evaluator::new(&ds.edges, &ds.edge_features)
+                .score(&synth.edges, &synth.edge_features);
             println!("{}: {report}", ds.name);
+            Ok(())
+        }
+        Some("eval") => {
+            let usage = "usage: sgg eval --shards DIR (--dataset NAME | --model m.sggm) \
+                         [--dataset-seed N] [--workers N]";
+            let shards = args
+                .get("shards")
+                .ok_or_else(|| sgg::Error::Config(usage.into()))?;
+            let workers = match args.get_or("workers", 1usize) {
+                0 => sgg::util::threadpool::default_threads(),
+                w => w,
+            };
+            let reference = match (args.get("model"), args.get("dataset")) {
+                (Some(_), Some(_)) => {
+                    return Err(sgg::Error::Config(
+                        "give either --dataset or --model as the eval reference, not both"
+                            .into(),
+                    ));
+                }
+                (Some(model), None) => {
+                    // the artifact's provenance header names the fit
+                    // dataset — no component is deserialized
+                    let src = FittedPipeline::read_provenance(Path::new(model))?;
+                    println!("reference from `{model}`: dataset `{}`", src.dataset);
+                    sgg::datasets::load(&src.dataset, args.get_or("dataset-seed", 1u64))?
+                }
+                (None, Some(name)) => {
+                    sgg::datasets::load(name, args.get_or("dataset-seed", 1u64))?
+                }
+                (None, None) => return Err(sgg::Error::Config(usage.into())),
+            };
+            let orig = sgg::metrics::DegreeProfile::of(&reference.edges);
+            let report = sgg::metrics::stream::evaluate_shards(
+                Path::new(shards),
+                &orig,
+                workers,
+            )?;
+            println!("{} vs {}: {report}", shards, reference.name);
             Ok(())
         }
         Some("stream") => {
@@ -267,13 +321,14 @@ fn run(args: &Args) -> Result<()> {
         }
         _ => {
             println!(
-                "usage: sgg <datasets|run|fit|generate|fit-generate|evaluate|stream|experiment> [--options]\n\
+                "usage: sgg <datasets|run|fit|generate|fit-generate|evaluate|eval|stream|experiment> [--options]\n\
                  lifecycle: sgg fit --dataset ieee-fraud --out m.sggm && \
                  sgg generate --model m.sggm --scale 2 --out /tmp/synth\n\
+                 streamed eval: sgg eval --shards /tmp/shards --dataset ieee-fraud --workers 4\n\
                  experiments: {:?}\n\
                  components: --struct kronecker|kronecker-noisy|erdos-renyi|sbm|trilliong  \
                  --feat gan|kde|random|gaussian  --align learned|random\n\
-                 parallelism: --workers N (run/generate/fit-generate/stream; 0 = one per core)\n\
+                 parallelism: --workers N (run/generate/fit-generate/eval/stream; 0 = one per core)\n\
                  spec files: sgg run examples/fraud.toml (see docs/scenario-reference.md)",
                 sgg::experiments::ALL
             );

@@ -7,12 +7,137 @@
 //!   the paper's requirement to compare graphs of different scales.
 //! * [`dcc`] — the scalar Degree Comparison Coefficient of eq. 20/21.
 //! * [`power_law_alpha`] — MLE power-law exponent (Table 10 column).
+//!
+//! Both scores are pure functions of the two graphs' per-node degree
+//! counts, which [`DegreeAccumulator`] gathers in one streaming pass
+//! (exactly mergeable — integer counts; see [`super::accum`]). The
+//! `_profiles` variants score finalized [`DegreeProfile`]s directly so
+//! callers that need several degree metrics (or stream edges chunk by
+//! chunk) derive the degree vectors once and share them.
 
-use crate::graph::EdgeList;
+use super::accum::MetricAccumulator;
+use crate::graph::{EdgeList, PartiteSpec};
 use crate::util::stats;
 
 /// Number of logarithmic bins used by the scores.
 const LOG_BINS: usize = 24;
+
+/// Streaming per-node degree counter: one pass over any chunking of the
+/// edge stream, `merge` adds counts elementwise (exact — associative and
+/// commutative bit for bit). The partite spec is adopted from the first
+/// observed chunk; every chunk must carry the same spec.
+#[derive(Clone, Debug, Default)]
+pub struct DegreeAccumulator {
+    spec: Option<PartiteSpec>,
+    out: Vec<u32>,
+    in_: Vec<u32>,
+    edges: u64,
+}
+
+impl DegreeAccumulator {
+    /// Empty accumulator; the node space is sized from the first chunk.
+    pub fn new() -> DegreeAccumulator {
+        DegreeAccumulator::default()
+    }
+
+    /// Accumulator with the node space pre-sized.
+    pub fn with_spec(spec: PartiteSpec) -> DegreeAccumulator {
+        let mut a = DegreeAccumulator::new();
+        a.ensure_spec(spec);
+        a
+    }
+
+    /// Total edges observed so far.
+    pub fn edges_observed(&self) -> u64 {
+        self.edges
+    }
+
+    fn ensure_spec(&mut self, spec: PartiteSpec) {
+        match self.spec {
+            None => {
+                self.out = vec![0; spec.n_src as usize];
+                self.in_ = vec![0; spec.n_dst as usize];
+                self.spec = Some(spec);
+            }
+            Some(s) => assert_eq!(
+                s, spec,
+                "DegreeAccumulator fed chunks of differently-shaped graphs"
+            ),
+        }
+    }
+}
+
+impl MetricAccumulator for DegreeAccumulator {
+    type Output = DegreeProfile;
+
+    fn observe_edges(&mut self, chunk: &EdgeList) {
+        self.ensure_spec(chunk.spec);
+        for &s in &chunk.src {
+            self.out[s as usize] += 1;
+        }
+        for &d in &chunk.dst {
+            self.in_[d as usize] += 1;
+        }
+        self.edges += chunk.len() as u64;
+    }
+
+    fn merge(&mut self, other: Self) {
+        let Some(other_spec) = other.spec else { return };
+        if self.spec.is_none() {
+            *self = other;
+            return;
+        }
+        assert_eq!(
+            self.spec,
+            Some(other_spec),
+            "DegreeAccumulator merge across differently-shaped graphs"
+        );
+        for (a, b) in self.out.iter_mut().zip(&other.out) {
+            *a += b;
+        }
+        for (a, b) in self.in_.iter_mut().zip(&other.in_) {
+            *a += b;
+        }
+        self.edges += other.edges;
+    }
+
+    fn finalize(self) -> DegreeProfile {
+        DegreeProfile { out: self.out, in_: self.in_ }
+    }
+}
+
+/// Finalized per-node degree counts of one graph: the shared input of
+/// every degree-derived metric (Table 2 degree score, DCC, the joint
+/// degree×feature histogram's normalization).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DegreeProfile {
+    out: Vec<u32>,
+    in_: Vec<u32>,
+}
+
+impl DegreeProfile {
+    /// Profile an in-memory edge list (single-chunk accumulation).
+    pub fn of(edges: &EdgeList) -> DegreeProfile {
+        let mut acc = DegreeAccumulator::new();
+        acc.observe_edges(edges);
+        acc.finalize()
+    }
+
+    /// Out-degree per source node (`out[i] = deg(v_i)`).
+    pub fn out_degrees(&self) -> &[u32] {
+        &self.out
+    }
+
+    /// In-degree per destination node.
+    pub fn in_degrees(&self) -> &[u32] {
+        &self.in_
+    }
+
+    /// Largest out-degree (0 for an empty node space).
+    pub fn max_out_degree(&self) -> u32 {
+        self.out.iter().copied().max().unwrap_or(0)
+    }
+}
 
 /// Log-binned histogram of a degree sample normalized to [0, 1].
 /// Zero-degree nodes are dropped (log scale); mass is normalized.
@@ -31,22 +156,25 @@ pub fn log_binned_degree_hist(degrees: &[u32], bins: usize) -> Vec<f64> {
     hist
 }
 
-/// "Degree Dist. ↑" of Table 2: mean over in/out sides of
-/// `1 − JS-distance(log-binned degree hists)` ∈ [0, 1].
-pub fn degree_dist_score(a: &EdgeList, b: &EdgeList) -> f64 {
+/// "Degree Dist. ↑" of Table 2 over two finalized degree profiles: mean
+/// over in/out sides of `1 − JS-distance(log-binned degree hists)`.
+pub fn degree_dist_score_profiles(a: &DegreeProfile, b: &DegreeProfile) -> f64 {
     let score = |da: &[u32], db: &[u32]| -> f64 {
         let ha = log_binned_degree_hist(da, LOG_BINS);
         let hb = log_binned_degree_hist(db, LOG_BINS);
         1.0 - stats::js_distance(&ha, &hb)
     };
-    0.5 * (score(&a.out_degrees(), &b.out_degrees()) + score(&a.in_degrees(), &b.in_degrees()))
+    0.5 * (score(a.out_degrees(), b.out_degrees()) + score(a.in_degrees(), b.in_degrees()))
 }
 
-/// DCC of paper eq. 20: mean relative error of the normalized degree
-/// counts sampled at K log-spaced normalized degrees. Returned as the
-/// *coefficient* 1 − mean|rel err| clamped to [0,1] so that 1 = perfect
-/// (the paper's Figure 7 plots high-is-better values).
-pub fn dcc(a: &EdgeList, b: &EdgeList, k_samples: usize) -> f64 {
+/// "Degree Dist. ↑" of Table 2: convenience wrapper over
+/// [`degree_dist_score_profiles`] for in-memory edge lists.
+pub fn degree_dist_score(a: &EdgeList, b: &EdgeList) -> f64 {
+    degree_dist_score_profiles(&DegreeProfile::of(a), &DegreeProfile::of(b))
+}
+
+/// DCC of paper eq. 20 over two finalized degree profiles (see [`dcc`]).
+pub fn dcc_profiles(a: &DegreeProfile, b: &DegreeProfile, k_samples: usize) -> f64 {
     let coef = |da: &[u32], db: &[u32]| -> f64 {
         let (na, nb) = (normalized_ccdf(da), normalized_ccdf(db));
         let mut err = 0.0;
@@ -67,7 +195,15 @@ pub fn dcc(a: &EdgeList, b: &EdgeList, k_samples: usize) -> f64 {
             (1.0 - err / count as f64).clamp(0.0, 1.0)
         }
     };
-    0.5 * (coef(&a.out_degrees(), &b.out_degrees()) + coef(&a.in_degrees(), &b.in_degrees()))
+    0.5 * (coef(a.out_degrees(), b.out_degrees()) + coef(a.in_degrees(), b.in_degrees()))
+}
+
+/// DCC of paper eq. 20: mean relative error of the normalized degree
+/// counts sampled at K log-spaced normalized degrees. Returned as the
+/// *coefficient* 1 − mean|rel err| clamped to [0,1] so that 1 = perfect
+/// (the paper's Figure 7 plots high-is-better values).
+pub fn dcc(a: &EdgeList, b: &EdgeList, k_samples: usize) -> f64 {
+    dcc_profiles(&DegreeProfile::of(a), &DegreeProfile::of(b), k_samples)
 }
 
 /// Normalized complementary CDF of degrees: points (d/max_d, frac nodes
@@ -204,5 +340,60 @@ mod tests {
         let h = log_binned_degree_hist(&[1, 2, 3, 100], 10);
         let total: f64 = h.iter().sum();
         assert_eq!(total, 4.0);
+    }
+
+    #[test]
+    fn profile_matches_edge_list_degrees() {
+        let g = kron(7);
+        let p = DegreeProfile::of(&g);
+        assert_eq!(p.out_degrees(), &g.out_degrees()[..]);
+        assert_eq!(p.in_degrees(), &g.in_degrees()[..]);
+        assert_eq!(
+            p.max_out_degree(),
+            g.out_degrees().iter().copied().max().unwrap()
+        );
+    }
+
+    #[test]
+    fn chunked_accumulation_is_exact() {
+        let g = kron(9);
+        let whole = DegreeProfile::of(&g);
+        // split into 3 uneven chunks observed into one accumulator
+        let cuts = [0usize, g.len() / 5, g.len() / 2, g.len()];
+        let mut seq = DegreeAccumulator::new();
+        // and into independently-merged partials
+        let mut partials: Vec<DegreeAccumulator> = Vec::new();
+        for w in cuts.windows(2) {
+            let mut chunk = EdgeList::new(g.spec);
+            for i in w[0]..w[1] {
+                chunk.push(g.src[i], g.dst[i]);
+            }
+            seq.observe_edges(&chunk);
+            let mut p = DegreeAccumulator::new();
+            p.observe_edges(&chunk);
+            partials.push(p);
+        }
+        assert_eq!(seq.edges_observed(), g.len() as u64);
+        assert_eq!(seq.finalize(), whole);
+        // merge in reverse order: counts are order-independent
+        let mut merged = DegreeAccumulator::new();
+        for p in partials.into_iter().rev() {
+            merged.merge(p);
+        }
+        assert_eq!(merged.finalize(), whole);
+    }
+
+    #[test]
+    fn profile_scores_match_edge_list_scores() {
+        let (a, b) = (kron(1), er(2));
+        let (pa, pb) = (DegreeProfile::of(&a), DegreeProfile::of(&b));
+        assert_eq!(
+            degree_dist_score(&a, &b).to_bits(),
+            degree_dist_score_profiles(&pa, &pb).to_bits()
+        );
+        assert_eq!(
+            dcc(&a, &b, 16).to_bits(),
+            dcc_profiles(&pa, &pb, 16).to_bits()
+        );
     }
 }

@@ -4,62 +4,635 @@
 //! between continuous pairs, correlation ratio between categorical and
 //! continuous, Theil's U between categorical pairs — and scores a
 //! synthetic table by 1 − mean |assoc_orig − assoc_synth|.
+//!
+//! The statistics stream: [`AssocAccumulator`] keeps Welford/Chan-style
+//! running moments per column and per column pair (plus exact joint
+//! category counts), so the association matrix is computed in one pass
+//! over any chunking of the rows and partial accumulators merge
+//! deterministically (see [`super::accum`] for the exactness contract —
+//! moment merges are commutative bit for bit and associative up to f64
+//! rounding; category counts are exact). [`association_matrix`] and
+//! [`feature_corr_score`] are thin wrappers over the accumulator.
 
+use super::accum::MetricAccumulator;
 use crate::featgen::table::{ColumnData, FeatureTable};
 use crate::util::stats;
+use std::collections::BTreeMap;
 
-/// Pairwise association matrix (row-major k×k, diagonal = 1).
-pub fn association_matrix(t: &FeatureTable) -> Vec<f64> {
-    let k = t.n_cols();
-    let mut m = vec![0.0f64; k * k];
-    for i in 0..k {
-        m[i * k + i] = 1.0;
-        for j in (i + 1)..k {
-            let a = association(&t.columns[i].data, &t.columns[j].data);
-            m[i * k + j] = a;
-            m[j * k + i] = a;
-        }
-    }
-    m
+/// Bins used by the single-column continuous marginal similarity.
+const MARGINAL_BINS: usize = 32;
+
+/// Streaming per-column statistics.
+#[derive(Clone, Debug)]
+enum ColStats {
+    /// Welford moments + observed range of a continuous column.
+    Cont { n: u64, mean: f64, m2: f64, lo: f64, hi: f64 },
+    /// Exact category counts (grown on demand past the declared
+    /// cardinality).
+    Cat { counts: Vec<u64>, cardinality: u32 },
 }
 
-fn association(a: &ColumnData, b: &ColumnData) -> f64 {
-    match (a, b) {
-        (ColumnData::Continuous(x), ColumnData::Continuous(y)) => stats::pearson(x, y).abs(),
-        (ColumnData::Categorical { codes, .. }, ColumnData::Continuous(y)) => {
-            let cats: Vec<usize> = codes.iter().map(|&c| c as usize).collect();
-            stats::correlation_ratio(&cats, y)
+impl ColStats {
+    fn of(data: &ColumnData) -> ColStats {
+        match data {
+            ColumnData::Continuous(_) => ColStats::Cont {
+                n: 0,
+                mean: 0.0,
+                m2: 0.0,
+                lo: f64::INFINITY,
+                hi: f64::NEG_INFINITY,
+            },
+            ColumnData::Categorical { cardinality, .. } => ColStats::Cat {
+                counts: vec![0; *cardinality as usize],
+                cardinality: *cardinality,
+            },
         }
-        (ColumnData::Continuous(x), ColumnData::Categorical { codes, .. }) => {
-            let cats: Vec<usize> = codes.iter().map(|&c| c as usize).collect();
-            stats::correlation_ratio(&cats, x)
+    }
+
+    fn same_kind(&self, data: &ColumnData) -> bool {
+        matches!(
+            (self, data),
+            (ColStats::Cont { .. }, ColumnData::Continuous(_))
+                | (ColStats::Cat { .. }, ColumnData::Categorical { .. })
+        )
+    }
+}
+
+/// Streaming per-pair statistics (pair `(i, j)` with `i < j`).
+#[derive(Clone, Debug)]
+enum PairStats {
+    /// Bivariate Welford moments for Pearson.
+    ContCont { n: u64, mx: f64, my: f64, mxx: f64, myy: f64, cxy: f64 },
+    /// Per-category (count, mean) of the continuous side plus the grand
+    /// Welford moments, for the correlation ratio. `cat_first` records
+    /// which side of the pair is the categorical column.
+    CatCont { cats: Vec<(u64, f64)>, n: u64, mean: f64, m2: f64, cat_first: bool },
+    /// Exact joint category counts for Theil's U.
+    CatCat { joint: BTreeMap<(u32, u32), u64> },
+}
+
+impl PairStats {
+    fn of(a: &ColumnData, b: &ColumnData) -> PairStats {
+        match (a, b) {
+            (ColumnData::Continuous(_), ColumnData::Continuous(_)) => PairStats::ContCont {
+                n: 0,
+                mx: 0.0,
+                my: 0.0,
+                mxx: 0.0,
+                myy: 0.0,
+                cxy: 0.0,
+            },
+            (ColumnData::Categorical { .. }, ColumnData::Continuous(_)) => PairStats::CatCont {
+                cats: Vec::new(),
+                n: 0,
+                mean: 0.0,
+                m2: 0.0,
+                cat_first: true,
+            },
+            (ColumnData::Continuous(_), ColumnData::Categorical { .. }) => PairStats::CatCont {
+                cats: Vec::new(),
+                n: 0,
+                mean: 0.0,
+                m2: 0.0,
+                cat_first: false,
+            },
+            (ColumnData::Categorical { .. }, ColumnData::Categorical { .. }) => {
+                PairStats::CatCat { joint: BTreeMap::new() }
+            }
         }
-        (
-            ColumnData::Categorical { codes: ca, .. },
-            ColumnData::Categorical { codes: cb, .. },
-        ) => {
-            let xa: Vec<usize> = ca.iter().map(|&c| c as usize).collect();
-            let xb: Vec<usize> = cb.iter().map(|&c| c as usize).collect();
-            // symmetrized Theil's U
-            0.5 * (stats::theils_u(&xa, &xb) + stats::theils_u(&xb, &xa))
+    }
+}
+
+/// One-pass, mergeable accumulator of the pairwise association matrix
+/// (and the per-column ranges / marginals the other feature metrics
+/// need). The column layout is adopted from the first observed block;
+/// later blocks must match it.
+#[derive(Clone, Debug, Default)]
+pub struct AssocAccumulator {
+    cols: Vec<ColStats>,
+    pairs: Vec<PairStats>,
+    started: bool,
+}
+
+impl AssocAccumulator {
+    /// Empty accumulator; the column layout comes from the first block.
+    pub fn new() -> AssocAccumulator {
+        AssocAccumulator::default()
+    }
+
+    fn ensure_layout(&mut self, rows: &FeatureTable) {
+        if !self.started {
+            let k = rows.n_cols();
+            self.cols = rows.columns.iter().map(|c| ColStats::of(&c.data)).collect();
+            self.pairs = Vec::with_capacity(k.saturating_sub(1) * k / 2);
+            for i in 0..k {
+                for j in (i + 1)..k {
+                    self.pairs
+                        .push(PairStats::of(&rows.columns[i].data, &rows.columns[j].data));
+                }
+            }
+            self.started = true;
+            return;
         }
+        assert_eq!(
+            self.cols.len(),
+            rows.n_cols(),
+            "AssocAccumulator fed blocks with different column counts"
+        );
+        for (st, col) in self.cols.iter().zip(&rows.columns) {
+            assert!(
+                st.same_kind(&col.data),
+                "AssocAccumulator fed blocks with different column kinds"
+            );
+        }
+    }
+}
+
+/// Scalar value of row `r` of a column, as (continuous, categorical).
+fn cell(data: &ColumnData, r: usize) -> (f64, u32) {
+    match data {
+        ColumnData::Continuous(v) => (v[r], 0),
+        ColumnData::Categorical { codes, .. } => (0.0, codes[r]),
+    }
+}
+
+fn bump_cat(counts: &mut Vec<u64>, code: u32) {
+    if counts.len() <= code as usize {
+        counts.resize(code as usize + 1, 0);
+    }
+    counts[code as usize] += 1;
+}
+
+/// Welford update of a per-category running mean.
+fn bump_cat_mean(cats: &mut Vec<(u64, f64)>, code: u32, v: f64) {
+    if cats.len() <= code as usize {
+        cats.resize(code as usize + 1, (0, 0.0));
+    }
+    let (n, mean) = &mut cats[code as usize];
+    *n += 1;
+    *mean += (v - *mean) / *n as f64;
+}
+
+/// Merge two Welford (n, mean, m2) triples (Chan et al.). Every term is
+/// written in a symmetric form (`x·a + y·b`, `(a + b) + t`), so the
+/// merge is **commutative bit for bit** — swapping the argument triples
+/// produces the identical f64s (IEEE `+`/`·`/negation commute exactly).
+fn merge_moments(
+    n1: u64,
+    mean1: f64,
+    m2_1: f64,
+    n2: u64,
+    mean2: f64,
+    m2_2: f64,
+) -> (u64, f64, f64) {
+    if n2 == 0 {
+        return (n1, mean1, m2_1);
+    }
+    if n1 == 0 {
+        return (n2, mean2, m2_2);
+    }
+    let n = n1 + n2;
+    let (n1f, n2f, nf) = (n1 as f64, n2 as f64, n as f64);
+    let d = mean2 - mean1;
+    let mean = (n1f * mean1 + n2f * mean2) / nf;
+    let m2 = (m2_1 + m2_2) + d * d * (n1f * n2f / nf);
+    (n, mean, m2)
+}
+
+impl MetricAccumulator for AssocAccumulator {
+    type Output = FeatureProfile;
+
+    fn observe_features(&mut self, rows: &FeatureTable) {
+        self.ensure_layout(rows);
+        let k = rows.n_cols();
+        // per-row scratch of every column's cell, extracted once instead
+        // of once per pair (k vs k² enum dispatches per row)
+        let mut row_cells: Vec<(f64, u32)> = vec![(0.0, 0); k];
+        for r in 0..rows.n_rows() {
+            for (st, col) in self.cols.iter_mut().zip(&rows.columns) {
+                match (st, &col.data) {
+                    (ColStats::Cont { n, mean, m2, lo, hi }, ColumnData::Continuous(v)) => {
+                        let x = v[r];
+                        *n += 1;
+                        let d = x - *mean;
+                        *mean += d / *n as f64;
+                        *m2 += d * (x - *mean);
+                        if !x.is_nan() {
+                            *lo = lo.min(x);
+                            *hi = hi.max(x);
+                        }
+                    }
+                    (ColStats::Cat { counts, .. }, ColumnData::Categorical { codes, .. }) => {
+                        bump_cat(counts, codes[r]);
+                    }
+                    _ => unreachable!("layout checked in ensure_layout"),
+                }
+            }
+            for (cell_slot, col) in row_cells.iter_mut().zip(&rows.columns) {
+                *cell_slot = cell(&col.data, r);
+            }
+            let mut p = 0usize;
+            for i in 0..k {
+                for j in (i + 1)..k {
+                    let (xi, ci) = row_cells[i];
+                    let (xj, cj) = row_cells[j];
+                    match &mut self.pairs[p] {
+                        PairStats::ContCont { n, mx, my, mxx, myy, cxy } => {
+                            *n += 1;
+                            let nf = *n as f64;
+                            let dx = xi - *mx;
+                            *mx += dx / nf;
+                            *mxx += dx * (xi - *mx);
+                            let dy = xj - *my;
+                            *my += dy / nf;
+                            *myy += dy * (xj - *my);
+                            *cxy += dx * (xj - *my);
+                        }
+                        PairStats::CatCont { cats, n, mean, m2, cat_first } => {
+                            let (code, v) = if *cat_first { (ci, xj) } else { (cj, xi) };
+                            bump_cat_mean(cats, code, v);
+                            *n += 1;
+                            let d = v - *mean;
+                            *mean += d / *n as f64;
+                            *m2 += d * (v - *mean);
+                        }
+                        PairStats::CatCat { joint } => {
+                            *joint.entry((ci, cj)).or_insert(0) += 1;
+                        }
+                    }
+                    p += 1;
+                }
+            }
+        }
+    }
+
+    fn merge(&mut self, other: Self) {
+        if !other.started {
+            return;
+        }
+        if !self.started {
+            *self = other;
+            return;
+        }
+        assert_eq!(
+            self.cols.len(),
+            other.cols.len(),
+            "AssocAccumulator merge across different column layouts"
+        );
+        for (a, b) in self.cols.iter_mut().zip(other.cols) {
+            match (a, b) {
+                (
+                    ColStats::Cont { n, mean, m2, lo, hi },
+                    ColStats::Cont { n: n2, mean: mean2, m2: m22, lo: lo2, hi: hi2 },
+                ) => {
+                    let (nn, nm, nm2) = merge_moments(*n, *mean, *m2, n2, mean2, m22);
+                    (*n, *mean, *m2) = (nn, nm, nm2);
+                    *lo = lo.min(lo2);
+                    *hi = hi.max(hi2);
+                }
+                (ColStats::Cat { counts, .. }, ColStats::Cat { counts: c2, .. }) => {
+                    if counts.len() < c2.len() {
+                        counts.resize(c2.len(), 0);
+                    }
+                    for (a, b) in counts.iter_mut().zip(&c2) {
+                        *a += b;
+                    }
+                }
+                _ => panic!("AssocAccumulator merge across different column kinds"),
+            }
+        }
+        for (a, b) in self.pairs.iter_mut().zip(other.pairs) {
+            match (a, b) {
+                (
+                    PairStats::ContCont { n, mx, my, mxx, myy, cxy },
+                    PairStats::ContCont {
+                        n: n2,
+                        mx: mx2,
+                        my: my2,
+                        mxx: mxx2,
+                        myy: myy2,
+                        cxy: cxy2,
+                    },
+                ) => {
+                    if n2 == 0 {
+                        continue;
+                    }
+                    if *n == 0 {
+                        (*n, *mx, *my, *mxx, *myy, *cxy) = (n2, mx2, my2, mxx2, myy2, cxy2);
+                        continue;
+                    }
+                    // symmetric forms: bit-commutative (see merge_moments)
+                    let nt = *n + n2;
+                    let (n1f, n2f, ntf) = (*n as f64, n2 as f64, nt as f64);
+                    let dx = mx2 - *mx;
+                    let dy = my2 - *my;
+                    *mxx = (*mxx + mxx2) + dx * dx * (n1f * n2f / ntf);
+                    *myy = (*myy + myy2) + dy * dy * (n1f * n2f / ntf);
+                    *cxy = (*cxy + cxy2) + dx * dy * (n1f * n2f / ntf);
+                    *mx = (n1f * *mx + n2f * mx2) / ntf;
+                    *my = (n1f * *my + n2f * my2) / ntf;
+                    *n = nt;
+                }
+                (
+                    PairStats::CatCont { cats, n, mean, m2, .. },
+                    PairStats::CatCont { cats: cats2, n: n2, mean: mean2, m2: m22, .. },
+                ) => {
+                    if cats.len() < cats2.len() {
+                        cats.resize(cats2.len(), (0, 0.0));
+                    }
+                    for (a, b) in cats.iter_mut().zip(&cats2) {
+                        let (nn, nm, _) = merge_moments(a.0, a.1, 0.0, b.0, b.1, 0.0);
+                        *a = (nn, nm);
+                    }
+                    let (nn, nm, nm2) = merge_moments(*n, *mean, *m2, n2, mean2, m22);
+                    (*n, *mean, *m2) = (nn, nm, nm2);
+                }
+                (PairStats::CatCat { joint }, PairStats::CatCat { joint: j2 }) => {
+                    for (k, c) in j2 {
+                        *joint.entry(k).or_insert(0) += c;
+                    }
+                }
+                _ => panic!("AssocAccumulator merge across different pair kinds"),
+            }
+        }
+    }
+
+    fn finalize(self) -> FeatureProfile {
+        let k = self.cols.len();
+        let cols: Vec<ColSummary> = self
+            .cols
+            .into_iter()
+            .map(|c| match c {
+                ColStats::Cont { n, lo, hi, .. } => {
+                    // match stats::min_max: empty / all-NaN input → (0, 0)
+                    let (lo, hi) = if lo > hi { (0.0, 0.0) } else { (lo, hi) };
+                    ColSummary::Continuous { n, lo, hi }
+                }
+                ColStats::Cat { counts, cardinality } => {
+                    ColSummary::Categorical { counts, cardinality }
+                }
+            })
+            .collect();
+        let mut matrix = vec![0.0f64; k * k];
+        let mut p = 0usize;
+        for i in 0..k {
+            matrix[i * k + i] = 1.0;
+            for j in (i + 1)..k {
+                let a = pair_association(&self.pairs[p]);
+                matrix[i * k + j] = a;
+                matrix[j * k + i] = a;
+                p += 1;
+            }
+        }
+        FeatureProfile { cols, matrix }
+    }
+}
+
+/// Association of one finalized pair.
+fn pair_association(pair: &PairStats) -> f64 {
+    match pair {
+        PairStats::ContCont { n, mxx, myy, cxy, .. } => {
+            if *n < 2 || *mxx <= 0.0 || *myy <= 0.0 {
+                0.0
+            } else {
+                (cxy / (mxx.sqrt() * myy.sqrt())).abs()
+            }
+        }
+        PairStats::CatCont { cats, n, mean, m2, .. } => {
+            if *n == 0 {
+                return 0.0;
+            }
+            let between: f64 = cats
+                .iter()
+                .filter(|(nc, _)| *nc > 0)
+                .map(|(nc, mc)| *nc as f64 * (mc - mean) * (mc - mean))
+                .sum();
+            if *m2 <= 0.0 {
+                0.0
+            } else {
+                (between / m2).max(0.0).sqrt()
+            }
+        }
+        PairStats::CatCat { joint } => {
+            // symmetrized Theil's U from the exact joint counts
+            0.5 * (theils_u_joint(joint, false) + theils_u_joint(joint, true))
+        }
+    }
+}
+
+/// Theil's U(x|y) from joint counts; `swap` computes U(y|x) instead.
+/// Matches `stats::theils_u` (deterministic: BTreeMap iteration order).
+fn theils_u_joint(joint: &BTreeMap<(u32, u32), u64>, swap: bool) -> f64 {
+    let n: u64 = joint.values().sum();
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mut marg_x: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut marg_y: BTreeMap<u32, u64> = BTreeMap::new();
+    for (&(a, b), &c) in joint {
+        let (x, y) = if swap { (b, a) } else { (a, b) };
+        *marg_x.entry(x).or_insert(0) += c;
+        *marg_y.entry(y).or_insert(0) += c;
+    }
+    let hx: f64 = marg_x
+        .values()
+        .map(|&c| {
+            let p = c as f64 / nf;
+            -p * p.ln()
+        })
+        .sum();
+    if hx <= 0.0 {
+        return 1.0; // x is constant: fully determined
+    }
+    let mut hxy = 0.0;
+    for (&(a, b), &c) in joint {
+        let y = if swap { a } else { b };
+        let pxy = c as f64 / nf;
+        let py = marg_y[&y] as f64 / nf;
+        hxy -= pxy * (pxy / py).ln();
+    }
+    ((hx - hxy) / hx).clamp(0.0, 1.0)
+}
+
+/// Finalized per-column summary inside a [`FeatureProfile`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ColSummary {
+    /// Continuous column: row count and observed (NaN-ignoring) range.
+    Continuous {
+        /// Rows observed.
+        n: u64,
+        /// Smallest finite value (0 when nothing was observed).
+        lo: f64,
+        /// Largest finite value (0 when nothing was observed).
+        hi: f64,
+    },
+    /// Categorical column: exact code histogram.
+    Categorical {
+        /// Count per code (grown past `cardinality` if codes exceed it).
+        counts: Vec<u64>,
+        /// Declared cardinality of the column.
+        cardinality: u32,
+    },
+}
+
+/// Finalized one-pass summary of a feature table: the association
+/// matrix plus the per-column ranges / marginals the other feature
+/// metrics need. Produced by [`AssocAccumulator::finalize`].
+#[derive(Clone, Debug, Default)]
+pub struct FeatureProfile {
+    cols: Vec<ColSummary>,
+    matrix: Vec<f64>,
+}
+
+impl FeatureProfile {
+    /// Profile an in-memory table (single-block accumulation).
+    pub fn of(t: &FeatureTable) -> FeatureProfile {
+        let mut acc = AssocAccumulator::new();
+        acc.observe_features(t);
+        acc.finalize()
+    }
+
+    /// Number of profiled columns.
+    pub fn n_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Row-major k×k pairwise association matrix (diagonal = 1).
+    pub fn matrix(&self) -> &[f64] {
+        &self.matrix
+    }
+
+    /// Per-column summary.
+    pub fn column(&self, i: usize) -> &ColSummary {
+        &self.cols[i]
+    }
+
+    /// Observed (lo, hi) range of column `i`, or `None` for categorical
+    /// columns.
+    pub fn range(&self, i: usize) -> Option<(f64, f64)> {
+        match &self.cols[i] {
+            ColSummary::Continuous { lo, hi, .. } => Some((*lo, *hi)),
+            ColSummary::Categorical { .. } => None,
+        }
+    }
+}
+
+/// Pairwise association matrix (row-major k×k, diagonal = 1) — thin
+/// wrapper over [`AssocAccumulator`].
+pub fn association_matrix(t: &FeatureTable) -> Vec<f64> {
+    FeatureProfile::of(t).matrix.clone()
+}
+
+/// Phase-2 accumulator for the single-continuous-column marginal: a
+/// fixed-range histogram (the range comes from the two tables' phase-1
+/// profiles). Counts are exact, so `merge` is bit-exact in any order.
+#[derive(Clone, Debug)]
+pub struct MarginalAccumulator {
+    col: usize,
+    lo: f64,
+    hi: f64,
+    hist: Vec<f64>,
+}
+
+impl MarginalAccumulator {
+    /// Histogram of column `col` over `[lo, hi]` with 32 bins (binning
+    /// identical to `stats::histogram`).
+    pub fn new(col: usize, lo: f64, hi: f64) -> MarginalAccumulator {
+        MarginalAccumulator { col, lo, hi, hist: vec![0.0; MARGINAL_BINS] }
+    }
+}
+
+impl MetricAccumulator for MarginalAccumulator {
+    type Output = Vec<f64>;
+
+    fn observe_features(&mut self, rows: &FeatureTable) {
+        let ColumnData::Continuous(v) = &rows.columns[self.col].data else {
+            panic!("MarginalAccumulator over a categorical column");
+        };
+        if self.hi <= self.lo {
+            self.hist[0] += v.len() as f64;
+            return;
+        }
+        let bins = self.hist.len();
+        let w = (self.hi - self.lo) / bins as f64;
+        for &x in v {
+            let b = (((x - self.lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+            self.hist[b] += 1.0;
+        }
+    }
+
+    fn merge(&mut self, other: Self) {
+        for (a, b) in self.hist.iter_mut().zip(&other.hist) {
+            *a += b;
+        }
+    }
+
+    fn finalize(self) -> Vec<f64> {
+        self.hist
     }
 }
 
 /// "Feature Corr. ↑": 1 − mean |Δassociation| over off-diagonal pairs,
 /// in [0, 1]. Tables must have the same column layout. Single-column
 /// tables fall back to marginal similarity (1 − JS distance of the
-/// column's histogram).
+/// column's histogram). Thin wrapper over the streaming profiles.
 pub fn feature_corr_score(orig: &FeatureTable, synth: &FeatureTable) -> f64 {
-    let k = orig.n_cols();
-    if k == 0 || synth.n_cols() != k {
+    feature_corr_with(&FeatureProfile::of(orig), &FeatureProfile::of(synth), orig, synth)
+}
+
+/// [`feature_corr_score`] over precomputed profiles (the raw tables are
+/// only touched on the single-continuous-column fallback, which needs a
+/// second histogram pass over the shared range).
+pub fn feature_corr_with(
+    a: &FeatureProfile,
+    b: &FeatureProfile,
+    orig: &FeatureTable,
+    synth: &FeatureTable,
+) -> f64 {
+    let k = a.n_cols();
+    if k == 0 || b.n_cols() != k {
         return 0.0;
     }
     if k == 1 {
-        return marginal_similarity(&orig.columns[0].data, &synth.columns[0].data);
+        return match (a.column(0), b.column(0)) {
+            (
+                ColSummary::Continuous { lo: lo1, hi: hi1, .. },
+                ColSummary::Continuous { lo: lo2, hi: hi2, .. },
+            ) => {
+                let (lo, hi) = (lo1.min(*lo2), hi1.max(*hi2));
+                let ha = {
+                    let mut m = MarginalAccumulator::new(0, lo, hi);
+                    m.observe_features(orig);
+                    m.finalize()
+                };
+                let hb = {
+                    let mut m = MarginalAccumulator::new(0, lo, hi);
+                    m.observe_features(synth);
+                    m.finalize()
+                };
+                1.0 - stats::js_distance(&ha, &hb)
+            }
+            (
+                ColSummary::Categorical { counts: ca, cardinality: k1 },
+                ColSummary::Categorical { counts: cb, cardinality: k2 },
+            ) => {
+                let len = (*k1).max(*k2).max(ca.len() as u32).max(cb.len() as u32).max(1)
+                    as usize;
+                let mut ha = vec![0.0; len];
+                let mut hb = vec![0.0; len];
+                for (i, &c) in ca.iter().enumerate() {
+                    ha[i] = c as f64;
+                }
+                for (i, &c) in cb.iter().enumerate() {
+                    hb[i] = c as f64;
+                }
+                1.0 - stats::js_distance(&ha, &hb)
+            }
+            _ => 0.0,
+        };
     }
-    let mo = association_matrix(orig);
-    let ms = association_matrix(synth);
+    let (mo, ms) = (a.matrix(), b.matrix());
     let mut diff = 0.0;
     let mut count = 0;
     for i in 0..k {
@@ -71,32 +644,21 @@ pub fn feature_corr_score(orig: &FeatureTable, synth: &FeatureTable) -> f64 {
     (1.0 - diff / count as f64).clamp(0.0, 1.0)
 }
 
-/// 1 − JS distance between the marginal distributions of two columns.
+/// 1 − JS distance between the marginal distributions of two columns
+/// (the single-column fallback of [`feature_corr_score`], kept for
+/// direct use).
 pub fn marginal_similarity(a: &ColumnData, b: &ColumnData) -> f64 {
-    match (a, b) {
-        (ColumnData::Continuous(x), ColumnData::Continuous(y)) => {
-            let (lo1, hi1) = stats::min_max(x);
-            let (lo2, hi2) = stats::min_max(y);
-            let (lo, hi) = (lo1.min(lo2), hi1.max(hi2));
-            let ha = stats::histogram(x, lo, hi, 32);
-            let hb = stats::histogram(y, lo, hi, 32);
-            1.0 - stats::js_distance(&ha, &hb)
-        }
-        (ColumnData::Categorical { codes: ca, cardinality: k1 },
-         ColumnData::Categorical { codes: cb, cardinality: k2 }) => {
-            let k = (*k1).max(*k2) as usize;
-            let mut ha = vec![0.0; k.max(1)];
-            let mut hb = vec![0.0; k.max(1)];
-            for &c in ca {
-                ha[c as usize] += 1.0;
-            }
-            for &c in cb {
-                hb[c as usize] += 1.0;
-            }
-            1.0 - stats::js_distance(&ha, &hb)
-        }
-        _ => 0.0,
-    }
+    let ta = FeatureTable::new(vec![crate::featgen::table::Column {
+        name: "a".into(),
+        data: a.clone(),
+    }])
+    .unwrap();
+    let tb = FeatureTable::new(vec![crate::featgen::table::Column {
+        name: "b".into(),
+        data: b.clone(),
+    }])
+    .unwrap();
+    feature_corr_score(&ta, &tb)
 }
 
 #[cfg(test)]
@@ -183,5 +745,74 @@ mod tests {
         let a = correlated(100, 1);
         let b = FeatureTable::new(vec![Column::continuous("x", vec![0.0; 100])]).unwrap();
         assert_eq!(feature_corr_score(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn sequential_chunking_is_bit_exact() {
+        // observing row blocks into one accumulator == observing whole
+        let t = correlated(1500, 6);
+        let whole = FeatureProfile::of(&t);
+        let mut acc = AssocAccumulator::new();
+        for lo in [0usize, 400, 900] {
+            let hi = match lo {
+                0 => 400,
+                400 => 900,
+                _ => t.n_rows(),
+            };
+            let idx: Vec<usize> = (lo..hi).collect();
+            acc.observe_features(&t.gather(&idx));
+        }
+        let chunked = acc.finalize();
+        for (a, b) in whole.matrix().iter().zip(chunked.matrix()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn merge_is_commutative_and_near_associative() {
+        let t = correlated(1200, 7);
+        let blocks: Vec<FeatureTable> = [(0usize, 300usize), (300, 700), (700, 1200)]
+            .iter()
+            .map(|&(lo, hi)| t.gather(&(lo..hi).collect::<Vec<usize>>()))
+            .collect();
+        let part = |b: &FeatureTable| {
+            let mut a = AssocAccumulator::new();
+            a.observe_features(b);
+            a
+        };
+        // commutativity: bit-exact
+        let mut ab = part(&blocks[0]);
+        ab.merge(part(&blocks[1]));
+        let mut ba = part(&blocks[1]);
+        ba.merge(part(&blocks[0]));
+        for (x, y) in ab.clone().finalize().matrix().iter().zip(ba.finalize().matrix()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // associativity: mathematically equal, up to f64 rounding
+        ab.merge(part(&blocks[2]));
+        let mut bc = part(&blocks[1]);
+        bc.merge(part(&blocks[2]));
+        let mut a_bc = part(&blocks[0]);
+        a_bc.merge(bc);
+        let whole = FeatureProfile::of(&t);
+        for ((x, y), w) in ab
+            .finalize()
+            .matrix()
+            .iter()
+            .zip(a_bc.finalize().matrix())
+            .zip(whole.matrix())
+        {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+            assert!((x - w).abs() < 1e-9, "{x} vs whole {w}");
+        }
+    }
+
+    #[test]
+    fn profile_ranges_match_min_max() {
+        let t = correlated(500, 8);
+        let p = FeatureProfile::of(&t);
+        let (lo, hi) = stats::min_max(t.columns[0].as_continuous());
+        assert_eq!(p.range(0), Some((lo, hi)));
+        assert_eq!(p.range(2), None);
     }
 }

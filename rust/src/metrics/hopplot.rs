@@ -3,6 +3,14 @@
 //! The hop-plot d(h) counts node pairs reachable within h hops. Exact
 //! computation is O(N·M); we sample BFS sources (the standard ANF-style
 //! approximation) which preserves the curve shape the paper compares.
+//!
+//! **Sampled fallback, by design.** Unlike the degree/joint/association
+//! metrics — which the streaming engine ([`super::accum`]) computes
+//! *exactly* from one mergeable pass — every function here needs random
+//! access to adjacency and BFS-samples `samples` seeded sources. The
+//! results are deterministic in `(samples, seed)` but approximate; at
+//! shard scale, evaluate these on a subsampled in-memory view rather
+//! than the full graph (see `docs/ARCHITECTURE.md` § Evaluation).
 
 use crate::graph::traversal::bfs_distances;
 use crate::graph::{Csr, EdgeList};

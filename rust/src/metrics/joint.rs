@@ -5,7 +5,16 @@
 //! logarithmically and features linearly (categoricals by code); the
 //! metric is the JS distance between the original's and the synthetic's
 //! joint histograms, averaged over feature columns.
+//!
+//! The joint histogram is a **phase-2** accumulator (see
+//! [`super::accum`]): binning needs the finalized source degrees and the
+//! shared feature ranges first, then [`JointAccumulator`] counts
+//! (degree-bin, feature-bin) pairs in one pass over any chunking of the
+//! paired (edge, feature-row) stream. Counts are integers, so chunked +
+//! merged accumulation reproduces the in-memory histogram bit for bit.
 
+use super::accum::MetricAccumulator;
+use super::degree::DegreeProfile;
 use crate::featgen::table::{ColumnData, FeatureTable};
 use crate::graph::EdgeList;
 use crate::util::stats;
@@ -14,40 +23,145 @@ use crate::util::stats;
 const DEG_BINS: usize = 12;
 const FEAT_BINS: usize = 12;
 
+/// How one feature column is binned in the joint histogram.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JointColLayout {
+    /// Continuous: 12 linear bins over the shared `(lo, hi)` range.
+    Continuous {
+        /// Lower edge of the shared range.
+        lo: f64,
+        /// Upper edge of the shared range.
+        hi: f64,
+    },
+    /// Categorical: one bin per code, clamped to `f_bins`.
+    Categorical {
+        /// Number of bins (the column's cardinality clamped to [1, 64]).
+        f_bins: usize,
+    },
+}
+
+impl JointColLayout {
+    /// Layout for a column, given the shared feature range (ignored for
+    /// categorical columns).
+    pub fn of(data: &ColumnData, range: (f64, f64)) -> JointColLayout {
+        match data {
+            ColumnData::Continuous(_) => JointColLayout::Continuous { lo: range.0, hi: range.1 },
+            ColumnData::Categorical { cardinality, .. } => JointColLayout::Categorical {
+                f_bins: (*cardinality as usize).clamp(1, 64),
+            },
+        }
+    }
+
+    fn f_bins(&self) -> usize {
+        match self {
+            JointColLayout::Continuous { .. } => FEAT_BINS,
+            JointColLayout::Categorical { f_bins } => *f_bins,
+        }
+    }
+}
+
+/// Phase-2 streaming accumulator of joint (src degree, feature)
+/// histograms for a set of selected columns. Constructed from the
+/// finalized degree array and the shared normalization (max degree +
+/// feature ranges); observes paired (edge chunk, aligned feature rows)
+/// via [`MetricAccumulator::observe_edges_with_features`]. Exactly
+/// mergeable (integer counts).
+pub struct JointAccumulator<'a> {
+    deg: &'a [u32],
+    max_d: f64,
+    cols: Vec<(usize, JointColLayout)>,
+    hists: Vec<Vec<f64>>,
+}
+
+impl<'a> JointAccumulator<'a> {
+    /// Accumulator over `cols` — pairs of (column index into the
+    /// observed tables, layout) — with `deg[s]` the finalized out-degree
+    /// of source node `s` and `max_degree` the shared normalization.
+    pub fn new(
+        deg: &'a [u32],
+        max_degree: u32,
+        cols: Vec<(usize, JointColLayout)>,
+    ) -> JointAccumulator<'a> {
+        let hists = cols
+            .iter()
+            .map(|(_, layout)| vec![0.0f64; DEG_BINS * layout.f_bins()])
+            .collect();
+        JointAccumulator { deg, max_d: max_degree.max(1) as f64, cols, hists }
+    }
+}
+
+impl MetricAccumulator for JointAccumulator<'_> {
+    type Output = Vec<Vec<f64>>;
+
+    fn observe_edges_with_features(&mut self, chunk: &EdgeList, rows: &FeatureTable) {
+        assert_eq!(
+            chunk.len(),
+            rows.n_rows(),
+            "JointAccumulator needs one feature row per edge"
+        );
+        for (e, (s, _)) in chunk.iter().enumerate() {
+            let d = self.deg[s as usize] as f64;
+            let td = if self.max_d <= 1.0 { 0.0 } else { (d.max(1.0)).ln() / self.max_d.ln() };
+            let db = ((td * DEG_BINS as f64) as usize).min(DEG_BINS - 1);
+            for ((col, layout), hist) in self.cols.iter().zip(self.hists.iter_mut()) {
+                let f_bins = layout.f_bins();
+                let fb = match (layout, &rows.columns[*col].data) {
+                    (JointColLayout::Continuous { lo, hi }, ColumnData::Continuous(v)) => {
+                        if *hi <= *lo {
+                            0
+                        } else {
+                            let t = (v[e] - lo) / (hi - lo);
+                            ((t * FEAT_BINS as f64) as isize).clamp(0, FEAT_BINS as isize - 1)
+                                as usize
+                        }
+                    }
+                    (
+                        JointColLayout::Categorical { .. },
+                        ColumnData::Categorical { codes, .. },
+                    ) => (codes[e] as usize).min(f_bins - 1),
+                    _ => panic!("JointAccumulator layout does not match the observed column"),
+                };
+                hist[db * f_bins + fb] += 1.0;
+            }
+        }
+    }
+
+    fn merge(&mut self, other: Self) {
+        assert_eq!(self.cols, other.cols, "JointAccumulator merge across layouts");
+        for (h, o) in self.hists.iter_mut().zip(&other.hists) {
+            for (a, b) in h.iter_mut().zip(o) {
+                *a += b;
+            }
+        }
+    }
+
+    fn finalize(self) -> Vec<Vec<f64>> {
+        self.hists
+    }
+}
+
 /// 2-D joint histogram of (src degree, feature) over the edges of a graph.
-/// Returns a row-major `DEG_BINS × f_bins` matrix (counts).
+/// Returns a row-major `DEG_BINS × f_bins` matrix (counts). Thin wrapper
+/// over [`JointAccumulator`] for one in-memory column.
 pub fn joint_histogram(
     edges: &EdgeList,
     values: &ColumnData,
     max_degree: u32,
     feat_range: (f64, f64),
 ) -> Vec<f64> {
-    let deg = edges.out_degrees();
-    let max_d = max_degree.max(1) as f64;
-    let f_bins = match values {
-        ColumnData::Continuous(_) => FEAT_BINS,
-        ColumnData::Categorical { cardinality, .. } => (*cardinality as usize).clamp(1, 64),
-    };
-    let mut hist = vec![0.0f64; DEG_BINS * f_bins];
-    let (lo, hi) = feat_range;
-    for (e, (s, _)) in edges.iter().enumerate() {
-        let d = deg[s as usize] as f64;
-        let td = if max_d <= 1.0 { 0.0 } else { (d.max(1.0)).ln() / max_d.ln() };
-        let db = ((td * DEG_BINS as f64) as usize).min(DEG_BINS - 1);
-        let fb = match values {
-            ColumnData::Continuous(v) => {
-                if hi <= lo {
-                    0
-                } else {
-                    let t = (v[e] - lo) / (hi - lo);
-                    ((t * FEAT_BINS as f64) as isize).clamp(0, FEAT_BINS as isize - 1) as usize
-                }
-            }
-            ColumnData::Categorical { codes, .. } => (codes[e] as usize).min(f_bins - 1),
-        };
-        hist[db * f_bins + fb] += 1.0;
-    }
-    hist
+    let deg = DegreeProfile::of(edges);
+    let table = FeatureTable::new(vec![crate::featgen::table::Column {
+        name: "f".into(),
+        data: values.clone(),
+    }])
+    .expect("single column");
+    let mut acc = JointAccumulator::new(
+        deg.out_degrees(),
+        max_degree,
+        vec![(0, JointColLayout::of(values, feat_range))],
+    );
+    acc.observe_edges_with_features(edges, &table);
+    acc.finalize().remove(0)
 }
 
 /// "Degree-Feat Dist-Dist ↓": JS distance between joint (degree, feature)
@@ -58,15 +172,36 @@ pub fn degree_feature_distance(
     synth_edges: &EdgeList,
     synth_feats: &FeatureTable,
 ) -> f64 {
+    degree_feature_distance_with(
+        &DegreeProfile::of(orig_edges),
+        orig_edges,
+        orig_feats,
+        &DegreeProfile::of(synth_edges),
+        synth_edges,
+        synth_feats,
+    )
+}
+
+/// [`degree_feature_distance`] over precomputed degree profiles, so
+/// callers scoring several metrics (or several trials) derive the degree
+/// arrays once and share them.
+pub fn degree_feature_distance_with(
+    orig_deg: &DegreeProfile,
+    orig_edges: &EdgeList,
+    orig_feats: &FeatureTable,
+    synth_deg: &DegreeProfile,
+    synth_edges: &EdgeList,
+    synth_feats: &FeatureTable,
+) -> f64 {
     let k = orig_feats.n_cols();
     if k == 0 || synth_feats.n_cols() != k {
         return 1.0;
     }
     // shared normalization so the two histograms align
-    let max_deg = orig_edges
+    let max_deg = orig_deg
         .out_degrees()
         .iter()
-        .chain(synth_edges.out_degrees().iter())
+        .chain(synth_deg.out_degrees().iter())
         .copied()
         .max()
         .unwrap_or(1);
@@ -80,8 +215,14 @@ pub fn degree_feature_distance(
             }
             _ => (0.0, 0.0),
         };
-        let ho = joint_histogram(orig_edges, &orig_feats.columns[c].data, max_deg, range);
-        let hs = joint_histogram(synth_edges, &synth_feats.columns[c].data, max_deg, range);
+        let observe = |deg: &DegreeProfile, edges: &EdgeList, feats: &FeatureTable| {
+            let layout = JointColLayout::of(&feats.columns[c].data, range);
+            let mut acc = JointAccumulator::new(deg.out_degrees(), max_deg, vec![(c, layout)]);
+            acc.observe_edges_with_features(edges, feats);
+            acc.finalize().remove(0)
+        };
+        let ho = observe(orig_deg, orig_edges, orig_feats);
+        let hs = observe(synth_deg, synth_edges, synth_feats);
         if ho.len() != hs.len() {
             total += 1.0;
             continue;
@@ -94,10 +235,30 @@ pub fn degree_feature_distance(
 /// Figure 5 heat map: normalized joint histogram of the first continuous
 /// column (rows = degree bins, cols = feature bins).
 pub fn heatmap(edges: &EdgeList, feats: &FeatureTable) -> Option<(Vec<f64>, usize, usize)> {
-    let col = feats.columns.iter().find(|c| c.is_continuous())?;
+    heatmap_from(&DegreeProfile::of(edges), edges, feats)
+}
+
+/// [`heatmap`] over a precomputed degree profile (the experiment-harness
+/// path: the profile is derived once and shared with the other metrics).
+pub fn heatmap_from(
+    deg: &DegreeProfile,
+    edges: &EdgeList,
+    feats: &FeatureTable,
+) -> Option<(Vec<f64>, usize, usize)> {
+    let (c, col) = feats
+        .columns
+        .iter()
+        .enumerate()
+        .find(|(_, c)| c.is_continuous())?;
     let (lo, hi) = stats::min_max(col.as_continuous());
-    let max_deg = edges.out_degrees().iter().copied().max().unwrap_or(1);
-    let mut h = joint_histogram(edges, &col.data, max_deg, (lo, hi));
+    let max_deg = deg.max_out_degree().max(1);
+    let mut acc = JointAccumulator::new(
+        deg.out_degrees(),
+        max_deg,
+        vec![(c, JointColLayout::Continuous { lo, hi })],
+    );
+    acc.observe_edges_with_features(edges, feats);
+    let mut h = acc.finalize().remove(0);
     let total: f64 = h.iter().sum();
     if total > 0.0 {
         for x in h.iter_mut() {
@@ -177,5 +338,36 @@ mod tests {
         let f = FeatureTable::new(vec![Column::categorical("hub", codes)]).unwrap();
         let d = degree_feature_distance(&e, &f, &e, &f);
         assert!(d < 1e-9);
+    }
+
+    #[test]
+    fn chunked_joint_accumulation_is_exact() {
+        let (e, f) = dataset(true, 7);
+        let deg = DegreeProfile::of(&e);
+        let max_deg = deg.max_out_degree();
+        let (lo, hi) = stats::min_max(f.columns[0].as_continuous());
+        let whole = joint_histogram(&e, &f.columns[0].data, max_deg, (lo, hi));
+        // paired (edge, row) stream split into 4 chunks, merged partials
+        let layout = JointColLayout::Continuous { lo, hi };
+        let cuts = [0usize, e.len() / 7, e.len() / 3, e.len() / 2, e.len()];
+        let mut merged: Option<JointAccumulator> = None;
+        for w in cuts.windows(2) {
+            let mut chunk = EdgeList::new(e.spec);
+            for i in w[0]..w[1] {
+                chunk.push(e.src[i], e.dst[i]);
+            }
+            let rows = f.gather(&(w[0]..w[1]).collect::<Vec<usize>>());
+            let mut part = JointAccumulator::new(deg.out_degrees(), max_deg, vec![(0, layout)]);
+            part.observe_edges_with_features(&chunk, &rows);
+            match &mut merged {
+                None => merged = Some(part),
+                Some(m) => m.merge(part),
+            }
+        }
+        let chunked = merged.unwrap().finalize().remove(0);
+        assert_eq!(whole.len(), chunked.len());
+        for (a, b) in whole.iter().zip(&chunked) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

@@ -10,12 +10,25 @@
 //! * [`joint`] — joint degree×feature distribution JS divergence
 //!   ("Degree-Feat Dist-Dist ↓") and the Figure 5 heat map.
 //! * [`graphstats`] — the 14 statistics of Table 10.
+//!
+//! Every score is backed by the **streaming accumulator engine** of
+//! [`accum`]: one-pass, mergeable accumulators whose chunked evaluation
+//! reproduces the in-memory scores exactly, so evaluation scales the
+//! same way generation does. [`evaluate`] is a thin wrapper over
+//! [`Evaluator`]; [`stream`] evaluates `ShardSink` output directly from
+//! disk ( `sgg eval --shards` ) and taps in-flight generation.
 
+pub mod accum;
 pub mod degree;
 pub mod featcorr;
 pub mod graphstats;
 pub mod hopplot;
 pub mod joint;
+pub mod stream;
+
+pub use accum::{Evaluator, MetricAccumulator};
+pub use degree::{DegreeAccumulator, DegreeProfile};
+pub use featcorr::FeatureProfile;
 
 use crate::featgen::FeatureTable;
 use crate::graph::EdgeList;
@@ -43,20 +56,16 @@ impl std::fmt::Display for QualityReport {
 
 /// Evaluate a synthetic (structure, features) pair against the original —
 /// one row of paper Table 2. Features are edge-level (one row per edge).
+///
+/// Thin wrapper over [`Evaluator`]: profile the original once, score the
+/// synthetic pair. Callers scoring several synthetics against the same
+/// original should hold an [`Evaluator`] instead, which shares the
+/// original's profiles across calls.
 pub fn evaluate(
     orig_edges: &EdgeList,
     orig_feats: &FeatureTable,
     synth_edges: &EdgeList,
     synth_feats: &FeatureTable,
 ) -> QualityReport {
-    QualityReport {
-        degree_dist: degree::degree_dist_score(orig_edges, synth_edges),
-        feature_corr: featcorr::feature_corr_score(orig_feats, synth_feats),
-        degree_feat_dist: joint::degree_feature_distance(
-            orig_edges,
-            orig_feats,
-            synth_edges,
-            synth_feats,
-        ),
-    }
+    Evaluator::new(orig_edges, orig_feats).score(synth_edges, synth_feats)
 }

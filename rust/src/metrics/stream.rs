@@ -1,0 +1,327 @@
+//! Shard-scale streaming evaluation: score `ShardSink` output straight
+//! from disk — without materializing the graph — and tap in-flight
+//! generation so a quality report falls out of a streamed run for free.
+//!
+//! Two entry points:
+//!
+//! * [`evaluate_shards`] — the `sgg eval --shards DIR` path. Shards are
+//!   read chunk-by-chunk on the parallel runner's worker pool (each
+//!   worker folds its shard range into a private
+//!   [`DegreeAccumulator`]), partials merge deterministically, and the
+//!   finalized profile is scored against the original. Because degree
+//!   accumulators are integer-count-based, the result is **bit-for-bit
+//!   identical** to the in-memory `metrics` scores for any worker count
+//!   and any shard count, while peak memory stays bounded by one shard
+//!   (plus the O(nodes) degree arrays) instead of the edge count.
+//! * [`GenerationTap`] / [`TappedSink`] — wrap any
+//!   [`Sink`](crate::pipeline::Sink) so chunks are observed as they
+//!   stream past; a shard run then carries a [`StructuralReport`] in its
+//!   [`StreamReport`](crate::pipeline::StreamReport) at near-zero extra
+//!   memory (the accumulator's degree arrays only).
+//!
+//! Shards carry structure only (the paper's out-of-core path never
+//! materializes features), so the streamed scores are the *structural*
+//! metrics — the Table 2 degree column plus the DCC of eq. 20; they
+//! reproduce `metrics::evaluate`'s `degree_dist` exactly. Feature
+//! metrics need the in-memory path (`sgg evaluate`).
+
+use super::accum::MetricAccumulator;
+use super::degree::{self, DegreeAccumulator, DegreeProfile};
+use crate::graph::io::ShardReader;
+use crate::graph::EdgeList;
+use crate::pipeline::parallel::ParallelChunkRunner;
+use crate::pipeline::sink::{Sink, SinkFinish};
+use crate::structgen::chunked::Chunk;
+use crate::Result;
+use std::path::Path;
+
+/// DCC sample count used by the streamed reports (eq. 20's K).
+pub const DCC_SAMPLES: usize = 16;
+
+/// What one pass over a shard directory saw (sizes only — the scores
+/// live in [`ShardEvalReport`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardScan {
+    /// Number of shard files.
+    pub shards: usize,
+    /// Total edges across all shards (from the validated headers).
+    pub edges: u64,
+    /// Largest single shard's edge count — the resident-chunk bound of
+    /// the streamed pass.
+    pub peak_shard_edges: u64,
+}
+
+/// Build the degree profile of a sharded graph by streaming its shards,
+/// chunk by chunk, on `workers` threads (contiguous shard ranges per
+/// worker, one private accumulator each, merged in worker order).
+/// Exact: the profile equals the one an in-memory pass would produce,
+/// for any worker or shard count.
+pub fn profile_shards(dir: &Path, workers: usize) -> Result<(DegreeProfile, ShardScan)> {
+    let reader = ShardReader::open(dir)?;
+    let scan = ShardScan {
+        shards: reader.len(),
+        edges: reader.total_edges(),
+        peak_shard_edges: reader.max_shard_edges(),
+    };
+    let runner = ParallelChunkRunner::new(workers.max(1), 1);
+    let partials = runner.fold_indices(
+        reader.len(),
+        |_worker| DegreeAccumulator::with_spec(reader.spec()),
+        |acc, i| {
+            acc.observe_edges(&reader.read(i)?);
+            Ok(())
+        },
+    )?;
+    let mut acc = DegreeAccumulator::with_spec(reader.spec());
+    for p in partials {
+        acc.merge(p);
+    }
+    Ok((acc.finalize(), scan))
+}
+
+/// Streamed evaluation result of a shard directory against an original.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardEvalReport {
+    /// "Degree Dist. ↑" of Table 2 — bit-identical to the in-memory
+    /// `metrics::evaluate` value on the same graphs.
+    pub degree_dist: f64,
+    /// Degree Comparison Coefficient of eq. 20 (higher is better).
+    pub dcc: f64,
+    /// Total synthetic edges evaluated.
+    pub edges: u64,
+    /// Number of shards read.
+    pub shards: usize,
+    /// Largest single shard (edges) — the streamed pass's resident
+    /// chunk bound.
+    pub peak_shard_edges: u64,
+    /// Bytes held by the finalized degree profile (O(nodes), not edges).
+    pub profile_bytes: u64,
+}
+
+impl std::fmt::Display for ShardEvalReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "degree_dist={:.4} dcc={:.4} over {} edges in {} shards \
+             (peak shard {} edges, degree profile {} bytes)",
+            self.degree_dist,
+            self.dcc,
+            self.edges,
+            self.shards,
+            self.peak_shard_edges,
+            self.profile_bytes
+        )
+    }
+}
+
+/// Evaluate `ShardSink` output against an original degree profile
+/// without materializing the synthetic graph. See the module docs for
+/// the exactness and memory contract.
+pub fn evaluate_shards(
+    dir: &Path,
+    orig: &DegreeProfile,
+    workers: usize,
+) -> Result<ShardEvalReport> {
+    let (synth, scan) = profile_shards(dir, workers)?;
+    Ok(ShardEvalReport {
+        degree_dist: degree::degree_dist_score_profiles(orig, &synth),
+        dcc: degree::dcc_profiles(orig, &synth, DCC_SAMPLES),
+        edges: scan.edges,
+        shards: scan.shards,
+        peak_shard_edges: scan.peak_shard_edges,
+        profile_bytes: (synth.out_degrees().len() + synth.in_degrees().len()) as u64 * 4,
+    })
+}
+
+/// The structure-only quality scores a streamed run can compute while
+/// generating (features are never materialized on the shard path).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StructuralReport {
+    /// "Degree Dist. ↑" of Table 2 against the fit source.
+    pub degree_dist: f64,
+    /// Degree Comparison Coefficient of eq. 20.
+    pub dcc: f64,
+}
+
+impl std::fmt::Display for StructuralReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "degree_dist={:.4} dcc={:.4}", self.degree_dist, self.dcc)
+    }
+}
+
+/// Observes generated structure chunks as they stream past and scores
+/// the finished graph against an original profile — the metrics "tap"
+/// behind `[evaluate]` scenario runs. Memory cost: the synthetic degree
+/// arrays (O(nodes)); every chunk is observed and dropped.
+pub struct GenerationTap {
+    orig: DegreeProfile,
+    synth: DegreeAccumulator,
+}
+
+impl GenerationTap {
+    /// Tap scoring against the original edge list (profiled here, once).
+    pub fn new(orig_edges: &EdgeList) -> GenerationTap {
+        GenerationTap::with_profile(DegreeProfile::of(orig_edges))
+    }
+
+    /// Tap scoring against an already-computed original profile.
+    pub fn with_profile(orig: DegreeProfile) -> GenerationTap {
+        GenerationTap { orig, synth: DegreeAccumulator::new() }
+    }
+
+    /// Observe one generated structure chunk.
+    pub fn observe(&mut self, chunk: &EdgeList) {
+        self.synth.observe_edges(chunk);
+    }
+
+    /// Score everything observed so far against the original.
+    pub fn report(&self) -> StructuralReport {
+        let synth = self.synth.clone().finalize();
+        StructuralReport {
+            degree_dist: degree::degree_dist_score_profiles(&self.orig, &synth),
+            dcc: degree::dcc_profiles(&self.orig, &synth, DCC_SAMPLES),
+        }
+    }
+}
+
+/// A [`Sink`] adapter that feeds every chunk through a [`GenerationTap`]
+/// before forwarding it, and attaches the tap's [`StructuralReport`] to
+/// the run's [`StreamReport`](crate::pipeline::StreamReport) at finish
+/// time. In-memory (collected) runs pass through untouched — their
+/// full [`QualityReport`](super::QualityReport) is computed after
+/// feature assembly instead.
+pub struct TappedSink<'a> {
+    inner: &'a mut dyn Sink,
+    tap: GenerationTap,
+}
+
+impl<'a> TappedSink<'a> {
+    /// Wrap `inner`, observing every chunk with `tap`.
+    pub fn new(inner: &'a mut dyn Sink, tap: GenerationTap) -> TappedSink<'a> {
+        TappedSink { inner, tap }
+    }
+}
+
+impl Sink for TappedSink<'_> {
+    fn name(&self) -> &'static str {
+        "tapped"
+    }
+
+    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+        self.tap.observe(&chunk.edges);
+        self.inner.edges(chunk)
+    }
+
+    fn finish(&mut self) -> Result<SinkFinish> {
+        match self.inner.finish()? {
+            SinkFinish::Streamed(mut report) => {
+                report.quality = Some(self.tap.report());
+                Ok(SinkFinish::Streamed(report))
+            }
+            collected => Ok(collected),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{io, PartiteSpec};
+    use crate::pipeline::sink::ShardSink;
+    use crate::structgen::chunked::ChunkConfig;
+    use crate::util::rng::Pcg64;
+    use std::path::PathBuf;
+
+    fn random_graph(seed: u64, n: u64, m: usize) -> EdgeList {
+        let mut rng = Pcg64::new(seed);
+        let mut e = EdgeList::new(PartiteSpec::square(n));
+        for _ in 0..m {
+            e.push(rng.below(n), rng.below(n));
+        }
+        e
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("sgg_stream_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    /// Split `edges` into `k` near-equal shards on disk.
+    fn write_shards(dir: &Path, edges: &EdgeList, k: usize) {
+        let per = edges.len().div_ceil(k);
+        for (i, start) in (0..edges.len()).step_by(per.max(1)).enumerate() {
+            let mut chunk = EdgeList::new(edges.spec);
+            for j in start..(start + per).min(edges.len()) {
+                chunk.push(edges.src[j], edges.dst[j]);
+            }
+            io::write_binary(&dir.join(format!("shard-{i:05}.sgg")), &chunk).unwrap();
+        }
+    }
+
+    #[test]
+    fn shard_eval_exact_for_any_workers_and_shard_counts() {
+        let orig = random_graph(1, 256, 6_000);
+        let synth = random_graph(2, 256, 6_000);
+        let orig_prof = DegreeProfile::of(&orig);
+        let expected = degree::degree_dist_score(&orig, &synth);
+        let expected_dcc = degree::dcc(&orig, &synth, DCC_SAMPLES);
+        for shards in [1usize, 3, 8] {
+            let dir = tmp_dir(&format!("exact{shards}"));
+            write_shards(&dir, &synth, shards);
+            for workers in [1usize, 2, 5] {
+                let r = evaluate_shards(&dir, &orig_prof, workers).unwrap();
+                assert_eq!(
+                    r.degree_dist.to_bits(),
+                    expected.to_bits(),
+                    "shards={shards} workers={workers}"
+                );
+                assert_eq!(r.dcc.to_bits(), expected_dcc.to_bits());
+                assert_eq!(r.edges, synth.len() as u64);
+                assert_eq!(r.shards, std::fs::read_dir(&dir).unwrap().count());
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn empty_dir_is_data_error() {
+        let dir = tmp_dir("empty");
+        let err = profile_shards(&dir, 2).unwrap_err();
+        assert!(err.to_string().contains("no shards"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tapped_shard_sink_attaches_quality() {
+        let orig = random_graph(3, 128, 2_000);
+        let synth = random_graph(4, 128, 2_000);
+        let dir = tmp_dir("tap");
+        let cfg = ChunkConfig { prefix_levels: 1, workers: 1, queue_capacity: 2 };
+        let mut sink = ShardSink::new(&dir, cfg).unwrap();
+        let mut tapped = TappedSink::new(&mut sink, GenerationTap::new(&orig));
+        // feed the synthetic graph as three chunks
+        let cuts = [0usize, 700, 1_400, synth.len()];
+        for (i, w) in cuts.windows(2).enumerate() {
+            let mut chunk = EdgeList::new(synth.spec);
+            for j in w[0]..w[1] {
+                chunk.push(synth.src[j], synth.dst[j]);
+            }
+            tapped
+                .edges(Chunk { index: i, worker: 0, sample_secs: 0.0, edges: chunk })
+                .unwrap();
+        }
+        let report = match tapped.finish().unwrap() {
+            SinkFinish::Streamed(r) => r,
+            SinkFinish::Collected(_) => panic!("shard sink collected"),
+        };
+        let q = report.quality.expect("tap attached no quality");
+        let expected = degree::degree_dist_score(&orig, &synth);
+        assert_eq!(q.degree_dist.to_bits(), expected.to_bits());
+        // the report prints its quality
+        assert!(report.to_string().contains("degree_dist"), "{report}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -243,4 +243,36 @@ impl FittedPipeline {
         Self::from_artifact_json(&doc, regs)
             .map_err(|e| Error::Data(format!("{}: {e}", path.display())))
     }
+
+    /// Read only the provenance header of a `.sggm` artifact — the
+    /// [`SourceSummary`] naming the fit dataset and its shape — without
+    /// reconstructing any fitted component (no GBT trees, alias tables
+    /// or encoder state are deserialized). Validates the same
+    /// format/version headers as [`FittedPipeline::load`]. Used by
+    /// `sgg eval --model`, which only needs the reference dataset name.
+    pub fn read_provenance(path: &Path) -> Result<SourceSummary> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| Error::Data(format!("{}: invalid artifact JSON: {e}", path.display())))?;
+        let provenance = || -> Result<SourceSummary> {
+            let format = doc.get("format").and_then(Json::as_str).ok_or_else(|| {
+                Error::Data("not a .sggm model artifact (no `format` header)".into())
+            })?;
+            if format != SGGM_FORMAT {
+                return Err(Error::Data(format!(
+                    "not a .sggm model artifact (format `{format}`)"
+                )));
+            }
+            let version = doc.req_u64("version")?;
+            if version != SGGM_VERSION {
+                return Err(Error::Data(format!(
+                    "unsupported .sggm format version {version} (this build reads version \
+                     {SGGM_VERSION}); re-export the artifact with a matching build"
+                )));
+            }
+            SourceSummary::from_json(doc.req("source")?)
+        };
+        provenance().map_err(|e| Error::Data(format!("{}: {e}", path.display())))
+    }
 }

@@ -368,24 +368,40 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<SinkOutput> {
 }
 
 /// [`run_scenario`] with caller-supplied registries.
+///
+/// With `spec.evaluate` set, shard runs route chunks through a
+/// [`crate::metrics::stream::TappedSink`], so the structural quality
+/// lands in the returned [`StreamReport`] at near-zero extra memory.
+/// Memory runs return the assembled dataset untouched — score it once
+/// with [`crate::metrics::Evaluator`] against the source (as `sgg run`
+/// does), rather than paying a second pass inside the library.
 pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkOutput> {
-    let fitted = match &spec.model {
-        Some(path) => FittedPipeline::load(path, regs)?,
-        None => {
-            let ds = crate::datasets::load(&spec.dataset, spec.dataset_seed)?;
-            spec.to_builder().fit_with(&ds, regs)?
-        }
+    let source = match &spec.model {
+        Some(_) => None,
+        None => Some(crate::datasets::load(&spec.dataset, spec.dataset_seed)?),
     };
+    let fitted = match (&spec.model, &source) {
+        (Some(path), _) => FittedPipeline::load(path, regs)?,
+        (None, Some(ds)) => spec.to_builder().fit_with(ds, regs)?,
+        (None, None) => unreachable!("spec parsing enforces dataset xor model"),
+    };
+    if spec.evaluate && source.is_none() {
+        return Err(Error::Config(
+            "`[evaluate]` needs the fit source as a reference, but the scenario \
+             generates from a `model` artifact"
+                .into(),
+        ));
+    }
     // `workers = 0` means "one per core" at run time
     let workers = match spec.workers {
         0 => crate::util::threadpool::default_threads(),
         w => w,
     };
-    match &spec.sink {
+    let out = match &spec.sink {
         SinkSpec::Memory => {
             let chunks = ChunkConfig { workers, ..ChunkConfig::default() };
             let mut sink = MemorySink::new();
-            fitted.run(spec.size, chunks, &mut sink, spec.seed)
+            fitted.run(spec.size, chunks, &mut sink, spec.seed)?
         }
         SinkSpec::Shards { dir, chunks } => {
             let mut chunks = *chunks;
@@ -393,9 +409,18 @@ pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkO
                 chunks.workers = workers;
             }
             let mut sink = ShardSink::new(dir, chunks)?;
-            fitted.run(spec.size, chunks, &mut sink, spec.seed)
+            if spec.evaluate {
+                let tap = crate::metrics::stream::GenerationTap::new(
+                    &source.as_ref().expect("checked above").edges,
+                );
+                let mut tapped = crate::metrics::stream::TappedSink::new(&mut sink, tap);
+                fitted.run(spec.size, chunks, &mut tapped, spec.seed)?
+            } else {
+                fitted.run(spec.size, chunks, &mut sink, spec.seed)?
+            }
         }
-    }
+    };
+    Ok(out)
 }
 
 impl ScenarioSpec {

@@ -16,8 +16,7 @@ use crate::pipeline::sink::{ShardSink, Sink, SinkFinish};
 use crate::structgen::kronecker::KroneckerGen;
 use crate::structgen::chunked::ChunkConfig;
 use crate::structgen::StructureGenerator;
-use crate::{Error, Result};
-use std::path::PathBuf;
+use crate::Result;
 
 pub use crate::pipeline::sink::StreamReport;
 
@@ -42,21 +41,16 @@ pub fn stream_to_shards(
 }
 
 /// Read every shard back into one edge list (for validation / tests).
+/// Prefer `metrics::stream::evaluate_shards` when only scores are
+/// needed — it never materializes the whole graph.
 pub fn read_shards(dir: &std::path::Path) -> Result<crate::graph::EdgeList> {
-    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
-        .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| p.extension().map(|x| x == "sgg").unwrap_or(false))
-        .collect();
-    paths.sort();
-    let mut out: Option<crate::graph::EdgeList> = None;
-    for p in paths {
-        let e = crate::graph::io::read_binary(&p)?;
-        match &mut out {
-            None => out = Some(e),
-            Some(acc) => acc.extend_from(&e),
-        }
+    let reader = crate::graph::io::ShardReader::open(dir)?;
+    let mut out =
+        crate::graph::EdgeList::with_capacity(reader.spec(), reader.total_edges() as usize);
+    for i in 0..reader.len() {
+        out.extend_from(&reader.read(i)?);
     }
-    out.ok_or_else(|| Error::Data(format!("no shards in {}", dir.display())))
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -64,6 +58,7 @@ mod tests {
     use super::*;
     use crate::graph::PartiteSpec;
     use crate::structgen::theta::ThetaS;
+    use std::path::PathBuf;
 
     fn tmp_dir(name: &str) -> PathBuf {
         let mut p = std::env::temp_dir();

@@ -201,6 +201,62 @@ impl ParallelChunkRunner {
         ParallelChunkRunner::new(cfg.workers, cfg.queue_capacity)
     }
 
+    /// Parallel fold over the index range `0..n`: the range is split
+    /// into one **contiguous, statically-assigned** slice per worker,
+    /// each worker folds its slice into a private accumulator
+    /// (`init(worker)` then `step(&mut acc, index)` in index order), and
+    /// the partial accumulators are returned **in worker order**.
+    ///
+    /// This is the map/reduce counterpart of [`ParallelChunkRunner::run`]
+    /// — used by the streaming evaluation path to accumulate per-shard
+    /// metric partials in parallel. Determinism contract: for a fixed
+    /// worker count the partition (and therefore each partial) is fully
+    /// deterministic; results are additionally *invariant across worker
+    /// counts* whenever the caller's merge of the partials is exactly
+    /// associative and commutative (true for the count-based metric
+    /// accumulators — see `metrics::accum`).
+    ///
+    /// The first `step` error (scanning workers in order) propagates;
+    /// worker panics resume on the caller.
+    pub fn fold_indices<A, I, S>(&self, n: usize, init: I, step: S) -> Result<Vec<A>>
+    where
+        A: Send,
+        I: Fn(usize) -> A + Sync,
+        S: Fn(&mut A, usize) -> Result<()> + Sync,
+    {
+        let workers = self.workers.min(n).max(1);
+        if workers == 1 {
+            let mut acc = init(0);
+            for i in 0..n {
+                step(&mut acc, i)?;
+            }
+            return Ok(vec![acc]);
+        }
+        let results: Vec<Result<A>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let (init, step) = (&init, &step);
+                    let (lo, hi) = (w * n / workers, (w + 1) * n / workers);
+                    s.spawn(move || -> Result<A> {
+                        let mut acc = init(w);
+                        for i in lo..hi {
+                            step(&mut acc, i)?;
+                        }
+                        Ok(acc)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(r) => r,
+                    Err(panic) => std::panic::resume_unwind(panic),
+                })
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+
     /// Execute `plan`, streaming non-empty chunks into `sink` in
     /// chunk-index order. Returns the total number of edges produced.
     ///
@@ -442,6 +498,46 @@ mod tests {
         // in-order delivery: the sink saw exactly the chunks before the
         // failure, then nothing
         assert_eq!(seen, 3);
+    }
+
+    #[test]
+    fn fold_indices_partials_cover_range_exactly() {
+        for workers in [1usize, 2, 3, 8, 40] {
+            let runner = ParallelChunkRunner::new(workers, 1);
+            let partials = runner
+                .fold_indices(
+                    25,
+                    |_w| Vec::<usize>::new(),
+                    |acc, i| {
+                        acc.push(i);
+                        Ok(())
+                    },
+                )
+                .unwrap();
+            assert!(partials.len() <= workers.max(1));
+            // partials are contiguous, in worker order, and cover 0..25
+            let flat: Vec<usize> = partials.into_iter().flatten().collect();
+            assert_eq!(flat, (0..25).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fold_indices_propagates_errors() {
+        let runner = ParallelChunkRunner::new(4, 1);
+        let err = runner
+            .fold_indices(
+                16,
+                |_w| 0u64,
+                |acc, i| {
+                    if i == 11 {
+                        return Err(Error::Data("index 11 exploded".into()));
+                    }
+                    *acc += i as u64;
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("index 11 exploded"), "{err}");
     }
 
     #[test]

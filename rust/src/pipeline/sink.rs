@@ -142,6 +142,10 @@ pub struct StreamReport {
     pub worker_busy_secs: Vec<f64>,
     /// Shard output directory.
     pub out_dir: PathBuf,
+    /// Structural quality against the fit source, filled when the run
+    /// was tapped (`[evaluate]` in a scenario spec routes chunks through
+    /// a [`crate::metrics::stream::TappedSink`]); `None` otherwise.
+    pub quality: Option<crate::metrics::stream::StructuralReport>,
 }
 
 impl std::fmt::Display for StreamReport {
@@ -163,6 +167,9 @@ impl std::fmt::Display for StreamReport {
                 self.worker_busy_secs.len(),
                 busiest
             )?;
+        }
+        if let Some(q) = &self.quality {
+            write!(f, ", quality: {q}")?;
         }
         Ok(())
     }
@@ -208,6 +215,7 @@ impl ShardSink {
             peak_buffer_bytes: self.top_sizes.iter().sum::<usize>() as u64 * 16,
             worker_busy_secs: self.worker_busy.clone(),
             out_dir: self.out_dir.clone(),
+            quality: None,
         }
     }
 }

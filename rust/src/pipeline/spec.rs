@@ -37,6 +37,10 @@
 //! [sink]
 //! kind = "shards"            # "memory" (default) or "shards"
 //! dir = "/tmp/sgg-shards"
+//!
+//! [evaluate]                 # score the output against the fit source:
+//! enabled = true             # full Table-2 report for memory runs, an
+//!                            # in-flight structural tap for shard runs
 //! ```
 
 use crate::structgen::chunked::ChunkConfig;
@@ -300,6 +304,14 @@ pub struct ScenarioSpec {
     pub workers: usize,
     /// Output sink.
     pub sink: SinkSpec,
+    /// Score the generated output against the fit source (`[evaluate]`
+    /// section). Shard runs are tapped in flight and carry the
+    /// structural scores in their [`crate::pipeline::StreamReport`];
+    /// memory runs signal the caller to score the returned dataset once
+    /// (the `sgg run` CLI prints the full Table-2
+    /// [`crate::metrics::QualityReport`]). Requires `dataset` (a `model`
+    /// artifact carries no reference graph to score against).
+    pub evaluate: bool,
 }
 
 impl ScenarioSpec {
@@ -318,6 +330,7 @@ impl ScenarioSpec {
             seed: 0x5a6e,
             workers: 1,
             sink: SinkSpec::Memory,
+            evaluate: false,
         }
     }
 
@@ -515,10 +528,29 @@ impl RawConfig {
                         }
                     };
                 }
+                "evaluate" => {
+                    let p = params_of(&pairs);
+                    for (key, _) in p.iter() {
+                        if key != "enabled" {
+                            return Err(Error::Config(format!(
+                                "unknown `[evaluate]` key `{key}`; known: enabled"
+                            )));
+                        }
+                    }
+                    spec.evaluate = p.bool_or("enabled", true)?;
+                    if spec.evaluate && spec.model.is_some() {
+                        return Err(Error::Config(
+                            "`[evaluate]` needs the fit source as a reference, but a \
+                             `model` artifact carries no dataset — drop the section or \
+                             fit from `dataset` instead"
+                                .into(),
+                        ));
+                    }
+                }
                 other => {
                     return Err(Error::Config(format!(
                         "unknown section `[{other}]`; known: structure, edge_features, \
-                         node_features, aligner, size, sink"
+                         node_features, aligner, size, sink, evaluate"
                     )));
                 }
             }
@@ -788,6 +820,34 @@ mod tests {
             SinkSpec::Shards { chunks, .. } => assert_eq!(chunks.workers, 2),
             other => panic!("wrong sink {other:?}"),
         }
+    }
+
+    #[test]
+    fn evaluate_section_parses() {
+        // absent: off
+        assert!(!ScenarioSpec::parse("dataset = \"cora\"").unwrap().evaluate);
+        // bare section: on
+        let spec = ScenarioSpec::parse("dataset = \"cora\"\n[evaluate]\n").unwrap();
+        assert!(spec.evaluate);
+        // explicit enabled flag
+        let spec =
+            ScenarioSpec::parse("dataset = \"cora\"\n[evaluate]\nenabled = false\n").unwrap();
+        assert!(!spec.evaluate);
+        // unknown keys are hard errors
+        let err = ScenarioSpec::parse("dataset = \"cora\"\n[evaluate]\nbogus = 1\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
+    }
+
+    #[test]
+    fn evaluate_conflicts_with_model() {
+        let err = ScenarioSpec::parse("model = \"m.sggm\"\n[evaluate]\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("evaluate") && msg.contains("model"), "{msg}");
+        // explicitly disabled evaluation is fine with a model
+        let spec =
+            ScenarioSpec::parse("model = \"m.sggm\"\n[evaluate]\nenabled = false\n").unwrap();
+        assert!(!spec.evaluate);
     }
 
     #[test]

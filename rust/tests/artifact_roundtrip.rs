@@ -199,6 +199,28 @@ fn artifact_header_records_format_seed_and_source() {
 }
 
 #[test]
+fn provenance_reads_without_deserializing_components() {
+    let ds = small("travel-insurance");
+    let fitted = Pipeline::builder()
+        .structure("erdos-renyi")
+        .edge_features("random")
+        .aligner("random")
+        .fit(&ds)
+        .unwrap();
+    let path = tmp("provenance");
+    fitted.save(&path).unwrap();
+    // header-only read matches the fully-loaded pipeline's provenance
+    let src = FittedPipeline::read_provenance(&path).unwrap();
+    assert_eq!(&src, fitted.source());
+    assert_eq!(src.dataset, "travel-insurance");
+    // same format guard as the full load path
+    std::fs::write(&path, "{\"format\": \"other\"}").unwrap();
+    let err = FittedPipeline::read_provenance(&path).unwrap_err();
+    assert!(err.to_string().contains("format"), "{err}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
 fn version_mismatch_is_rejected_with_clear_error() {
     let ds = small("travel-insurance");
     let fitted = Pipeline::builder()

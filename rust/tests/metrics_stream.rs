@@ -1,0 +1,277 @@
+//! Streamed-evaluation exactness properties: chunked + merged metric
+//! accumulators reproduce the in-memory `metrics::evaluate` scores bit
+//! for bit, merges are associative/commutative where claimed, and
+//! `evaluate_shards` (the `sgg eval --shards` path) is invariant to
+//! worker count and shard count.
+
+use sgg::graph::{io, EdgeList, PartiteSpec};
+use sgg::metrics::degree::{
+    dcc_profiles, degree_dist_score, degree_dist_score_profiles, DegreeAccumulator,
+};
+use sgg::metrics::stream::{evaluate_shards, profile_shards, DCC_SAMPLES};
+use sgg::metrics::{DegreeProfile, Evaluator, FeatureProfile, MetricAccumulator};
+use sgg::featgen::table::{Column, FeatureTable};
+use sgg::structgen::chunked::ChunkConfig;
+use sgg::structgen::kronecker::KroneckerGen;
+use sgg::structgen::theta::ThetaS;
+use sgg::util::proptest::check;
+use sgg::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn random_graph(rng: &mut Pcg64, n: u64, m: usize) -> EdgeList {
+    let mut e = EdgeList::new(PartiteSpec::square(n));
+    for _ in 0..m {
+        e.push(rng.below(n), rng.below(n));
+    }
+    e
+}
+
+fn random_feats(rng: &mut Pcg64, rows: usize) -> FeatureTable {
+    let vals: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+    let codes: Vec<u32> = (0..rows).map(|_| rng.below(4) as u32).collect();
+    FeatureTable::new(vec![
+        Column::continuous("v", vals),
+        Column::categorical("c", codes),
+    ])
+    .unwrap()
+}
+
+/// Random cut points splitting `0..len` into 1..=5 non-empty ranges.
+fn random_cuts(rng: &mut Pcg64, len: usize) -> Vec<usize> {
+    let pieces = 1 + rng.below(5) as usize;
+    let mut cuts: Vec<usize> = (0..pieces - 1)
+        .map(|_| rng.below(len.max(1) as u64) as usize)
+        .collect();
+    cuts.push(0);
+    cuts.push(len);
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts
+}
+
+fn slice_edges(e: &EdgeList, lo: usize, hi: usize) -> EdgeList {
+    let mut out = EdgeList::new(e.spec);
+    for i in lo..hi {
+        out.push(e.src[i], e.dst[i]);
+    }
+    out
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("sgg_msint_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+#[test]
+fn prop_chunked_merged_degree_profile_is_bit_exact() {
+    check("chunked+merged degree profile == one-pass", 40, |rng| {
+        let n = 32 + rng.below(512);
+        let m = 200 + rng.below(3_000) as usize;
+        let g = random_graph(rng, n, m);
+        let whole = DegreeProfile::of(&g);
+        let cuts = random_cuts(rng, g.len());
+        let mut merged = DegreeAccumulator::new();
+        for w in cuts.windows(2) {
+            let mut part = DegreeAccumulator::new();
+            part.observe_edges(&slice_edges(&g, w[0], w[1]));
+            merged.merge(part);
+        }
+        if merged.clone().finalize() != whole {
+            return Err("merged profile != one-pass profile".into());
+        }
+        // commutativity: merging the partials in reverse is identical
+        let mut rev = DegreeAccumulator::new();
+        for w in cuts.windows(2).rev() {
+            let mut part = DegreeAccumulator::new();
+            part.observe_edges(&slice_edges(&g, w[0], w[1]));
+            rev.merge(part);
+        }
+        if rev.finalize() != whole {
+            return Err("reverse-merged profile != one-pass profile".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streamed_quality_report_matches_evaluate_bit_for_bit() {
+    check("streamed QualityReport == metrics::evaluate", 15, |rng| {
+        let n = 64 + rng.below(256);
+        let m = 500 + rng.below(2_000) as usize;
+        let orig_e = random_graph(rng, n, m);
+        let orig_f = random_feats(rng, m);
+        let synth_e = random_graph(rng, n, m);
+        let synth_f = random_feats(rng, m);
+        let direct = sgg::metrics::evaluate(&orig_e, &orig_f, &synth_e, &synth_f);
+
+        // streamed path: synth edges arrive in random chunks, features
+        // in row blocks; orig is profiled once by the Evaluator
+        let ev = Evaluator::new(&orig_e, &orig_f);
+        let cuts = random_cuts(rng, synth_e.len());
+        let mut deg = DegreeAccumulator::new();
+        for w in cuts.windows(2) {
+            let mut part = DegreeAccumulator::new();
+            part.observe_edges(&slice_edges(&synth_e, w[0], w[1]));
+            deg.merge(part);
+        }
+        let synth_prof = deg.finalize();
+        let streamed_degree = ev.degree_dist(&synth_prof);
+        if streamed_degree.to_bits() != direct.degree_dist.to_bits() {
+            return Err(format!(
+                "degree_dist streamed {streamed_degree} != direct {}",
+                direct.degree_dist
+            ));
+        }
+        // feature metrics via the same shared-profile engine
+        let full = ev.score(&synth_e, &synth_f);
+        if full.feature_corr.to_bits() != direct.feature_corr.to_bits()
+            || full.degree_feat_dist.to_bits() != direct.degree_feat_dist.to_bits()
+        {
+            return Err("Evaluator::score != metrics::evaluate".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assoc_profile_sequential_chunking_is_bit_exact() {
+    check("sequential feature chunking == one block", 20, |rng| {
+        let rows = 300 + rng.below(1_500) as usize;
+        let t = random_feats(rng, rows);
+        let whole = FeatureProfile::of(&t);
+        let cuts = random_cuts(rng, rows);
+        let mut acc = sgg::metrics::featcorr::AssocAccumulator::new();
+        for w in cuts.windows(2) {
+            let idx: Vec<usize> = (w[0]..w[1]).collect();
+            acc.observe_features(&t.gather(&idx));
+        }
+        let chunked = acc.finalize();
+        for (a, b) in whole.matrix().iter().zip(chunked.matrix()) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("matrix entry {a} != {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shard_eval_invariant_to_workers_and_shard_count() {
+    let mut rng = Pcg64::new(0xe5a1);
+    let orig = random_graph(&mut rng, 300, 9_000);
+    let synth = random_graph(&mut rng, 300, 9_000);
+    let orig_prof = DegreeProfile::of(&orig);
+    let expected = degree_dist_score(&orig, &synth);
+    let expected_dcc = dcc_profiles(&orig_prof, &DegreeProfile::of(&synth), DCC_SAMPLES);
+    for shards in [1usize, 2, 5, 11] {
+        let dir = tmp_dir(&format!("inv{shards}"));
+        let per = synth.len().div_ceil(shards);
+        for (i, start) in (0..synth.len()).step_by(per).enumerate() {
+            let chunk = slice_edges(&synth, start, (start + per).min(synth.len()));
+            io::write_binary(&dir.join(format!("shard-{i:05}.sgg")), &chunk).unwrap();
+        }
+        for workers in [1usize, 3, 8] {
+            let r = evaluate_shards(&dir, &orig_prof, workers).unwrap();
+            assert_eq!(
+                r.degree_dist.to_bits(),
+                expected.to_bits(),
+                "degree_dist drifted at shards={shards} workers={workers}"
+            );
+            assert_eq!(
+                r.dcc.to_bits(),
+                expected_dcc.to_bits(),
+                "dcc drifted at shards={shards} workers={workers}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn shard_eval_reproduces_in_memory_scores_on_shardsink_output() {
+    // the acceptance path: generate through the real ShardSink, then
+    // evaluate the directory without materializing it
+    let nodes = 1u64 << 10;
+    let edges = 30_000u64;
+    let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(nodes), edges);
+    let dir = tmp_dir("sink");
+    let cfg = ChunkConfig { prefix_levels: 2, workers: 3, queue_capacity: 2 };
+    sgg::pipeline::orchestrator::stream_to_shards(&gen, nodes, nodes, edges, 5, cfg, &dir)
+        .unwrap();
+    // reference: a different seed of the same generator, in memory
+    let orig = {
+        use sgg::structgen::StructureGenerator;
+        gen.generate_sized(nodes, nodes, edges, 9).unwrap()
+    };
+    let orig_prof = DegreeProfile::of(&orig);
+    // in-memory: materialize all shards and score
+    let whole = sgg::pipeline::orchestrator::read_shards(&dir).unwrap();
+    let expected = degree_dist_score_profiles(&orig_prof, &DegreeProfile::of(&whole));
+    for workers in [1usize, 4] {
+        let r = evaluate_shards(&dir, &orig_prof, workers).unwrap();
+        assert_eq!(r.degree_dist.to_bits(), expected.to_bits(), "workers={workers}");
+        assert_eq!(r.edges, edges);
+        // resident bound: the largest shard is a fraction of the graph
+        assert!(r.peak_shard_edges < edges, "peak {} of {edges}", r.peak_shard_edges);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn profile_shards_validates_corrupt_directories() {
+    let mut rng = Pcg64::new(3);
+    let g = random_graph(&mut rng, 64, 500);
+    let dir = tmp_dir("corrupt");
+    io::write_binary(&dir.join("shard-00000.sgg"), &g).unwrap();
+    // truncate: header claims more than the file holds
+    let path = dir.join("shard-00001.sgg");
+    io::write_binary(&path, &g).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+    let err = profile_shards(&dir, 2).unwrap_err();
+    assert!(err.to_string().contains("bytes"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scenario_evaluate_taps_shard_runs() {
+    // end-to-end: a [evaluate] shard scenario carries structural quality
+    // in its stream report, identical for 1 and 4 workers
+    let dir = tmp_dir("scen");
+    let toml = format!(
+        "dataset = \"travel-insurance\"\n\
+         [structure]\nbackend = \"erdos-renyi\"\n\
+         [edge_features]\nbackend = \"random\"\n\
+         [aligner]\nbackend = \"random\"\n\
+         [sink]\nkind = \"shards\"\ndir = \"{}\"\n\
+         [evaluate]\n",
+        dir.display()
+    );
+    let mut reports = Vec::new();
+    for workers in [1usize, 4] {
+        std::fs::remove_dir_all(&dir).ok();
+        let mut spec = sgg::pipeline::ScenarioSpec::parse(&toml).unwrap();
+        spec.workers = workers;
+        if let sgg::pipeline::SinkSpec::Shards { chunks, .. } = &mut spec.sink {
+            chunks.workers = workers;
+        }
+        let out = sgg::pipeline::run_scenario(&spec).unwrap();
+        match out {
+            sgg::pipeline::SinkOutput::Streamed(r) => {
+                let q = r.quality.expect("[evaluate] attached no quality");
+                assert!(q.degree_dist > 0.0 && q.degree_dist <= 1.0);
+                reports.push(q);
+            }
+            other => panic!("expected streamed output, got {other:?}"),
+        }
+    }
+    assert_eq!(
+        reports[0].degree_dist.to_bits(),
+        reports[1].degree_dist.to_bits(),
+        "tapped quality must be worker-count invariant"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
