@@ -1,4 +1,4 @@
-//! Declarative-scenario demo: run the checked-in `examples/fraud.toml`
+//! Declarative-scenario demo: run the checked-in `scenarios/fraud.toml`
 //! spec end to end (dataset → registry-resolved components → fit →
 //! generate → sink), then run the same scenario with a shard-stream sink
 //! to show both output paths behind the one `Sink` trait.
@@ -9,7 +9,7 @@ use sgg::pipeline::{run_scenario, ScenarioSpec, SinkOutput, SinkSpec};
 use sgg::structgen::chunked::ChunkConfig;
 
 fn main() -> sgg::Result<()> {
-    let path = std::path::Path::new("examples/fraud.toml");
+    let path = std::path::Path::new("scenarios/fraud.toml");
     let spec = ScenarioSpec::from_file(path)?;
     println!(
         "scenario `{}`: dataset={} structure={} edge_features={} aligner={}",

@@ -36,7 +36,7 @@ fn main() {
     std::fs::remove_dir_all(&dir).ok();
 
     // --- generate the "synthetic" side to shards (batched writer) ---
-    let cfg = ChunkConfig { prefix_levels: 3, workers: 4, queue_capacity: 4 };
+    let cfg = ChunkConfig { prefix_levels: 3, workers: 4, queue_capacity: 4, ..ChunkConfig::default() };
     let t0 = std::time::Instant::now();
     let report = stream_to_shards(&gen, nodes, nodes, edges, 7, cfg, &dir).expect("stream");
     let write_secs = t0.elapsed().as_secs_f64();

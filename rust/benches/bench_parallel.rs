@@ -31,7 +31,7 @@ fn main() {
     let mut checksum0: Option<u64> = None;
     let mut speedup_at_4 = 0.0f64;
     for workers in [1usize, 2, 4, 8] {
-        let cfg = ChunkConfig { prefix_levels: 3, workers, queue_capacity: 4 };
+        let cfg = ChunkConfig { prefix_levels: 3, workers, queue_capacity: 4, ..ChunkConfig::default() };
         // cheap order-sensitive checksum proves runs are bit-identical
         let mut checksum = 0u64;
         let t0 = std::time::Instant::now();

@@ -1,13 +1,31 @@
 //! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
-//! offline build has no `thiserror`).
+//! offline build has no `thiserror`), plus the transient/fatal
+//! classification the retry layer (`pipeline::fault`) is built on.
 
 use crate::xla;
+use std::path::PathBuf;
 
 /// Unified error type for the SGG framework.
 #[derive(Debug)]
 pub enum Error {
     /// I/O failure (dataset files, artifact files, output shards).
     Io(std::io::Error),
+
+    /// Shard-level I/O failure with file and byte-offset context, so a
+    /// failed shard in a thousand-shard run is identifiable from the
+    /// message alone.
+    ShardIo {
+        /// The shard file being read or written.
+        path: PathBuf,
+        /// Byte offset within the file where the operation failed.
+        offset: u64,
+        /// The underlying I/O error.
+        source: std::io::Error,
+    },
+
+    /// A pool worker died (panic, or an injected fault that exhausted its
+    /// retry budget). Always fatal: the pool drains and the run aborts.
+    Worker(String),
 
     /// XLA / PJRT runtime failure.
     Xla(String),
@@ -28,10 +46,35 @@ pub enum Error {
     Numeric(String),
 }
 
+impl Error {
+    /// Transient errors are worth a bounded retry (the operation may
+    /// succeed unchanged on a later attempt); everything else is fatal
+    /// and aborts the run. Only interrupted/timed-out style I/O kinds
+    /// qualify — an `UnexpectedEof` is data corruption (a truncated
+    /// shard), not a blip, and must surface immediately.
+    pub fn is_transient(&self) -> bool {
+        let kind = match self {
+            Error::Io(e) => e.kind(),
+            Error::ShardIo { source, .. } => source.kind(),
+            _ => return false,
+        };
+        matches!(
+            kind,
+            std::io::ErrorKind::Interrupted
+                | std::io::ErrorKind::WouldBlock
+                | std::io::ErrorKind::TimedOut
+        )
+    }
+}
+
 impl std::fmt::Display for Error {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::ShardIo { path, offset, source } => {
+                write!(f, "shard io error: {} at byte {offset}: {source}", path.display())
+            }
+            Error::Worker(m) => write!(f, "worker failure: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::MissingArtifact(m) => {
                 write!(f, "missing artifact `{m}` — run `make artifacts` first")
@@ -48,6 +91,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::ShardIo { source, .. } => Some(source),
             _ => None,
         }
     }
@@ -87,5 +131,35 @@ mod tests {
         let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
         assert!(e.to_string().starts_with("io error:"));
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn shard_io_carries_path_and_offset() {
+        let e = Error::ShardIo {
+            path: PathBuf::from("/tmp/out/shard-00042.sgg"),
+            offset: 1057,
+            source: std::io::Error::new(std::io::ErrorKind::Other, "disk gone"),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("shard-00042.sgg"), "{msg}");
+        assert!(msg.contains("byte 1057"), "{msg}");
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn transient_classification() {
+        let transient = Error::Io(std::io::Error::new(std::io::ErrorKind::Interrupted, "x"));
+        assert!(transient.is_transient());
+        let transient = Error::ShardIo {
+            path: PathBuf::from("s"),
+            offset: 0,
+            source: std::io::Error::new(std::io::ErrorKind::TimedOut, "x"),
+        };
+        assert!(transient.is_transient());
+        // truncation is corruption, not a blip
+        let eof = Error::Io(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "x"));
+        assert!(!eof.is_transient());
+        assert!(!Error::Data("x".into()).is_transient());
+        assert!(!Error::Worker("x".into()).is_transient());
     }
 }

@@ -23,15 +23,22 @@ const HEADER_LEN: usize = 8 + 8 + 8 + 1 + 8;
 /// Edges per IO batch (×16 bytes ≈ 1 MiB buffers).
 const IO_BATCH_EDGES: usize = 65_536;
 
+/// Error-mapping closure attaching shard-file context: a failed shard
+/// in a thousand-shard run is identifiable from the message alone.
+fn shard_io(path: &Path, offset: u64) -> impl FnOnce(std::io::Error) -> Error + '_ {
+    move |source| Error::ShardIo { path: path.to_path_buf(), offset, source }
+}
+
 /// Write an edge list in the binary shard format:
 /// `magic | n_src u64 | n_dst u64 | square u8 | n_edges u64 | (src,dst)*`.
 ///
 /// Records are staged in a reusable buffer and flushed in ~1 MiB
 /// batches — one `write_all` per batch instead of per edge.
 pub fn write_binary(path: &Path, edges: &EdgeList) -> Result<()> {
-    let mut f = std::fs::File::create(path)?;
+    let mut f = std::fs::File::create(path).map_err(shard_io(path, 0))?;
     let cap = HEADER_LEN + edges.len().min(IO_BATCH_EDGES) * 16;
     let mut buf: Vec<u8> = Vec::with_capacity(cap);
+    let mut written = 0u64;
     buf.extend_from_slice(MAGIC);
     buf.extend_from_slice(&edges.spec.n_src.to_le_bytes());
     buf.extend_from_slice(&edges.spec.n_dst.to_le_bytes());
@@ -41,14 +48,31 @@ pub fn write_binary(path: &Path, edges: &EdgeList) -> Result<()> {
         buf.extend_from_slice(&s.to_le_bytes());
         buf.extend_from_slice(&d.to_le_bytes());
         if buf.len() >= IO_BATCH_EDGES * 16 {
-            f.write_all(&buf)?;
+            f.write_all(&buf).map_err(shard_io(path, written))?;
+            written += buf.len() as u64;
             buf.clear();
         }
     }
     if !buf.is_empty() {
-        f.write_all(&buf)?;
+        f.write_all(&buf).map_err(shard_io(path, written))?;
     }
     Ok(())
+}
+
+/// [`write_binary`] with crash atomicity: the shard is staged as
+/// `<path>.tmp` and renamed into place only after every byte is
+/// written, so an interrupted run never leaves a partial file under the
+/// final name. A complete `shard-NNNNN.sgg` therefore doubles as that
+/// chunk's durable completion record — the basis of `--resume`.
+pub fn write_binary_atomic(path: &Path, edges: &EdgeList) -> Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    if let Err(e) = write_binary(&tmp, edges) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path).map_err(shard_io(path, 0))
 }
 
 /// Parse and validate the fixed-size binary header.
@@ -94,8 +118,8 @@ fn validate_file_len(path: &Path, actual: u64, n_edges: u64) -> Result<()> {
 /// against the file size — the shared prelude of every binary read
 /// path. The returned handle is positioned at the first edge record.
 fn open_validated(path: &Path) -> Result<(std::fs::File, PartiteSpec, u64)> {
-    let mut f = std::fs::File::open(path)?;
-    let actual = f.metadata()?.len();
+    let mut f = std::fs::File::open(path).map_err(shard_io(path, 0))?;
+    let actual = f.metadata().map_err(shard_io(path, 0))?.len();
     if (actual as usize) < HEADER_LEN {
         return Err(Error::Data(format!(
             "{}: {actual} bytes is shorter than the {HEADER_LEN}-byte header",
@@ -103,7 +127,7 @@ fn open_validated(path: &Path) -> Result<(std::fs::File, PartiteSpec, u64)> {
         )));
     }
     let mut h = [0u8; HEADER_LEN];
-    f.read_exact(&mut h)?;
+    f.read_exact(&mut h).map_err(shard_io(path, 0))?;
     let (spec, n_edges) = parse_header(&h, path)?;
     validate_file_len(path, actual, n_edges)?;
     Ok((f, spec, n_edges))
@@ -129,7 +153,8 @@ pub fn read_binary(path: &Path) -> Result<EdgeList> {
     while remaining > 0 {
         let take = remaining.min(IO_BATCH_EDGES);
         let bytes = &mut buf[..take * 16];
-        f.read_exact(bytes)?;
+        let offset = (HEADER_LEN + (n_edges - remaining) * 16) as u64;
+        f.read_exact(bytes).map_err(shard_io(path, offset))?;
         for rec in bytes.chunks_exact(16) {
             let s = u64::from_le_bytes(rec[0..8].try_into().unwrap());
             let d = u64::from_le_bytes(rec[8..16].try_into().unwrap());
@@ -374,6 +399,30 @@ mod tests {
         let err = read_binary(&path).unwrap_err();
         assert!(err.to_string().contains("1000 edges"), "{err}");
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn atomic_write_roundtrips_and_leaves_no_tmp() {
+        let path = tmp("atomic");
+        let e = sample();
+        write_binary_atomic(&path, &e).unwrap();
+        let r = read_binary(&path).unwrap();
+        assert_eq!(r.src, e.src);
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists(), "stale .tmp left behind");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn io_errors_carry_shard_path_context() {
+        let path = tmp("does_not_exist");
+        std::fs::remove_file(&path).ok();
+        let err = read_binary(&path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("shard io error"), "{msg}");
+        assert!(msg.contains("does_not_exist"), "{msg}");
+        assert!(msg.contains("byte 0"), "{msg}");
     }
 
     #[test]

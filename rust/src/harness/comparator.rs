@@ -1,0 +1,282 @@
+//! Golden-profile comparison for the conformance harness.
+//!
+//! A golden file is a small JSON document pinning one scenario's
+//! expected profile:
+//!
+//! ```json
+//! {
+//!   "pinned": true,
+//!   "edges": 12000,
+//!   "shards": 4,
+//!   "metrics": {
+//!     "degree_dist": {"value": 0.9321, "tol": 1e-9},
+//!     "dcc":         {"value": 0.8712, "tol": 1e-9}
+//!   }
+//! }
+//! ```
+//!
+//! `edges` and `shards` are exact (generation is deterministic down to
+//! the chunk split); the scalar scores carry a per-metric tolerance
+//! because they pass through `libm` territory (ln/sqrt), which may
+//! differ in the last ulps across toolchains. A golden with
+//! `"pinned": false` — the checked-in placeholder state — or a missing
+//! file is *blessed*: the measured profile is written back pinned, so
+//! the repository converges to real measured goldens on the first
+//! `sgg test` run in any environment.
+
+use super::runner::MetricProfile;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Default tolerance written when blessing a scalar metric.
+pub const DEFAULT_TOL: f64 = 1e-9;
+
+/// One golden check: a named quantity, what the golden pins, what this
+/// run measured, and whether it is within tolerance.
+#[derive(Clone, Debug)]
+pub struct MetricCheck {
+    /// Quantity name (`edges`, `shards`, `degree_dist`, `dcc`).
+    pub name: String,
+    /// Pinned golden value.
+    pub expected: f64,
+    /// Measured value.
+    pub measured: f64,
+    /// Allowed absolute deviation (0 for exact counts).
+    pub tol: f64,
+    /// `|measured - expected| <= tol`.
+    pub passed: bool,
+}
+
+impl MetricCheck {
+    fn new(name: &str, expected: f64, measured: f64, tol: f64) -> MetricCheck {
+        MetricCheck {
+            name: name.to_string(),
+            expected,
+            measured,
+            tol,
+            passed: (measured - expected).abs() <= tol,
+        }
+    }
+}
+
+impl std::fmt::Display for MetricCheck {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: expected {} ± {}, measured {}",
+            self.name, self.expected, self.tol, self.measured
+        )
+    }
+}
+
+/// What [`compare_or_bless`] did.
+#[derive(Clone, Debug)]
+pub enum GoldenOutcome {
+    /// A pinned golden existed and every check passed.
+    Matched(Vec<MetricCheck>),
+    /// A pinned golden existed and at least one check failed.
+    Mismatched(Vec<MetricCheck>),
+    /// No pinned golden (missing file, `"pinned": false`, or `--bless`):
+    /// the measured profile was written back as the new pinned golden.
+    Blessed,
+}
+
+/// Compare `measured` against the golden at `path`, or bless the golden
+/// from the measurement when it is missing/unpinned (or `bless` forces
+/// it).
+pub fn compare_or_bless(
+    path: &Path,
+    measured: &MetricProfile,
+    bless: bool,
+) -> Result<GoldenOutcome> {
+    let golden = match std::fs::read_to_string(path) {
+        Ok(text) => Some(Json::parse(&text).map_err(|e| {
+            Error::Config(format!("golden {} is not valid JSON: {e}", path.display()))
+        })?),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+        Err(e) => {
+            return Err(Error::Config(format!(
+                "cannot read golden {}: {e}",
+                path.display()
+            )));
+        }
+    };
+    let pinned = golden
+        .as_ref()
+        .and_then(|g| g.get("pinned"))
+        .and_then(|p| p.as_bool())
+        .unwrap_or(false);
+    if bless || !pinned {
+        write_golden(path, measured, golden.as_ref())?;
+        return Ok(GoldenOutcome::Blessed);
+    }
+    let g = golden.expect("pinned implies parsed");
+    let checks = check_all(&g, measured, path)?;
+    if checks.iter().all(|c| c.passed) {
+        Ok(GoldenOutcome::Matched(checks))
+    } else {
+        Ok(GoldenOutcome::Mismatched(checks))
+    }
+}
+
+/// Run every check a pinned golden defines.
+fn check_all(g: &Json, m: &MetricProfile, path: &Path) -> Result<Vec<MetricCheck>> {
+    let bad = |what: &str| {
+        Error::Config(format!("golden {} is missing `{what}`", path.display()))
+    };
+    let edges = g.get("edges").and_then(|v| v.as_f64()).ok_or_else(|| bad("edges"))?;
+    let shards = g.get("shards").and_then(|v| v.as_f64()).ok_or_else(|| bad("shards"))?;
+    let mut checks = vec![
+        MetricCheck::new("edges", edges, m.edges as f64, 0.0),
+        MetricCheck::new("shards", shards, m.shards as f64, 0.0),
+    ];
+    let metrics = g.get("metrics").ok_or_else(|| bad("metrics"))?;
+    for (name, got) in [("degree_dist", m.degree_dist), ("dcc", m.dcc)] {
+        let entry = metrics.get(name).ok_or_else(|| bad(name))?;
+        let value =
+            entry.get("value").and_then(|v| v.as_f64()).ok_or_else(|| bad(name))?;
+        let tol = entry
+            .get("tol")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(DEFAULT_TOL);
+        checks.push(MetricCheck::new(name, value, got, tol));
+    }
+    Ok(checks)
+}
+
+/// Write `measured` as a pinned golden, keeping any tolerances the
+/// previous (placeholder or stale) golden carried.
+fn write_golden(path: &Path, m: &MetricProfile, prev: Option<&Json>) -> Result<()> {
+    let tol_of = |name: &str| {
+        prev.and_then(|g| g.get("metrics"))
+            .and_then(|ms| ms.get(name))
+            .and_then(|e| e.get("tol"))
+            .and_then(|t| t.as_f64())
+            .unwrap_or(DEFAULT_TOL)
+    };
+    let metric = |value: f64, tol: f64| {
+        Json::obj(vec![("value", Json::from(value)), ("tol", Json::from(tol))])
+    };
+    let doc = Json::obj(vec![
+        ("pinned", Json::from(true)),
+        ("edges", Json::from(m.edges)),
+        ("shards", Json::from(m.shards)),
+        (
+            "metrics",
+            Json::obj(vec![
+                ("degree_dist", metric(m.degree_dist, tol_of("degree_dist"))),
+                ("dcc", metric(m.dcc, tol_of("dcc"))),
+            ]),
+        ),
+    ]);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::Config(format!("cannot create {}: {e}", dir.display())))?;
+    }
+    std::fs::write(path, format!("{doc}\n"))
+        .map_err(|e| Error::Config(format!("cannot write golden {}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("sgg_cmp_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn profile() -> MetricProfile {
+        MetricProfile {
+            edges: 1200,
+            shards: 3,
+            degree_dist: 0.875,
+            dcc: 0.6125,
+            profile_hash: 42,
+        }
+    }
+
+    #[test]
+    fn missing_golden_blesses_then_matches_exactly() {
+        let dir = tmp("bless");
+        let path = dir.join("g.json");
+        let m = profile();
+        assert!(matches!(
+            compare_or_bless(&path, &m, false).unwrap(),
+            GoldenOutcome::Blessed
+        ));
+        // the blessed golden round-trips to a full match
+        match compare_or_bless(&path, &m, false).unwrap() {
+            GoldenOutcome::Matched(checks) => {
+                assert_eq!(checks.len(), 4);
+                assert!(checks.iter().all(|c| c.passed));
+            }
+            other => panic!("expected match, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unpinned_placeholder_is_blessed_and_keeps_its_tolerances() {
+        let dir = tmp("placeholder");
+        let path = dir.join("g.json");
+        std::fs::write(
+            &path,
+            r#"{"pinned": false, "metrics": {"degree_dist": {"tol": 0.05}, "dcc": {}}}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            compare_or_bless(&path, &profile(), false).unwrap(),
+            GoldenOutcome::Blessed
+        ));
+        let g = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(g.get("pinned").unwrap().as_bool(), Some(true));
+        let dd = g.get("metrics").unwrap().get("degree_dist").unwrap();
+        assert_eq!(dd.get("tol").unwrap().as_f64(), Some(0.05));
+        assert_eq!(dd.get("value").unwrap().as_f64(), Some(0.875));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn drift_beyond_tolerance_mismatches() {
+        let dir = tmp("drift");
+        let path = dir.join("g.json");
+        compare_or_bless(&path, &profile(), false).unwrap();
+        let mut drifted = profile();
+        drifted.degree_dist += 1e-3;
+        match compare_or_bless(&path, &drifted, false).unwrap() {
+            GoldenOutcome::Mismatched(checks) => {
+                let bad: Vec<_> = checks.iter().filter(|c| !c.passed).collect();
+                assert_eq!(bad.len(), 1);
+                assert_eq!(bad[0].name, "degree_dist");
+            }
+            other => panic!("expected mismatch, got {other:?}"),
+        }
+        // --bless overwrites the pin with the new measurement
+        assert!(matches!(
+            compare_or_bless(&path, &drifted, true).unwrap(),
+            GoldenOutcome::Blessed
+        ));
+        assert!(matches!(
+            compare_or_bless(&path, &drifted, false).unwrap(),
+            GoldenOutcome::Matched(_)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_golden_is_config_error() {
+        let dir = tmp("bad");
+        let path = dir.join("g.json");
+        std::fs::write(&path, "not json").unwrap();
+        assert!(compare_or_bless(&path, &profile(), false).is_err());
+        // pinned but incomplete documents also error rather than pass
+        std::fs::write(&path, r#"{"pinned": true, "edges": 1200}"#).unwrap();
+        assert!(compare_or_bless(&path, &profile(), false).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,294 @@
+//! The conformance harness behind `sgg test scenarios/` — every
+//! checked-in scenario is executed end to end, its streamed structural
+//! profile is compared against a golden JSON with per-metric
+//! tolerances, and the whole run is repeated under a deterministic
+//! fault schedule to assert that recovery converges to a bit-identical
+//! profile. The harness is the gate every future backend, format, and
+//! scenario type drops into (ROADMAP item 5).
+//!
+//! Split mirrors the classic harness shape:
+//!
+//! * [`runner`] — executes one scenario (clean and fault-injected) in a
+//!   hermetic workdir and measures its [`runner::MetricProfile`].
+//! * [`comparator`] — checks a measured profile against the checked-in
+//!   golden, or blesses the golden when it is unpinned/missing.
+//! * [`reporter`] — renders the machine-readable JSON report CI uploads.
+//!
+//! Golden files live next to the scenarios (`<scenarios>/golden/
+//! <name>.json`). A golden with `"pinned": false` (or a missing one) is
+//! *blessed* on the next run: the measured profile is written back with
+//! `pinned: true`, and from then on every run must reproduce it within
+//! the stored tolerances. `sgg test --bless` re-blesses explicitly
+//! after an intentional change.
+
+pub mod comparator;
+pub mod reporter;
+pub mod runner;
+
+pub use comparator::{compare_or_bless, GoldenOutcome, MetricCheck};
+pub use reporter::{report_json, write_report};
+pub use runner::{run_scenario_profile, MetricProfile};
+
+use crate::pipeline::fault::FaultPlan;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Configuration of one `sgg test` invocation.
+#[derive(Clone, Debug)]
+pub struct HarnessConfig {
+    /// Directory holding the `.toml` scenarios to execute.
+    pub scenarios_dir: PathBuf,
+    /// Hermetic working directory for generated shards (one
+    /// subdirectory per scenario; recreated per run).
+    pub workdir: PathBuf,
+    /// Directory of golden profiles (`<scenarios>/golden` by default).
+    pub golden_dir: PathBuf,
+    /// Worker count for generation and profiling (0 = one per core).
+    pub workers: usize,
+    /// Re-bless every golden from this run's measurements.
+    pub bless: bool,
+    /// Seed of the fault schedule used for the fault-injected re-run.
+    pub fault_seed: u64,
+}
+
+impl HarnessConfig {
+    /// Default configuration over a scenario directory.
+    pub fn new(scenarios_dir: &Path) -> HarnessConfig {
+        HarnessConfig {
+            scenarios_dir: scenarios_dir.to_path_buf(),
+            workdir: std::env::temp_dir().join(format!("sgg-test-{}", std::process::id())),
+            golden_dir: scenarios_dir.join("golden"),
+            workers: 2,
+            bless: false,
+            fault_seed: 0xfa17,
+        }
+    }
+}
+
+/// Outcome of one scenario under the harness.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScenarioStatus {
+    /// Matched its pinned golden within tolerances, and the
+    /// fault-injected re-run converged bit-identically.
+    Passed,
+    /// No pinned golden existed (or `--bless`): the measured profile was
+    /// written as the new golden. The fault re-run still had to
+    /// converge bit-identically.
+    Blessed,
+    /// Any check failed; the message says which.
+    Failed(String),
+}
+
+/// Per-scenario harness record.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Scenario name (file stem of the `.toml`).
+    pub name: String,
+    /// Pass/bless/fail.
+    pub status: ScenarioStatus,
+    /// Measured profile of the clean run (absent when the run errored).
+    pub profile: Option<MetricProfile>,
+    /// Per-metric golden checks (empty when blessed or errored).
+    pub checks: Vec<MetricCheck>,
+    /// Whether the fault-injected re-run reproduced the clean profile
+    /// bit for bit (absent when the clean run already failed).
+    pub fault_identical: Option<bool>,
+}
+
+/// Full harness result: one record per scenario, in path order.
+#[derive(Clone, Debug, Default)]
+pub struct HarnessReport {
+    /// Per-scenario outcomes.
+    pub scenarios: Vec<ScenarioReport>,
+}
+
+impl HarnessReport {
+    /// True when no scenario failed.
+    pub fn passed(&self) -> bool {
+        self.scenarios
+            .iter()
+            .all(|s| !matches!(s.status, ScenarioStatus::Failed(_)))
+    }
+}
+
+/// Execute every `.toml` scenario under the harness: clean run →
+/// profile → golden compare/bless → fault-injected re-run → bit-identity
+/// check. Scenario-level errors are captured as `Failed` records, not
+/// propagated — one broken scenario must not hide the others' results.
+pub fn run_harness(cfg: &HarnessConfig) -> Result<HarnessReport> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&cfg.scenarios_dir)
+        .map_err(|e| {
+            Error::Config(format!(
+                "cannot read scenario directory {}: {e}",
+                cfg.scenarios_dir.display()
+            ))
+        })?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "toml").unwrap_or(false))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(Error::Config(format!(
+            "no .toml scenarios in {}",
+            cfg.scenarios_dir.display()
+        )));
+    }
+    let mut report = HarnessReport::default();
+    for path in &paths {
+        report.scenarios.push(run_one(cfg, path));
+    }
+    Ok(report)
+}
+
+/// One scenario through the full pipeline of checks.
+fn run_one(cfg: &HarnessConfig, path: &Path) -> ScenarioReport {
+    let name = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("scenario")
+        .to_string();
+    let fail = |msg: String| ScenarioReport {
+        name: name.clone(),
+        status: ScenarioStatus::Failed(msg),
+        profile: None,
+        checks: Vec::new(),
+        fault_identical: None,
+    };
+
+    // clean run
+    let clean_dir = cfg.workdir.join(&name).join("clean");
+    let clean = match run_scenario_profile(path, &clean_dir, cfg.workers, None, cfg.fault_seed)
+    {
+        Ok(p) => p,
+        Err(e) => return fail(format!("clean run failed: {e}")),
+    };
+
+    // fault-injected re-run: transient sample/sink/read faults plus one
+    // injected worker panic — must converge to the exact same profile
+    let fault_dir = cfg.workdir.join(&name).join("faulted");
+    let plan = FaultPlan::transient(cfg.fault_seed);
+    let faulted =
+        match run_scenario_profile(path, &fault_dir, cfg.workers, Some(plan), cfg.fault_seed) {
+            Ok(p) => p,
+            Err(e) => return fail(format!("fault-injected run failed to recover: {e}")),
+        };
+    let identical = clean.bit_identical(&faulted);
+    if !identical {
+        return ScenarioReport {
+            name,
+            status: ScenarioStatus::Failed(
+                "fault-injected run diverged from the clean profile".into(),
+            ),
+            profile: Some(clean),
+            checks: Vec::new(),
+            fault_identical: Some(false),
+        };
+    }
+
+    // golden compare (or bless)
+    let golden_path = cfg.golden_dir.join(format!("{name}.json"));
+    match compare_or_bless(&golden_path, &clean, cfg.bless) {
+        Ok(GoldenOutcome::Matched(checks)) => ScenarioReport {
+            name,
+            status: ScenarioStatus::Passed,
+            profile: Some(clean),
+            checks,
+            fault_identical: Some(true),
+        },
+        Ok(GoldenOutcome::Blessed) => ScenarioReport {
+            name,
+            status: ScenarioStatus::Blessed,
+            profile: Some(clean),
+            checks: Vec::new(),
+            fault_identical: Some(true),
+        },
+        Ok(GoldenOutcome::Mismatched(checks)) => {
+            let bad: Vec<String> = checks
+                .iter()
+                .filter(|c| !c.passed)
+                .map(|c| c.to_string())
+                .collect();
+            ScenarioReport {
+                name,
+                status: ScenarioStatus::Failed(format!(
+                    "golden mismatch: {}",
+                    bad.join("; ")
+                )),
+                profile: Some(clean),
+                checks,
+                fault_identical: Some(true),
+            }
+        }
+        Err(e) => fail(format!("golden check errored: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("sgg_harness_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn write_scenario(dir: &Path, name: &str, body: &str) {
+        std::fs::write(dir.join(format!("{name}.toml")), body).unwrap();
+    }
+
+    const SMALL: &str = r#"
+name = "harness-small"
+dataset = "travel-insurance"
+seed = 11
+workers = 2
+
+[structure]
+backend = "erdos-renyi"
+
+[edge_features]
+backend = "random"
+
+[aligner]
+backend = "random"
+
+[sink]
+kind = "shards"
+"#;
+
+    #[test]
+    fn harness_blesses_then_passes_then_catches_drift() {
+        let scen = tmp("scen");
+        write_scenario(&scen, "small", SMALL);
+        let mut cfg = HarnessConfig::new(&scen);
+        cfg.workdir = tmp("work");
+        // no golden: first run blesses
+        let r1 = run_harness(&cfg).unwrap();
+        assert!(r1.passed());
+        assert_eq!(r1.scenarios[0].status, ScenarioStatus::Blessed);
+        assert_eq!(r1.scenarios[0].fault_identical, Some(true));
+        // second run compares against the freshly pinned golden
+        let r2 = run_harness(&cfg).unwrap();
+        assert!(r2.passed(), "{:?}", r2.scenarios[0].status);
+        assert_eq!(r2.scenarios[0].status, ScenarioStatus::Passed);
+        assert!(r2.scenarios[0].checks.iter().all(|c| c.passed));
+        // corrupt the golden edge count: the harness must fail loudly
+        let gp = cfg.golden_dir.join("small.json");
+        let doc = std::fs::read_to_string(&gp).unwrap();
+        std::fs::write(&gp, doc.replace("\"edges\":", "\"edges\": 1, \"was\":")).unwrap();
+        let r3 = run_harness(&cfg).unwrap();
+        assert!(!r3.passed());
+        assert!(matches!(r3.scenarios[0].status, ScenarioStatus::Failed(_)));
+        std::fs::remove_dir_all(&scen).ok();
+        std::fs::remove_dir_all(&cfg.workdir).ok();
+    }
+
+    #[test]
+    fn empty_scenario_dir_is_config_error() {
+        let scen = tmp("empty");
+        let cfg = HarnessConfig::new(&scen);
+        assert!(run_harness(&cfg).is_err());
+        std::fs::remove_dir_all(&scen).ok();
+    }
+}

@@ -1,0 +1,149 @@
+//! Machine-readable harness reports: the JSON document `sgg test
+//! --report` writes and CI uploads as an artifact. One object per
+//! scenario with its status, measured profile, per-metric golden
+//! checks, and the fault-recovery verdict.
+
+use super::{HarnessReport, ScenarioStatus};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Render a harness report as JSON.
+pub fn report_json(report: &HarnessReport) -> Json {
+    let scenarios: Vec<Json> = report
+        .scenarios
+        .iter()
+        .map(|s| {
+            let (status, reason) = match &s.status {
+                ScenarioStatus::Passed => ("passed", None),
+                ScenarioStatus::Blessed => ("blessed", None),
+                ScenarioStatus::Failed(why) => ("failed", Some(why.clone())),
+            };
+            let mut fields = vec![
+                ("name", Json::from(s.name.as_str())),
+                ("status", Json::from(status)),
+            ];
+            if let Some(why) = reason {
+                fields.push(("reason", Json::from(why)));
+            }
+            if let Some(p) = &s.profile {
+                fields.push((
+                    "profile",
+                    Json::obj(vec![
+                        ("edges", Json::from(p.edges)),
+                        ("shards", Json::from(p.shards)),
+                        ("degree_dist", Json::from(p.degree_dist)),
+                        ("dcc", Json::from(p.dcc)),
+                    ]),
+                ));
+            }
+            if let Some(identical) = s.fault_identical {
+                fields.push(("fault_identical", Json::from(identical)));
+            }
+            if !s.checks.is_empty() {
+                let checks: Vec<Json> = s
+                    .checks
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("name", Json::from(c.name.as_str())),
+                            ("expected", Json::from(c.expected)),
+                            ("measured", Json::from(c.measured)),
+                            ("tol", Json::from(c.tol)),
+                            ("passed", Json::from(c.passed)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("checks", Json::from(checks)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("passed", Json::from(report.passed())),
+        ("scenarios", Json::from(scenarios)),
+    ])
+}
+
+/// Write the JSON report to `path` (parent directories created).
+pub fn write_report(path: &Path, report: &HarnessReport) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::Config(format!("cannot create {}: {e}", dir.display())))?;
+    }
+    std::fs::write(path, format!("{}\n", report_json(report)))
+        .map_err(|e| Error::Config(format!("cannot write report {}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::{MetricCheck, MetricProfile, ScenarioReport};
+
+    fn sample_report() -> HarnessReport {
+        HarnessReport {
+            scenarios: vec![
+                ScenarioReport {
+                    name: "fraud".into(),
+                    status: ScenarioStatus::Passed,
+                    profile: Some(MetricProfile {
+                        edges: 1000,
+                        shards: 2,
+                        degree_dist: 0.9,
+                        dcc: 0.8,
+                        profile_hash: 7,
+                    }),
+                    checks: vec![MetricCheck {
+                        name: "edges".into(),
+                        expected: 1000.0,
+                        measured: 1000.0,
+                        tol: 0.0,
+                        passed: true,
+                    }],
+                    fault_identical: Some(true),
+                },
+                ScenarioReport {
+                    name: "broken".into(),
+                    status: ScenarioStatus::Failed("clean run failed: boom".into()),
+                    profile: None,
+                    checks: Vec::new(),
+                    fault_identical: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_and_carries_failures() {
+        let report = sample_report();
+        let doc = report_json(&report);
+        assert_eq!(doc.get("passed").unwrap().as_bool(), Some(false));
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        let scenarios = back.get("scenarios").unwrap().as_arr().unwrap();
+        assert_eq!(scenarios.len(), 2);
+        assert_eq!(scenarios[0].get("status").unwrap().as_str(), Some("passed"));
+        assert_eq!(
+            scenarios[0].get("fault_identical").unwrap().as_bool(),
+            Some(true)
+        );
+        assert_eq!(scenarios[1].get("status").unwrap().as_str(), Some("failed"));
+        assert!(scenarios[1]
+            .get("reason")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("boom"));
+    }
+
+    #[test]
+    fn write_report_creates_parents() {
+        let dir = std::env::temp_dir().join(format!("sgg_rep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("nested").join("report.json");
+        write_report(&path, &sample_report()).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("passed").unwrap().as_bool(), Some(false));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,195 @@
+//! Scenario execution for the conformance harness: run one `.toml`
+//! scenario into a hermetic shard directory (optionally under a fault
+//! schedule) and measure its [`MetricProfile`] by streaming the shards
+//! back — never materializing the generated graph.
+
+use crate::metrics::degree::{self, DegreeProfile};
+use crate::metrics::stream::{profile_shards_with, DCC_SAMPLES};
+use crate::pipeline::fault::{FaultPlan, RetryPolicy};
+use crate::pipeline::spec::{ScenarioSpec, SinkSpec};
+use crate::pipeline::{run_scenario_opts, Registries, RunOptions};
+use crate::structgen::chunked::ChunkConfig;
+use crate::{Error, Result};
+use std::path::Path;
+
+/// The measured fingerprint of one scenario run: output sizes, the
+/// streamed structural scores against the scenario's source dataset,
+/// and a hash of the full synthetic degree profile (so "bit-identical"
+/// covers every node's degree, not just the two scalar scores).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricProfile {
+    /// Total generated edges (from the validated shard headers).
+    pub edges: u64,
+    /// Shard files written.
+    pub shards: usize,
+    /// Table-2 "Degree Dist. ↑" against the fit source.
+    pub degree_dist: f64,
+    /// Degree Comparison Coefficient (paper eq. 20).
+    pub dcc: f64,
+    /// FNV-1a over the synthetic out/in degree arrays.
+    pub profile_hash: u64,
+}
+
+impl MetricProfile {
+    /// True when `other` is indistinguishable from `self` bit for bit —
+    /// exact counts, exact f64 bits, identical degree arrays.
+    pub fn bit_identical(&self, other: &MetricProfile) -> bool {
+        self.edges == other.edges
+            && self.shards == other.shards
+            && self.degree_dist.to_bits() == other.degree_dist.to_bits()
+            && self.dcc.to_bits() == other.dcc.to_bits()
+            && self.profile_hash == other.profile_hash
+    }
+}
+
+/// FNV-1a over both degree arrays (length-prefixed so `[1],[2]` and
+/// `[1,2],[]` hash differently).
+fn hash_profile(prof: &DegreeProfile) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    for side in [prof.out_degrees(), prof.in_degrees()] {
+        eat(side.len() as u64);
+        for &d in side {
+            eat(d as u64);
+        }
+    }
+    h
+}
+
+/// Execute the scenario at `path` into a fresh shard directory at
+/// `out_dir` and measure its profile. `faults` injects the same
+/// deterministic schedule into generation (sampling + shard writes,
+/// absorbed by the retrying sink) *and* into the read-back profiling
+/// pass (absorbed by the [`crate::pipeline::FaultReader`]) — a
+/// recovered run must therefore produce a profile bit-identical to a
+/// fault-free one.
+///
+/// The scenario's own `[sink]` directory and `[evaluate]` flag are
+/// overridden: the harness owns the output location and always scores
+/// via the streamed read-back pass so clean and faulted runs are
+/// measured identically.
+pub fn run_scenario_profile(
+    path: &Path,
+    out_dir: &Path,
+    workers: usize,
+    faults: Option<FaultPlan>,
+    _fault_seed: u64,
+) -> Result<MetricProfile> {
+    let mut spec = ScenarioSpec::from_file(path)?;
+    if spec.model.is_some() {
+        return Err(Error::Config(format!(
+            "{}: harness scenarios must name a `dataset` (the golden profile is \
+             scored against it); `model` artifacts carry no reference graph",
+            path.display()
+        )));
+    }
+    if workers > 0 {
+        spec.workers = workers;
+    }
+    spec.evaluate = false;
+    // redirect output into the hermetic workdir, keeping any chunking
+    // knobs the scenario set; workers = 0 re-inherits spec.workers
+    let mut chunks = match &spec.sink {
+        SinkSpec::Shards { chunks, .. } => *chunks,
+        SinkSpec::Memory => ChunkConfig::default(),
+    };
+    chunks.workers = 0;
+    std::fs::remove_dir_all(out_dir).ok();
+    spec.sink = SinkSpec::Shards { dir: out_dir.to_path_buf(), chunks };
+
+    run_scenario_opts(
+        &spec,
+        &Registries::builtin(),
+        RunOptions { resume: false, faults },
+    )?;
+
+    let source = crate::datasets::load(&spec.dataset, spec.dataset_seed)?;
+    let orig = DegreeProfile::of(&source.edges);
+    let (synth, scan) =
+        profile_shards_with(out_dir, spec.workers.max(1), faults, RetryPolicy::default())?;
+    Ok(MetricProfile {
+        edges: scan.edges,
+        shards: scan.shards,
+        degree_dist: degree::degree_dist_score_profiles(&orig, &synth),
+        dcc: degree::dcc_profiles(&orig, &synth, DCC_SAMPLES),
+        profile_hash: hash_profile(&synth),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("sgg_hrun_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    const SCENARIO: &str = r#"
+name = "runner-small"
+dataset = "travel-insurance"
+seed = 21
+
+[structure]
+backend = "erdos-renyi"
+
+[edge_features]
+backend = "random"
+
+[aligner]
+backend = "random"
+
+[sink]
+kind = "shards"
+"#;
+
+    #[test]
+    fn clean_and_faulted_profiles_are_bit_identical() {
+        let dir = tmp("scen");
+        let path = dir.join("s.toml");
+        std::fs::write(&path, SCENARIO).unwrap();
+        let clean = run_scenario_profile(&path, &dir.join("clean"), 2, None, 7).unwrap();
+        assert!(clean.edges > 0);
+        assert!(clean.shards > 0);
+        let plan = FaultPlan::transient(7);
+        let faulted =
+            run_scenario_profile(&path, &dir.join("faulted"), 2, Some(plan), 7).unwrap();
+        assert!(clean.bit_identical(&faulted), "{clean:?} vs {faulted:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn model_scenarios_are_rejected() {
+        let dir = tmp("model");
+        let path = dir.join("m.toml");
+        std::fs::write(&path, "model = \"m.sggm\"\n").unwrap();
+        let err = run_scenario_profile(&path, &dir.join("out"), 1, None, 7).unwrap_err();
+        assert!(err.to_string().contains("dataset"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn profile_hash_distinguishes_length_splits() {
+        use crate::graph::{EdgeList, PartiteSpec};
+        let mut a = EdgeList::new(PartiteSpec::square(4));
+        a.push(0, 1);
+        a.push(1, 2);
+        let mut b = EdgeList::new(PartiteSpec::square(4));
+        b.push(0, 2);
+        b.push(1, 1);
+        let ha = hash_profile(&DegreeProfile::of(&a));
+        let hb = hash_profile(&DegreeProfile::of(&b));
+        assert_ne!(ha, hb);
+        assert_eq!(ha, hash_profile(&DegreeProfile::of(&a)));
+    }
+}

@@ -106,6 +106,7 @@ pub mod aligner;
 pub mod metrics;
 pub mod datasets;
 pub mod pipeline;
+pub mod harness;
 pub mod runtime;
 pub mod gnn;
 pub mod experiments;

@@ -3,6 +3,10 @@
 //! ```text
 //! sgg datasets                          list the dataset registry
 //! sgg run scenario.toml [--workers N]   execute a declarative scenario spec
+//!         [--resume]                    complete an interrupted shard run
+//!         [--fault-seed N]              inject a transient fault schedule
+//! sgg test scenarios/ [--bless] [--report harness.json]
+//!                                       golden-profile conformance harness
 //! sgg fit --dataset ieee-fraud --out model.sggm
 //! sgg generate --model model.sggm --scale 2 --out /tmp/synth [--workers N]
 //! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
@@ -133,7 +137,9 @@ fn run(args: &Args) -> Result<()> {
         Some("run") => {
             let path = args.positional.get(1).ok_or_else(|| {
                 sgg::Error::Config(
-                    "usage: sgg run <scenario.toml> [--seed N] [--workers N]".into(),
+                    "usage: sgg run <scenario.toml> [--seed N] [--workers N] [--resume] \
+                     [--fault-seed N] [--fault-fatal-at CHUNK]"
+                        .into(),
                 )
             })?;
             let mut spec = ScenarioSpec::from_file(std::path::Path::new(path))?;
@@ -147,7 +153,22 @@ fn run(args: &Args) -> Result<()> {
                     chunks.workers = workers;
                 }
             }
-            let out = pipeline::run_scenario(&spec)?;
+            // robustness levers: --fault-seed injects the deterministic
+            // transient-fault schedule (recovered by retries, output
+            // unchanged); --fault-fatal-at kills the run at a chunk so
+            // `--resume` can be exercised end to end
+            let mut faults = args
+                .get("fault-seed")
+                .and_then(|v| v.parse().ok())
+                .map(sgg::pipeline::FaultPlan::transient);
+            if let Some(chunk) = args.get("fault-fatal-at").and_then(|v| v.parse().ok()) {
+                let mut plan =
+                    faults.unwrap_or_else(|| sgg::pipeline::FaultPlan::fatal_at(chunk));
+                plan.fatal_at_chunk = Some(chunk);
+                faults = Some(plan);
+            }
+            let opts = pipeline::RunOptions { resume: args.has_flag("resume"), faults };
+            let out = pipeline::run_scenario_opts(&spec, &Registries::builtin(), opts)?;
             println!("scenario `{}`: {}", spec.name, out.summary());
             if spec.evaluate {
                 if let SinkOutput::Dataset(synth) = &out {
@@ -290,8 +311,9 @@ fn run(args: &Args) -> Result<()> {
                 prefix_levels: args.get_or("prefix-levels", defaults.prefix_levels),
                 workers,
                 queue_capacity: args.get_or("queue-capacity", defaults.queue_capacity),
+                ..defaults
             };
-            let report = sgg::pipeline::orchestrator::stream_to_shards(
+            let report = sgg::pipeline::orchestrator::stream_to_shards_opts(
                 &gen,
                 nodes,
                 nodes,
@@ -299,9 +321,65 @@ fn run(args: &Args) -> Result<()> {
                 args.get_or("seed", 7u64),
                 cfg,
                 std::path::Path::new(&out),
+                args.has_flag("resume"),
             )?;
             println!("{report}");
             Ok(())
+        }
+        Some("test") => {
+            let dir = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("scenarios");
+            let mut cfg = sgg::harness::HarnessConfig::new(Path::new(dir));
+            cfg.bless = args.has_flag("bless");
+            cfg.workers = args.get_or("workers", cfg.workers);
+            cfg.fault_seed = args.get_or("fault-seed", cfg.fault_seed);
+            if let Some(w) = args.get("workdir") {
+                cfg.workdir = std::path::PathBuf::from(w);
+            }
+            let report = sgg::harness::run_harness(&cfg)?;
+            for s in &report.scenarios {
+                match &s.status {
+                    sgg::harness::ScenarioStatus::Passed => {
+                        let p = s.profile.expect("passed implies profile");
+                        println!(
+                            "PASS  {}: {} edges in {} shards, degree_dist={:.4} dcc={:.4} \
+                             (fault re-run identical)",
+                            s.name, p.edges, p.shards, p.degree_dist, p.dcc
+                        );
+                    }
+                    sgg::harness::ScenarioStatus::Blessed => {
+                        let p = s.profile.expect("blessed implies profile");
+                        println!(
+                            "BLESS {}: golden pinned at {} edges in {} shards, \
+                             degree_dist={:.4} dcc={:.4}",
+                            s.name, p.edges, p.shards, p.degree_dist, p.dcc
+                        );
+                    }
+                    sgg::harness::ScenarioStatus::Failed(why) => {
+                        println!("FAIL  {}: {why}", s.name);
+                    }
+                }
+            }
+            if let Some(path) = args.get("report") {
+                sgg::harness::write_report(Path::new(path), &report)?;
+                println!("report → {path}");
+            }
+            if report.passed() {
+                Ok(())
+            } else {
+                let failed = report
+                    .scenarios
+                    .iter()
+                    .filter(|s| matches!(s.status, sgg::harness::ScenarioStatus::Failed(_)))
+                    .count();
+                Err(sgg::Error::Data(format!(
+                    "{failed} of {} scenarios failed conformance",
+                    report.scenarios.len()
+                )))
+            }
         }
         Some("experiment") => {
             let quick = args.has_flag("quick") || args.get("quick").is_some();
@@ -321,15 +399,17 @@ fn run(args: &Args) -> Result<()> {
         }
         _ => {
             println!(
-                "usage: sgg <datasets|run|fit|generate|fit-generate|evaluate|eval|stream|experiment> [--options]\n\
+                "usage: sgg <datasets|run|test|fit|generate|fit-generate|evaluate|eval|stream|experiment> [--options]\n\
                  lifecycle: sgg fit --dataset ieee-fraud --out m.sggm && \
                  sgg generate --model m.sggm --scale 2 --out /tmp/synth\n\
                  streamed eval: sgg eval --shards /tmp/shards --dataset ieee-fraud --workers 4\n\
+                 conformance: sgg test scenarios/ [--bless] [--report harness.json]\n\
+                 recovery: sgg run scenarios/fraud.toml --resume (after an interrupted shard run)\n\
                  experiments: {:?}\n\
                  components: --struct kronecker|kronecker-noisy|erdos-renyi|sbm|trilliong  \
                  --feat gan|kde|random|gaussian  --align learned|random\n\
                  parallelism: --workers N (run/generate/fit-generate/eval/stream; 0 = one per core)\n\
-                 spec files: sgg run examples/fraud.toml (see docs/scenario-reference.md)",
+                 spec files: sgg run scenarios/fraud.toml (see docs/scenario-reference.md)",
                 sgg::experiments::ALL
             );
             Ok(())

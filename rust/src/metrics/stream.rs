@@ -29,6 +29,7 @@ use super::accum::MetricAccumulator;
 use super::degree::{self, DegreeAccumulator, DegreeProfile};
 use crate::graph::io::ShardReader;
 use crate::graph::EdgeList;
+use crate::pipeline::fault::{FaultPlan, FaultReader, RetryPolicy};
 use crate::pipeline::parallel::ParallelChunkRunner;
 use crate::pipeline::sink::{Sink, SinkFinish};
 use crate::structgen::chunked::Chunk;
@@ -57,18 +58,33 @@ pub struct ShardScan {
 /// Exact: the profile equals the one an in-memory pass would produce,
 /// for any worker or shard count.
 pub fn profile_shards(dir: &Path, workers: usize) -> Result<(DegreeProfile, ShardScan)> {
+    profile_shards_with(dir, workers, None, RetryPolicy::default())
+}
+
+/// [`profile_shards`] with explicit robustness knobs: shard reads go
+/// through a [`FaultReader`], which injects the fault plan's scheduled
+/// transient read faults (if any) and retries transient failures —
+/// injected or real — under `retry`. The profile is unchanged by any
+/// recovered fault: retries re-read the same immutable shard.
+pub fn profile_shards_with(
+    dir: &Path,
+    workers: usize,
+    faults: Option<FaultPlan>,
+    retry: RetryPolicy,
+) -> Result<(DegreeProfile, ShardScan)> {
     let reader = ShardReader::open(dir)?;
     let scan = ShardScan {
         shards: reader.len(),
         edges: reader.total_edges(),
         peak_shard_edges: reader.max_shard_edges(),
     };
+    let faulted = FaultReader::new(&reader, faults, retry);
     let runner = ParallelChunkRunner::new(workers.max(1), 1);
     let partials = runner.fold_indices(
-        reader.len(),
+        faulted.len(),
         |_worker| DegreeAccumulator::with_spec(reader.spec()),
         |acc, i| {
-            acc.observe_edges(&reader.read(i)?);
+            acc.observe_edges(&faulted.read(i)?);
             Ok(())
         },
     )?;
@@ -287,6 +303,22 @@ mod tests {
     }
 
     #[test]
+    fn faulted_profile_is_bit_identical_to_clean() {
+        use crate::pipeline::fault::{FaultPlan, RetryPolicy};
+        let synth = random_graph(9, 128, 4_000);
+        let dir = tmp_dir("faultprof");
+        write_shards(&dir, &synth, 6);
+        let (clean, _) = profile_shards(&dir, 3).unwrap();
+        let plan = FaultPlan { read_rate: 400, max_faulty_attempts: 1, ..FaultPlan::transient(5) };
+        let (faulted, scan) =
+            profile_shards_with(&dir, 3, Some(plan), RetryPolicy::default()).unwrap();
+        assert_eq!(clean.out_degrees(), faulted.out_degrees());
+        assert_eq!(clean.in_degrees(), faulted.in_degrees());
+        assert_eq!(scan.edges, synth.len() as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn empty_dir_is_data_error() {
         let dir = tmp_dir("empty");
         let err = profile_shards(&dir, 2).unwrap_err();
@@ -299,7 +331,12 @@ mod tests {
         let orig = random_graph(3, 128, 2_000);
         let synth = random_graph(4, 128, 2_000);
         let dir = tmp_dir("tap");
-        let cfg = ChunkConfig { prefix_levels: 1, workers: 1, queue_capacity: 2 };
+        let cfg = ChunkConfig {
+            prefix_levels: 1,
+            workers: 1,
+            queue_capacity: 2,
+            ..ChunkConfig::default()
+        };
         let mut sink = ShardSink::new(&dir, cfg).unwrap();
         let mut tapped = TappedSink::new(&mut sink, GenerationTap::new(&orig));
         // feed the synthetic graph as three chunks

@@ -1,0 +1,479 @@
+//! Deterministic fault injection and bounded recovery — the robustness
+//! layer under the conformance harness (`sgg test`) and the
+//! `fault_paths` test suite.
+//!
+//! At shard scale, writes fail, readers hit truncated files, and pool
+//! workers die mid-run. This module makes those failures *reproducible*
+//! and the recovery machinery testable:
+//!
+//! * [`FaultPlan`] — a seed-driven schedule of injected faults. Every
+//!   decision is a pure hash of `(seed, operation kind, index, attempt)`,
+//!   so a plan replays identically across runs, worker counts, and
+//!   machines. Transient faults fire only on attempts below
+//!   [`FaultPlan::max_faulty_attempts`], so bounded retry provably
+//!   converges; the injected worker panic fires on the first attempt
+//!   only, so a retried chunk recovers bit-identically (chunk sampling is
+//!   deterministic per index).
+//! * [`RetryPolicy`] + [`retry_transient`] / [`run_attempts`] — bounded
+//!   retry with a deterministic exponential backoff schedule
+//!   (`backoff_ms << attempt`; the default backoff is 0 ms so tests never
+//!   touch the wall clock). [`run_attempts`] additionally catches worker
+//!   panics and converts them into [`Error::Worker`], consuming one
+//!   attempt each — a persistent panic exhausts the budget and surfaces
+//!   as a single clean error instead of unwinding through the pool.
+//! * [`FaultSink`] / [`RetryingSink`] — sink adapters: the first injects
+//!   the plan's sink faults in front of any [`Sink`], the second retries
+//!   transient sink errors per chunk.
+//! * [`FaultReader`] — the read-side adapter over
+//!   [`ShardReader`](crate::graph::io::ShardReader), injecting transient
+//!   read faults and retrying them.
+//!
+//! Classification lives on the error type itself
+//! ([`Error::is_transient`]): interrupted/timed-out I/O is worth a
+//! retry, everything else — truncation, bad magic, config errors,
+//! exhausted panics — aborts the run.
+
+use crate::graph::io::ShardReader;
+use crate::graph::EdgeList;
+use crate::pipeline::sink::{Sink, SinkFinish};
+use crate::structgen::chunked::Chunk;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Bounded retry with deterministic exponential backoff.
+///
+/// `max_retries` is the number of *re*-attempts after the first try, so
+/// an operation runs at most `max_retries + 1` times. The backoff before
+/// re-attempt `a` (0-based) is `backoff_ms << a` milliseconds — a fixed,
+/// wall-clock-independent schedule. The default keeps `backoff_ms = 0`
+/// so the test suite never sleeps; production callers opt into a real
+/// delay (e.g. 25 ms) via a scenario's `[sink]` stanza.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first try (0 disables retry).
+    pub max_retries: u32,
+    /// Base backoff in milliseconds, doubled each re-attempt.
+    pub backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff_ms: 0 }
+    }
+}
+
+impl RetryPolicy {
+    /// No retries at all: every error is final on first occurrence.
+    pub const fn none() -> RetryPolicy {
+        RetryPolicy { max_retries: 0, backoff_ms: 0 }
+    }
+
+    /// Backoff in milliseconds before re-attempt `attempt` (0-based):
+    /// `backoff_ms << attempt`, shift-capped so it cannot overflow.
+    pub fn backoff_for(&self, attempt: u32) -> u64 {
+        self.backoff_ms << attempt.min(16)
+    }
+
+    fn sleep_before(&self, attempt: u32) {
+        let ms = self.backoff_for(attempt);
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Run `op(attempt)` under `policy`: transient errors
+/// ([`Error::is_transient`]) consume one attempt each and are retried
+/// after the deterministic backoff; the first fatal error — or a
+/// transient one past the budget — propagates.
+pub fn retry_transient<T>(policy: RetryPolicy, mut op: impl FnMut(u32) -> Result<T>) -> Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient() && attempt < policy.max_retries => {
+                policy.sleep_before(attempt);
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// [`retry_transient`] that additionally catches panics in `op` and
+/// converts them to [`Error::Worker`], treating each caught panic as a
+/// retryable attempt. Chunk sampling is deterministic per index, so a
+/// retried chunk reproduces the exact same edges; a panic that fires on
+/// every attempt exhausts the budget and surfaces as one clean error.
+pub fn run_attempts<T>(policy: RetryPolicy, mut op: impl FnMut(u32) -> Result<T>) -> Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| op(attempt)));
+        let err = match outcome {
+            Ok(Ok(v)) => return Ok(v),
+            Ok(Err(e)) => e,
+            Err(payload) => Error::Worker(panic_message(payload)),
+        };
+        let retryable = err.is_transient() || matches!(err, Error::Worker(_));
+        if !retryable || attempt >= policy.max_retries {
+            return Err(err);
+        }
+        policy.sleep_before(attempt);
+        attempt += 1;
+    }
+}
+
+/// Best-effort extraction of a panic payload's message (the `&str` /
+/// `String` payloads `panic!` produces).
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// A deterministic, seed-driven fault schedule. Every decision is a pure
+/// function of the plan and `(kind, index, attempt)` — no RNG state, no
+/// wall clock — so the same plan injects the same faults on every run,
+/// at any worker count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed of the fault schedule (independent of the generation seed).
+    pub seed: u64,
+    /// Per-1024 probability that sampling a chunk fails transiently.
+    pub sample_rate: u16,
+    /// Per-1024 probability that a sink write fails transiently.
+    pub sink_rate: u16,
+    /// Per-1024 probability that a shard read fails transiently.
+    pub read_rate: u16,
+    /// Inject a worker panic while sampling this chunk (first attempt
+    /// only, so a retry recovers).
+    pub panic_at_chunk: Option<usize>,
+    /// Inject a *fatal* (non-transient) sink error at this chunk index —
+    /// the interruption lever of the `--resume` tests.
+    pub fatal_at_chunk: Option<usize>,
+    /// Transient faults fire only on attempts below this bound, so a
+    /// retry budget of `max_faulty_attempts` re-attempts always
+    /// converges. 0 disables all rate-based faults.
+    pub max_faulty_attempts: u8,
+}
+
+/// Operation kinds hashed into fault decisions (distinct streams per op).
+const KIND_SAMPLE: u64 = 1;
+const KIND_SINK: u64 = 2;
+const KIND_READ: u64 = 3;
+
+impl FaultPlan {
+    /// The harness's standard adversarial schedule: transient faults on
+    /// roughly one in five samples/writes/reads (first attempt only) plus
+    /// one injected worker panic, all recoverable under the default
+    /// [`RetryPolicy`].
+    pub fn transient(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            sample_rate: 200,
+            sink_rate: 200,
+            read_rate: 200,
+            panic_at_chunk: Some(1),
+            fatal_at_chunk: None,
+            max_faulty_attempts: 1,
+        }
+    }
+
+    /// A plan that only interrupts: one fatal sink error at `chunk`,
+    /// nothing else. Used to simulate a crash for `--resume` tests.
+    pub fn fatal_at(chunk: usize) -> FaultPlan {
+        FaultPlan { fatal_at_chunk: Some(chunk), ..FaultPlan::default() }
+    }
+
+    /// splitmix64-style decision hash over `(seed, kind, index, attempt)`.
+    fn hash(&self, kind: u64, index: usize, attempt: u32) -> u64 {
+        let mut z = self
+            .seed
+            .wrapping_add(kind.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .wrapping_add((index as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9))
+            .wrapping_add((attempt as u64 + 1).wrapping_mul(0x94d0_49bb_1331_11eb));
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    fn fires(&self, kind: u64, rate: u16, index: usize, attempt: u32) -> bool {
+        rate > 0
+            && attempt < self.max_faulty_attempts as u32
+            && self.hash(kind, index, attempt) % 1024 < rate as u64
+    }
+
+    fn transient_err(op: &str, index: usize, attempt: u32) -> Error {
+        Error::Io(std::io::Error::new(
+            std::io::ErrorKind::Interrupted,
+            format!("injected transient {op} fault at index {index}, attempt {attempt}"),
+        ))
+    }
+
+    /// Transient fault (if any) for sampling chunk `index` on `attempt`.
+    pub fn sample_fault(&self, index: usize, attempt: u32) -> Option<Error> {
+        self.fires(KIND_SAMPLE, self.sample_rate, index, attempt)
+            .then(|| Self::transient_err("sample", index, attempt))
+    }
+
+    /// Transient fault (if any) for writing chunk `index` on `attempt`.
+    pub fn sink_fault(&self, index: usize, attempt: u32) -> Option<Error> {
+        self.fires(KIND_SINK, self.sink_rate, index, attempt)
+            .then(|| Self::transient_err("sink", index, attempt))
+    }
+
+    /// Transient fault (if any) for reading shard `index` on `attempt`.
+    pub fn read_fault(&self, index: usize, attempt: u32) -> Option<Error> {
+        self.fires(KIND_READ, self.read_rate, index, attempt)
+            .then(|| Self::transient_err("read", index, attempt))
+    }
+
+    /// True when a worker panic is injected for this chunk attempt
+    /// (first attempt only — the retry recovers deterministically).
+    pub fn should_panic(&self, index: usize, attempt: u32) -> bool {
+        attempt == 0 && self.panic_at_chunk == Some(index)
+    }
+
+    /// Fatal sink error (if any) for chunk `index` — fires on every
+    /// attempt, so no retry budget can absorb it.
+    pub fn fatal_fault(&self, index: usize) -> Option<Error> {
+        (self.fatal_at_chunk == Some(index)).then(|| {
+            Error::Data(format!("injected fatal sink fault at chunk {index}"))
+        })
+    }
+}
+
+/// Sink adapter that injects a [`FaultPlan`]'s sink faults in front of
+/// the wrapped sink. Per-chunk attempt counts are tracked here, so a
+/// retrying caller sees the fault sequence the plan dictates and then a
+/// clean pass-through once `max_faulty_attempts` is exhausted.
+pub struct FaultSink<'a> {
+    inner: &'a mut dyn Sink,
+    plan: FaultPlan,
+    attempts: HashMap<usize, u32>,
+}
+
+impl<'a> FaultSink<'a> {
+    /// Wrap `inner`, injecting faults per `plan`.
+    pub fn new(inner: &'a mut dyn Sink, plan: FaultPlan) -> FaultSink<'a> {
+        FaultSink { inner, plan, attempts: HashMap::new() }
+    }
+}
+
+impl Sink for FaultSink<'_> {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+        let attempt = self.attempts.entry(chunk.index).or_insert(0);
+        let a = *attempt;
+        *attempt += 1;
+        if let Some(e) = self.plan.fatal_fault(chunk.index) {
+            return Err(e);
+        }
+        if let Some(e) = self.plan.sink_fault(chunk.index, a) {
+            return Err(e);
+        }
+        self.inner.edges(chunk)
+    }
+
+    fn finish(&mut self) -> Result<SinkFinish> {
+        self.inner.finish()
+    }
+}
+
+/// Sink adapter that retries transient `edges` errors of the wrapped
+/// sink under a [`RetryPolicy`] (re-sending a clone of the chunk), and
+/// passes fatal errors straight through.
+pub struct RetryingSink<'a> {
+    inner: &'a mut dyn Sink,
+    retry: RetryPolicy,
+}
+
+impl<'a> RetryingSink<'a> {
+    /// Wrap `inner` with bounded retry.
+    pub fn new(inner: &'a mut dyn Sink, retry: RetryPolicy) -> RetryingSink<'a> {
+        RetryingSink { inner, retry }
+    }
+}
+
+impl Sink for RetryingSink<'_> {
+    fn name(&self) -> &'static str {
+        "retrying"
+    }
+
+    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+        retry_transient(self.retry, |_attempt| self.inner.edges(chunk.clone()))
+    }
+
+    fn finish(&mut self) -> Result<SinkFinish> {
+        self.inner.finish()
+    }
+}
+
+/// Read-side adapter over a [`ShardReader`]: injects the plan's read
+/// faults and retries transient failures (injected or real) under the
+/// policy. With `plan = None` it is a plain retrying reader.
+pub struct FaultReader<'a> {
+    inner: &'a ShardReader,
+    plan: Option<FaultPlan>,
+    retry: RetryPolicy,
+}
+
+impl<'a> FaultReader<'a> {
+    /// Wrap `reader`, injecting faults per `plan` and retrying under
+    /// `retry`.
+    pub fn new(
+        inner: &'a ShardReader,
+        plan: Option<FaultPlan>,
+        retry: RetryPolicy,
+    ) -> FaultReader<'a> {
+        FaultReader { inner, plan, retry }
+    }
+
+    /// Number of shards (delegates to the wrapped reader).
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// True when the wrapped reader holds no shards.
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// Read shard `i`, retrying transient faults.
+    pub fn read(&self, i: usize) -> Result<EdgeList> {
+        retry_transient(self.retry, |attempt| {
+            if let Some(plan) = &self.plan {
+                if let Some(e) = plan.read_fault(i, attempt) {
+                    return Err(e);
+                }
+            }
+            self.inner.read(i)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_recovers_from_transient_within_budget() {
+        let policy = RetryPolicy { max_retries: 2, backoff_ms: 0 };
+        let mut calls = 0u32;
+        let out = retry_transient(policy, |attempt| {
+            calls += 1;
+            if attempt < 2 {
+                Err(Error::Io(std::io::Error::new(std::io::ErrorKind::Interrupted, "x")))
+            } else {
+                Ok(attempt)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 2);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_does_not_touch_fatal_errors() {
+        let policy = RetryPolicy { max_retries: 5, backoff_ms: 0 };
+        let mut calls = 0u32;
+        let err = retry_transient(policy, |_| -> Result<()> {
+            calls += 1;
+            Err(Error::Data("corrupt".into()))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "fatal errors must not be retried");
+        assert!(err.to_string().contains("corrupt"));
+    }
+
+    #[test]
+    fn retry_budget_is_bounded() {
+        let policy = RetryPolicy { max_retries: 3, backoff_ms: 0 };
+        let mut calls = 0u32;
+        let err = retry_transient(policy, |_| -> Result<()> {
+            calls += 1;
+            Err(Error::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, "x")))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 4, "first try + 3 retries");
+        assert!(err.is_transient());
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_exponential() {
+        let policy = RetryPolicy { max_retries: 4, backoff_ms: 25 };
+        assert_eq!(policy.backoff_for(0), 25);
+        assert_eq!(policy.backoff_for(1), 50);
+        assert_eq!(policy.backoff_for(2), 100);
+        // shift cap: no overflow even for absurd attempts
+        assert_eq!(policy.backoff_for(500), 25 << 16);
+    }
+
+    #[test]
+    fn run_attempts_converts_and_retries_panics() {
+        let policy = RetryPolicy { max_retries: 2, backoff_ms: 0 };
+        let mut calls = 0u32;
+        let out = run_attempts(policy, |attempt| {
+            calls += 1;
+            if attempt == 0 {
+                panic!("injected worker panic");
+            }
+            Ok(attempt)
+        })
+        .unwrap();
+        assert_eq!(out, 1);
+        assert_eq!(calls, 2);
+        // a persistent panic exhausts the budget and surfaces cleanly
+        let err = run_attempts(RetryPolicy::none(), |_| -> Result<()> {
+            panic!("it always dies")
+        })
+        .unwrap_err();
+        match &err {
+            Error::Worker(m) => assert!(m.contains("always dies"), "{m}"),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_attempt_bounded() {
+        let plan = FaultPlan::transient(42);
+        for index in 0..256 {
+            // same decision on replay
+            assert_eq!(
+                plan.sample_fault(index, 0).is_some(),
+                plan.sample_fault(index, 0).is_some()
+            );
+            // faults never fire past the faulty-attempt bound, so retry
+            // always converges
+            assert!(plan.sample_fault(index, plan.max_faulty_attempts as u32).is_none());
+            assert!(plan.sink_fault(index, plan.max_faulty_attempts as u32).is_none());
+            assert!(plan.read_fault(index, plan.max_faulty_attempts as u32).is_none());
+        }
+        // the rates actually fire somewhere in a 256-chunk run
+        let fired = (0..256).filter(|&i| plan.sink_fault(i, 0).is_some()).count();
+        assert!(fired > 0, "sink faults never fired");
+        assert!(fired < 256, "sink faults fired everywhere");
+        // injected faults are transient by construction
+        let e = plan.sink_fault((0..256).find(|&i| plan.sink_fault(i, 0).is_some()).unwrap(), 0);
+        assert!(e.unwrap().is_transient());
+    }
+
+    #[test]
+    fn fault_plan_panic_and_fatal_schedules() {
+        let plan = FaultPlan::transient(7);
+        assert!(plan.should_panic(1, 0));
+        assert!(!plan.should_panic(1, 1), "panic must not recur on retry");
+        assert!(!plan.should_panic(2, 0));
+        let fatal = FaultPlan::fatal_at(5);
+        assert!(fatal.fatal_fault(5).is_some());
+        assert!(fatal.fatal_fault(4).is_none());
+        assert!(!fatal.fatal_fault(5).unwrap().is_transient());
+    }
+}

@@ -30,6 +30,7 @@
 //!   artifact without the source dataset.
 
 pub mod artifact;
+pub mod fault;
 pub mod orchestrator;
 pub mod parallel;
 pub mod registry;
@@ -37,6 +38,7 @@ pub mod sink;
 pub mod spec;
 
 pub use artifact::{SourceSummary, SGGM_FORMAT, SGGM_VERSION};
+pub use fault::{FaultPlan, FaultReader, FaultSink, RetryPolicy, RetryingSink};
 pub use parallel::{ChunkPlan, ParallelChunkRunner, SplitPlan};
 pub use registry::{Registries, Registry};
 pub use sink::{MemorySink, ShardSink, Sink, SinkFinish, SinkOutput, StreamReport};
@@ -376,6 +378,34 @@ pub fn run_scenario(spec: &ScenarioSpec) -> Result<SinkOutput> {
 /// with [`crate::metrics::Evaluator`] against the source (as `sgg run`
 /// does), rather than paying a second pass inside the library.
 pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkOutput> {
+    run_scenario_opts(spec, regs, RunOptions::default())
+}
+
+/// Robustness knobs for [`run_scenario_opts`] — the levers behind `sgg
+/// run --resume` / `--fault-seed` and the harness's fault re-runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOptions {
+    /// Resume an interrupted shard run from its per-chunk completion
+    /// records (the intact shard prefix): already-completed chunks are
+    /// skipped, the rest regenerate deterministically, and the final
+    /// directory is byte-identical to an uninterrupted run. Shard sinks
+    /// only — memory runs have nothing durable to resume from.
+    pub resume: bool,
+    /// Deterministic fault schedule injected into chunk sampling
+    /// (transient errors + worker panics via the runner) and shard
+    /// writes (via a [`FaultSink`] in front of the real sink). The
+    /// sink's [`RetryPolicy`] absorbs every transient fault, so output
+    /// is bit-identical to a fault-free run.
+    pub faults: Option<FaultPlan>,
+}
+
+/// [`run_scenario_with`] plus [`RunOptions`]: resume support and fault
+/// injection for shard runs.
+pub fn run_scenario_opts(
+    spec: &ScenarioSpec,
+    regs: &Registries,
+    opts: RunOptions,
+) -> Result<SinkOutput> {
     let source = match &spec.model {
         Some(_) => None,
         None => Some(crate::datasets::load(&spec.dataset, spec.dataset_seed)?),
@@ -392,6 +422,21 @@ pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkO
                 .into(),
         ));
     }
+    if opts.resume && !matches!(spec.sink, SinkSpec::Shards { .. }) {
+        return Err(Error::Config(
+            "`--resume` needs a shard sink: memory runs leave no completion \
+             records to resume from"
+                .into(),
+        ));
+    }
+    if opts.resume && spec.evaluate {
+        return Err(Error::Config(
+            "`--resume` cannot be combined with `[evaluate]`: the in-flight \
+             tap would miss the chunks the resumed run skips — re-score the \
+             finished shards with `sgg eval --shards` instead"
+                .into(),
+        ));
+    }
     // `workers = 0` means "one per core" at run time
     let workers = match spec.workers {
         0 => crate::util::threadpool::default_threads(),
@@ -399,24 +444,49 @@ pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkO
     };
     let out = match &spec.sink {
         SinkSpec::Memory => {
-            let chunks = ChunkConfig { workers, ..ChunkConfig::default() };
+            let chunks =
+                ChunkConfig { workers, faults: opts.faults, ..ChunkConfig::default() };
             let mut sink = MemorySink::new();
-            fitted.run(spec.size, chunks, &mut sink, spec.seed)?
+            if let Some(plan) = opts.faults {
+                let mut faulted = FaultSink::new(&mut sink, plan);
+                let mut retrying = RetryingSink::new(&mut faulted, chunks.retry);
+                fitted.run(spec.size, chunks, &mut retrying, spec.seed)?
+            } else {
+                fitted.run(spec.size, chunks, &mut sink, spec.seed)?
+            }
         }
         SinkSpec::Shards { dir, chunks } => {
             let mut chunks = *chunks;
             if chunks.workers == 0 {
                 chunks.workers = workers;
             }
-            let mut sink = ShardSink::new(dir, chunks)?;
-            if spec.evaluate {
+            chunks.faults = opts.faults;
+            let mut sink = if opts.resume {
+                let (sink, completed) = ShardSink::resume(dir, chunks)?;
+                chunks.resume_from = completed;
+                sink
+            } else {
+                ShardSink::new(dir, chunks)?
+            };
+            // Adapter order matters: the tap sits innermost so it
+            // observes each chunk exactly once — injected faults fire
+            // (and retries replay) above it.
+            let mut tapped;
+            let inner: &mut dyn Sink = if spec.evaluate {
                 let tap = crate::metrics::stream::GenerationTap::new(
                     &source.as_ref().expect("checked above").edges,
                 );
-                let mut tapped = crate::metrics::stream::TappedSink::new(&mut sink, tap);
-                fitted.run(spec.size, chunks, &mut tapped, spec.seed)?
+                tapped = crate::metrics::stream::TappedSink::new(&mut sink, tap);
+                &mut tapped
             } else {
-                fitted.run(spec.size, chunks, &mut sink, spec.seed)?
+                &mut sink
+            };
+            if let Some(plan) = opts.faults {
+                let mut faulted = FaultSink::new(inner, plan);
+                let mut retrying = RetryingSink::new(&mut faulted, chunks.retry);
+                fitted.run(spec.size, chunks, &mut retrying, spec.seed)?
+            } else {
+                fitted.run(spec.size, chunks, inner, spec.seed)?
             }
         }
     };
@@ -561,7 +631,12 @@ mod tests {
             .fit(&ds)
             .unwrap();
         let direct = p.generate(1, 11).unwrap();
-        let cfg = ChunkConfig { prefix_levels: 0, workers: 1, queue_capacity: 4 };
+        let cfg = ChunkConfig {
+            prefix_levels: 0,
+            workers: 1,
+            queue_capacity: 4,
+            ..ChunkConfig::default()
+        };
         let mut sink = MemorySink::new();
         let via_sink = p
             .run(SizeSpec::Scale(1), cfg, &mut sink, 11)
@@ -582,7 +657,12 @@ mod tests {
             .fit(&ds)
             .unwrap();
         let run_with = |workers: usize| {
-            let cfg = ChunkConfig { prefix_levels: 2, workers, queue_capacity: 2 };
+            let cfg = ChunkConfig {
+                prefix_levels: 2,
+                workers,
+                queue_capacity: 2,
+                ..ChunkConfig::default()
+            };
             let mut sink = MemorySink::new();
             p.run(SizeSpec::Scale(1), cfg, &mut sink, 13)
                 .unwrap()

@@ -32,7 +32,32 @@ pub fn stream_to_shards(
     cfg: ChunkConfig,
     out_dir: &std::path::Path,
 ) -> Result<StreamReport> {
-    let mut sink = ShardSink::new(out_dir, cfg)?;
+    stream_to_shards_opts(gen, n_src, n_dst, edges, seed, cfg, out_dir, false)
+}
+
+/// [`stream_to_shards`] with resume support: with `resume`, the intact
+/// shard prefix an interrupted run left under `out_dir` is kept (see
+/// [`ShardSink::resume`]), the corresponding chunks are skipped, and
+/// the rest regenerate deterministically — the final directory is
+/// byte-identical to a single uninterrupted run at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_to_shards_opts(
+    gen: &KroneckerGen,
+    n_src: u64,
+    n_dst: u64,
+    edges: u64,
+    seed: u64,
+    mut cfg: ChunkConfig,
+    out_dir: &std::path::Path,
+    resume: bool,
+) -> Result<StreamReport> {
+    let mut sink = if resume {
+        let (sink, completed) = ShardSink::resume(out_dir, cfg)?;
+        cfg.resume_from = completed;
+        sink
+    } else {
+        ShardSink::new(out_dir, cfg)?
+    };
     gen.generate_into(n_src, n_dst, edges, seed, cfg, &mut |chunk| sink.edges(chunk))?;
     match sink.finish()? {
         SinkFinish::Streamed(report) => Ok(report),
@@ -71,7 +96,7 @@ mod tests {
     fn stream_writes_all_edges() {
         let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(1 << 10), 10_000);
         let dir = tmp_dir("all");
-        let cfg = ChunkConfig { prefix_levels: 2, workers: 4, queue_capacity: 2 };
+        let cfg = ChunkConfig { prefix_levels: 2, workers: 4, queue_capacity: 2, ..ChunkConfig::default() };
         let report = stream_to_shards(&gen, 1 << 10, 1 << 10, 10_000, 3, cfg, &dir).unwrap();
         assert_eq!(report.edges_written, 10_000);
         assert!(report.shards > 1);
@@ -89,7 +114,7 @@ mod tests {
     fn streamed_equals_collected() {
         let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(512), 5_000);
         let dir = tmp_dir("eq");
-        let cfg = ChunkConfig { prefix_levels: 2, workers: 2, queue_capacity: 2 };
+        let cfg = ChunkConfig { prefix_levels: 2, workers: 2, queue_capacity: 2, ..ChunkConfig::default() };
         stream_to_shards(&gen, 512, 512, 5_000, 7, cfg, &dir).unwrap();
         let mut streamed = read_shards(&dir).unwrap();
         let mut collected =
@@ -103,10 +128,58 @@ mod tests {
     }
 
     #[test]
+    fn interrupted_then_resumed_is_byte_identical() {
+        use crate::pipeline::fault::{FaultPlan, FaultSink};
+        let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(512), 8_000);
+        for workers in [1usize, 4] {
+            let cfg = ChunkConfig {
+                prefix_levels: 2,
+                workers,
+                queue_capacity: 2,
+                ..ChunkConfig::default()
+            };
+            // reference: one uninterrupted run
+            let full = tmp_dir(&format!("full{workers}"));
+            stream_to_shards(&gen, 512, 512, 8_000, 11, cfg, &full).unwrap();
+            // interrupted run: a fatal sink fault kills it at chunk 5 ...
+            let broken = tmp_dir(&format!("broken{workers}"));
+            let mut sink = ShardSink::new(&broken, cfg).unwrap();
+            let mut faulted = FaultSink::new(&mut sink, FaultPlan::fatal_at(5));
+            let err =
+                gen.generate_into(512, 512, 8_000, 11, cfg, &mut |c| faulted.edges(c));
+            assert!(err.is_err(), "fatal fault must abort the run");
+            // ... and `--resume` completes it
+            let report =
+                stream_to_shards_opts(&gen, 512, 512, 8_000, 11, cfg, &broken, true)
+                    .unwrap();
+            assert_eq!(report.edges_written, 8_000);
+            // the resumed directory is byte-identical to the reference
+            let mut names: Vec<String> = std::fs::read_dir(&full)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().into_string().unwrap())
+                .collect();
+            names.sort();
+            let mut resumed_names: Vec<String> = std::fs::read_dir(&broken)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().into_string().unwrap())
+                .collect();
+            resumed_names.sort();
+            assert_eq!(names, resumed_names, "workers={workers}");
+            for n in &names {
+                let a = std::fs::read(full.join(n)).unwrap();
+                let b = std::fs::read(broken.join(n)).unwrap();
+                assert_eq!(a, b, "shard {n} differs (workers={workers})");
+            }
+            std::fs::remove_dir_all(&full).ok();
+            std::fs::remove_dir_all(&broken).ok();
+        }
+    }
+
+    #[test]
     fn write_error_aborts_stream() {
         let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(1 << 9), 20_000);
         let dir = tmp_dir("abort");
-        let cfg = ChunkConfig { prefix_levels: 3, workers: 2, queue_capacity: 1 };
+        let cfg = ChunkConfig { prefix_levels: 3, workers: 2, queue_capacity: 1, ..ChunkConfig::default() };
         let mut sink = ShardSink::new(&dir, cfg).unwrap();
         // sabotage the output directory mid-stream: replace it with a
         // file so the first shard write fails and generation aborts

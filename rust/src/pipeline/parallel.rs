@@ -37,6 +37,7 @@
 //!   sampled, and the error propagates to the caller.
 
 use crate::graph::EdgeList;
+use crate::pipeline::fault::{self, FaultPlan, RetryPolicy};
 use crate::structgen::chunked::{Chunk, ChunkConfig};
 use crate::util::threadpool::Bounded;
 use crate::Result;
@@ -179,9 +180,20 @@ where
 /// The multi-threaded chunked generation engine: samples a [`ChunkPlan`]
 /// on a worker pool and feeds a sink in chunk-index order. See the
 /// module docs for the full dataflow and the determinism contract.
+///
+/// Robustness knobs (all default-off; see [`crate::pipeline::fault`]):
+/// transient sampling errors and caught worker panics are retried under
+/// `retry` (chunk streams are deterministic per index, so a retried
+/// chunk reproduces the exact same edges); chunks below `resume_from`
+/// are skipped (counted for ordering, never sampled or forwarded); an
+/// optional [`FaultPlan`] injects deterministic sampling faults and
+/// worker panics for tests and the conformance harness.
 pub struct ParallelChunkRunner {
     workers: usize,
     queue_capacity: usize,
+    retry: RetryPolicy,
+    resume_from: usize,
+    faults: Option<FaultPlan>,
 }
 
 impl ParallelChunkRunner {
@@ -192,13 +204,46 @@ impl ParallelChunkRunner {
         ParallelChunkRunner {
             workers: workers.max(1),
             queue_capacity: queue_capacity.max(1),
+            retry: RetryPolicy::default(),
+            resume_from: 0,
+            faults: None,
         }
     }
 
-    /// Runner configured from the `workers` / `queue_capacity` fields of
-    /// a [`ChunkConfig`].
+    /// Runner configured from a [`ChunkConfig`]: worker count, channel
+    /// capacity, retry policy, resume watermark, and fault plan.
     pub fn from_config(cfg: ChunkConfig) -> ParallelChunkRunner {
-        ParallelChunkRunner::new(cfg.workers, cfg.queue_capacity)
+        ParallelChunkRunner {
+            retry: cfg.retry,
+            resume_from: cfg.resume_from,
+            faults: cfg.faults,
+            ..ParallelChunkRunner::new(cfg.workers, cfg.queue_capacity)
+        }
+    }
+
+    /// Sample one chunk under the runner's robustness policy: skip it
+    /// entirely when below the resume watermark, otherwise run the
+    /// plan's `sample` under bounded retry ([`fault::run_attempts`]
+    /// converts caught panics to [`crate::Error::Worker`] and retries
+    /// transient failures), injecting the fault plan's scheduled
+    /// sampling faults and panics first.
+    fn sample_chunk(&self, plan: &dyn ChunkPlan, index: usize) -> Result<EdgeList> {
+        if index < self.resume_from {
+            // already persisted by the interrupted run; empty chunks are
+            // counted for ordering but never forwarded to the sink
+            return Ok(EdgeList::default());
+        }
+        fault::run_attempts(self.retry, |attempt| {
+            if let Some(fp) = &self.faults {
+                if fp.should_panic(index, attempt) {
+                    panic!("injected worker panic at chunk {index}");
+                }
+                if let Some(e) = fp.sample_fault(index, attempt) {
+                    return Err(e);
+                }
+            }
+            plan.sample(index)
+        })
     }
 
     /// Parallel fold over the index range `0..n`: the range is split
@@ -217,7 +262,8 @@ impl ParallelChunkRunner {
     /// accumulators — see `metrics::accum`).
     ///
     /// The first `step` error (scanning workers in order) propagates;
-    /// worker panics resume on the caller.
+    /// a worker panic surfaces as a single [`crate::Error::Worker`]
+    /// rather than unwinding through the caller.
     pub fn fold_indices<A, I, S>(&self, n: usize, init: I, step: S) -> Result<Vec<A>>
     where
         A: Send,
@@ -250,7 +296,9 @@ impl ParallelChunkRunner {
                 .into_iter()
                 .map(|h| match h.join() {
                     Ok(r) => r,
-                    Err(panic) => std::panic::resume_unwind(panic),
+                    // a panicking fold worker surfaces as one clean
+                    // error instead of unwinding through the pool
+                    Err(panic) => Err(crate::Error::Worker(fault::panic_message(panic))),
                 })
                 .collect()
         });
@@ -273,7 +321,7 @@ impl ParallelChunkRunner {
             return Ok(0);
         }
         if self.workers == 1 {
-            return run_sequential(plan, sink);
+            return self.run_sequential(plan, sink);
         }
 
         // Reorder window: a worker may run at most this many chunks ahead
@@ -293,6 +341,7 @@ impl ParallelChunkRunner {
         std::thread::scope(|s| {
             for w in 0..self.workers {
                 let tx = chan.clone();
+                let this = &*self;
                 let (next, abort) = (&next, &abort);
                 let (emitted, advanced, worker_err) = (&emitted, &advanced, &worker_err);
                 s.spawn(move || loop {
@@ -311,7 +360,7 @@ impl ParallelChunkRunner {
                         break;
                     }
                     let t0 = Instant::now();
-                    match plan.sample(ci) {
+                    match this.sample_chunk(plan, ci) {
                         Ok(edges) => {
                             let chunk = Chunk {
                                 index: ci,
@@ -378,31 +427,32 @@ impl ParallelChunkRunner {
         }
         Ok(total)
     }
-}
 
-/// Sequential execution of a plan on the caller thread: identical chunk
-/// decomposition and seeds, so the output matches any parallel run
-/// byte for byte.
-fn run_sequential(
-    plan: &dyn ChunkPlan,
-    sink: &mut dyn FnMut(Chunk) -> Result<()>,
-) -> Result<u64> {
-    let mut total = 0u64;
-    for index in 0..plan.n_chunks() {
-        let t0 = Instant::now();
-        let edges = plan.sample(index)?;
-        if edges.is_empty() {
-            continue;
+    /// Sequential execution of a plan on the caller thread: identical
+    /// chunk decomposition, seeds, and robustness policy, so the output
+    /// matches any parallel run byte for byte.
+    fn run_sequential(
+        &self,
+        plan: &dyn ChunkPlan,
+        sink: &mut dyn FnMut(Chunk) -> Result<()>,
+    ) -> Result<u64> {
+        let mut total = 0u64;
+        for index in 0..plan.n_chunks() {
+            let t0 = Instant::now();
+            let edges = self.sample_chunk(plan, index)?;
+            if edges.is_empty() {
+                continue;
+            }
+            total += edges.len() as u64;
+            sink(Chunk {
+                index,
+                worker: 0,
+                sample_secs: t0.elapsed().as_secs_f64(),
+                edges,
+            })?;
         }
-        total += edges.len() as u64;
-        sink(Chunk {
-            index,
-            worker: 0,
-            sample_secs: t0.elapsed().as_secs_f64(),
-            edges,
-        })?;
+        Ok(total)
     }
-    Ok(total)
 }
 
 #[cfg(test)]
@@ -538,6 +588,115 @@ mod tests {
             )
             .unwrap_err();
         assert!(err.to_string().contains("index 11 exploded"), "{err}");
+    }
+
+    /// Plan that panics while sampling one chunk — on every attempt.
+    struct PanicPlan {
+        n: usize,
+        panic_at: usize,
+    }
+
+    impl ChunkPlan for PanicPlan {
+        fn n_chunks(&self) -> usize {
+            self.n
+        }
+
+        fn sample(&self, index: usize) -> Result<EdgeList> {
+            if index == self.panic_at {
+                panic!("chunk {index} always panics");
+            }
+            let mut e = EdgeList::new(PartiteSpec::square(8));
+            e.push(index as u64 % 8, 0);
+            Ok(e)
+        }
+    }
+
+    #[test]
+    fn injected_faults_recover_bit_identically() {
+        use crate::pipeline::fault::FaultPlan;
+        let plan = TestPlan { n: 16, per: 80, seed: 21, fail_at: None };
+        let (_, clean) = collect(4, &plan).unwrap();
+        for workers in [1, 4] {
+            let cfg = ChunkConfig {
+                workers,
+                queue_capacity: 2,
+                faults: Some(FaultPlan::transient(77)),
+                ..ChunkConfig::default()
+            };
+            let runner = ParallelChunkRunner::from_config(cfg);
+            let mut all = EdgeList::new(PartiteSpec::square(1 << 10));
+            runner
+                .run(&plan, &mut |c| {
+                    all.extend_from(&c.edges);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(clean.src, all.src, "workers={workers}");
+            assert_eq!(clean.dst, all.dst, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn persistent_panic_surfaces_as_single_worker_error() {
+        let plan = PanicPlan { n: 12, panic_at: 5 };
+        for workers in [1, 4] {
+            let cfg = ChunkConfig {
+                workers,
+                queue_capacity: 2,
+                retry: crate::pipeline::fault::RetryPolicy::none(),
+                ..ChunkConfig::default()
+            };
+            let err = ParallelChunkRunner::from_config(cfg)
+                .run(&plan, &mut |_c| Ok(()))
+                .unwrap_err();
+            match &err {
+                Error::Worker(m) => assert!(m.contains("always panics"), "{m}"),
+                other => panic!("wrong error {other:?} (workers={workers})"),
+            }
+        }
+    }
+
+    #[test]
+    fn resume_from_skips_completed_prefix() {
+        let plan = TestPlan { n: 10, per: 20, seed: 4, fail_at: None };
+        for workers in [1, 3] {
+            let cfg = ChunkConfig {
+                workers,
+                queue_capacity: 2,
+                resume_from: 4,
+                ..ChunkConfig::default()
+            };
+            let runner = ParallelChunkRunner::from_config(cfg);
+            let mut order = Vec::new();
+            runner
+                .run(&plan, &mut |c| {
+                    order.push(c.index);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(order, (4..10).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fold_indices_converts_panics_to_worker_error() {
+        let runner = ParallelChunkRunner::new(4, 1);
+        let err = runner
+            .fold_indices(
+                16,
+                |_w| (),
+                |_acc, i| {
+                    if i == 9 {
+                        panic!("fold worker died at {i}");
+                    }
+                    Ok(())
+                },
+            )
+            .unwrap_err();
+        match &err {
+            Error::Worker(m) => assert!(m.contains("fold worker died"), "{m}"),
+            other => panic!("wrong error {other:?}"),
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use crate::datasets::Dataset;
 use crate::graph::{io, EdgeList};
+use crate::pipeline::fault::{retry_transient, RetryPolicy};
 use crate::structgen::chunked::{Chunk, ChunkConfig};
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
@@ -175,13 +176,28 @@ impl std::fmt::Display for StreamReport {
     }
 }
 
+/// Path of the shard holding chunk `index` under `dir` — zero-padded so
+/// lexical path order equals chunk-index order.
+pub fn shard_path(dir: &Path, index: usize) -> PathBuf {
+    dir.join(format!("shard-{index:05}.sgg"))
+}
+
 /// Writes each chunk to its own binary shard file under a directory.
+///
+/// Every shard is written atomically (`.tmp` + rename, see
+/// [`io::write_binary_atomic`]) and transient write failures are retried
+/// under the sink's [`RetryPolicy`]. Because the parallel runner feeds
+/// chunks strictly in index order, the completed shard files of an
+/// interrupted run always form a consecutive `shard-00000..` prefix —
+/// the per-chunk completion records [`ShardSink::resume`] restarts from.
 pub struct ShardSink {
     out_dir: PathBuf,
     /// Upper bound on simultaneously resident chunks: the parallel
     /// runner's reorder window (full queue + one chunk per worker) + the
     /// one the writer holds.
     max_inflight: usize,
+    /// Bounded retry for transient shard-write failures.
+    retry: RetryPolicy,
     /// Largest `max_inflight` chunk edge-counts seen, descending.
     top_sizes: Vec<usize>,
     /// Sampling seconds per worker id, aggregated from chunk provenance.
@@ -198,12 +214,72 @@ impl ShardSink {
         Ok(ShardSink {
             out_dir: out_dir.to_path_buf(),
             max_inflight: chunks.queue_capacity.max(1) + chunks.workers.max(1) + 1,
+            retry: chunks.retry,
             top_sizes: Vec::new(),
             worker_busy: Vec::new(),
             shards: 0,
             written: 0,
             t0: Instant::now(),
         })
+    }
+
+    /// Reopen an interrupted run's output directory and return the sink
+    /// plus the number of already-completed leading chunks (the resume
+    /// watermark for [`ChunkConfig::resume_from`]).
+    ///
+    /// Staged `.tmp` files are incomplete by construction and swept
+    /// first. Completed shards are scanned as a consecutive prefix from
+    /// index 0 — each header validated against its file — and their
+    /// counts restored into the sink's report; any shard at or past the
+    /// first gap is deleted (its chunk regenerates deterministically, so
+    /// deleting is always safe and keeps the final directory byte-
+    /// identical to an uninterrupted run).
+    pub fn resume(out_dir: &Path, chunks: ChunkConfig) -> Result<(ShardSink, usize)> {
+        let mut sink = ShardSink::new(out_dir, chunks)?;
+        for entry in std::fs::read_dir(out_dir)? {
+            let p = entry?.path();
+            if p.extension().map(|x| x == "tmp").unwrap_or(false) {
+                std::fs::remove_file(&p)?;
+            }
+        }
+        let mut completed = 0usize;
+        loop {
+            let p = shard_path(out_dir, completed);
+            if !p.exists() {
+                break;
+            }
+            let (_spec, n_edges) = io::read_binary_header(&p)?;
+            sink.written += n_edges;
+            sink.shards += 1;
+            sink.note_size(n_edges as usize);
+            completed += 1;
+        }
+        // a chunk that produced no edges writes no shard, so files can
+        // exist past the first gap; everything ≥ the watermark will be
+        // regenerated — drop it rather than trust it
+        for entry in std::fs::read_dir(out_dir)? {
+            let p = entry?.path();
+            let index = p
+                .file_name()
+                .and_then(|n| n.to_str())
+                .and_then(|n| n.strip_prefix("shard-"))
+                .and_then(|n| n.strip_suffix(".sgg"))
+                .and_then(|n| n.parse::<usize>().ok());
+            if matches!(index, Some(i) if i >= completed) {
+                std::fs::remove_file(&p)?;
+            }
+        }
+        Ok((sink, completed))
+    }
+
+    /// Track `n` among the largest `max_inflight` chunk sizes
+    /// (descending) for the peak-buffer estimate.
+    fn note_size(&mut self, n: usize) {
+        let pos = self.top_sizes.binary_search_by(|x| n.cmp(x)).unwrap_or_else(|p| p);
+        if pos < self.max_inflight {
+            self.top_sizes.insert(pos, n);
+            self.top_sizes.truncate(self.max_inflight);
+        }
     }
 
     /// The report built so far (same data [`Sink::finish`] returns).
@@ -226,21 +302,15 @@ impl Sink for ShardSink {
     }
 
     fn edges(&mut self, chunk: Chunk) -> Result<()> {
-        let path = self.out_dir.join(format!("shard-{:05}.sgg", chunk.index));
-        io::write_binary(&path, &chunk.edges)?;
+        let path = shard_path(&self.out_dir, chunk.index);
+        retry_transient(self.retry, |_| io::write_binary_atomic(&path, &chunk.edges))?;
         self.written += chunk.edges.len() as u64;
         self.shards += 1;
         if self.worker_busy.len() <= chunk.worker {
             self.worker_busy.resize(chunk.worker + 1, 0.0);
         }
         self.worker_busy[chunk.worker] += chunk.sample_secs;
-        // track the largest `max_inflight` chunk sizes (descending)
-        let n = chunk.edges.len();
-        let pos = self.top_sizes.binary_search_by(|x| n.cmp(x)).unwrap_or_else(|p| p);
-        if pos < self.max_inflight {
-            self.top_sizes.insert(pos, n);
-            self.top_sizes.truncate(self.max_inflight);
-        }
+        self.note_size(chunk.edges.len());
         Ok(())
     }
 
@@ -284,7 +354,12 @@ mod tests {
     fn shard_sink_writes_and_reports_actual_peak() {
         let dir = std::env::temp_dir().join(format!("sgg_sink_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
-        let cfg = ChunkConfig { prefix_levels: 2, workers: 2, queue_capacity: 1 };
+        let cfg = ChunkConfig {
+            prefix_levels: 2,
+            workers: 2,
+            queue_capacity: 1,
+            ..ChunkConfig::default()
+        };
         let mut sink = ShardSink::new(&dir, cfg).unwrap();
         // sizes 100..107; max_inflight = 1 + 2 + 1 = 4 → peak sums the 4
         // largest actual chunks, not a divisor-based estimate
@@ -304,6 +379,35 @@ mod tests {
         assert!((report.worker_busy_secs[1] - 1.0).abs() < 1e-9);
         let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
         assert_eq!(files.len(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_restores_prefix_and_sweeps_leftovers() {
+        let dir = std::env::temp_dir().join(format!("sgg_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = ChunkConfig { workers: 2, ..ChunkConfig::default() };
+        let mut sink = ShardSink::new(&dir, cfg).unwrap();
+        for (i, n) in [(0usize, 10usize), (1, 20), (2, 30)] {
+            sink.edges(chunk(i, n)).unwrap();
+        }
+        // simulate interruption debris: a staged partial write and a
+        // shard past the completed prefix (an empty-chunk gap at 3)
+        std::fs::write(shard_path(&dir, 3).with_extension("sgg.tmp"), b"partial").unwrap();
+        crate::graph::io::write_binary(&shard_path(&dir, 4), &chunk(4, 5).edges).unwrap();
+        let (resumed, completed) = ShardSink::resume(&dir, cfg).unwrap();
+        assert_eq!(completed, 3);
+        let report = resumed.report();
+        assert_eq!(report.shards, 3);
+        assert_eq!(report.edges_written, 60);
+        assert!(!shard_path(&dir, 4).exists(), "stale post-gap shard survived");
+        let tmps: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref().unwrap().path().extension().map(|x| x == "tmp").unwrap_or(false)
+            })
+            .collect();
+        assert!(tmps.is_empty(), "stale .tmp survived");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

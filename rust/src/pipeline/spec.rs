@@ -37,6 +37,8 @@
 //! [sink]
 //! kind = "shards"            # "memory" (default) or "shards"
 //! dir = "/tmp/sgg-shards"
+//! retries = 2                # bounded retry budget for transient IO
+//! backoff_ms = 0             # deterministic backoff base (doubles per retry)
 //!
 //! [evaluate]                 # score the output against the fit source:
 //! enabled = true             # full Table-2 report for memory runs, an
@@ -518,6 +520,15 @@ impl RawConfig {
                                     workers: p.usize_or("workers", 0)?,
                                     queue_capacity: p
                                         .usize_or("queue_capacity", defaults.queue_capacity)?,
+                                    retry: crate::pipeline::fault::RetryPolicy {
+                                        max_retries: p.u64_or(
+                                            "retries",
+                                            defaults.retry.max_retries as u64,
+                                        )? as u32,
+                                        backoff_ms: p
+                                            .u64_or("backoff_ms", defaults.retry.backoff_ms)?,
+                                    },
+                                    ..defaults
                                 },
                             }
                         }

@@ -23,8 +23,9 @@ use crate::util::rng::Pcg64;
 use crate::Result;
 
 /// One generated chunk: edges whose ids already include the prefix, plus
-/// provenance the streaming report aggregates.
-#[derive(Debug)]
+/// provenance the streaming report aggregates. `Clone` so a retrying
+/// sink adapter can re-send a chunk after a transient write fault.
+#[derive(Clone, Debug)]
 pub struct Chunk {
     /// Chunk index in [0, 4^prefix_levels).
     pub index: usize,
@@ -37,7 +38,10 @@ pub struct Chunk {
     pub edges: EdgeList,
 }
 
-/// Configuration for chunked generation.
+/// Configuration for chunked generation. Construct with functional
+/// update over [`ChunkConfig::default`] (`ChunkConfig { workers: 4,
+/// ..ChunkConfig::default() }`) so new robustness knobs pick up their
+/// defaults.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkConfig {
     /// Number of square levels consumed by the prefix (chunks = 4^levels).
@@ -46,6 +50,16 @@ pub struct ChunkConfig {
     pub workers: usize,
     /// Bounded channel capacity (chunks in flight) — the backpressure knob.
     pub queue_capacity: usize,
+    /// Bounded retry for transient sample/sink/reader faults
+    /// (deterministic backoff; the default never sleeps).
+    pub retry: crate::pipeline::fault::RetryPolicy,
+    /// Resume watermark: chunks below this index were already persisted
+    /// by an interrupted run and are skipped (counted for ordering,
+    /// never re-sampled, never forwarded to the sink).
+    pub resume_from: usize,
+    /// Deterministic fault-injection schedule (harness / tests); `None`
+    /// in production runs.
+    pub faults: Option<crate::pipeline::fault::FaultPlan>,
 }
 
 impl Default for ChunkConfig {
@@ -54,6 +68,9 @@ impl Default for ChunkConfig {
             prefix_levels: 2,
             workers: crate::util::threadpool::default_threads(),
             queue_capacity: 4,
+            retry: crate::pipeline::fault::RetryPolicy::default(),
+            resume_from: 0,
+            faults: None,
         }
     }
 }
@@ -260,7 +277,12 @@ mod tests {
     #[test]
     fn chunked_produces_exact_count() {
         let g = gen();
-        let cfg = ChunkConfig { prefix_levels: 2, workers: 4, queue_capacity: 2 };
+        let cfg = ChunkConfig {
+            prefix_levels: 2,
+            workers: 4,
+            queue_capacity: 2,
+            ..ChunkConfig::default()
+        };
         let out = generate_chunked_collect(&g, 1 << 10, 1 << 10, 10_000, 42, cfg).unwrap();
         assert_eq!(out.len(), 10_000);
         assert!(out.validate().is_ok());
@@ -269,7 +291,12 @@ mod tests {
     #[test]
     fn chunk_id_spaces_do_not_overlap() {
         let g = gen();
-        let cfg = ChunkConfig { prefix_levels: 1, workers: 2, queue_capacity: 8 };
+        let cfg = ChunkConfig {
+            prefix_levels: 1,
+            workers: 2,
+            queue_capacity: 8,
+            ..ChunkConfig::default()
+        };
         let mut seen_prefix: std::collections::HashMap<usize, (u64, u64)> =
             std::collections::HashMap::new();
         generate_chunked(&g, 1 << 10, 1 << 10, 5_000, 7, cfg, |chunk| {
@@ -296,7 +323,12 @@ mod tests {
             use crate::structgen::StructureGenerator;
             g.generate_sized(1 << 10, 1 << 10, 40_000, 5).unwrap()
         };
-        let cfg = ChunkConfig { prefix_levels: 3, workers: 8, queue_capacity: 4 };
+        let cfg = ChunkConfig {
+            prefix_levels: 3,
+            workers: 8,
+            queue_capacity: 4,
+            ..ChunkConfig::default()
+        };
         let chunked = generate_chunked_collect(&g, 1 << 10, 1 << 10, 40_000, 5, cfg).unwrap();
         let md = *direct.out_degrees().iter().max().unwrap() as f64;
         let mc = *chunked.out_degrees().iter().max().unwrap() as f64;
@@ -307,7 +339,12 @@ mod tests {
     fn sink_error_aborts_early() {
         let g = gen();
         // many small chunks so the abort has room to cut generation short
-        let cfg = ChunkConfig { prefix_levels: 3, workers: 2, queue_capacity: 1 };
+        let cfg = ChunkConfig {
+            prefix_levels: 3,
+            workers: 2,
+            queue_capacity: 1,
+            ..ChunkConfig::default()
+        };
         let mut seen = 0usize;
         let err = generate_chunked(&g, 1 << 10, 1 << 10, 50_000, 11, cfg, |_chunk| {
             seen += 1;
@@ -326,7 +363,12 @@ mod tests {
     #[test]
     fn deterministic_given_seed_and_in_order() {
         let g = gen();
-        let cfg = ChunkConfig { prefix_levels: 2, workers: 4, queue_capacity: 2 };
+        let cfg = ChunkConfig {
+            prefix_levels: 2,
+            workers: 4,
+            queue_capacity: 2,
+            ..ChunkConfig::default()
+        };
         let a = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, cfg).unwrap();
         let b = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, cfg).unwrap();
         // the runner delivers chunks in index order, so runs are equal
@@ -338,7 +380,12 @@ mod tests {
     #[test]
     fn worker_count_does_not_change_output() {
         let g = gen();
-        let base = ChunkConfig { prefix_levels: 2, workers: 1, queue_capacity: 2 };
+        let base = ChunkConfig {
+            prefix_levels: 2,
+            workers: 1,
+            queue_capacity: 2,
+            ..ChunkConfig::default()
+        };
         let seq = generate_chunked_collect(&g, 1 << 10, 1 << 10, 8_000, 9, base).unwrap();
         for workers in [2, 4, 8] {
             let cfg = ChunkConfig { workers, ..base };

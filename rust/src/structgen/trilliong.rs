@@ -322,7 +322,7 @@ mod tests {
     fn generate_into_is_worker_count_invariant() {
         let g = TrillionG::with_default_seed(PartiteSpec::square(1 << 10), 20_000);
         let collect = |workers: usize| {
-            let cfg = ChunkConfig { prefix_levels: 2, workers, queue_capacity: 2 };
+            let cfg = ChunkConfig { prefix_levels: 2, workers, queue_capacity: 2, ..ChunkConfig::default() };
             let mut out = EdgeList::new(PartiteSpec::square(1 << 10));
             let total = g
                 .generate_into(1 << 10, 1 << 10, 20_000, 11, cfg, &mut |c| {
@@ -337,7 +337,7 @@ mod tests {
         assert_eq!(seq.len(), 20_000);
         // a single-chunk plan (prefix_levels = 0) reproduces the
         // one-shot sequential path exactly
-        let one_chunk_cfg = ChunkConfig { prefix_levels: 0, workers: 1, queue_capacity: 2 };
+        let one_chunk_cfg = ChunkConfig { prefix_levels: 0, workers: 1, queue_capacity: 2, ..ChunkConfig::default() };
         let mut one = EdgeList::new(PartiteSpec::square(1 << 10));
         g.generate_into(1 << 10, 1 << 10, 20_000, 11, one_chunk_cfg, &mut |c| {
             one.extend_from(&c.edges);

@@ -127,7 +127,7 @@ fn loaded_pipeline_is_worker_count_invariant_and_matches_fit() {
     fitted.save(&path).unwrap();
     let loaded = FittedPipeline::load(&path, &Registries::builtin()).unwrap();
     let run = |p: &FittedPipeline, workers: usize| {
-        let cfg = ChunkConfig { prefix_levels: 2, workers, queue_capacity: 2 };
+        let cfg = ChunkConfig { prefix_levels: 2, workers, queue_capacity: 2, ..ChunkConfig::default() };
         let mut sink = MemorySink::new();
         p.run(SizeSpec::Scale(1), cfg, &mut sink, 13)
             .unwrap()

@@ -94,7 +94,7 @@ fn streaming_pipeline_bounded_and_complete() {
     let ds = small("ieee-fraud");
     let gen = sgg::structgen::fit::fit_kronecker(&ds.edges);
     let dir = std::env::temp_dir().join(format!("sgg_it_stream_{}", std::process::id()));
-    let cfg = ChunkConfig { prefix_levels: 2, workers: 4, queue_capacity: 2 };
+    let cfg = ChunkConfig { prefix_levels: 2, workers: 4, queue_capacity: 2, ..ChunkConfig::default() };
     let report = stream_to_shards(
         &gen,
         ds.edges.spec.n_src,

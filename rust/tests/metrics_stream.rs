@@ -198,7 +198,7 @@ fn shard_eval_reproduces_in_memory_scores_on_shardsink_output() {
     let edges = 30_000u64;
     let gen = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::square(nodes), edges);
     let dir = tmp_dir("sink");
-    let cfg = ChunkConfig { prefix_levels: 2, workers: 3, queue_capacity: 2 };
+    let cfg = ChunkConfig { prefix_levels: 2, workers: 3, queue_capacity: 2, ..ChunkConfig::default() };
     sgg::pipeline::orchestrator::stream_to_shards(&gen, nodes, nodes, edges, 5, cfg, &dir)
         .unwrap();
     // reference: a different seed of the same generator, in memory

@@ -48,6 +48,7 @@ fn prop_chunked_equals_direct_as_multiset() {
             prefix_levels: 1 + rng.below(3) as u32,
             workers: 1 + rng.below_usize(6),
             queue_capacity: 1 + rng.below_usize(4),
+            ..ChunkConfig::default()
         };
         let chunked = generate_chunked_collect(&gen, n, n, edges, seed, cfg)
             .map_err(|e| e.to_string())?;

@@ -40,9 +40,9 @@ fn spec_file_fit_generate_roundtrip() {
 
 #[test]
 fn checked_in_fraud_spec_generates_node_and_edge_features() {
-    // the repo's example spec must stay runnable end to end
+    // the repo's conformance spec must stay runnable end to end
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("../examples/fraud.toml");
+        .join("../scenarios/fraud.toml");
     let mut spec = ScenarioSpec::from_file(&path).unwrap();
     assert_eq!(spec.dataset, "ieee-fraud");
     // shrink to scale 1 to keep CI fast; components stay as checked in
