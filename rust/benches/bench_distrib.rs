@@ -1,0 +1,183 @@
+//! Bench: distributed plan → per-host generate → merge.
+//!
+//! Fits a pipeline, plans an N-host run from the saved `.sggm`
+//! artifact, executes every host range into its own directory, then
+//! measures `merge_run` (validation + shard assembly + metric fold) and
+//! the metric fold alone. Asserts the merged directory's folded degree
+//! profile is **bit-identical** to a single-process run of the same
+//! artifact and seed, and emits `BENCH_distrib.json` with merge
+//! throughput and fold cost.
+//!
+//! Run: `cargo bench --bench bench_distrib`
+//! Knobs: `SGG_BENCH_DATASET` (default travel-insurance),
+//! `SGG_BENCH_SCALE` (default 8), `SGG_BENCH_HOSTS` (default 3),
+//! `SGG_BENCH_WORKERS` (default 4).
+
+use sgg::metrics::degree::{self, DegreeAccumulator};
+use sgg::metrics::stream::profile_shards;
+use sgg::pipeline::distrib::{self, HostReport};
+use sgg::pipeline::{FittedPipeline, Pipeline, Registries, ShardSink, SizeSpec};
+use sgg::structgen::chunked::ChunkConfig;
+use sgg::util::json::Json;
+use std::path::PathBuf;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("sgg_bench_distrib_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+fn main() {
+    let dataset =
+        std::env::var("SGG_BENCH_DATASET").unwrap_or_else(|_| "travel-insurance".into());
+    let scale = env_u64("SGG_BENCH_SCALE", 8);
+    let hosts = env_u64("SGG_BENCH_HOSTS", 3) as usize;
+    let workers = env_u64("SGG_BENCH_WORKERS", 4) as usize;
+    let regs = Registries::builtin();
+
+    // --- fit + plan from the artifact ---
+    let ds = sgg::datasets::load(&dataset, 1).expect("dataset");
+    let fitted = Pipeline::builder()
+        .structure("kronecker")
+        .edge_features("random")
+        .aligner("random")
+        .fit(&ds)
+        .expect("fit");
+    let model = std::env::temp_dir().join(format!("sgg_bench_distrib_{}.sggm", std::process::id()));
+    fitted.save(&model).expect("save artifact");
+    let manifest = distrib::plan_run(&model, hosts, scale, 7, 3, &regs).expect("plan");
+    println!(
+        "[bench] plan: {} chunks over {hosts} hosts, {} edges at scale {scale}",
+        manifest.total_chunks, manifest.edges
+    );
+
+    // --- per-host generation ---
+    let mut host_dirs = Vec::with_capacity(hosts);
+    let mut host_runs: Vec<Json> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for h in &manifest.hosts {
+        let dir = tmp(&format!("h{}", h.host));
+        let t = std::time::Instant::now();
+        let (report, _) = distrib::run_host_range(
+            &model,
+            &manifest,
+            h.start,
+            h.end,
+            &dir,
+            workers,
+            false,
+            &regs,
+        )
+        .expect("host range");
+        let secs = t.elapsed().as_secs_f64();
+        println!(
+            "[bench] host {}: chunks {}..{} ({} shards) in {secs:.2}s",
+            h.host,
+            h.start,
+            h.end,
+            report.chunks.len()
+        );
+        host_runs.push(Json::obj(vec![
+            ("host", Json::from(h.host)),
+            ("chunks", Json::from(h.end - h.start)),
+            ("shards", Json::from(report.chunks.len())),
+            ("secs", Json::from(secs)),
+        ]));
+        host_dirs.push(dir);
+    }
+    let generate_secs = t0.elapsed().as_secs_f64();
+
+    // --- the fold alone: load reports, merge the degree partials ---
+    let t0 = std::time::Instant::now();
+    let mut acc = DegreeAccumulator::new();
+    for dir in &host_dirs {
+        let report = HostReport::load(dir).expect("host report");
+        if let Some(partial) = &report.profile {
+            acc.merge(partial.to_accumulator().expect("partial"));
+        }
+    }
+    let folded = acc.finalize();
+    let fold_secs = t0.elapsed().as_secs_f64();
+    println!("[bench] fold alone: {} hosts in {fold_secs:.4}s", host_dirs.len());
+
+    // --- merge: validation + assembly + fold ---
+    let merged = tmp("merged");
+    let t0 = std::time::Instant::now();
+    let report = distrib::merge_run(&manifest, &host_dirs, &merged, None).expect("merge");
+    let merge_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[bench] merge: {} edges / {} bytes in {merge_secs:.2}s ({:.1} Medges/s)",
+        report.edges,
+        report.bytes,
+        report.edges as f64 / merge_secs.max(1e-9) / 1e6
+    );
+    assert_eq!(
+        report.profile_hash,
+        degree::profile_hash(&folded),
+        "fold diverged from merge"
+    );
+
+    // --- identity: single-process run from the same artifact + seed ---
+    let single = tmp("single");
+    let loaded = FittedPipeline::load(&model, &regs).expect("load artifact");
+    let cfg = ChunkConfig {
+        prefix_levels: manifest.prefix_levels,
+        workers: workers.max(1),
+        ..ChunkConfig::default()
+    };
+    let mut sink = ShardSink::new(&single, cfg).expect("sink");
+    let size = SizeSpec::Sized {
+        n_src: manifest.n_src,
+        n_dst: manifest.n_dst,
+        edges: manifest.edges,
+    };
+    loaded.run(size, cfg, &mut sink, manifest.seed).expect("single run");
+    let (single_prof, _) = profile_shards(&single, workers.max(1)).expect("single profile");
+    assert_eq!(
+        report.profile_hash,
+        degree::profile_hash(&single_prof),
+        "merged profile diverged from the single-process run"
+    );
+    println!("[bench] merged profile bit-matches the single-process run ✓");
+
+    let out = Json::obj(vec![
+        (
+            "scenario",
+            Json::obj(vec![
+                ("dataset", Json::from(dataset.as_str())),
+                ("scale", Json::from(scale)),
+                ("hosts", Json::from(hosts)),
+                ("workers", Json::from(workers)),
+                ("chunks", Json::from(manifest.total_chunks)),
+                ("edges", Json::from(manifest.edges)),
+            ]),
+        ),
+        ("generate", Json::obj(vec![("secs", Json::from(generate_secs))])),
+        ("host_runs", Json::Arr(host_runs)),
+        (
+            "merge",
+            Json::obj(vec![
+                ("secs", Json::from(merge_secs)),
+                ("edges_per_sec", Json::from(report.edges as f64 / merge_secs.max(1e-9))),
+                ("bytes_per_sec", Json::from(report.bytes as f64 / merge_secs.max(1e-9))),
+                ("shards", Json::from(report.shards)),
+                ("bytes", Json::from(report.bytes)),
+            ]),
+        ),
+        ("fold", Json::obj(vec![("secs", Json::from(fold_secs))])),
+        ("merged_matches_single_process_bit_for_bit", Json::from(true)),
+    ]);
+    std::fs::write("BENCH_distrib.json", format!("{out}\n")).expect("write BENCH_distrib.json");
+    println!("[bench] wrote BENCH_distrib.json");
+
+    std::fs::remove_file(&model).ok();
+    std::fs::remove_dir_all(&single).ok();
+    std::fs::remove_dir_all(&merged).ok();
+    for dir in &host_dirs {
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

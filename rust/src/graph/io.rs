@@ -190,13 +190,43 @@ impl ShardReader {
     /// files, any header is invalid, or the shards disagree on the
     /// partite spec.
     pub fn open(dir: &Path) -> Result<ShardReader> {
-        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
-            .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.extension().map(|x| x == "sgg").unwrap_or(false))
-            .collect();
-        paths.sort();
+        ShardReader::open_dirs(std::slice::from_ref(&dir.to_path_buf()))
+    }
+
+    /// Open several shard directories as one logical graph — the
+    /// unmerged output of a distributed run, where each host's directory
+    /// holds a disjoint slice of the canonical `shard-NNNNN.sgg` series.
+    /// Shards are ordered by file *name* across all directories (the
+    /// zero-padded names make lexical order equal chunk-index order
+    /// regardless of which directory a shard lives in), so the combined
+    /// read order matches a merged single-directory run exactly.
+    /// Duplicate shard names across directories are rejected: two hosts
+    /// claiming the same chunk is a partitioning error, not an input to
+    /// silently prefer one side of.
+    pub fn open_dirs(dirs: &[PathBuf]) -> Result<ShardReader> {
+        let mut paths: Vec<PathBuf> = Vec::new();
+        for dir in dirs {
+            for entry in std::fs::read_dir(dir)? {
+                let p = entry?.path();
+                if p.extension().map(|x| x == "sgg").unwrap_or(false) {
+                    paths.push(p);
+                }
+            }
+        }
+        paths.sort_by(|a, b| a.file_name().cmp(&b.file_name()).then_with(|| a.cmp(b)));
+        for w in paths.windows(2) {
+            if w[0].file_name() == w[1].file_name() {
+                return Err(Error::Data(format!(
+                    "duplicate shard `{}` appears in more than one directory ({} and {})",
+                    w[0].file_name().unwrap_or_default().to_string_lossy(),
+                    w[0].display(),
+                    w[1].display()
+                )));
+            }
+        }
         if paths.is_empty() {
-            return Err(Error::Data(format!("no shards in {}", dir.display())));
+            let names: Vec<String> = dirs.iter().map(|d| d.display().to_string()).collect();
+            return Err(Error::Data(format!("no shards in {}", names.join(", "))));
         }
         let mut headers = Vec::with_capacity(paths.len());
         for p in &paths {
@@ -458,5 +488,30 @@ mod tests {
         write_binary(&dir.join("shard-00002.sgg"), &other).unwrap();
         assert!(ShardReader::open(&dir).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_reader_spans_directories_in_name_order() {
+        let (a, b) = (tmp("multi_a"), tmp("multi_b"));
+        for d in [&a, &b] {
+            std::fs::remove_dir_all(d).ok();
+            std::fs::create_dir_all(d).unwrap();
+        }
+        let e = sample();
+        // global chunk indices split across the two dirs, out of order
+        write_binary(&a.join("shard-00002.sgg"), &e).unwrap();
+        write_binary(&b.join("shard-00000.sgg"), &e).unwrap();
+        write_binary(&b.join("shard-00001.sgg"), &e).unwrap();
+        let r = ShardReader::open_dirs(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(r.len(), 3);
+        assert!(r.path(0).ends_with("shard-00000.sgg"));
+        assert!(r.path(2).ends_with("shard-00002.sgg"));
+        // the same shard name in two dirs is a partitioning error
+        write_binary(&a.join("shard-00001.sgg"), &e).unwrap();
+        let err = ShardReader::open_dirs(&[a.clone(), b.clone()]).unwrap_err();
+        assert!(err.to_string().contains("duplicate shard"), "{err}");
+        for d in [&a, &b] {
+            std::fs::remove_dir_all(d).ok();
+        }
     }
 }

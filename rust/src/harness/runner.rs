@@ -42,27 +42,6 @@ impl MetricProfile {
     }
 }
 
-/// FNV-1a over both degree arrays (length-prefixed so `[1],[2]` and
-/// `[1,2],[]` hash differently).
-fn hash_profile(prof: &DegreeProfile) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    let mut eat = |x: u64| {
-        for b in x.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(PRIME);
-        }
-    };
-    for side in [prof.out_degrees(), prof.in_degrees()] {
-        eat(side.len() as u64);
-        for &d in side {
-            eat(d as u64);
-        }
-    }
-    h
-}
-
 /// Execute the scenario at `path` into a fresh shard directory at
 /// `out_dir` and measure its profile. `faults` injects the same
 /// deterministic schedule into generation (sampling + shard writes,
@@ -119,7 +98,7 @@ pub fn run_scenario_profile(
         shards: scan.shards,
         degree_dist: degree::degree_dist_score_profiles(&orig, &synth),
         dcc: degree::dcc_profiles(&orig, &synth, DCC_SAMPLES),
-        profile_hash: hash_profile(&synth),
+        profile_hash: degree::profile_hash(&synth),
     })
 }
 
@@ -187,9 +166,9 @@ kind = "shards"
         let mut b = EdgeList::new(PartiteSpec::square(4));
         b.push(0, 2);
         b.push(1, 1);
-        let ha = hash_profile(&DegreeProfile::of(&a));
-        let hb = hash_profile(&DegreeProfile::of(&b));
+        let ha = degree::profile_hash(&DegreeProfile::of(&a));
+        let hb = degree::profile_hash(&DegreeProfile::of(&b));
         assert_ne!(ha, hb);
-        assert_eq!(ha, hash_profile(&DegreeProfile::of(&a)));
+        assert_eq!(ha, degree::profile_hash(&DegreeProfile::of(&a)));
     }
 }

@@ -11,7 +11,10 @@
 //! sgg generate --model model.sggm --scale 2 --out /tmp/synth [--workers N]
 //! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
 //! sgg evaluate --dataset tabformer      fit + generate + Table-2 metrics
-//! sgg eval --shards DIR --dataset X     streamed evaluation of shard output
+//! sgg eval --shards DIR[,DIR...] --dataset X   streamed evaluation of shard output
+//! sgg plan --model model.sggm --hosts 3 --out run.json [--scale N] [--seed N]
+//! sgg generate --model model.sggm --chunks A..B --manifest run.json --out-dir shard-k/
+//! sgg merge --manifest run.json HOST_DIR... --out-dir merged/
 //! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards --workers 8
 //! sgg experiment table2 [--quick]       regenerate one paper table/figure
 //! sgg experiment all [--quick]          regenerate everything
@@ -31,6 +34,17 @@
 //! samples a synthetic dataset at any scale. For the same seed the
 //! output is bit-identical to `sgg fit-generate` in one process, for any
 //! `--workers` value.
+//!
+//! Distributed runs split one job across N shared-nothing hosts: `sgg
+//! plan` writes a versioned run manifest assigning each host a chunk
+//! range, each host runs `sgg generate --model m.sggm --chunks A..B
+//! --manifest run.json --out-dir shard-k/`, and `sgg merge` validates
+//! completeness (every chunk exactly once, checksums, model hashes),
+//! assembles the canonical shard directory and folds the per-host
+//! metric profiles into one quality report. The merged output is
+//! byte-identical to a single-process run from the same artifact and
+//! seed. Unmerged per-host output can be scored directly with `sgg eval
+//! --shards dirA,dirB,...`.
 //!
 //! `--workers N` drives the parallel chunk runner (N sampling threads;
 //! 0 = one per core). Output is bit-identical for every worker count —
@@ -112,6 +126,18 @@ fn generate_dataset(fitted: &FittedPipeline, args: &Args) -> Result<Dataset> {
             args.get_or("seed", 42u64),
         )?
         .into_dataset()
+}
+
+/// Parse a half-open `--chunks A..B` range.
+fn parse_chunk_range(s: &str) -> Result<(usize, usize)> {
+    let parse = |x: &str| x.trim().parse::<usize>().ok();
+    let parsed = s.split_once("..").and_then(|(a, b)| Some((parse(a)?, parse(b)?)));
+    match parsed {
+        Some((a, b)) if a < b => Ok((a, b)),
+        _ => Err(sgg::Error::Config(format!(
+            "--chunks wants a non-empty half-open range like 0..6, got `{s}`"
+        ))),
+    }
 }
 
 /// Write the generated edge list under `--out` (if given).
@@ -217,6 +243,50 @@ fn run(args: &Args) -> Result<()> {
                     )));
                 }
             }
+            if let Some(range) = args.get("chunks") {
+                // one host's slice of a planned distributed run: the
+                // manifest fixes the job, the range picks this host's part
+                let usage = "usage: sgg generate --model m.sggm --chunks A..B \
+                             --manifest run.json --out-dir DIR [--workers N] [--resume]";
+                for flag in ["scale", "seed", "out"] {
+                    if args.get(flag).is_some() {
+                        return Err(sgg::Error::Config(format!(
+                            "--{flag} has no effect with --chunks: the run manifest fixes \
+                             the job (re-run `sgg plan` to change it)"
+                        )));
+                    }
+                }
+                let manifest_path = args
+                    .get("manifest")
+                    .ok_or_else(|| sgg::Error::Config(usage.into()))?;
+                let out_dir = args
+                    .get("out-dir")
+                    .ok_or_else(|| sgg::Error::Config(usage.into()))?;
+                let manifest = pipeline::distrib::RunManifest::load(Path::new(manifest_path))?;
+                let (start, end) = parse_chunk_range(range)?;
+                let workers = match args.get_or("workers", 1usize) {
+                    0 => sgg::util::threadpool::default_threads(),
+                    w => w,
+                };
+                let (host, stream) = pipeline::distrib::run_host_range(
+                    Path::new(model),
+                    &manifest,
+                    start,
+                    end,
+                    Path::new(out_dir),
+                    workers,
+                    args.has_flag("resume"),
+                    &Registries::builtin(),
+                )?;
+                println!(
+                    "host chunks {start}..{end} of {}: {stream}; {} shard records → {}/{}",
+                    manifest.total_chunks,
+                    host.chunks.len(),
+                    out_dir,
+                    pipeline::distrib::HOST_REPORT_FILE
+                );
+                return Ok(());
+            }
             let fitted = FittedPipeline::load(Path::new(model), &Registries::builtin())?;
             let src = fitted.source();
             println!(
@@ -232,6 +302,67 @@ fn run(args: &Args) -> Result<()> {
                 synth.edge_features.n_cols()
             );
             write_edges_out(&synth, args)?;
+            Ok(())
+        }
+        Some("plan") => {
+            let usage = "usage: sgg plan --model m.sggm --hosts N --out run.json \
+                         [--scale N] [--seed N] [--prefix-levels L]";
+            let model = args.get("model").ok_or_else(|| sgg::Error::Config(usage.into()))?;
+            let hosts = args.get_or("hosts", 0usize);
+            if hosts == 0 {
+                return Err(sgg::Error::Config(usage.into()));
+            }
+            let out = args.get("out").unwrap_or("run.json");
+            let defaults = ChunkConfig::default();
+            let manifest = pipeline::distrib::plan_run(
+                Path::new(model),
+                hosts,
+                args.get_or("scale", 1u64),
+                args.get_or("seed", 42u64),
+                args.get_or("prefix-levels", defaults.prefix_levels),
+                &Registries::builtin(),
+            )?;
+            manifest.save(Path::new(out))?;
+            println!(
+                "planned {} chunks ({} edges over {}×{}) across {hosts} hosts → {out}",
+                manifest.total_chunks, manifest.edges, manifest.n_src, manifest.n_dst
+            );
+            for h in &manifest.hosts {
+                println!(
+                    "  host {}: sgg generate --model {model} --chunks {}..{} \
+                     --manifest {out} --out-dir shard-{}/",
+                    h.host, h.start, h.end, h.host
+                );
+            }
+            Ok(())
+        }
+        Some("merge") => {
+            let usage = "usage: sgg merge --manifest run.json HOST_DIR... --out-dir merged/ \
+                         [--dataset-seed N]";
+            let manifest_path = args
+                .get("manifest")
+                .ok_or_else(|| sgg::Error::Config(usage.into()))?;
+            let out_dir = args
+                .get("out-dir")
+                .ok_or_else(|| sgg::Error::Config(usage.into()))?;
+            let dirs: Vec<std::path::PathBuf> =
+                args.positional[1..].iter().map(std::path::PathBuf::from).collect();
+            if dirs.is_empty() {
+                return Err(sgg::Error::Config(usage.into()));
+            }
+            let manifest = pipeline::distrib::RunManifest::load(Path::new(manifest_path))?;
+            // the manifest's provenance names the quality reference, as
+            // with `sgg eval --model`
+            let reference =
+                sgg::datasets::load(&manifest.dataset, args.get_or("dataset-seed", 1u64))?;
+            let orig = sgg::metrics::DegreeProfile::of(&reference.edges);
+            let report = pipeline::distrib::merge_run(
+                &manifest,
+                &dirs,
+                Path::new(out_dir),
+                Some(&orig),
+            )?;
+            println!("{report}");
             Ok(())
         }
         Some("fit-generate") => {
@@ -256,8 +387,8 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("eval") => {
-            let usage = "usage: sgg eval --shards DIR (--dataset NAME | --model m.sggm) \
-                         [--dataset-seed N] [--workers N]";
+            let usage = "usage: sgg eval --shards DIR[,DIR...] (--dataset NAME | \
+                         --model m.sggm) [--dataset-seed N] [--workers N]";
             let shards = args
                 .get("shards")
                 .ok_or_else(|| sgg::Error::Config(usage.into()))?;
@@ -285,11 +416,14 @@ fn run(args: &Args) -> Result<()> {
                 (None, None) => return Err(sgg::Error::Config(usage.into())),
             };
             let orig = sgg::metrics::DegreeProfile::of(&reference.edges);
-            let report = sgg::metrics::stream::evaluate_shards(
-                Path::new(shards),
-                &orig,
-                workers,
-            )?;
+            // comma-separated directories score the unmerged per-host
+            // output of a distributed run as one logical graph
+            let dirs: Vec<std::path::PathBuf> = shards
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(std::path::PathBuf::from)
+                .collect();
+            let report = sgg::metrics::stream::evaluate_shard_dirs(&dirs, &orig, workers)?;
             println!("{} vs {}: {report}", shards, reference.name);
             Ok(())
         }
@@ -399,10 +533,14 @@ fn run(args: &Args) -> Result<()> {
         }
         _ => {
             println!(
-                "usage: sgg <datasets|run|test|fit|generate|fit-generate|evaluate|eval|stream|experiment> [--options]\n\
+                "usage: sgg <datasets|run|test|fit|generate|plan|merge|fit-generate|evaluate|eval|stream|experiment> [--options]\n\
                  lifecycle: sgg fit --dataset ieee-fraud --out m.sggm && \
                  sgg generate --model m.sggm --scale 2 --out /tmp/synth\n\
-                 streamed eval: sgg eval --shards /tmp/shards --dataset ieee-fraud --workers 4\n\
+                 distributed: sgg plan --model m.sggm --hosts 3 --out run.json; \
+                 sgg generate --model m.sggm --chunks A..B --manifest run.json --out-dir shard-k/; \
+                 sgg merge --manifest run.json shard-*/ --out-dir merged/\n\
+                 streamed eval: sgg eval --shards /tmp/shards --dataset ieee-fraud --workers 4 \
+                 (comma-separate unmerged host dirs)\n\
                  conformance: sgg test scenarios/ [--bless] [--report harness.json]\n\
                  recovery: sgg run scenarios/fraud.toml --resume (after an interrupted shard run)\n\
                  experiments: {:?}\n\

@@ -17,7 +17,9 @@
 
 use super::accum::MetricAccumulator;
 use crate::graph::{EdgeList, PartiteSpec};
+use crate::util::checksum::Fnv1a;
 use crate::util::stats;
+use crate::{Error, Result};
 
 /// Number of logarithmic bins used by the scores.
 const LOG_BINS: usize = 24;
@@ -50,6 +52,30 @@ impl DegreeAccumulator {
     /// Total edges observed so far.
     pub fn edges_observed(&self) -> u64 {
         self.edges
+    }
+
+    /// Rebuild an accumulator from serialized per-node counts (e.g. a
+    /// host report from a distributed run) so partials computed on other
+    /// machines can be folded with the same exact [`MetricAccumulator`]
+    /// merges as in-process partials. The vector lengths must match the
+    /// spec's node counts.
+    pub fn from_counts(
+        spec: PartiteSpec,
+        out: Vec<u32>,
+        in_: Vec<u32>,
+        edges: u64,
+    ) -> Result<DegreeAccumulator> {
+        if out.len() != spec.n_src as usize || in_.len() != spec.n_dst as usize {
+            return Err(Error::Data(format!(
+                "degree counts ({} out / {} in) do not match the node space \
+                 ({} src / {} dst)",
+                out.len(),
+                in_.len(),
+                spec.n_src,
+                spec.n_dst
+            )));
+        }
+        Ok(DegreeAccumulator { spec: Some(spec), out, in_, edges })
     }
 
     fn ensure_spec(&mut self, spec: PartiteSpec) {
@@ -137,6 +163,21 @@ impl DegreeProfile {
     pub fn max_out_degree(&self) -> u32 {
         self.out.iter().copied().max().unwrap_or(0)
     }
+}
+
+/// FNV-1a over both degree arrays, each length-prefixed (so `[1],[2]`
+/// and `[1,2],[]` hash differently) with every value eaten as 8
+/// little-endian bytes. This is the "bit-identical profile" fingerprint
+/// shared by the conformance harness and distributed-merge validation.
+pub fn profile_hash(prof: &DegreeProfile) -> u64 {
+    let mut h = Fnv1a::new();
+    for side in [prof.out_degrees(), prof.in_degrees()] {
+        h.write_u64(side.len() as u64);
+        for &d in side {
+            h.write_u64(d as u64);
+        }
+    }
+    h.finish()
 }
 
 /// Log-binned histogram of a degree sample normalized to [0, 1].

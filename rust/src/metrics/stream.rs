@@ -72,13 +72,24 @@ pub fn profile_shards_with(
     faults: Option<FaultPlan>,
     retry: RetryPolicy,
 ) -> Result<(DegreeProfile, ShardScan)> {
-    let reader = ShardReader::open(dir)?;
+    profile_reader_with(&ShardReader::open(dir)?, workers, faults, retry)
+}
+
+/// [`profile_shards_with`] over an already-opened [`ShardReader`] — the
+/// shared core of single-directory, multi-directory (unmerged
+/// distributed output), and host-report profiling.
+pub fn profile_reader_with(
+    reader: &ShardReader,
+    workers: usize,
+    faults: Option<FaultPlan>,
+    retry: RetryPolicy,
+) -> Result<(DegreeProfile, ShardScan)> {
     let scan = ShardScan {
         shards: reader.len(),
         edges: reader.total_edges(),
         peak_shard_edges: reader.max_shard_edges(),
     };
-    let faulted = FaultReader::new(&reader, faults, retry);
+    let faulted = FaultReader::new(reader, faults, retry);
     let runner = ParallelChunkRunner::new(workers.max(1), 1);
     let partials = runner.fold_indices(
         faulted.len(),
@@ -138,7 +149,22 @@ pub fn evaluate_shards(
     orig: &DegreeProfile,
     workers: usize,
 ) -> Result<ShardEvalReport> {
-    let (synth, scan) = profile_shards(dir, workers)?;
+    evaluate_shard_dirs(std::slice::from_ref(&dir.to_path_buf()), orig, workers)
+}
+
+/// [`evaluate_shards`] over several shard directories treated as one
+/// logical graph — the unmerged per-host output of a distributed run.
+/// Shards are ordered by file name across the directories (chunk-index
+/// order), so the scores are bit-identical to evaluating the merged
+/// directory.
+pub fn evaluate_shard_dirs(
+    dirs: &[std::path::PathBuf],
+    orig: &DegreeProfile,
+    workers: usize,
+) -> Result<ShardEvalReport> {
+    let reader = ShardReader::open_dirs(dirs)?;
+    let (synth, scan) =
+        profile_reader_with(&reader, workers.max(1), None, RetryPolicy::default())?;
     Ok(ShardEvalReport {
         degree_dist: degree::degree_dist_score_profiles(orig, &synth),
         dcc: degree::dcc_profiles(orig, &synth, DCC_SAMPLES),

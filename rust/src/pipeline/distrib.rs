@@ -1,0 +1,933 @@
+//! Distributed generation: N shared-nothing hosts, one graph.
+//!
+//! The chunked engine already makes every chunk an independent unit of
+//! work — [`chunk_plan`](crate::structgen::StructureGenerator::chunk_plan)
+//! fixes the chunk count, per-chunk edge budgets and per-chunk PRNG
+//! streams up front, so chunk `i` samples identically no matter which
+//! process (or machine) executes it. This module turns that property
+//! into a multi-host protocol:
+//!
+//! 1. **Plan** ([`plan_run`] / `sgg plan`) — load a `.sggm` model
+//!    artifact, resolve the target size, count the chunks *with the same
+//!    plan execution will use*, and write a versioned [`RunManifest`]
+//!    that pins the model (content hash), the job shape (spec hash) and
+//!    a contiguous chunk range per host.
+//! 2. **Generate** ([`run_host_range`] / `sgg generate --chunks A..B`) —
+//!    each host independently runs its half-open chunk range against the
+//!    same artifact, writing shards named by *global* chunk index (so
+//!    the union of all host directories is already the canonical
+//!    single-host layout) plus a [`HostReport`] carrying per-shard
+//!    checksums and a serialized degree-profile partial.
+//! 3. **Merge** ([`merge_run`] / `sgg merge`) — the coordinator
+//!    validates completeness (every chunk exactly once, checksums match,
+//!    all hashes agree), assembles the shards into one directory
+//!    (hard-linking where possible), and folds the per-host profile
+//!    partials with the exact integer-count
+//!    [`merge`](crate::metrics::MetricAccumulator::merge) the in-process
+//!    engine uses — so the folded profile is **bit-identical** to the
+//!    profile of a single-process run from the same artifact and seed.
+//!
+//! The host report doubles as the host's durable completion record: it
+//! is written only after the host's whole range succeeded, so a missing
+//! report means an incomplete (or never-run) host. Chunks that sampled
+//! zero edges write no shard; they are represented by the *absence* of a
+//! per-chunk record inside a report whose range covers them, which is
+//! why completeness is validated against the reports rather than against
+//! file presence.
+
+use super::registry::Registries;
+use super::sink::{shard_path, ShardSink, StreamReport};
+use super::spec::SizeSpec;
+use super::FittedPipeline;
+use crate::graph::io::{self, ShardReader};
+use crate::graph::PartiteSpec;
+use crate::metrics::accum::MetricAccumulator;
+use crate::metrics::degree::{self, DegreeAccumulator, DegreeProfile};
+use crate::metrics::stream::{profile_reader_with, StructuralReport, DCC_SAMPLES};
+use crate::pipeline::fault::RetryPolicy;
+use crate::structgen::chunked::ChunkConfig;
+use crate::util::checksum::{fnv1a_file, Fnv1a};
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Run-manifest format identifier (the `format` header field).
+pub const RUN_FORMAT: &str = "sgg-run";
+
+/// Run-manifest format version this build reads and writes.
+pub const RUN_VERSION: u64 = 1;
+
+/// Host-report format identifier.
+pub const HOST_REPORT_FORMAT: &str = "sgg-host-report";
+
+/// Host-report format version this build reads and writes.
+pub const HOST_REPORT_VERSION: u64 = 1;
+
+/// File name of the per-host completion record inside a host's output
+/// directory.
+pub const HOST_REPORT_FILE: &str = "host-report.json";
+
+/// File name of the merged quality report inside the merge output
+/// directory.
+pub const MERGE_REPORT_FILE: &str = "merge-report.json";
+
+/// The (only) shard naming scheme this build understands, recorded in
+/// the manifest so a future renaming bumps loudly instead of silently
+/// misassembling: chunk `i` lives in `shard-{i:05}.sgg` (see
+/// [`shard_path`]).
+pub const SHARD_SCHEME: &str = "shard-%05d.sgg";
+
+/// One host's contiguous half-open chunk range `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HostRange {
+    /// Host index (0-based, dense).
+    pub host: usize,
+    /// First chunk this host owns.
+    pub start: usize,
+    /// One past the last chunk this host owns.
+    pub end: usize,
+}
+
+impl HostRange {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("host", Json::from(self.host)),
+            ("start", Json::from(self.start)),
+            ("end", Json::from(self.end)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<HostRange> {
+        Ok(HostRange {
+            host: v.req_usize("host")?,
+            start: v.req_usize("start")?,
+            end: v.req_usize("end")?,
+        })
+    }
+}
+
+/// The versioned run manifest `sgg plan` writes: everything N hosts and
+/// one coordinator must agree on. The two hashes are the protocol's
+/// identity checks — [`RunManifest::model_hash`] pins the *exact* model
+/// artifact bytes and [`RunManifest::spec_hash`] the resolved job shape,
+/// so a host generating from a refitted model or a differently-sized job
+/// fails loudly at generate or merge time instead of producing a
+/// plausible-looking but wrong graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunManifest {
+    /// FNV-1a over the raw bytes of the `.sggm` artifact every host must
+    /// generate from.
+    pub model_hash: u64,
+    /// FNV-1a over the resolved job shape (sizes, seed, scale, prefix
+    /// levels, chunk count) — see [`RunManifest::compute_spec_hash`].
+    pub spec_hash: u64,
+    /// Dataset the model was fitted on (from the artifact's provenance);
+    /// the merge-time quality reference.
+    pub dataset: String,
+    /// Integer scale factor the job was planned at.
+    pub scale: u64,
+    /// Generation seed shared by every host.
+    pub seed: u64,
+    /// Chunking depth ([`ChunkConfig::prefix_levels`]) shared by every
+    /// host — it determines the chunk decomposition itself.
+    pub prefix_levels: u32,
+    /// Resolved source-node count.
+    pub n_src: u64,
+    /// Resolved destination-node count.
+    pub n_dst: u64,
+    /// Resolved total edge budget.
+    pub edges: u64,
+    /// Total number of chunks in the plan (the ranges below tile
+    /// `[0, total_chunks)` exactly).
+    pub total_chunks: usize,
+    /// Shard file naming scheme; must equal [`SHARD_SCHEME`].
+    pub shard_scheme: String,
+    /// Per-host chunk ranges, in host order.
+    pub hosts: Vec<HostRange>,
+}
+
+impl RunManifest {
+    /// The job-shape fingerprint: FNV-1a over the resolved sizes, seed,
+    /// scale, chunking depth and chunk count (each eaten as 8
+    /// little-endian bytes). Two manifests with equal spec hashes
+    /// describe byte-identical jobs modulo the model parameters, which
+    /// [`RunManifest::model_hash`] covers separately.
+    pub fn compute_spec_hash(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        for x in [
+            self.n_src,
+            self.n_dst,
+            self.edges,
+            self.seed,
+            self.scale,
+            self.prefix_levels as u64,
+            self.total_chunks as u64,
+        ] {
+            h.write_u64(x);
+        }
+        h.finish()
+    }
+
+    /// The chunk range of host `k`.
+    pub fn host_range(&self, k: usize) -> Result<HostRange> {
+        self.hosts.get(k).copied().ok_or_else(|| {
+            Error::Config(format!(
+                "host {k} is out of range: the manifest plans {} hosts",
+                self.hosts.len()
+            ))
+        })
+    }
+
+    /// Serialize into the versioned manifest document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::from(RUN_FORMAT)),
+            ("version", Json::from(RUN_VERSION)),
+            ("model_hash", Json::u64_exact(self.model_hash)),
+            ("spec_hash", Json::u64_exact(self.spec_hash)),
+            ("dataset", Json::from(self.dataset.as_str())),
+            ("scale", Json::u64_exact(self.scale)),
+            ("seed", Json::u64_exact(self.seed)),
+            ("prefix_levels", Json::from(self.prefix_levels)),
+            ("n_src", Json::u64_exact(self.n_src)),
+            ("n_dst", Json::u64_exact(self.n_dst)),
+            ("edges", Json::u64_exact(self.edges)),
+            ("total_chunks", Json::from(self.total_chunks)),
+            ("shard_scheme", Json::from(self.shard_scheme.as_str())),
+            ("hosts", Json::Arr(self.hosts.iter().map(|h| h.to_json()).collect())),
+        ])
+    }
+
+    /// Inverse of [`RunManifest::to_json`]. Rejects wrong/missing format
+    /// headers, unsupported versions, unknown shard schemes, a spec hash
+    /// that does not match the manifest's own fields, and host ranges
+    /// that fail to tile `[0, total_chunks)` exactly — a hand-edited
+    /// manifest fails here, before any host burns CPU on it.
+    pub fn from_json(doc: &Json) -> Result<RunManifest> {
+        let format = doc
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Data("not a sgg-run manifest (no `format` header)".into()))?;
+        if format != RUN_FORMAT {
+            return Err(Error::Data(format!("not a sgg-run manifest (format `{format}`)")));
+        }
+        let version = doc.req_u64("version")?;
+        if version != RUN_VERSION {
+            return Err(Error::Data(format!(
+                "unsupported sgg-run manifest version {version} (this build reads version \
+                 {RUN_VERSION}); re-plan the run with a matching build"
+            )));
+        }
+        let manifest = RunManifest {
+            model_hash: doc.req_u64("model_hash")?,
+            spec_hash: doc.req_u64("spec_hash")?,
+            dataset: doc.req_str("dataset")?.to_string(),
+            scale: doc.req_u64("scale")?,
+            seed: doc.req_u64("seed")?,
+            prefix_levels: doc.req_u32("prefix_levels")?,
+            n_src: doc.req_u64("n_src")?,
+            n_dst: doc.req_u64("n_dst")?,
+            edges: doc.req_u64("edges")?,
+            total_chunks: doc.req_usize("total_chunks")?,
+            shard_scheme: doc.req_str("shard_scheme")?.to_string(),
+            hosts: doc
+                .req_arr("hosts")?
+                .iter()
+                .map(HostRange::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        };
+        if manifest.shard_scheme != SHARD_SCHEME {
+            return Err(Error::Data(format!(
+                "unsupported shard naming scheme `{}` (this build writes `{SHARD_SCHEME}`)",
+                manifest.shard_scheme
+            )));
+        }
+        if manifest.spec_hash != manifest.compute_spec_hash() {
+            return Err(Error::Data(
+                "manifest spec_hash does not match its own job fields (manifest edited \
+                 by hand?)"
+                    .into(),
+            ));
+        }
+        validate_tiling(
+            &manifest
+                .hosts
+                .iter()
+                .map(|h| (h.start, h.end))
+                .collect::<Vec<_>>(),
+            manifest.total_chunks,
+        )?;
+        Ok(manifest)
+    }
+
+    /// Write the manifest to `path` as a JSON document.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let doc = self.to_json();
+        std::fs::write(path, format!("{doc}\n")).map_err(|e| {
+            Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+        })
+    }
+
+    /// Read and validate a manifest from `path`.
+    pub fn load(path: &Path) -> Result<RunManifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| Error::Data(format!("{}: invalid manifest JSON: {e}", path.display())))?;
+        RunManifest::from_json(&doc).map_err(|e| Error::Data(format!("{}: {e}", path.display())))
+    }
+}
+
+/// Check that sorted-by-start `(start, end)` ranges tile `[0, total)`
+/// exactly: no overlap, no gap, nothing out of bounds. `ranges` may
+/// arrive unsorted; empty ranges are rejected.
+fn validate_tiling(ranges: &[(usize, usize)], total: usize) -> Result<()> {
+    let mut sorted = ranges.to_vec();
+    sorted.sort_unstable();
+    let mut cursor = 0usize;
+    for &(start, end) in &sorted {
+        if start >= end {
+            return Err(Error::Data(format!("empty or inverted chunk range {start}..{end}")));
+        }
+        match start.cmp(&cursor) {
+            std::cmp::Ordering::Less => {
+                return Err(Error::Data(format!(
+                    "overlapping chunk ranges: {start}..{end} re-covers chunks below {cursor}"
+                )));
+            }
+            std::cmp::Ordering::Greater => {
+                return Err(Error::Data(format!(
+                    "chunk range gap: nothing covers chunks {cursor}..{start}"
+                )));
+            }
+            std::cmp::Ordering::Equal => cursor = end,
+        }
+    }
+    if cursor != total {
+        return Err(Error::Data(format!(
+            "chunk ranges cover {cursor} of {total} chunks (missing {cursor}..{total})"
+        )));
+    }
+    Ok(())
+}
+
+/// Plan a distributed run: load the `.sggm` artifact at `model`, resolve
+/// the job size at integer `scale`, count the chunks with the *same*
+/// [`chunk_plan`](crate::structgen::StructureGenerator::chunk_plan) the
+/// hosts will execute, and partition them into `hosts` contiguous ranges
+/// (the same largest-first-free static split
+/// [`fold_indices`](super::parallel::ParallelChunkRunner::fold_indices)
+/// uses: host `k` owns `[k·n/H, (k+1)·n/H)`).
+pub fn plan_run(
+    model: &Path,
+    hosts: usize,
+    scale: u64,
+    seed: u64,
+    prefix_levels: u32,
+    regs: &Registries,
+) -> Result<RunManifest> {
+    if hosts == 0 {
+        return Err(Error::Config("a distributed plan needs at least one host".into()));
+    }
+    let model_hash = fnv1a_file(model)?;
+    let fitted = FittedPipeline::load(model, regs)?;
+    let (n_src, n_dst, edges) = fitted.struct_gen.scaled_size(scale.max(1));
+    let total_chunks = fitted
+        .struct_gen
+        .chunk_plan(n_src, n_dst, edges, seed, prefix_levels)?
+        .n_chunks();
+    if hosts > total_chunks {
+        return Err(Error::Config(format!(
+            "{hosts} hosts but the plan has only {total_chunks} chunks — use fewer hosts \
+             or a deeper --prefix-levels"
+        )));
+    }
+    let ranges: Vec<HostRange> = (0..hosts)
+        .map(|k| HostRange {
+            host: k,
+            start: k * total_chunks / hosts,
+            end: (k + 1) * total_chunks / hosts,
+        })
+        .collect();
+    let mut manifest = RunManifest {
+        model_hash,
+        spec_hash: 0,
+        dataset: fitted.source().dataset.clone(),
+        scale: scale.max(1),
+        seed,
+        prefix_levels,
+        n_src,
+        n_dst,
+        edges,
+        total_chunks,
+        shard_scheme: SHARD_SCHEME.to_string(),
+        hosts: ranges,
+    };
+    manifest.spec_hash = manifest.compute_spec_hash();
+    Ok(manifest)
+}
+
+/// One completed chunk's durable record inside a [`HostReport`]: which
+/// shard it produced, how many edges it holds, and the FNV-1a checksum
+/// of the shard file's bytes. Chunks that sampled zero edges write no
+/// shard and get no record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRecord {
+    /// Global chunk index (also the shard's file name via
+    /// [`shard_path`]).
+    pub chunk: usize,
+    /// Edge count of the shard (must match its header at merge time).
+    pub edges: u64,
+    /// FNV-1a over the shard file's raw bytes.
+    pub checksum: u64,
+}
+
+impl ChunkRecord {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("chunk", Json::from(self.chunk)),
+            ("edges", Json::u64_exact(self.edges)),
+            ("checksum", Json::u64_exact(self.checksum)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ChunkRecord> {
+        Ok(ChunkRecord {
+            chunk: v.req_usize("chunk")?,
+            edges: v.req_u64("edges")?,
+            checksum: v.req_u64("checksum")?,
+        })
+    }
+}
+
+/// A serialized [`DegreeAccumulator`] partial: the host's per-node
+/// degree counts, shipped inside its [`HostReport`] so the coordinator
+/// can fold host profiles with the exact integer-count
+/// [`merge`](MetricAccumulator::merge) the in-process engine uses —
+/// no re-reading of shards, bit-identical result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProfilePartial {
+    /// Node space of the generated graph (identical on every host).
+    pub spec: PartiteSpec,
+    /// Out-degree count per source node contributed by this host's
+    /// chunks.
+    pub out: Vec<u32>,
+    /// In-degree count per destination node.
+    pub in_: Vec<u32>,
+    /// Edges this host's chunks contributed.
+    pub edges: u64,
+}
+
+impl ProfilePartial {
+    /// Rebuild the accumulator this partial was serialized from.
+    pub fn to_accumulator(&self) -> Result<DegreeAccumulator> {
+        DegreeAccumulator::from_counts(self.spec, self.out.clone(), self.in_.clone(), self.edges)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", self.spec.to_json()),
+            ("out", Json::Arr(self.out.iter().map(|&x| Json::from(x)).collect())),
+            ("in", Json::Arr(self.in_.iter().map(|&x| Json::from(x)).collect())),
+            ("edges", Json::u64_exact(self.edges)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ProfilePartial> {
+        Ok(ProfilePartial {
+            spec: PartiteSpec::from_json(v.req("spec")?)?,
+            out: v.req_u32s("out")?,
+            in_: v.req_u32s("in")?,
+            edges: v.req_u64("edges")?,
+        })
+    }
+}
+
+/// The durable completion record one host writes (as
+/// [`HOST_REPORT_FILE`] in its output directory) after its whole chunk
+/// range succeeded: identity hashes, the range, per-shard checksums, and
+/// the host's degree-profile partial. Written last, so its presence
+/// certifies the directory is complete.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostReport {
+    /// Copy of the manifest's model hash (merge cross-checks it).
+    pub model_hash: u64,
+    /// Copy of the manifest's spec hash.
+    pub spec_hash: u64,
+    /// First chunk this host ran.
+    pub start: usize,
+    /// One past the last chunk this host ran.
+    pub end: usize,
+    /// One record per non-empty chunk in `[start, end)`, in chunk order.
+    pub chunks: Vec<ChunkRecord>,
+    /// Degree-profile partial over this host's shards; `None` when every
+    /// chunk in the range sampled zero edges.
+    pub profile: Option<ProfilePartial>,
+}
+
+impl HostReport {
+    /// Serialize into the versioned host-report document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::from(HOST_REPORT_FORMAT)),
+            ("version", Json::from(HOST_REPORT_VERSION)),
+            ("model_hash", Json::u64_exact(self.model_hash)),
+            ("spec_hash", Json::u64_exact(self.spec_hash)),
+            ("start", Json::from(self.start)),
+            ("end", Json::from(self.end)),
+            ("chunks", Json::Arr(self.chunks.iter().map(|c| c.to_json()).collect())),
+            (
+                "profile",
+                match &self.profile {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Inverse of [`HostReport::to_json`], with the same format/version
+    /// gating as the manifest.
+    pub fn from_json(doc: &Json) -> Result<HostReport> {
+        let format = doc
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Data("not a sgg host report (no `format` header)".into()))?;
+        if format != HOST_REPORT_FORMAT {
+            return Err(Error::Data(format!("not a sgg host report (format `{format}`)")));
+        }
+        let version = doc.req_u64("version")?;
+        if version != HOST_REPORT_VERSION {
+            return Err(Error::Data(format!(
+                "unsupported host-report version {version} (this build reads version \
+                 {HOST_REPORT_VERSION})"
+            )));
+        }
+        Ok(HostReport {
+            model_hash: doc.req_u64("model_hash")?,
+            spec_hash: doc.req_u64("spec_hash")?,
+            start: doc.req_usize("start")?,
+            end: doc.req_usize("end")?,
+            chunks: doc
+                .req_arr("chunks")?
+                .iter()
+                .map(ChunkRecord::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            profile: match doc.opt("profile") {
+                Some(p) => Some(ProfilePartial::from_json(p)?),
+                None => None,
+            },
+        })
+    }
+
+    /// Write the report into `dir` (as [`HOST_REPORT_FILE`]).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(HOST_REPORT_FILE);
+        let doc = self.to_json();
+        std::fs::write(&path, format!("{doc}\n")).map_err(|e| {
+            Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+        })
+    }
+
+    /// Read a host report from `dir`.
+    pub fn load(dir: &Path) -> Result<HostReport> {
+        let path = dir.join(HOST_REPORT_FILE);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Data(format!(
+                "{}: {e} — missing host report (did the host run complete?)",
+                path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text).map_err(|e| {
+            Error::Data(format!("{}: invalid host report JSON: {e}", path.display()))
+        })?;
+        HostReport::from_json(&doc).map_err(|e| Error::Data(format!("{}: {e}", path.display())))
+    }
+}
+
+/// Run one host's slice of a planned distributed run: regenerate chunks
+/// `[start, end)` of the manifest's job from the artifact at `model`
+/// into `out_dir`, then record per-shard checksums and the host's degree
+/// partial in a [`HostReport`] (written into `out_dir` last, as the
+/// completion certificate).
+///
+/// Identity is enforced before any sampling: the artifact's content hash
+/// must equal the manifest's, and the loaded model must resolve to the
+/// manifest's exact job shape and chunk count. With `resume`, an
+/// interrupted host run restarts from its intact shard prefix
+/// ([`ShardSink::resume_range`]) — the finished directory is
+/// byte-identical either way.
+pub fn run_host_range(
+    model: &Path,
+    manifest: &RunManifest,
+    start: usize,
+    end: usize,
+    out_dir: &Path,
+    workers: usize,
+    resume: bool,
+    regs: &Registries,
+) -> Result<(HostReport, StreamReport)> {
+    if start >= end || end > manifest.total_chunks {
+        return Err(Error::Config(format!(
+            "chunk range {start}..{end} is not a non-empty subrange of the plan's \
+             0..{}",
+            manifest.total_chunks
+        )));
+    }
+    let model_hash = fnv1a_file(model)?;
+    if model_hash != manifest.model_hash {
+        return Err(Error::Data(format!(
+            "{} does not match the manifest's model (artifact hash {model_hash:016x}, \
+             manifest {:016x}) — every host must generate from the exact artifact the \
+             run was planned with",
+            model.display(),
+            manifest.model_hash
+        )));
+    }
+    let fitted = FittedPipeline::load(model, regs)?;
+    let planned = fitted
+        .struct_gen
+        .chunk_plan(
+            manifest.n_src,
+            manifest.n_dst,
+            manifest.edges,
+            manifest.seed,
+            manifest.prefix_levels,
+        )?
+        .n_chunks();
+    if planned != manifest.total_chunks {
+        return Err(Error::Data(format!(
+            "model decomposes this job into {planned} chunks but the manifest promises \
+             {} — the manifest was planned against a different build or model",
+            manifest.total_chunks
+        )));
+    }
+
+    let mut chunks = ChunkConfig {
+        prefix_levels: manifest.prefix_levels,
+        workers: workers.max(1),
+        resume_from: start,
+        stop_before: Some(end),
+        ..ChunkConfig::default()
+    };
+    let mut sink = if resume {
+        let (sink, completed) = ShardSink::resume_range(out_dir, chunks, start)?;
+        chunks.resume_from = completed.min(end);
+        sink
+    } else {
+        ShardSink::new(out_dir, chunks)?
+    };
+    crate::info!(
+        "host range {start}..{end} of {} chunks → {}",
+        manifest.total_chunks,
+        out_dir.display()
+    );
+    let size = SizeSpec::Sized {
+        n_src: manifest.n_src,
+        n_dst: manifest.n_dst,
+        edges: manifest.edges,
+    };
+    let stream = match fitted.run(size, chunks, &mut sink, manifest.seed)? {
+        super::SinkOutput::Streamed(r) => r,
+        super::SinkOutput::Dataset(_) => unreachable!("shard sinks always stream"),
+    };
+
+    // Post-run accounting is a separate pass over the finished shards so
+    // a resumed run records resumed chunks too: checksum + header edge
+    // count per shard, then the host's degree partial.
+    let mut records = Vec::new();
+    for chunk in start..end {
+        let path = shard_path(out_dir, chunk);
+        if !path.exists() {
+            continue; // zero-edge chunk: no shard by design
+        }
+        let (_spec, edges) = io::read_binary_header(&path)?;
+        records.push(ChunkRecord { chunk, edges, checksum: fnv1a_file(&path)? });
+    }
+    let profile = if records.is_empty() {
+        None
+    } else {
+        let reader = ShardReader::open(out_dir)?;
+        let (prof, scan) =
+            profile_reader_with(&reader, workers.max(1), None, RetryPolicy::default())?;
+        Some(ProfilePartial {
+            spec: reader.spec(),
+            out: prof.out_degrees().to_vec(),
+            in_: prof.in_degrees().to_vec(),
+            edges: scan.edges,
+        })
+    };
+    let report = HostReport {
+        model_hash,
+        spec_hash: manifest.spec_hash,
+        start,
+        end,
+        chunks: records,
+        profile,
+    };
+    report.save(out_dir)?;
+    Ok((report, stream))
+}
+
+/// What [`merge_run`] validated and assembled.
+#[derive(Clone, Debug)]
+pub struct MergeReport {
+    /// Number of host reports folded.
+    pub hosts: usize,
+    /// Total chunks the run covered (= the manifest's).
+    pub chunks: usize,
+    /// Shard files assembled (non-empty chunks).
+    pub shards: usize,
+    /// Total edges in the merged graph.
+    pub edges: u64,
+    /// [`degree::profile_hash`] of the folded degree profile — equal to
+    /// the hash of a single-process run's profile from the same artifact
+    /// and seed.
+    pub profile_hash: u64,
+    /// Folded structural quality against the fit source's degree
+    /// profile, when the caller supplied one.
+    pub quality: Option<StructuralReport>,
+    /// Merge wall-clock seconds (validation + assembly + fold).
+    pub wall_secs: f64,
+    /// Shard bytes assembled into the merged directory.
+    pub bytes: u64,
+    /// The merged output directory.
+    pub out_dir: PathBuf,
+}
+
+impl std::fmt::Display for MergeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "merged {} hosts / {} chunks: {} edges in {} shards → {} \
+             ({:.2}s, {:.1} MB, profile {:016x})",
+            self.hosts,
+            self.chunks,
+            self.edges,
+            self.shards,
+            self.out_dir.display(),
+            self.wall_secs,
+            self.bytes as f64 / 1e6,
+            self.profile_hash
+        )?;
+        if let Some(q) = &self.quality {
+            write!(f, ", quality: {q}")?;
+        }
+        Ok(())
+    }
+}
+
+impl MergeReport {
+    /// Serialize for [`MERGE_REPORT_FILE`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::from("sgg-merge-report")),
+            ("version", Json::from(1u64)),
+            ("hosts", Json::from(self.hosts)),
+            ("chunks", Json::from(self.chunks)),
+            ("shards", Json::from(self.shards)),
+            ("edges", Json::u64_exact(self.edges)),
+            ("profile_hash", Json::u64_exact(self.profile_hash)),
+            (
+                "degree_dist",
+                self.quality.map(|q| Json::from(q.degree_dist)).unwrap_or(Json::Null),
+            ),
+            ("dcc", self.quality.map(|q| Json::from(q.dcc)).unwrap_or(Json::Null)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("bytes", Json::u64_exact(self.bytes)),
+        ])
+    }
+}
+
+/// Validate and fold a distributed run: check every host report against
+/// the manifest (model/spec hashes), check the ranges tile
+/// `[0, total_chunks)` exactly, verify every recorded shard against its
+/// checksum and header, assemble the shards into `out_dir` (hard-link
+/// with copy fallback — names are already canonical), and fold the
+/// per-host degree partials into one profile whose edge total must equal
+/// the manifest's.
+///
+/// With `reference` supplied (the fit source's degree profile), the
+/// folded profile is scored into a [`StructuralReport`] — bit-identical
+/// to `sgg eval` over the merged directory. The [`MergeReport`] is also
+/// written into `out_dir` as [`MERGE_REPORT_FILE`].
+pub fn merge_run(
+    manifest: &RunManifest,
+    host_dirs: &[PathBuf],
+    out_dir: &Path,
+    reference: Option<&DegreeProfile>,
+) -> Result<MergeReport> {
+    let t0 = Instant::now();
+    if host_dirs.is_empty() {
+        return Err(Error::Config("merge needs at least one host directory".into()));
+    }
+    let mut reports = Vec::with_capacity(host_dirs.len());
+    for dir in host_dirs {
+        let report = HostReport::load(dir)?;
+        if report.model_hash != manifest.model_hash {
+            return Err(Error::Data(format!(
+                "{}: host generated from a different model artifact (hash {:016x}, \
+                 manifest {:016x})",
+                dir.display(),
+                report.model_hash,
+                manifest.model_hash
+            )));
+        }
+        if report.spec_hash != manifest.spec_hash {
+            return Err(Error::Data(format!(
+                "{}: host ran a different job shape (spec hash {:016x}, manifest \
+                 {:016x})",
+                dir.display(),
+                report.spec_hash,
+                manifest.spec_hash
+            )));
+        }
+        reports.push((dir.clone(), report));
+    }
+    validate_tiling(
+        &reports.iter().map(|(_, r)| (r.start, r.end)).collect::<Vec<_>>(),
+        manifest.total_chunks,
+    )?;
+
+    // Verify every recorded shard before moving anything: header edge
+    // count vs record, then a full checksum pass over the bytes.
+    for (dir, report) in &reports {
+        let mut host_edges = 0u64;
+        for rec in &report.chunks {
+            if rec.chunk < report.start || rec.chunk >= report.end {
+                return Err(Error::Data(format!(
+                    "{}: chunk {} recorded outside the host's range {}..{}",
+                    dir.display(),
+                    rec.chunk,
+                    report.start,
+                    report.end
+                )));
+            }
+            let path = shard_path(dir, rec.chunk);
+            let (_spec, edges) = io::read_binary_header(&path)?;
+            if edges != rec.edges {
+                return Err(Error::Data(format!(
+                    "{}: holds {edges} edges but the host report recorded {} — shard \
+                     rewritten after the run?",
+                    path.display(),
+                    rec.edges
+                )));
+            }
+            let checksum = fnv1a_file(&path)?;
+            if checksum != rec.checksum {
+                return Err(Error::Data(format!(
+                    "{}: checksum mismatch ({checksum:016x}, host report recorded \
+                     {:016x}) — shard corrupted in transit?",
+                    path.display(),
+                    rec.checksum
+                )));
+            }
+            host_edges += rec.edges;
+        }
+        let profiled = report.profile.as_ref().map(|p| p.edges).unwrap_or(0);
+        if profiled != host_edges {
+            return Err(Error::Data(format!(
+                "{}: degree partial covers {profiled} edges but the shard records sum \
+                 to {host_edges}",
+                dir.display()
+            )));
+        }
+    }
+
+    // Assemble: every shard keeps its canonical name, so the merged
+    // directory is byte-identical to a single-host run's output.
+    std::fs::create_dir_all(out_dir)?;
+    let mut shards = 0usize;
+    let mut bytes = 0u64;
+    for (dir, report) in &reports {
+        for rec in &report.chunks {
+            let src = shard_path(dir, rec.chunk);
+            let dst = shard_path(out_dir, rec.chunk);
+            if dst.exists() {
+                std::fs::remove_file(&dst)?;
+            }
+            if std::fs::hard_link(&src, &dst).is_err() {
+                // cross-device (or FS without hard links): fall back to
+                // a plain copy
+                std::fs::copy(&src, &dst)?;
+            }
+            shards += 1;
+            bytes += std::fs::metadata(&dst)?.len();
+        }
+    }
+
+    // Fold the degree partials with the exact in-process merge.
+    let mut acc = DegreeAccumulator::new();
+    for (_dir, report) in &reports {
+        if let Some(partial) = &report.profile {
+            acc.merge(partial.to_accumulator()?);
+        }
+    }
+    if acc.edges_observed() != manifest.edges {
+        return Err(Error::Data(format!(
+            "merged run holds {} edges but the manifest promises {} — a host ran an \
+             incomplete or wrong-sized job",
+            acc.edges_observed(),
+            manifest.edges
+        )));
+    }
+    let folded = acc.finalize();
+    let quality = reference.map(|orig| StructuralReport {
+        degree_dist: degree::degree_dist_score_profiles(orig, &folded),
+        dcc: degree::dcc_profiles(orig, &folded, DCC_SAMPLES),
+    });
+    let report = MergeReport {
+        hosts: reports.len(),
+        chunks: manifest.total_chunks,
+        shards,
+        edges: manifest.edges,
+        profile_hash: degree::profile_hash(&folded),
+        quality,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        bytes,
+        out_dir: out_dir.to_path_buf(),
+    };
+    let doc = report.to_json();
+    let path = out_dir.join(MERGE_REPORT_FILE);
+    std::fs::write(&path, format!("{doc}\n")).map_err(|e| {
+        Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+    })?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiling_accepts_exact_cover_in_any_order() {
+        validate_tiling(&[(4, 9), (0, 4), (9, 16)], 16).unwrap();
+        validate_tiling(&[(0, 1)], 1).unwrap();
+    }
+
+    #[test]
+    fn tiling_rejects_gap_overlap_and_short_cover() {
+        let gap = validate_tiling(&[(0, 4), (6, 16)], 16).unwrap_err();
+        assert!(gap.to_string().contains("gap"), "{gap}");
+        let overlap = validate_tiling(&[(0, 8), (4, 16)], 16).unwrap_err();
+        assert!(overlap.to_string().contains("overlap"), "{overlap}");
+        let dup = validate_tiling(&[(0, 8), (0, 8), (8, 16)], 16).unwrap_err();
+        assert!(dup.to_string().contains("overlap"), "{dup}");
+        let short = validate_tiling(&[(0, 8)], 16).unwrap_err();
+        assert!(short.to_string().contains("8 of 16"), "{short}");
+        let empty = validate_tiling(&[(0, 8), (8, 8), (8, 16)], 16).unwrap_err();
+        assert!(empty.to_string().contains("empty"), "{empty}");
+    }
+
+    #[test]
+    fn manifest_rejects_foreign_and_edited_documents() {
+        let not_a_manifest = Json::obj(vec![("hello", Json::from(1u64))]);
+        let err = RunManifest::from_json(&not_a_manifest).unwrap_err();
+        assert!(err.to_string().contains("no `format` header"), "{err}");
+
+        let wrong = Json::obj(vec![("format", Json::from("sggm"))]);
+        let err = RunManifest::from_json(&wrong).unwrap_err();
+        assert!(err.to_string().contains("format `sggm`"), "{err}");
+    }
+}

@@ -28,8 +28,13 @@
 //! * [`Pipeline::builder`] — fluent programmatic configuration.
 //! * [`FittedPipeline::load`] — reconstruct a pipeline from a `.sggm`
 //!   artifact without the source dataset.
+//! * [`distrib`] — distributed generation: versioned run manifests
+//!   (`sgg plan`), per-host chunk-range execution (`sgg generate
+//!   --chunks`), and merge-time validation + metric folding
+//!   (`sgg merge`).
 
 pub mod artifact;
+pub mod distrib;
 pub mod fault;
 pub mod orchestrator;
 pub mod parallel;
@@ -38,6 +43,7 @@ pub mod sink;
 pub mod spec;
 
 pub use artifact::{SourceSummary, SGGM_FORMAT, SGGM_VERSION};
+pub use distrib::{HostReport, MergeReport, RunManifest};
 pub use fault::{FaultPlan, FaultReader, FaultSink, RetryPolicy, RetryingSink};
 pub use parallel::{ChunkPlan, ParallelChunkRunner, SplitPlan};
 pub use registry::{Registries, Registry};

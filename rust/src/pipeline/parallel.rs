@@ -193,6 +193,7 @@ pub struct ParallelChunkRunner {
     queue_capacity: usize,
     retry: RetryPolicy,
     resume_from: usize,
+    stop_before: Option<usize>,
     faults: Option<FaultPlan>,
 }
 
@@ -206,16 +207,19 @@ impl ParallelChunkRunner {
             queue_capacity: queue_capacity.max(1),
             retry: RetryPolicy::default(),
             resume_from: 0,
+            stop_before: None,
             faults: None,
         }
     }
 
     /// Runner configured from a [`ChunkConfig`]: worker count, channel
-    /// capacity, retry policy, resume watermark, and fault plan.
+    /// capacity, retry policy, resume watermark, chunk-range stop bound,
+    /// and fault plan.
     pub fn from_config(cfg: ChunkConfig) -> ParallelChunkRunner {
         ParallelChunkRunner {
             retry: cfg.retry,
             resume_from: cfg.resume_from,
+            stop_before: cfg.stop_before,
             faults: cfg.faults,
             ..ParallelChunkRunner::new(cfg.workers, cfg.queue_capacity)
         }
@@ -228,9 +232,10 @@ impl ParallelChunkRunner {
     /// transient failures), injecting the fault plan's scheduled
     /// sampling faults and panics first.
     fn sample_chunk(&self, plan: &dyn ChunkPlan, index: usize) -> Result<EdgeList> {
-        if index < self.resume_from {
-            // already persisted by the interrupted run; empty chunks are
-            // counted for ordering but never forwarded to the sink
+        if index < self.resume_from || self.stop_before.map_or(false, |stop| index >= stop) {
+            // outside this process's chunk range (already persisted by an
+            // interrupted run, or owned by another host); empty chunks
+            // are counted for ordering but never forwarded to the sink
             return Ok(EdgeList::default());
         }
         fault::run_attempts(self.retry, |attempt| {
@@ -675,6 +680,29 @@ mod tests {
                 })
                 .unwrap();
             assert_eq!(order, (4..10).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn chunk_range_restriction_samples_only_its_slice() {
+        let plan = TestPlan { n: 12, per: 20, seed: 4, fail_at: None };
+        for workers in [1, 3] {
+            let cfg = ChunkConfig {
+                workers,
+                queue_capacity: 2,
+                resume_from: 3,
+                stop_before: Some(8),
+                ..ChunkConfig::default()
+            };
+            let runner = ParallelChunkRunner::from_config(cfg);
+            let mut order = Vec::new();
+            runner
+                .run(&plan, &mut |c| {
+                    order.push(c.index);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(order, (3..8).collect::<Vec<_>>(), "workers={workers}");
         }
     }
 

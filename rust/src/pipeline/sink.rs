@@ -235,6 +235,19 @@ impl ShardSink {
     /// deleting is always safe and keeps the final directory byte-
     /// identical to an uninterrupted run).
     pub fn resume(out_dir: &Path, chunks: ChunkConfig) -> Result<(ShardSink, usize)> {
+        ShardSink::resume_range(out_dir, chunks, 0)
+    }
+
+    /// [`ShardSink::resume`] for a range-restricted (distributed host)
+    /// run whose first owned chunk is `start`: the consecutive completed
+    /// prefix is scanned from `start` instead of 0, and only shards at
+    /// or past the returned watermark are swept. Shards below `start`
+    /// belong to other hosts' ranges and are never touched.
+    pub fn resume_range(
+        out_dir: &Path,
+        chunks: ChunkConfig,
+        start: usize,
+    ) -> Result<(ShardSink, usize)> {
         let mut sink = ShardSink::new(out_dir, chunks)?;
         for entry in std::fs::read_dir(out_dir)? {
             let p = entry?.path();
@@ -242,7 +255,7 @@ impl ShardSink {
                 std::fs::remove_file(&p)?;
             }
         }
-        let mut completed = 0usize;
+        let mut completed = start;
         loop {
             let p = shard_path(out_dir, completed);
             if !p.exists() {

@@ -57,6 +57,12 @@ pub struct ChunkConfig {
     /// by an interrupted run and are skipped (counted for ordering,
     /// never re-sampled, never forwarded to the sink).
     pub resume_from: usize,
+    /// Exclusive upper bound on chunks this process samples: chunks at or
+    /// above it are skipped exactly like resumed chunks. `None` runs the
+    /// plan to its end. Together with `resume_from`, this restricts one
+    /// run to the half-open chunk range `[resume_from, stop_before)` —
+    /// the unit of distributed work ([`crate::pipeline::distrib`]).
+    pub stop_before: Option<usize>,
     /// Deterministic fault-injection schedule (harness / tests); `None`
     /// in production runs.
     pub faults: Option<crate::pipeline::fault::FaultPlan>,
@@ -70,6 +76,7 @@ impl Default for ChunkConfig {
             queue_capacity: 4,
             retry: crate::pipeline::fault::RetryPolicy::default(),
             resume_from: 0,
+            stop_before: None,
             faults: None,
         }
     }

@@ -264,20 +264,25 @@ impl StructureGenerator for KroneckerGen {
         (self.spec, self.edges)
     }
 
-    /// Out-of-core override: prefix-partitioned chunked sampling
-    /// ([`super::chunked::KroneckerChunkPlan`], paper §10) executed by the
-    /// shared [`crate::pipeline::parallel::ParallelChunkRunner`] — bounded
+    /// Out-of-core override: the prefix-partitioned decomposition
+    /// ([`super::chunked::KroneckerChunkPlan`], paper §10) — bounded
     /// peak memory, and bit-identical output for any worker count.
-    fn generate_into(
-        &self,
+    fn chunk_plan<'a>(
+        &'a self,
         n_src: u64,
         n_dst: u64,
         edges: u64,
         seed: u64,
-        chunks: super::chunked::ChunkConfig,
-        sink: &mut dyn FnMut(super::chunked::Chunk) -> Result<()>,
-    ) -> Result<u64> {
-        super::chunked::generate_chunked(self, n_src, n_dst, edges, seed, chunks, sink)
+        prefix_levels: u32,
+    ) -> Result<Box<dyn crate::pipeline::parallel::ChunkPlan + 'a>> {
+        Ok(Box::new(super::chunked::KroneckerChunkPlan::new(
+            self,
+            n_src,
+            n_dst,
+            edges,
+            seed,
+            prefix_levels,
+        )))
     }
 
     fn save_state(&self) -> Result<Json> {

@@ -35,7 +35,7 @@ pub mod theta;
 pub mod trilliong;
 
 use crate::graph::{EdgeList, PartiteSpec};
-use crate::pipeline::parallel::{ParallelChunkRunner, SplitPlan};
+use crate::pipeline::parallel::{ChunkPlan, ParallelChunkRunner, SplitPlan};
 use crate::pipeline::registry::Registry;
 use crate::pipeline::spec::Params;
 use crate::util::json::Json;
@@ -73,21 +73,46 @@ pub trait StructureGenerator: Send + Sync {
         self.generate_sized(n_src, n_dst, edges, seed)
     }
 
-    /// Stream generation into `sink` chunk by chunk, returning the total
-    /// edge count. A sink error aborts generation and propagates.
+    /// The deterministic chunk decomposition this backend uses for a
+    /// job of the given sizes/seed — the single source of truth for
+    /// chunk counts, budgets, and per-chunk PRNG streams shared by
+    /// in-process streaming ([`Self::generate_into`]) and distributed
+    /// planning ([`crate::pipeline::distrib`], which must count chunks
+    /// exactly as execution will).
     ///
     /// The default decomposition splits the edge budget into
     /// `4^prefix_levels` near-equal chunks, each sampled independently by
     /// [`Self::generate_sized`] on its own
-    /// [`chunk_seed`](crate::pipeline::parallel::chunk_seed) stream, and
-    /// executes the plan on the shared [`ParallelChunkRunner`] — so every
-    /// backend parallelizes when `chunks.workers > 1`, with output
-    /// bit-identical across worker counts. This even split is only
-    /// distribution-faithful for edge-i.i.d. samplers; generators with
-    /// sequential structure override it (Kronecker uses the §10 prefix
-    /// partition, TrillionG partitions the source-node space). With
-    /// `prefix_levels = 0` the plan has a single chunk on the raw seed —
-    /// exactly the old one-shot `generate_sized` behaviour.
+    /// [`chunk_seed`](crate::pipeline::parallel::chunk_seed) stream. This
+    /// even split is only distribution-faithful for edge-i.i.d. samplers;
+    /// generators with sequential structure override it (Kronecker uses
+    /// the §10 prefix partition, TrillionG partitions the source-node
+    /// space). With `prefix_levels = 0` the plan has a single chunk on
+    /// the raw seed — exactly the old one-shot `generate_sized`
+    /// behaviour.
+    fn chunk_plan<'a>(
+        &'a self,
+        n_src: u64,
+        n_dst: u64,
+        edges: u64,
+        seed: u64,
+        prefix_levels: u32,
+    ) -> Result<Box<dyn ChunkPlan + 'a>> {
+        Ok(Box::new(SplitPlan::even(
+            edges,
+            prefix_levels,
+            seed,
+            move |_i, budget, seed| self.generate_sized(n_src, n_dst, budget, seed),
+        )))
+    }
+
+    /// Stream generation into `sink` chunk by chunk, returning the total
+    /// edge count. A sink error aborts generation and propagates.
+    ///
+    /// Decomposes the job with [`Self::chunk_plan`] and executes it on
+    /// the shared [`ParallelChunkRunner`] — so every backend parallelizes
+    /// when `chunks.workers > 1`, with output bit-identical across worker
+    /// counts.
     fn generate_into(
         &self,
         n_src: u64,
@@ -97,10 +122,8 @@ pub trait StructureGenerator: Send + Sync {
         chunks: ChunkConfig,
         sink: &mut dyn FnMut(Chunk) -> Result<()>,
     ) -> Result<u64> {
-        let plan = SplitPlan::even(edges, chunks.prefix_levels, seed, |_i, budget, seed| {
-            self.generate_sized(n_src, n_dst, budget, seed)
-        });
-        ParallelChunkRunner::from_config(chunks).run(&plan, sink)
+        let plan = self.chunk_plan(n_src, n_dst, edges, seed, chunks.prefix_levels)?;
+        ParallelChunkRunner::from_config(chunks).run(plan.as_ref(), sink)
     }
 
     /// Serialize the fitted state for a `.sggm` model artifact (the

@@ -10,13 +10,12 @@
 //! multinomial over the per-source probabilities implied by θ, and
 //! destination descent reuses the source's quadrant path conditioning.
 
-use super::chunked::{Chunk, ChunkConfig};
 use super::kronecker::KroneckerGen;
 use super::theta::ThetaS;
 use super::StructureGenerator;
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
-use crate::pipeline::parallel::{apportion, ChunkPlan, ParallelChunkRunner};
+use crate::pipeline::parallel::{apportion, ChunkPlan};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -229,25 +228,23 @@ impl StructureGenerator for TrillionG {
     /// Out-of-core override: node-centric chunking. The source space is
     /// partitioned into contiguous bit-prefix ranges (TrillionG's
     /// "recursive vector" workers own disjoint node ranges), each sampled
-    /// independently on its own PRNG stream and executed by the shared
-    /// [`ParallelChunkRunner`]. Chunk concatenation stays source-sorted
-    /// and the output is bit-identical for any worker count.
-    fn generate_into(
-        &self,
+    /// independently on its own PRNG stream. Chunk concatenation stays
+    /// source-sorted and the output is bit-identical for any worker count.
+    fn chunk_plan<'a>(
+        &'a self,
         n_src: u64,
         n_dst: u64,
         edges: u64,
         seed: u64,
-        chunks: ChunkConfig,
-        sink: &mut dyn FnMut(Chunk) -> Result<()>,
-    ) -> Result<u64> {
+        prefix_levels: u32,
+    ) -> Result<Box<dyn ChunkPlan + 'a>> {
         if n_src == 0 || n_dst == 0 {
             return Err(Error::Config("empty partite".into()));
         }
         let (rb, db) = KroneckerGen::bits(n_src, n_dst);
         // two source bits per prefix level matches the 4^levels chunk
         // count of the Kronecker prefix scheme
-        let pb = (2 * chunks.prefix_levels).min(rb);
+        let pb = (2 * prefix_levels).min(rb);
         let n_chunks = 1usize << pb;
         let suf_bits = rb - pb;
         let p = self.theta.p();
@@ -260,7 +257,7 @@ impl StructureGenerator for TrillionG {
                 p.powi((pb - ones) as i32) * (1.0 - p).powi(ones as i32)
             })
             .collect();
-        let plan = TrillionGChunkPlan {
+        Ok(Box::new(TrillionGChunkPlan {
             gen: *self,
             spec: self.out_spec(n_src, n_dst),
             budgets: apportion(&weights, edges),
@@ -271,14 +268,14 @@ impl StructureGenerator for TrillionG {
             n_dst,
             total_edges: edges,
             seed,
-        };
-        ParallelChunkRunner::from_config(chunks).run(&plan, sink)
+        }))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::structgen::chunked::ChunkConfig;
 
     #[test]
     fn exact_edge_count() {

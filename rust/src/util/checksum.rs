@@ -1,0 +1,117 @@
+//! Shared FNV-1a checksum helper.
+//!
+//! One streaming 64-bit FNV-1a hasher used everywhere the crate needs a
+//! cheap content fingerprint: the harness's degree-profile hash, the
+//! distributed-run manifest's model hash, and per-shard checksums. FNV
+//! is not cryptographic — it detects corruption and accidental drift,
+//! which is all the conformance and merge validation paths need.
+
+use crate::Result;
+use std::io::Read;
+use std::path::Path;
+
+/// Streaming 64-bit FNV-1a hasher.
+///
+/// Feed bytes with [`Fnv1a::write`] (or integers with
+/// [`Fnv1a::write_u64`], eaten as little-endian bytes) and read the
+/// digest with [`Fnv1a::finish`]. Hashing the same bytes in any chunking
+/// yields the same digest.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a {
+    state: u64,
+}
+
+impl Fnv1a {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    /// Hasher at the FNV-1a offset basis.
+    pub fn new() -> Fnv1a {
+        Fnv1a { state: Fnv1a::OFFSET }
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(Fnv1a::PRIME);
+        }
+    }
+
+    /// Absorb one integer as its 8 little-endian bytes.
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    /// Current digest.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+/// FNV-1a digest of a byte slice.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// FNV-1a digest of a file's contents, read in buffered 1 MiB chunks so
+/// arbitrarily large shards hash in constant memory.
+pub fn fnv1a_file(path: &Path) -> Result<u64> {
+    let mut f = std::fs::File::open(path)?;
+    let mut h = Fnv1a::new();
+    let mut buf = vec![0u8; 1 << 20];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        h.write(&buf[..n]);
+    }
+    Ok(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // classic FNV-1a test vectors
+        assert_eq!(fnv1a_bytes(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_bytes(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_bytes(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn chunking_is_irrelevant() {
+        let mut h = Fnv1a::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), fnv1a_bytes(b"foobar"));
+    }
+
+    #[test]
+    fn write_u64_is_le_bytes() {
+        let mut a = Fnv1a::new();
+        a.write_u64(0x0102_0304_0506_0708);
+        let mut b = Fnv1a::new();
+        b.write(&[8, 7, 6, 5, 4, 3, 2, 1]);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn file_hash_matches_bytes() {
+        let p = std::env::temp_dir().join(format!("sgg_fnv_{}", std::process::id()));
+        std::fs::write(&p, b"shard bytes here").unwrap();
+        assert_eq!(fnv1a_file(&p).unwrap(), fnv1a_bytes(b"shard bytes here"));
+        std::fs::remove_file(&p).ok();
+    }
+}

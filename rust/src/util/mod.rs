@@ -3,6 +3,7 @@
 //! helpers, logging, and a tiny property-testing driver.
 
 pub mod args;
+pub mod checksum;
 pub mod json;
 pub mod logging;
 pub mod proptest;

@@ -1,0 +1,351 @@
+//! The distributed-run contract: a planned multi-host run, merged, is
+//! byte-identical to a single-process run from the same `.sggm` artifact
+//! and seed; the folded metric profile bit-matches the single-host
+//! profile; and the manifest/merge validation rejects wrong models,
+//! overlapping or missing chunk ranges, and corrupted shards loudly.
+
+use sgg::metrics::stream::{evaluate_shard_dirs, evaluate_shards, profile_shards};
+use sgg::metrics::{degree, DegreeProfile};
+use sgg::pipeline::distrib::{self, RunManifest, HOST_REPORT_FILE};
+use sgg::pipeline::{FittedPipeline, Pipeline, Registries, ShardSink, SizeSpec};
+use sgg::structgen::chunked::ChunkConfig;
+use sgg::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Subsampled stand-in (keeps fits fast).
+fn small(name: &str) -> sgg::datasets::Dataset {
+    let mut ds = sgg::datasets::load(name, 3).unwrap();
+    let keep: Vec<usize> = (0..ds.edges.len()).step_by(8).collect();
+    ds.edge_features = ds.edge_features.gather(&keep);
+    let mut edges = sgg::graph::EdgeList::new(ds.edges.spec);
+    for &i in &keep {
+        edges.push(ds.edges.src[i], ds.edges.dst[i]);
+    }
+    ds.edges = edges;
+    ds
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("sgg_distrib_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+/// Fit a cheap pipeline on the subsampled stand-in, save its artifact,
+/// and plan a 3-host run over the default 16-chunk decomposition.
+fn setup(tag: &str) -> (PathBuf, RunManifest) {
+    let ds = small("travel-insurance");
+    let fitted = Pipeline::builder()
+        .structure("erdos-renyi")
+        .edge_features("random")
+        .aligner("random")
+        .fit(&ds)
+        .unwrap();
+    let model =
+        std::env::temp_dir().join(format!("sgg_distrib_{}_{tag}.sggm", std::process::id()));
+    fitted.save(&model).unwrap();
+    let manifest = distrib::plan_run(&model, 3, 1, 29, 2, &Registries::builtin()).unwrap();
+    assert_eq!(manifest.total_chunks, 16);
+    assert_eq!(manifest.hosts.len(), 3);
+    (model, manifest)
+}
+
+/// Run every planned host range into its own directory.
+fn run_hosts(model: &Path, manifest: &RunManifest, tag: &str) -> Vec<PathBuf> {
+    manifest
+        .hosts
+        .iter()
+        .map(|h| {
+            let dir = tmp_dir(&format!("{tag}_h{}", h.host));
+            distrib::run_host_range(
+                model,
+                manifest,
+                h.start,
+                h.end,
+                &dir,
+                2,
+                false,
+                &Registries::builtin(),
+            )
+            .unwrap();
+            dir
+        })
+        .collect()
+}
+
+/// The reference: one process generating the whole job into one shard
+/// directory, through the ordinary (non-distributed) pipeline path.
+fn single_run(model: &Path, manifest: &RunManifest, tag: &str) -> PathBuf {
+    let dir = tmp_dir(&format!("{tag}_single"));
+    let fitted = FittedPipeline::load(model, &Registries::builtin()).unwrap();
+    let cfg = ChunkConfig {
+        prefix_levels: manifest.prefix_levels,
+        workers: 2,
+        ..ChunkConfig::default()
+    };
+    let mut sink = ShardSink::new(&dir, cfg).unwrap();
+    let size = SizeSpec::Sized {
+        n_src: manifest.n_src,
+        n_dst: manifest.n_dst,
+        edges: manifest.edges,
+    };
+    fitted.run(size, cfg, &mut sink, manifest.seed).unwrap();
+    dir
+}
+
+/// Byte-compare the `.sgg` shard sets of two directories.
+fn assert_same_shards(a: &Path, b: &Path) {
+    let list = |d: &Path| -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_dir(d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".sgg"))
+            .collect();
+        v.sort();
+        v
+    };
+    let (la, lb) = (list(a), list(b));
+    assert_eq!(
+        la,
+        lb,
+        "shard sets differ between {} and {}",
+        a.display(),
+        b.display()
+    );
+    for name in la {
+        let bytes_a = std::fs::read(a.join(&name)).unwrap();
+        let bytes_b = std::fs::read(b.join(&name)).unwrap();
+        assert_eq!(bytes_a, bytes_b, "{name} differs");
+    }
+}
+
+fn cleanup(model: &Path, dirs: &[PathBuf]) {
+    std::fs::remove_file(model).ok();
+    for d in dirs {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn manifest_roundtrips_and_rejects_edits() {
+    let (model, manifest) = setup("roundtrip");
+    let path = std::env::temp_dir().join(format!("sgg_distrib_{}.json", std::process::id()));
+    manifest.save(&path).unwrap();
+    let reloaded = RunManifest::load(&path).unwrap();
+    assert_eq!(reloaded, manifest);
+
+    // a hand-edited job field breaks the spec hash
+    let mut doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    if let Json::Obj(o) = &mut doc {
+        o.insert("total_chunks".into(), Json::Num(15.0));
+    }
+    std::fs::write(&path, doc.to_string()).unwrap();
+    let err = RunManifest::load(&path).unwrap_err();
+    assert!(err.to_string().contains("spec_hash"), "{err}");
+
+    // not a manifest at all
+    std::fs::write(&path, "{\"a\": 1}").unwrap();
+    let err = RunManifest::load(&path).unwrap_err();
+    assert!(err.to_string().contains("format"), "{err}");
+
+    std::fs::remove_file(&path).ok();
+    cleanup(&model, &[]);
+}
+
+#[test]
+fn three_hosts_merged_equal_one_process_bit_for_bit() {
+    let (model, manifest) = setup("merge3");
+    let host_dirs = run_hosts(&model, &manifest, "merge3");
+    let single = single_run(&model, &manifest, "merge3");
+
+    let merged = tmp_dir("merge3_merged");
+    let reference = sgg::datasets::load(&manifest.dataset, 1).unwrap();
+    let orig = DegreeProfile::of(&reference.edges);
+    let report = distrib::merge_run(&manifest, &host_dirs, &merged, Some(&orig)).unwrap();
+
+    // shard-for-shard byte identity with the single-process run
+    assert_same_shards(&single, &merged);
+    assert_eq!(report.edges, manifest.edges);
+    assert_eq!(report.hosts, 3);
+
+    // the folded degree profile bit-matches the single-host profile
+    let (single_prof, _) = profile_shards(&single, 1).unwrap();
+    assert_eq!(report.profile_hash, degree::profile_hash(&single_prof));
+
+    // and the folded quality scores equal a streamed eval of the output
+    let eval = evaluate_shards(&merged, &orig, 2).unwrap();
+    let quality = report.quality.unwrap();
+    assert_eq!(quality.degree_dist.to_bits(), eval.degree_dist.to_bits());
+    assert_eq!(quality.dcc.to_bits(), eval.dcc.to_bits());
+
+    let mut all = host_dirs;
+    all.extend([single, merged]);
+    cleanup(&model, &all);
+}
+
+#[test]
+fn unmerged_host_dirs_evaluate_like_the_merged_graph() {
+    let (model, manifest) = setup("evaldirs");
+    let host_dirs = run_hosts(&model, &manifest, "evaldirs");
+    let merged = tmp_dir("evaldirs_merged");
+    let reference = sgg::datasets::load(&manifest.dataset, 1).unwrap();
+    let orig = DegreeProfile::of(&reference.edges);
+    distrib::merge_run(&manifest, &host_dirs, &merged, None).unwrap();
+
+    let unmerged = evaluate_shard_dirs(&host_dirs, &orig, 2).unwrap();
+    let after_merge = evaluate_shards(&merged, &orig, 1).unwrap();
+    assert_eq!(
+        unmerged.degree_dist.to_bits(),
+        after_merge.degree_dist.to_bits()
+    );
+    assert_eq!(unmerged.dcc.to_bits(), after_merge.dcc.to_bits());
+    assert_eq!(unmerged.edges, after_merge.edges);
+    assert_eq!(unmerged.shards, after_merge.shards);
+
+    let mut all = host_dirs;
+    all.push(merged);
+    cleanup(&model, &all);
+}
+
+#[test]
+fn host_run_resumes_to_identical_bytes_and_report() {
+    let (model, manifest) = setup("resume");
+    let range = manifest.hosts[1];
+    let regs = Registries::builtin();
+
+    let full = tmp_dir("resume_full");
+    let (full_report, _) = distrib::run_host_range(
+        &model,
+        &manifest,
+        range.start,
+        range.end,
+        &full,
+        2,
+        false,
+        &regs,
+    )
+    .unwrap();
+
+    // simulate an interrupted host: only a prefix of the range completed
+    let resumed = tmp_dir("resume_partial");
+    let mid = range.start + (range.end - range.start) / 2;
+    distrib::run_host_range(
+        &model,
+        &manifest,
+        range.start,
+        mid,
+        &resumed,
+        2,
+        false,
+        &regs,
+    )
+    .unwrap();
+    // the re-run with --resume picks up the intact prefix and finishes
+    let (resumed_report, _) = distrib::run_host_range(
+        &model,
+        &manifest,
+        range.start,
+        range.end,
+        &resumed,
+        2,
+        true,
+        &regs,
+    )
+    .unwrap();
+
+    assert_same_shards(&full, &resumed);
+    assert_eq!(full_report, resumed_report);
+    cleanup(&model, &[full, resumed]);
+}
+
+#[test]
+fn wrong_model_and_wrong_range_are_rejected_before_sampling() {
+    let (model, manifest) = setup("wrongmodel");
+    let dir = tmp_dir("wrongmodel_h");
+    let regs = Registries::builtin();
+
+    let mut tampered = manifest.clone();
+    tampered.model_hash ^= 1;
+    let err =
+        distrib::run_host_range(&model, &tampered, 0, 4, &dir, 1, false, &regs).unwrap_err();
+    assert!(err.to_string().contains("model"), "{err}");
+
+    let err =
+        distrib::run_host_range(&model, &manifest, 4, 99, &dir, 1, false, &regs).unwrap_err();
+    assert!(err.to_string().contains("chunk range"), "{err}");
+
+    cleanup(&model, &[dir]);
+}
+
+#[test]
+fn merge_rejects_missing_overlapping_and_corrupted_hosts() {
+    let (model, manifest) = setup("reject");
+    let host_dirs = run_hosts(&model, &manifest, "reject");
+    let merged = tmp_dir("reject_merged");
+    let reference_manifest = manifest.clone();
+
+    // a missing host leaves a gap
+    let err = distrib::merge_run(&manifest, &host_dirs[..2], &merged, None).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("cover") || msg.contains("gap"), "{msg}");
+
+    // the same range twice overlaps
+    let dup: Vec<PathBuf> = vec![
+        host_dirs[0].clone(),
+        host_dirs[0].clone(),
+        host_dirs[1].clone(),
+        host_dirs[2].clone(),
+    ];
+    let err = distrib::merge_run(&manifest, &dup, &merged, None).unwrap_err();
+    assert!(err.to_string().contains("overlap"), "{err}");
+
+    // a host that ran a different model is caught by its report hash
+    let mut other_model = manifest.clone();
+    other_model.model_hash ^= 1;
+    let err = distrib::merge_run(&other_model, &host_dirs, &merged, None).unwrap_err();
+    assert!(err.to_string().contains("different model"), "{err}");
+
+    // truncating a shard breaks its header-vs-size validation
+    let victim_dir = &host_dirs[1];
+    let victim = std::fs::read_dir(victim_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| p.extension().map(|x| x == "sgg").unwrap_or(false))
+        .unwrap();
+    let bytes = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &bytes[..bytes.len() - 8]).unwrap();
+    let err = distrib::merge_run(&reference_manifest, &host_dirs, &merged, None).unwrap_err();
+    assert!(err.to_string().contains("bytes"), "{err}");
+
+    // same-length corruption is caught by the checksum pass
+    let mut flipped = bytes.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0xff;
+    std::fs::write(&victim, &flipped).unwrap();
+    let err = distrib::merge_run(&reference_manifest, &host_dirs, &merged, None).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "{err}");
+
+    // restoring the original bytes makes the merge pass again
+    std::fs::write(&victim, &bytes).unwrap();
+    distrib::merge_run(&reference_manifest, &host_dirs, &merged, None).unwrap();
+
+    let mut all = host_dirs;
+    all.push(merged);
+    cleanup(&model, &all);
+}
+
+#[test]
+fn host_report_is_the_completion_certificate() {
+    let (model, manifest) = setup("certificate");
+    let host_dirs = run_hosts(&model, &manifest, "certificate");
+    let merged = tmp_dir("certificate_merged");
+
+    // deleting one host's report makes its directory "incomplete"
+    std::fs::remove_file(host_dirs[2].join(HOST_REPORT_FILE)).unwrap();
+    let err = distrib::merge_run(&manifest, &host_dirs, &merged, None).unwrap_err();
+    assert!(err.to_string().contains("host report"), "{err}");
+
+    let mut all = host_dirs;
+    all.push(merged);
+    cleanup(&model, &all);
+}
