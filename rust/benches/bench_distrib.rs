@@ -70,6 +70,7 @@ fn main() {
             &dir,
             workers,
             false,
+            Default::default(),
             &regs,
         )
         .expect("host range");

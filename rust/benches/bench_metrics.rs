@@ -8,12 +8,16 @@
 //! to the in-memory ones at every worker count, and emits
 //! `BENCH_metrics.json` with shard read/write throughput and the memory
 //! evidence: streamed peak memory is bounded by the largest shard (plus
-//! the O(nodes) degree arrays), not by the edge count.
+//! the O(nodes) degree arrays), not by the edge count. A format-matrix
+//! pass re-streams the same graph as compact varint-delta `SGGEDGE2`
+//! shards, asserts the streamed scores still bit-match, and records the
+//! on-disk size of both formats.
 //!
 //! Run: `cargo bench --bench bench_metrics`
 //! Knobs: `SGG_BENCH_EDGES` (default 4_000_000), `SGG_BENCH_NODES`
 //! (default 1 << 19).
 
+use sgg::graph::io::ShardFormat;
 use sgg::graph::PartiteSpec;
 use sgg::metrics::degree::{degree_dist_score_profiles, dcc_profiles};
 use sgg::metrics::stream::{evaluate_shards, DCC_SAMPLES};
@@ -103,6 +107,38 @@ fn main() {
         ]));
     }
 
+    // --- format matrix: the same graph as compact SGGEDGE2 shards ---
+    let dir2 = std::env::temp_dir().join(format!("sgg_bench_metrics2_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir2).ok();
+    let cfg2 = ChunkConfig { format: ShardFormat::Edge2, ..cfg };
+    let t0 = std::time::Instant::now();
+    let report2 = stream_to_shards(&gen, nodes, nodes, edges, 7, cfg2, &dir2).expect("stream e2");
+    let write2_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(report2.edges_written, edges);
+    let dir_bytes = |d: &std::path::Path| -> u64 {
+        std::fs::read_dir(d)
+            .unwrap()
+            .map(|e| e.unwrap().metadata().unwrap().len())
+            .sum()
+    };
+    let (b1, b2) = (dir_bytes(&dir), dir_bytes(&dir2));
+    let r2 = evaluate_shards(&dir2, &orig, 4).expect("streamed eval over SGGEDGE2");
+    assert_eq!(
+        r2.degree_dist.to_bits(),
+        mem_score.to_bits(),
+        "SGGEDGE2 eval diverged from in-memory"
+    );
+    assert_eq!(r2.dcc.to_bits(), mem_dcc.to_bits(), "SGGEDGE2 dcc diverged from in-memory");
+    assert!(
+        b2 * 2 <= b1,
+        "SGGEDGE2 ({b2} B) should be at least 2x smaller than SGGEDGE1 ({b1} B)"
+    );
+    println!(
+        "[bench] formats: sggedge1 {b1} B, sggedge2 {b2} B ({:.2}x smaller), \
+         sggedge2 write {write2_secs:.2}s",
+        b1 as f64 / b2.max(1) as f64
+    );
+
     // memory evidence: the streamed pass holds at most one shard per
     // worker plus the O(nodes) degree arrays — bounded by chunk size,
     // not by the total edge count
@@ -142,6 +178,16 @@ fn main() {
         ("streamed_eval", Json::Arr(runs)),
         ("streamed_matches_in_memory_bit_for_bit", Json::from(true)),
         (
+            "shard_formats",
+            Json::obj(vec![
+                ("sggedge1_bytes", Json::from(b1)),
+                ("sggedge2_bytes", Json::from(b2)),
+                ("compression_ratio", Json::from(b1 as f64 / b2.max(1) as f64)),
+                ("sggedge2_write_secs", Json::from(write2_secs)),
+                ("eval_matches_bit_for_bit", Json::from(true)),
+            ]),
+        ),
+        (
             "memory",
             Json::obj(vec![
                 ("full_materialization_bytes", Json::from(mem_bytes)),
@@ -157,4 +203,5 @@ fn main() {
          full {mem_bytes} B)"
     );
     std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
 }

@@ -4,7 +4,9 @@
 //! the parallel chunk runner at 1/2/4/8 workers, verifies every run
 //! produces the identical edge stream (checksum), and emits
 //! `BENCH_parallel.json` with edges/sec per worker count — CI uploads it
-//! as an artifact.
+//! as an artifact. The single-worker run doubles as the hot-path
+//! regression gate for the batched PRNG/alias sampling and the chunk
+//! buffer arena: `sequential_edges_per_sec` is tracked at the top level.
 //!
 //! Run: `cargo bench --bench bench_parallel`
 //! Knobs: `SGG_BENCH_EDGES` (default 8_000_000), `SGG_BENCH_NODES`
@@ -86,6 +88,7 @@ fn main() {
             ]),
         ),
         ("bit_identical_across_worker_counts", Json::from(true)),
+        ("sequential_edges_per_sec", Json::from(seq_eps)),
         ("speedup_at_4_workers", Json::from(speedup_at_4)),
         ("runs", Json::Arr(runs)),
     ]);

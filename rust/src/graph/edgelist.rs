@@ -53,6 +53,48 @@ impl EdgeList {
         self.dst.push(d);
     }
 
+    /// Drop all edges, keeping the allocated capacity.
+    pub fn clear(&mut self) {
+        self.src.clear();
+        self.dst.clear();
+    }
+
+    /// Reuse this list for a new chunk: drop the edges, keep the
+    /// allocations, and take on `spec`. The arena primitive behind the
+    /// parallel runner's recycled chunk buffers.
+    pub fn reset(&mut self, spec: PartiteSpec) {
+        self.clear();
+        self.spec = spec;
+    }
+
+    /// Reserve capacity for at least `additional` more edges.
+    pub fn reserve(&mut self, additional: usize) {
+        self.src.reserve(additional);
+        self.dst.reserve(additional);
+    }
+
+    /// Allocated capacity in edges (minimum of the two columns).
+    pub fn capacity(&self) -> usize {
+        self.src.capacity().min(self.dst.capacity())
+    }
+
+    /// Sort edges by (src, dst), keeping duplicates — the within-chunk
+    /// canonical order the delta-encoded shard format stores. Unlike
+    /// [`EdgeList::sort_dedup`] the multiset is unchanged.
+    pub fn sort_within(&mut self) {
+        let mut keys: Vec<u128> = self
+            .iter()
+            .map(|(s, d)| ((s as u128) << 64) | d as u128)
+            .collect();
+        keys.sort_unstable();
+        self.src.clear();
+        self.dst.clear();
+        for k in keys {
+            self.src.push((k >> 64) as u64);
+            self.dst.push(k as u64);
+        }
+    }
+
     /// Append all edges of another list (same spec assumed).
     pub fn extend_from(&mut self, other: &EdgeList) {
         self.src.extend_from_slice(&other.src);
@@ -185,6 +227,26 @@ mod tests {
         assert_eq!(e.len(), 3);
         let pairs: Vec<_> = e.iter().collect();
         assert_eq!(pairs, vec![(0, 0), (1, 2), (3, 3)]);
+    }
+
+    #[test]
+    fn sort_within_keeps_duplicates() {
+        let mut e = EdgeList::from_pairs(spec(4, 4), &[(3, 1), (0, 2), (3, 1), (0, 0)]);
+        e.sort_within();
+        let pairs: Vec<_> = e.iter().collect();
+        assert_eq!(pairs, vec![(0, 0), (0, 2), (3, 1), (3, 1)]);
+    }
+
+    #[test]
+    fn reset_keeps_capacity_and_swaps_spec() {
+        let mut e = EdgeList::with_capacity(spec(4, 4), 64);
+        e.push(1, 1);
+        let cap = e.capacity();
+        assert!(cap >= 64);
+        e.reset(PartiteSpec::square(9));
+        assert!(e.is_empty());
+        assert_eq!(e.spec, PartiteSpec::square(9));
+        assert_eq!(e.capacity(), cap);
     }
 
     #[test]

@@ -1,5 +1,21 @@
-//! On-disk edge-list formats: a compact little-endian binary format for
-//! shard outputs (16 bytes/edge) and a TSV text format for interchange.
+//! On-disk edge-list formats: two binary shard encodings plus a TSV
+//! text format for interchange.
+//!
+//! * `SGGEDGE1` — fixed-width little-endian records, 16 bytes/edge, in
+//!   sampling order. Simple, seekable, byte-stable across runs.
+//! * `SGGEDGE2` — edges sorted by `(src, dst)` within the shard and
+//!   delta-encoded as LEB128 varints (typically 3–5× smaller). The
+//!   header carries the payload length and an FNV-1a payload checksum;
+//!   decoding is strict (exact edge count, exact payload consumption,
+//!   overflow-checked deltas) and every corruption fails loudly with
+//!   [`Error::ShardIo`] naming the file and byte offset.
+//!
+//! Readers auto-detect the format from the 8-byte magic, so a
+//! [`ShardReader`] directory may mix formats (e.g. distributed hosts on
+//! different settings). Because `SGGEDGE2` re-orders within a shard,
+//! cross-format identity is defined on *decoded edges*: the
+//! order-invariant [`decoded_checksum`] is the contract distributed
+//! runs, resume, and the conformance harness pin — not raw bytes.
 //!
 //! Binary reads and writes move data through a reusable ~1 MiB record
 //! buffer (one syscall per batch, not per edge), and every header is
@@ -12,21 +28,161 @@
 use super::bipartite::PartiteSpec;
 use super::edgelist::EdgeList;
 use crate::error::{Error, Result};
+use crate::util::checksum::{fnv1a_bytes, Fnv1a};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"SGGEDGE1";
+const MAGIC2: &[u8; 8] = b"SGGEDGE2";
 
 /// Fixed header size: magic + n_src + n_dst + square + n_edges.
 const HEADER_LEN: usize = 8 + 8 + 8 + 1 + 8;
 
+/// `SGGEDGE2` header: the `SGGEDGE1` fields + payload_len + payload FNV.
+const HEADER2_LEN: usize = HEADER_LEN + 8 + 8;
+
 /// Edges per IO batch (×16 bytes ≈ 1 MiB buffers).
 const IO_BATCH_EDGES: usize = 65_536;
+
+/// On-disk shard encoding. Decoded edges are identical across formats —
+/// only bytes, ordering-within-shard, and size differ.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardFormat {
+    /// `SGGEDGE1`: fixed-width 16 bytes/edge, sampling order preserved.
+    #[default]
+    Edge1,
+    /// `SGGEDGE2`: sorted within shard, varint delta-encoded, payload
+    /// checksum in the header.
+    Edge2,
+}
+
+impl ShardFormat {
+    /// Parse a spec/CLI format name (`sggedge1`/`edge1`, `sggedge2`/`edge2`).
+    pub fn parse(s: &str) -> Option<ShardFormat> {
+        match s {
+            "sggedge1" | "edge1" => Some(ShardFormat::Edge1),
+            "sggedge2" | "edge2" => Some(ShardFormat::Edge2),
+            _ => None,
+        }
+    }
+
+    /// Canonical spec name of this format.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardFormat::Edge1 => "sggedge1",
+            ShardFormat::Edge2 => "sggedge2",
+        }
+    }
+}
+
+impl std::fmt::Display for ShardFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Error-mapping closure attaching shard-file context: a failed shard
 /// in a thousand-shard run is identifiable from the message alone.
 fn shard_io(path: &Path, offset: u64) -> impl FnOnce(std::io::Error) -> Error + '_ {
     move |source| Error::ShardIo { path: path.to_path_buf(), offset, source }
+}
+
+/// A corruption finding (not an OS error) reported with shard context:
+/// same [`Error::ShardIo`] shape, `InvalidData` source, never transient.
+fn shard_corrupt(path: &Path, offset: u64, msg: String) -> Error {
+    Error::ShardIo {
+        path: path.to_path_buf(),
+        offset,
+        source: std::io::Error::new(std::io::ErrorKind::InvalidData, msg),
+    }
+}
+
+/// Append one LEB128 varint (7 data bits per byte, high bit = continue).
+fn push_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            break;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+/// Read one LEB128 varint at `*pos`, advancing it. `None` on truncation
+/// or a value that overflows u64 (more than 10 bytes / stray high bits).
+fn read_varint(payload: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *payload.get(*pos)?;
+        *pos += 1;
+        let bits = (b & 0x7f) as u64;
+        if shift == 63 && bits > 1 {
+            return None;
+        }
+        v |= bits << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return None;
+        }
+    }
+}
+
+/// Encode the `SGGEDGE2` payload: edges sorted by `(src, dst)` (the
+/// input order is irrelevant — the format's canonical order is sorted),
+/// then per edge `varint(Δsrc)` followed by `varint(dst − prev_dst)`
+/// when Δsrc = 0 (runs within one source) or `varint(dst)` when the
+/// source advanced. `buf` is cleared and reused.
+fn encode_delta_payload(edges: &EdgeList, buf: &mut Vec<u8>) {
+    buf.clear();
+    let mut keys: Vec<u128> = edges
+        .iter()
+        .map(|(s, d)| ((s as u128) << 64) | d as u128)
+        .collect();
+    keys.sort_unstable();
+    let (mut prev_s, mut prev_d) = (0u64, 0u64);
+    for k in keys {
+        let s = (k >> 64) as u64;
+        let d = k as u64;
+        let ds = s - prev_s;
+        push_varint(buf, ds);
+        if ds == 0 {
+            push_varint(buf, d - prev_d);
+        } else {
+            push_varint(buf, d);
+        }
+        prev_s = s;
+        prev_d = d;
+    }
+}
+
+/// Order-invariant multiset checksum of decoded edges: the wrapping sum
+/// over edges of the FNV-1a digest of `src‖dst` (little-endian). Equal
+/// for any within-shard ordering of the same edge multiset, so an
+/// `SGGEDGE1` shard (sampling order) and its `SGGEDGE2` re-encoding
+/// (sorted) checksum identically. This is the quantity distributed host
+/// reports, `sgg merge` validation, and the conformance harness pin —
+/// the **decoded-edge determinism contract** that replaced raw-byte
+/// identity when the compressed format landed.
+pub fn decoded_checksum(edges: &EdgeList) -> u64 {
+    let mut sum = 0u64;
+    for (s, d) in edges.iter() {
+        let mut h = Fnv1a::new();
+        h.write_u64(s);
+        h.write_u64(d);
+        sum = sum.wrapping_add(h.finish());
+    }
+    sum
+}
+
+/// [`decoded_checksum`] of one shard file in either format.
+pub fn shard_decoded_checksum(path: &Path) -> Result<u64> {
+    Ok(decoded_checksum(&read_binary(path)?))
 }
 
 /// Write an edge list in the binary shard format:
@@ -59,27 +215,93 @@ pub fn write_binary(path: &Path, edges: &EdgeList) -> Result<()> {
     Ok(())
 }
 
-/// [`write_binary`] with crash atomicity: the shard is staged as
+/// Write an edge list in the `SGGEDGE2` format:
+/// `magic | n_src u64 | n_dst u64 | square u8 | n_edges u64 |
+/// payload_len u64 | payload_fnv u64 | delta-varint payload`.
+///
+/// Edges are sorted by `(src, dst)` during encoding regardless of input
+/// order — sorted-within-shard is the format's canonical order.
+/// `payload` is the caller's reusable encode scratch (cleared here), so
+/// a sink writing thousands of shards allocates the staging buffer once.
+pub fn write_binary2_with(path: &Path, edges: &EdgeList, payload: &mut Vec<u8>) -> Result<()> {
+    encode_delta_payload(edges, payload);
+    let mut f = std::fs::File::create(path).map_err(shard_io(path, 0))?;
+    let mut head = Vec::with_capacity(HEADER2_LEN);
+    head.extend_from_slice(MAGIC2);
+    head.extend_from_slice(&edges.spec.n_src.to_le_bytes());
+    head.extend_from_slice(&edges.spec.n_dst.to_le_bytes());
+    head.push(edges.spec.square as u8);
+    head.extend_from_slice(&(edges.len() as u64).to_le_bytes());
+    head.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    head.extend_from_slice(&fnv1a_bytes(payload).to_le_bytes());
+    f.write_all(&head).map_err(shard_io(path, 0))?;
+    f.write_all(payload).map_err(shard_io(path, HEADER2_LEN as u64))?;
+    Ok(())
+}
+
+/// Write an edge list in the `SGGEDGE2` format (one-shot scratch).
+pub fn write_binary2(path: &Path, edges: &EdgeList) -> Result<()> {
+    write_binary2_with(path, edges, &mut Vec::new())
+}
+
+/// Write an edge list in the requested shard format.
+pub fn write_shard(path: &Path, edges: &EdgeList, format: ShardFormat) -> Result<()> {
+    match format {
+        ShardFormat::Edge1 => write_binary(path, edges),
+        ShardFormat::Edge2 => write_binary2(path, edges),
+    }
+}
+
+/// [`write_shard`] with crash atomicity: the shard is staged as
 /// `<path>.tmp` and renamed into place only after every byte is
 /// written, so an interrupted run never leaves a partial file under the
 /// final name. A complete `shard-NNNNN.sgg` therefore doubles as that
 /// chunk's durable completion record — the basis of `--resume`.
-pub fn write_binary_atomic(path: &Path, edges: &EdgeList) -> Result<()> {
+/// `scratch` is the reusable `SGGEDGE2` encode buffer (unused by
+/// `SGGEDGE1`).
+pub fn write_shard_atomic_with(
+    path: &Path,
+    edges: &EdgeList,
+    format: ShardFormat,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
     let mut tmp = path.as_os_str().to_os_string();
     tmp.push(".tmp");
     let tmp = PathBuf::from(tmp);
-    if let Err(e) = write_binary(&tmp, edges) {
+    let staged = match format {
+        ShardFormat::Edge1 => write_binary(&tmp, edges),
+        ShardFormat::Edge2 => write_binary2_with(&tmp, edges, scratch),
+    };
+    if let Err(e) = staged {
         std::fs::remove_file(&tmp).ok();
         return Err(e);
     }
     std::fs::rename(&tmp, path).map_err(shard_io(path, 0))
 }
 
-/// Parse and validate the fixed-size binary header.
-fn parse_header(h: &[u8; HEADER_LEN], path: &Path) -> Result<(PartiteSpec, u64)> {
-    if &h[0..8] != MAGIC {
-        return Err(Error::Data(format!("{}: bad magic", path.display())));
-    }
+/// [`write_shard_atomic_with`] with a one-shot scratch buffer.
+pub fn write_shard_atomic(path: &Path, edges: &EdgeList, format: ShardFormat) -> Result<()> {
+    write_shard_atomic_with(path, edges, format, &mut Vec::new())
+}
+
+/// [`write_binary`] with crash atomicity (see [`write_shard_atomic_with`]).
+pub fn write_binary_atomic(path: &Path, edges: &EdgeList) -> Result<()> {
+    write_shard_atomic(path, edges, ShardFormat::Edge1)
+}
+
+/// Common header fields of either on-disk format, validated against the
+/// actual file size. For `SGGEDGE1`, `payload_len` is the derived
+/// `n_edges × 16` and `payload_fnv` is 0 (the format carries none).
+struct RawHeader {
+    format: ShardFormat,
+    spec: PartiteSpec,
+    n_edges: u64,
+    payload_len: u64,
+    payload_fnv: u64,
+}
+
+/// Decode the spec fields shared by both headers (bytes 8..33).
+fn parse_spec_fields(h: &[u8]) -> (PartiteSpec, u64) {
     let n_src = u64::from_le_bytes(h[8..16].try_into().unwrap());
     let n_dst = u64::from_le_bytes(h[16..24].try_into().unwrap());
     let square = h[24] == 1;
@@ -89,12 +311,12 @@ fn parse_header(h: &[u8; HEADER_LEN], path: &Path) -> Result<(PartiteSpec, u64)>
     } else {
         PartiteSpec::bipartite(n_src, n_dst)
     };
-    Ok((spec, n_edges))
+    (spec, n_edges)
 }
 
-/// Check that the header's edge count matches the file's actual size —
-/// a corrupt or truncated header must not drive `with_capacity` or a
-/// silent short read.
+/// Check that an `SGGEDGE1` header's edge count matches the file's
+/// actual size — a corrupt or truncated header must not drive
+/// `with_capacity` or a silent short read.
 fn validate_file_len(path: &Path, actual: u64, n_edges: u64) -> Result<()> {
     let expected = n_edges
         .checked_mul(16)
@@ -114,40 +336,140 @@ fn validate_file_len(path: &Path, actual: u64, n_edges: u64) -> Result<()> {
     Ok(())
 }
 
-/// Open a shard, parse its header, and validate the declared edge count
-/// against the file size — the shared prelude of every binary read
-/// path. The returned handle is positioned at the first edge record.
-fn open_validated(path: &Path) -> Result<(std::fs::File, PartiteSpec, u64)> {
+/// Open a shard, auto-detect its format from the magic, and validate
+/// the header against the file size — the shared prelude of every
+/// binary read path. The returned handle is positioned at the first
+/// payload byte. A recognized `SGGEDGE` family magic with an unknown
+/// version byte is an [`Error::ShardIo`] at offset 7 (a format this
+/// build cannot read is shard-level corruption from its point of view);
+/// a foreign magic stays the classic `bad magic` data error.
+fn open_validated(path: &Path) -> Result<(std::fs::File, RawHeader)> {
     let mut f = std::fs::File::open(path).map_err(shard_io(path, 0))?;
     let actual = f.metadata().map_err(shard_io(path, 0))?.len();
-    if (actual as usize) < HEADER_LEN {
+    if actual < 8 {
         return Err(Error::Data(format!(
             "{}: {actual} bytes is shorter than the {HEADER_LEN}-byte header",
             path.display()
         )));
     }
-    let mut h = [0u8; HEADER_LEN];
-    f.read_exact(&mut h).map_err(shard_io(path, 0))?;
-    let (spec, n_edges) = parse_header(&h, path)?;
-    validate_file_len(path, actual, n_edges)?;
-    Ok((f, spec, n_edges))
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).map_err(shard_io(path, 0))?;
+    if &magic == MAGIC {
+        if (actual as usize) < HEADER_LEN {
+            return Err(Error::Data(format!(
+                "{}: {actual} bytes is shorter than the {HEADER_LEN}-byte header",
+                path.display()
+            )));
+        }
+        let mut h = [0u8; HEADER_LEN];
+        h[0..8].copy_from_slice(&magic);
+        f.read_exact(&mut h[8..]).map_err(shard_io(path, 8))?;
+        let (spec, n_edges) = parse_spec_fields(&h);
+        validate_file_len(path, actual, n_edges)?;
+        let header = RawHeader {
+            format: ShardFormat::Edge1,
+            spec,
+            n_edges,
+            payload_len: n_edges * 16,
+            payload_fnv: 0,
+        };
+        return Ok((f, header));
+    }
+    if &magic == MAGIC2 {
+        if (actual as usize) < HEADER2_LEN {
+            return Err(shard_corrupt(
+                path,
+                actual,
+                format!("{actual} bytes is shorter than the {HEADER2_LEN}-byte SGGEDGE2 header"),
+            ));
+        }
+        let mut h = [0u8; HEADER2_LEN];
+        h[0..8].copy_from_slice(&magic);
+        f.read_exact(&mut h[8..]).map_err(shard_io(path, 8))?;
+        let (spec, n_edges) = parse_spec_fields(&h);
+        let payload_len = u64::from_le_bytes(h[33..41].try_into().unwrap());
+        let payload_fnv = u64::from_le_bytes(h[41..49].try_into().unwrap());
+        let expected = payload_len.checked_add(HEADER2_LEN as u64).ok_or_else(|| {
+            shard_corrupt(
+                path,
+                33,
+                format!("header payload length {payload_len} overflows the file size"),
+            )
+        })?;
+        if actual != expected {
+            return Err(shard_corrupt(
+                path,
+                actual.min(expected),
+                format!(
+                    "header claims a {payload_len}-byte payload ({expected} bytes) \
+                     but file is {actual} bytes"
+                ),
+            ));
+        }
+        // Each edge takes at least two varint bytes, so an inflated edge
+        // count is rejected before it drives any allocation.
+        let min_payload = n_edges.checked_mul(2).ok_or_else(|| {
+            shard_corrupt(
+                path,
+                25,
+                format!("header edge count {n_edges} overflows the payload size"),
+            )
+        })?;
+        if payload_len < min_payload {
+            return Err(shard_corrupt(
+                path,
+                25,
+                format!("header claims {n_edges} edges but the payload is only {payload_len} bytes"),
+            ));
+        }
+        let header =
+            RawHeader { format: ShardFormat::Edge2, spec, n_edges, payload_len, payload_fnv };
+        return Ok((f, header));
+    }
+    if magic.starts_with(b"SGGEDGE") {
+        return Err(shard_corrupt(
+            path,
+            7,
+            format!(
+                "unsupported shard format version `{}` (expected SGGEDGE1 or SGGEDGE2)",
+                magic[7].escape_ascii()
+            ),
+        ));
+    }
+    Err(Error::Data(format!("{}: bad magic", path.display())))
 }
 
-/// Read and validate only the header of a binary shard: its partite
-/// spec and edge count. The edge count is checked against the file size.
+/// Read and validate only the header of a binary shard (either format):
+/// its partite spec and edge count, checked against the file size.
 pub fn read_binary_header(path: &Path) -> Result<(PartiteSpec, u64)> {
-    let (_f, spec, n_edges) = open_validated(path)?;
-    Ok((spec, n_edges))
+    let (_f, h) = open_validated(path)?;
+    Ok((h.spec, h.n_edges))
 }
 
-/// Read the binary shard format written by [`write_binary`]. The header
-/// edge count is validated against the file size before it is trusted
-/// (no blind `with_capacity`, no silent truncation), and records are
-/// read through a reusable ~1 MiB batch buffer.
+/// Read and validate only the header of a binary shard, including which
+/// on-disk format it uses.
+pub fn read_shard_header(path: &Path) -> Result<ShardHeader> {
+    let (_f, h) = open_validated(path)?;
+    Ok(ShardHeader { spec: h.spec, n_edges: h.n_edges, format: h.format })
+}
+
+/// Read a binary shard in either format (auto-detected from the magic).
+/// The header is validated against the file size before it is trusted
+/// (no blind `with_capacity`, no silent truncation). `SGGEDGE1` records
+/// stream through a reusable ~1 MiB batch buffer; `SGGEDGE2` payloads
+/// are checksum-verified and then strictly decoded.
 pub fn read_binary(path: &Path) -> Result<EdgeList> {
-    let (mut f, spec, n_edges) = open_validated(path)?;
-    let n_edges = n_edges as usize;
-    let mut edges = EdgeList::with_capacity(spec, n_edges);
+    let (f, h) = open_validated(path)?;
+    match h.format {
+        ShardFormat::Edge1 => read_body1(f, &h, path),
+        ShardFormat::Edge2 => read_body2(f, &h, path),
+    }
+}
+
+/// Read the fixed-width `SGGEDGE1` body.
+fn read_body1(mut f: std::fs::File, h: &RawHeader, path: &Path) -> Result<EdgeList> {
+    let n_edges = h.n_edges as usize;
+    let mut edges = EdgeList::with_capacity(h.spec, n_edges);
     let mut buf = vec![0u8; n_edges.clamp(1, IO_BATCH_EDGES) * 16];
     let mut remaining = n_edges;
     while remaining > 0 {
@@ -165,6 +487,61 @@ pub fn read_binary(path: &Path) -> Result<EdgeList> {
     Ok(edges)
 }
 
+/// Read and strictly decode the `SGGEDGE2` body: the payload must hash
+/// to the header checksum, yield exactly `n_edges` edges, and be
+/// consumed to the last byte. Every violation is an [`Error::ShardIo`]
+/// at the offending byte offset.
+fn read_body2(mut f: std::fs::File, h: &RawHeader, path: &Path) -> Result<EdgeList> {
+    let mut payload = vec![0u8; h.payload_len as usize];
+    f.read_exact(&mut payload).map_err(shard_io(path, HEADER2_LEN as u64))?;
+    let got = fnv1a_bytes(&payload);
+    if got != h.payload_fnv {
+        return Err(shard_corrupt(
+            path,
+            HEADER2_LEN as u64,
+            format!(
+                "payload checksum mismatch: header says {:#018x}, payload hashes to {got:#018x}",
+                h.payload_fnv
+            ),
+        ));
+    }
+    let n_edges = h.n_edges as usize;
+    let mut edges = EdgeList::with_capacity(h.spec, n_edges);
+    let mut pos = 0usize;
+    let (mut prev_s, mut prev_d) = (0u64, 0u64);
+    for i in 0..n_edges {
+        let at = (HEADER2_LEN + pos) as u64;
+        let ds = read_varint(&payload, &mut pos).ok_or_else(|| {
+            shard_corrupt(path, at, format!("edge {i}: truncated or malformed src varint"))
+        })?;
+        let s = prev_s.checked_add(ds).ok_or_else(|| {
+            shard_corrupt(path, at, format!("edge {i}: source delta overflows u64"))
+        })?;
+        let at = (HEADER2_LEN + pos) as u64;
+        let dd = read_varint(&payload, &mut pos).ok_or_else(|| {
+            shard_corrupt(path, at, format!("edge {i}: truncated or malformed dst varint"))
+        })?;
+        let d = if ds == 0 {
+            prev_d.checked_add(dd).ok_or_else(|| {
+                shard_corrupt(path, at, format!("edge {i}: destination delta overflows u64"))
+            })?
+        } else {
+            dd
+        };
+        edges.push(s, d);
+        prev_s = s;
+        prev_d = d;
+    }
+    if pos != payload.len() {
+        return Err(shard_corrupt(
+            path,
+            (HEADER2_LEN + pos) as u64,
+            format!("{} trailing payload bytes after {n_edges} edges", payload.len() - pos),
+        ));
+    }
+    Ok(edges)
+}
+
 /// Validated header of one shard in a [`ShardReader`] directory.
 #[derive(Clone, Copy, Debug)]
 pub struct ShardHeader {
@@ -172,6 +549,9 @@ pub struct ShardHeader {
     pub spec: PartiteSpec,
     /// Edge count declared by the shard (verified against its size).
     pub n_edges: u64,
+    /// On-disk encoding, auto-detected from the magic. A directory may
+    /// mix formats; only the partite spec must agree.
+    pub format: ShardFormat,
 }
 
 /// A `ShardSink` output directory opened for chunk-by-chunk reading:
@@ -230,8 +610,7 @@ impl ShardReader {
         }
         let mut headers = Vec::with_capacity(paths.len());
         for p in &paths {
-            let (spec, n_edges) = read_binary_header(p)?;
-            headers.push(ShardHeader { spec, n_edges });
+            headers.push(read_shard_header(p)?);
         }
         let spec = headers[0].spec;
         for (h, p) in headers.iter().zip(&paths) {
@@ -513,5 +892,210 @@ mod tests {
         for d in [&a, &b] {
             std::fs::remove_dir_all(d).ok();
         }
+    }
+
+    #[test]
+    fn varint_roundtrips_across_the_u64_range() {
+        let mut buf = Vec::new();
+        let values = [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX - 1, u64::MAX];
+        for &v in &values {
+            push_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &values {
+            assert_eq!(read_varint(&buf, &mut pos), Some(v));
+        }
+        assert_eq!(pos, buf.len());
+        // an 11-byte continuation chain overflows
+        let over = vec![0x80u8; 10];
+        let mut pos = 0;
+        assert_eq!(read_varint(&over, &mut pos), None);
+        // stray high bits in the 10th byte overflow too
+        let mut stray = vec![0x80u8; 9];
+        stray.push(0x02);
+        let mut pos = 0;
+        assert_eq!(read_varint(&stray, &mut pos), None);
+    }
+
+    #[test]
+    fn binary2_roundtrip_is_sorted_multiset() {
+        let path = tmp("bin2");
+        // deliberately unsorted input with a duplicate
+        let e = EdgeList::from_pairs(
+            PartiteSpec::bipartite(10, 20),
+            &[(9, 0), (0, 19), (5, 5), (0, 3), (5, 5)],
+        );
+        write_binary2(&path, &e).unwrap();
+        let r = read_binary(&path).unwrap();
+        assert_eq!(r.spec, e.spec);
+        let pairs: Vec<_> = r.iter().collect();
+        assert_eq!(pairs, vec![(0, 3), (0, 19), (5, 5), (5, 5), (9, 0)]);
+        assert_eq!(decoded_checksum(&r), decoded_checksum(&e));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn binary2_roundtrips_edge_cases() {
+        // zero edges, one edge, and extreme ids (u64::MAX endpoints)
+        let path = tmp("bin2_edge");
+        let huge = PartiteSpec::square(u64::MAX);
+        for pairs in [
+            vec![],
+            vec![(0u64, 0u64)],
+            vec![(u64::MAX - 1, u64::MAX), (u64::MAX - 1, 0), (0, u64::MAX)],
+        ] {
+            let e = EdgeList::from_pairs(huge, &pairs);
+            write_binary2(&path, &e).unwrap();
+            let r = read_binary(&path).unwrap();
+            let mut sorted = e.clone();
+            sorted.sort_within();
+            assert_eq!(r.src, sorted.src);
+            assert_eq!(r.dst, sorted.dst);
+            let header = read_shard_header(&path).unwrap();
+            assert_eq!(header.n_edges, pairs.len() as u64);
+            assert_eq!(header.format, ShardFormat::Edge2);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn binary2_is_smaller_than_binary1() {
+        let path1 = tmp("size1");
+        let path2 = tmp("size2");
+        let mut e = EdgeList::with_capacity(PartiteSpec::square(1 << 16), 4096);
+        for i in 0..4096u64 {
+            e.push((i * 37) % (1 << 16), (i * 101) % (1 << 16));
+        }
+        write_binary(&path1, &e).unwrap();
+        write_binary2(&path2, &e).unwrap();
+        let s1 = std::fs::metadata(&path1).unwrap().len();
+        let s2 = std::fs::metadata(&path2).unwrap().len();
+        assert!(s2 * 2 <= s1, "SGGEDGE2 {s2} B not 2x smaller than SGGEDGE1 {s1} B");
+        std::fs::remove_file(path1).ok();
+        std::fs::remove_file(path2).ok();
+    }
+
+    #[test]
+    fn binary2_rejects_corruption_with_shard_io() {
+        let path = tmp("bin2_corrupt");
+        let e = sample();
+        write_binary2(&path, &e).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // truncated payload: header/file size disagree
+        std::fs::write(&path, &good[..good.len() - 1]).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(matches!(err, Error::ShardIo { .. }), "{err}");
+
+        // flip a payload bit: checksum mismatch
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(matches!(err, Error::ShardIo { .. }), "{err}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+
+        // unknown future version in the magic
+        let mut vers = good.clone();
+        vers[7] = b'9';
+        std::fs::write(&path, &vers).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(matches!(err, Error::ShardIo { offset: 7, .. }), "{err}");
+        assert!(err.to_string().contains("unsupported shard format version"), "{err}");
+
+        // inflated edge count cannot drive an allocation
+        let mut forged = good.clone();
+        forged[25..33].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &forged).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(matches!(err, Error::ShardIo { .. }), "{err}");
+
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn binary2_rejects_trailing_payload_bytes() {
+        // a payload that is longer than its edges decode to, with a
+        // matching checksum and file size, is still rejected
+        let path = tmp("bin2_trailing");
+        let spec = PartiteSpec::bipartite(4, 4);
+        let mut payload = Vec::new();
+        push_varint(&mut payload, 1); // edge 0: src 1
+        push_varint(&mut payload, 2); //         dst 2
+        push_varint(&mut payload, 0); // trailing garbage
+        let mut head = Vec::new();
+        head.extend_from_slice(MAGIC2);
+        head.extend_from_slice(&spec.n_src.to_le_bytes());
+        head.extend_from_slice(&spec.n_dst.to_le_bytes());
+        head.push(0);
+        head.extend_from_slice(&1u64.to_le_bytes());
+        head.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        head.extend_from_slice(&fnv1a_bytes(&payload).to_le_bytes());
+        head.extend_from_slice(&payload);
+        std::fs::write(&path, &head).unwrap();
+        let err = read_binary(&path).unwrap_err();
+        assert!(matches!(err, Error::ShardIo { .. }), "{err}");
+        assert!(err.to_string().contains("trailing"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn decoded_checksum_is_order_invariant_and_multiset_sensitive() {
+        let spec = PartiteSpec::bipartite(10, 10);
+        let a = EdgeList::from_pairs(spec, &[(1, 2), (3, 4), (1, 2)]);
+        let b = EdgeList::from_pairs(spec, &[(3, 4), (1, 2), (1, 2)]);
+        assert_eq!(decoded_checksum(&a), decoded_checksum(&b));
+        // dropping a duplicate changes the multiset, so the checksum moves
+        let c = EdgeList::from_pairs(spec, &[(3, 4), (1, 2)]);
+        assert_ne!(decoded_checksum(&a), decoded_checksum(&c));
+        // swapping src/dst of an edge moves it too (direction matters)
+        let d = EdgeList::from_pairs(spec, &[(2, 1), (4, 3), (2, 1)]);
+        assert_ne!(decoded_checksum(&a), decoded_checksum(&d));
+        assert_eq!(decoded_checksum(&EdgeList::new(spec)), 0);
+    }
+
+    #[test]
+    fn shard_decoded_checksum_matches_across_formats() {
+        let p1 = tmp("dc1");
+        let p2 = tmp("dc2");
+        let e = sample();
+        write_binary(&p1, &e).unwrap();
+        write_binary2(&p2, &e).unwrap();
+        assert_eq!(
+            shard_decoded_checksum(&p1).unwrap(),
+            shard_decoded_checksum(&p2).unwrap()
+        );
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn shard_reader_tolerates_mixed_formats() {
+        let dir = tmp("mixdir");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let e = sample();
+        write_binary(&dir.join("shard-00000.sgg"), &e).unwrap();
+        write_binary2(&dir.join("shard-00001.sgg"), &e).unwrap();
+        let r = ShardReader::open(&dir).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.total_edges(), 6);
+        assert_eq!(r.header(0).format, ShardFormat::Edge1);
+        assert_eq!(r.header(1).format, ShardFormat::Edge2);
+        assert_eq!(
+            decoded_checksum(&r.read(0).unwrap()),
+            decoded_checksum(&r.read(1).unwrap())
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_format_parses_spec_names() {
+        assert_eq!(ShardFormat::parse("sggedge1"), Some(ShardFormat::Edge1));
+        assert_eq!(ShardFormat::parse("edge2"), Some(ShardFormat::Edge2));
+        assert_eq!(ShardFormat::parse("parquet"), None);
+        assert_eq!(ShardFormat::Edge2.name(), "sggedge2");
+        assert_eq!(ShardFormat::default(), ShardFormat::Edge1);
     }
 }

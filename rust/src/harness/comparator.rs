@@ -8,6 +8,7 @@
 //!   "pinned": true,
 //!   "edges": 12000,
 //!   "shards": 4,
+//!   "edge_checksum": "00a1b2c3d4e5f607",
 //!   "metrics": {
 //!     "degree_dist": {"value": 0.9321, "tol": 1e-9},
 //!     "dcc":         {"value": 0.8712, "tol": 1e-9}
@@ -18,11 +19,15 @@
 //! `edges` and `shards` are exact (generation is deterministic down to
 //! the chunk split); the scalar scores carry a per-metric tolerance
 //! because they pass through `libm` territory (ln/sqrt), which may
-//! differ in the last ulps across toolchains. A golden with
-//! `"pinned": false` — the checked-in placeholder state — or a missing
-//! file is *blessed*: the measured profile is written back pinned, so
-//! the repository converges to real measured goldens on the first
-//! `sgg test` run in any environment.
+//! differ in the last ulps across toolchains. `edge_checksum` is the
+//! decoded-edge multiset checksum of the output shards
+//! ([`crate::graph::io::decoded_checksum`]) — exact, stored as a
+//! 16-digit hex string because the value is a full u64 and JSON numbers
+//! only carry 53 bits; goldens pinned before the field existed simply
+//! skip the check. A golden with `"pinned": false` — the checked-in
+//! placeholder state — or a missing file is *blessed*: the measured
+//! profile is written back pinned, so the repository converges to real
+//! measured goldens on the first `sgg test` run in any environment.
 
 use super::runner::MetricProfile;
 use crate::util::json::Json;
@@ -36,7 +41,8 @@ pub const DEFAULT_TOL: f64 = 1e-9;
 /// run measured, and whether it is within tolerance.
 #[derive(Clone, Debug)]
 pub struct MetricCheck {
-    /// Quantity name (`edges`, `shards`, `degree_dist`, `dcc`).
+    /// Quantity name (`edges`, `shards`, `edge_checksum`, `degree_dist`,
+    /// `dcc`).
     pub name: String,
     /// Pinned golden value.
     pub expected: f64,
@@ -131,6 +137,26 @@ fn check_all(g: &Json, m: &MetricProfile, path: &Path) -> Result<Vec<MetricCheck
         MetricCheck::new("edges", edges, m.edges as f64, 0.0),
         MetricCheck::new("shards", shards, m.shards as f64, 0.0),
     ];
+    // Optional for back-compat: goldens pinned before the decoded-edge
+    // checksum existed skip this check until re-blessed. Compared as
+    // exact u64s (the f64 fields are display-only approximations, since
+    // a u64 doesn't fit in 53 mantissa bits).
+    if let Some(entry) = g.get("edge_checksum") {
+        let hex = entry.as_str().ok_or_else(|| bad("edge_checksum"))?;
+        let expected = u64::from_str_radix(hex, 16).map_err(|_| {
+            Error::Config(format!(
+                "golden {}: `edge_checksum` is not a hex u64 (got `{hex}`)",
+                path.display()
+            ))
+        })?;
+        checks.push(MetricCheck {
+            name: "edge_checksum".to_string(),
+            expected: expected as f64,
+            measured: m.edge_checksum as f64,
+            tol: 0.0,
+            passed: expected == m.edge_checksum,
+        });
+    }
     let metrics = g.get("metrics").ok_or_else(|| bad("metrics"))?;
     for (name, got) in [("degree_dist", m.degree_dist), ("dcc", m.dcc)] {
         let entry = metrics.get(name).ok_or_else(|| bad(name))?;
@@ -162,6 +188,7 @@ fn write_golden(path: &Path, m: &MetricProfile, prev: Option<&Json>) -> Result<(
         ("pinned", Json::from(true)),
         ("edges", Json::from(m.edges)),
         ("shards", Json::from(m.shards)),
+        ("edge_checksum", Json::from(format!("{:016x}", m.edge_checksum))),
         (
             "metrics",
             Json::obj(vec![
@@ -197,6 +224,9 @@ mod tests {
             degree_dist: 0.875,
             dcc: 0.6125,
             profile_hash: 42,
+            // deliberately > 2^53 so the test fails if the comparator
+            // ever routes the checksum through f64 equality
+            edge_checksum: 0xdead_beef_cafe_f00d,
         }
     }
 
@@ -212,11 +242,58 @@ mod tests {
         // the blessed golden round-trips to a full match
         match compare_or_bless(&path, &m, false).unwrap() {
             GoldenOutcome::Matched(checks) => {
-                assert_eq!(checks.len(), 4);
+                assert_eq!(checks.len(), 5);
                 assert!(checks.iter().all(|c| c.passed));
             }
             other => panic!("expected match, got {other:?}"),
         }
+        // the checksum is stored as a hex string, not a lossy JSON number
+        let g = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            g.get("edge_checksum").unwrap().as_str(),
+            Some("deadbeefcafef00d")
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn edge_checksum_mismatches_exactly_and_old_goldens_skip_it() {
+        let dir = tmp("checksum");
+        let path = dir.join("g.json");
+        compare_or_bless(&path, &profile(), false).unwrap();
+
+        // a 1-bit decoded-edge difference fails even though the f64
+        // projections of the two checksums are equal
+        let mut off = profile();
+        off.edge_checksum ^= 1;
+        assert_eq!(off.edge_checksum as f64, profile().edge_checksum as f64);
+        match compare_or_bless(&path, &off, false).unwrap() {
+            GoldenOutcome::Mismatched(checks) => {
+                let bad: Vec<_> = checks.iter().filter(|c| !c.passed).collect();
+                assert_eq!(bad.len(), 1);
+                assert_eq!(bad[0].name, "edge_checksum");
+            }
+            other => panic!("expected mismatch, got {other:?}"),
+        }
+
+        // a pre-checksum golden (no field) runs only the legacy checks
+        let mut g = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Json::Obj(o) = &mut g {
+            o.remove("edge_checksum");
+        }
+        std::fs::write(&path, g.to_string()).unwrap();
+        match compare_or_bless(&path, &off, false).unwrap() {
+            GoldenOutcome::Matched(checks) => assert_eq!(checks.len(), 4),
+            other => panic!("expected legacy match, got {other:?}"),
+        }
+
+        // a malformed checksum string is a config error, not a pass
+        if let Json::Obj(o) = &mut g {
+            o.insert("edge_checksum".into(), Json::from("not-hex"));
+        }
+        std::fs::write(&path, g.to_string()).unwrap();
+        let err = compare_or_bless(&path, &off, false).unwrap_err();
+        assert!(err.to_string().contains("hex"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -34,6 +34,7 @@ pub fn report_json(report: &HarnessReport) -> Json {
                         ("shards", Json::from(p.shards)),
                         ("degree_dist", Json::from(p.degree_dist)),
                         ("dcc", Json::from(p.dcc)),
+                        ("edge_checksum", Json::from(format!("{:016x}", p.edge_checksum))),
                     ]),
                 ));
             }
@@ -92,6 +93,7 @@ mod tests {
                         degree_dist: 0.9,
                         dcc: 0.8,
                         profile_hash: 7,
+                        edge_checksum: 0xabcd,
                     }),
                     checks: vec![MetricCheck {
                         name: "edges".into(),

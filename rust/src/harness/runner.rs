@@ -3,6 +3,7 @@
 //! schedule) and measure its [`MetricProfile`] by streaming the shards
 //! back — never materializing the generated graph.
 
+use crate::graph::io;
 use crate::metrics::degree::{self, DegreeProfile};
 use crate::metrics::stream::{profile_shards_with, DCC_SAMPLES};
 use crate::pipeline::fault::{FaultPlan, RetryPolicy};
@@ -14,8 +15,11 @@ use std::path::Path;
 
 /// The measured fingerprint of one scenario run: output sizes, the
 /// streamed structural scores against the scenario's source dataset,
-/// and a hash of the full synthetic degree profile (so "bit-identical"
-/// covers every node's degree, not just the two scalar scores).
+/// a hash of the full synthetic degree profile (so "bit-identical"
+/// covers every node's degree, not just the two scalar scores), and
+/// the decoded-edge multiset checksum of the output shards (so the
+/// pinned identity is the *graph*, not the shard encoding — SGGEDGE1
+/// and SGGEDGE2 runs of the same scenario measure equal).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MetricProfile {
     /// Total generated edges (from the validated shard headers).
@@ -28,6 +32,9 @@ pub struct MetricProfile {
     pub dcc: f64,
     /// FNV-1a over the synthetic out/in degree arrays.
     pub profile_hash: u64,
+    /// Order- and format-invariant multiset checksum over every decoded
+    /// edge of every shard ([`io::decoded_checksum`]).
+    pub edge_checksum: u64,
 }
 
 impl MetricProfile {
@@ -39,6 +46,7 @@ impl MetricProfile {
             && self.degree_dist.to_bits() == other.degree_dist.to_bits()
             && self.dcc.to_bits() == other.dcc.to_bits()
             && self.profile_hash == other.profile_hash
+            && self.edge_checksum == other.edge_checksum
     }
 }
 
@@ -93,12 +101,26 @@ pub fn run_scenario_profile(
     let orig = DegreeProfile::of(&source.edges);
     let (synth, scan) =
         profile_shards_with(out_dir, spec.workers.max(1), faults, RetryPolicy::default())?;
+    // The decoded-edge checksum is a second read pass; wrapping-summing
+    // the per-shard checksums equals the checksum of the union multiset,
+    // so the value is independent of shard format and edge order.
+    let edge_checksum = if scan.shards == 0 {
+        0
+    } else {
+        let reader = io::ShardReader::open(out_dir)?;
+        let mut sum = 0u64;
+        for i in 0..reader.len() {
+            sum = sum.wrapping_add(io::shard_decoded_checksum(reader.path(i))?);
+        }
+        sum
+    };
     Ok(MetricProfile {
         edges: scan.edges,
         shards: scan.shards,
         degree_dist: degree::degree_dist_score_profiles(&orig, &synth),
         dcc: degree::dcc_profiles(&orig, &synth, DCC_SAMPLES),
         profile_hash: degree::profile_hash(&synth),
+        edge_checksum,
     })
 }
 

@@ -16,6 +16,7 @@
 //! sgg generate --model model.sggm --chunks A..B --manifest run.json --out-dir shard-k/
 //! sgg merge --manifest run.json HOST_DIR... --out-dir merged/
 //! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards --workers 8
+//!         [--format sggedge1|sggedge2]       fixed-width or varint-delta shards
 //! sgg experiment table2 [--quick]       regenerate one paper table/figure
 //! sgg experiment all [--quick]          regenerate everything
 //! ```
@@ -126,6 +127,18 @@ fn generate_dataset(fitted: &FittedPipeline, args: &Args) -> Result<Dataset> {
             args.get_or("seed", 42u64),
         )?
         .into_dataset()
+}
+
+/// Parse the optional `--format sggedge1|sggedge2` shard-encoding flag.
+fn parse_format(args: &Args) -> Result<sgg::graph::io::ShardFormat> {
+    match args.get("format") {
+        None => Ok(sgg::graph::io::ShardFormat::default()),
+        Some(name) => sgg::graph::io::ShardFormat::parse(name).ok_or_else(|| {
+            sgg::Error::Config(format!(
+                "unknown --format `{name}`; known: sggedge1, sggedge2"
+            ))
+        }),
+    }
 }
 
 /// Parse a half-open `--chunks A..B` range.
@@ -247,7 +260,8 @@ fn run(args: &Args) -> Result<()> {
                 // one host's slice of a planned distributed run: the
                 // manifest fixes the job, the range picks this host's part
                 let usage = "usage: sgg generate --model m.sggm --chunks A..B \
-                             --manifest run.json --out-dir DIR [--workers N] [--resume]";
+                             --manifest run.json --out-dir DIR [--workers N] [--resume] \
+                             [--format sggedge1|sggedge2]";
                 for flag in ["scale", "seed", "out"] {
                     if args.get(flag).is_some() {
                         return Err(sgg::Error::Config(format!(
@@ -276,6 +290,7 @@ fn run(args: &Args) -> Result<()> {
                     Path::new(out_dir),
                     workers,
                     args.has_flag("resume"),
+                    parse_format(args)?,
                     &Registries::builtin(),
                 )?;
                 println!(
@@ -445,6 +460,7 @@ fn run(args: &Args) -> Result<()> {
                 prefix_levels: args.get_or("prefix-levels", defaults.prefix_levels),
                 workers,
                 queue_capacity: args.get_or("queue-capacity", defaults.queue_capacity),
+                format: parse_format(args)?,
                 ..defaults
             };
             let report = sgg::pipeline::orchestrator::stream_to_shards_opts(

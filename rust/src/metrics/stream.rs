@@ -249,7 +249,7 @@ impl Sink for TappedSink<'_> {
         "tapped"
     }
 
-    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+    fn edges(&mut self, chunk: &mut Chunk) -> Result<()> {
         self.tap.observe(&chunk.edges);
         self.inner.edges(chunk)
     }
@@ -373,7 +373,7 @@ mod tests {
                 chunk.push(synth.src[j], synth.dst[j]);
             }
             tapped
-                .edges(Chunk { index: i, worker: 0, sample_secs: 0.0, edges: chunk })
+                .edges(&mut Chunk { index: i, worker: 0, sample_secs: 0.0, edges: chunk })
                 .unwrap();
         }
         let report = match tapped.finish().unwrap() {

@@ -17,7 +17,11 @@
 //!    same artifact, writing shards named by *global* chunk index (so
 //!    the union of all host directories is already the canonical
 //!    single-host layout) plus a [`HostReport`] carrying per-shard
-//!    checksums and a serialized degree-profile partial.
+//!    decoded-edge checksums and a serialized degree-profile partial.
+//!    Hosts may write either shard format
+//!    ([`io::ShardFormat`]) — determinism is pinned on
+//!    the *decoded* edge multiset, not file bytes, so mixed-format runs
+//!    validate and merge identically.
 //! 3. **Merge** ([`merge_run`] / `sgg merge`) — the coordinator
 //!    validates completeness (every chunk exactly once, checksums match,
 //!    all hashes agree), assembles the shards into one directory
@@ -61,8 +65,12 @@ pub const RUN_VERSION: u64 = 1;
 /// Host-report format identifier.
 pub const HOST_REPORT_FORMAT: &str = "sgg-host-report";
 
-/// Host-report format version this build reads and writes.
-pub const HOST_REPORT_VERSION: u64 = 1;
+/// Host-report format version this build reads and writes. Version 2
+/// switched [`ChunkRecord::checksum`] from raw file bytes to the
+/// order-invariant decoded-edge checksum
+/// ([`io::decoded_checksum`]), so reports from hosts writing different
+/// shard formats validate and merge uniformly.
+pub const HOST_REPORT_VERSION: u64 = 2;
 
 /// File name of the per-host completion record inside a host's output
 /// directory.
@@ -369,8 +377,8 @@ pub fn plan_run(
 }
 
 /// One completed chunk's durable record inside a [`HostReport`]: which
-/// shard it produced, how many edges it holds, and the FNV-1a checksum
-/// of the shard file's bytes. Chunks that sampled zero edges write no
+/// shard it produced, how many edges it holds, and the decoded-edge
+/// checksum of its contents. Chunks that sampled zero edges write no
 /// shard and get no record.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkRecord {
@@ -379,7 +387,10 @@ pub struct ChunkRecord {
     pub chunk: usize,
     /// Edge count of the shard (must match its header at merge time).
     pub edges: u64,
-    /// FNV-1a over the shard file's raw bytes.
+    /// Order-invariant multiset checksum over the shard's *decoded*
+    /// edges ([`io::shard_decoded_checksum`]) — identical no matter
+    /// which shard format or edge ordering the host wrote, so merge
+    /// validation survives format migrations and re-encodes.
     pub checksum: u64,
 }
 
@@ -558,6 +569,12 @@ impl HostReport {
 /// interrupted host run restarts from its intact shard prefix
 /// ([`ShardSink::resume_range`]) — the finished directory is
 /// byte-identical either way.
+///
+/// `format` picks the shard encoding this host writes
+/// ([`io::ShardFormat`]); hosts of one run may mix formats freely,
+/// because every checksum in the protocol is over *decoded* edges, not
+/// file bytes.
+#[allow(clippy::too_many_arguments)]
 pub fn run_host_range(
     model: &Path,
     manifest: &RunManifest,
@@ -566,6 +583,7 @@ pub fn run_host_range(
     out_dir: &Path,
     workers: usize,
     resume: bool,
+    format: io::ShardFormat,
     regs: &Registries,
 ) -> Result<(HostReport, StreamReport)> {
     if start >= end || end > manifest.total_chunks {
@@ -609,6 +627,7 @@ pub fn run_host_range(
         workers: workers.max(1),
         resume_from: start,
         stop_before: Some(end),
+        format,
         ..ChunkConfig::default()
     };
     let mut sink = if resume {
@@ -643,7 +662,7 @@ pub fn run_host_range(
             continue; // zero-edge chunk: no shard by design
         }
         let (_spec, edges) = io::read_binary_header(&path)?;
-        records.push(ChunkRecord { chunk, edges, checksum: fnv1a_file(&path)? });
+        records.push(ChunkRecord { chunk, edges, checksum: io::shard_decoded_checksum(&path)? });
     }
     let profile = if records.is_empty() {
         None
@@ -791,7 +810,9 @@ pub fn merge_run(
     )?;
 
     // Verify every recorded shard before moving anything: header edge
-    // count vs record, then a full checksum pass over the bytes.
+    // count vs record, then a full decoded-edge checksum pass — format-
+    // and order-invariant, so SGGEDGE1 and SGGEDGE2 hosts validate the
+    // same way.
     for (dir, report) in &reports {
         let mut host_edges = 0u64;
         for rec in &report.chunks {
@@ -814,11 +835,11 @@ pub fn merge_run(
                     rec.edges
                 )));
             }
-            let checksum = fnv1a_file(&path)?;
+            let checksum = io::shard_decoded_checksum(&path)?;
             if checksum != rec.checksum {
                 return Err(Error::Data(format!(
-                    "{}: checksum mismatch ({checksum:016x}, host report recorded \
-                     {:016x}) — shard corrupted in transit?",
+                    "{}: decoded-edge checksum mismatch ({checksum:016x}, host report \
+                     recorded {:016x}) — shard corrupted in transit?",
                     path.display(),
                     rec.checksum
                 )));
@@ -836,7 +857,8 @@ pub fn merge_run(
     }
 
     // Assemble: every shard keeps its canonical name, so the merged
-    // directory is byte-identical to a single-host run's output.
+    // directory decodes to the same graph as a single-host run's output
+    // (and is byte-identical to it when the formats match).
     std::fs::create_dir_all(out_dir)?;
     let mut shards = 0usize;
     let mut bytes = 0u64;

@@ -269,7 +269,7 @@ impl Sink for FaultSink<'_> {
         "fault"
     }
 
-    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+    fn edges(&mut self, chunk: &mut Chunk) -> Result<()> {
         let attempt = self.attempts.entry(chunk.index).or_insert(0);
         let a = *attempt;
         *attempt += 1;
@@ -307,8 +307,12 @@ impl Sink for RetryingSink<'_> {
         "retrying"
     }
 
-    fn edges(&mut self, chunk: Chunk) -> Result<()> {
-        retry_transient(self.retry, |_attempt| self.inner.edges(chunk.clone()))
+    fn edges(&mut self, chunk: &mut Chunk) -> Result<()> {
+        // `&mut` delivery means retries re-offer the same buffer — no
+        // defensive clone per attempt (a transient-faulted attempt must
+        // not consume the chunk, and ownership-taking inner sinks only
+        // take on success by contract)
+        retry_transient(self.retry, |_attempt| self.inner.edges(&mut *chunk))
     }
 
     fn finish(&mut self) -> Result<SinkFinish> {

@@ -35,6 +35,11 @@
 //! * The first worker or sink error cancels the pool: in-flight workers
 //!   stop at their next chunk boundary, remaining chunks are never
 //!   sampled, and the error propagates to the caller.
+//! * Chunk edge buffers are recycled through a bounded arena: the writer
+//!   returns each emitted chunk's `EdgeList` (or whatever the sink left
+//!   after `std::mem::take`) to a spare pool that workers draw from, so
+//!   steady-state generation reuses at most `window` warm buffers
+//!   instead of allocating one per chunk.
 
 use crate::graph::EdgeList;
 use crate::pipeline::fault::{self, FaultPlan, RetryPolicy};
@@ -124,6 +129,18 @@ pub trait ChunkPlan: Sync {
     /// with a zero edge budget; empty chunks are counted for ordering but
     /// never forwarded to the sink.
     fn sample(&self, index: usize) -> Result<EdgeList>;
+
+    /// Sample chunk `index` into a caller-owned buffer, replacing its
+    /// contents (spec included). The runner recycles chunk buffers
+    /// through this entry point, so plans that override it to
+    /// `reset`+`push` (rather than allocate a fresh list) sample every
+    /// chunk after the warm-up with zero heap allocation. The default
+    /// simply delegates to [`ChunkPlan::sample`] — behaviourally
+    /// identical, one allocation per chunk.
+    fn sample_into(&self, index: usize, out: &mut EdgeList) -> Result<()> {
+        *out = self.sample(index)?;
+        Ok(())
+    }
 }
 
 /// Generic even-split decomposition for edge-i.i.d. generators: the total
@@ -225,20 +242,30 @@ impl ParallelChunkRunner {
         }
     }
 
-    /// Sample one chunk under the runner's robustness policy: skip it
-    /// entirely when below the resume watermark, otherwise run the
-    /// plan's `sample` under bounded retry ([`fault::run_attempts`]
-    /// converts caught panics to [`crate::Error::Worker`] and retries
-    /// transient failures), injecting the fault plan's scheduled
-    /// sampling faults and panics first.
-    fn sample_chunk(&self, plan: &dyn ChunkPlan, index: usize) -> Result<EdgeList> {
+    /// Sample one chunk into `out` under the runner's robustness policy:
+    /// skip it entirely when below the resume watermark (leaving `out`
+    /// empty), otherwise run the plan's `sample_into` under bounded
+    /// retry ([`fault::run_attempts`] converts caught panics to
+    /// [`crate::Error::Worker`] and retries transient failures),
+    /// injecting the fault plan's scheduled sampling faults and panics
+    /// first. `out` is cleared at the start of every attempt, so a
+    /// failed or panicked attempt can never leak partial edges into a
+    /// retry.
+    fn sample_chunk_into(
+        &self,
+        plan: &dyn ChunkPlan,
+        index: usize,
+        out: &mut EdgeList,
+    ) -> Result<()> {
+        out.clear();
         if index < self.resume_from || self.stop_before.map_or(false, |stop| index >= stop) {
             // outside this process's chunk range (already persisted by an
             // interrupted run, or owned by another host); empty chunks
             // are counted for ordering but never forwarded to the sink
-            return Ok(EdgeList::default());
+            return Ok(());
         }
         fault::run_attempts(self.retry, |attempt| {
+            out.clear();
             if let Some(fp) = &self.faults {
                 if fp.should_panic(index, attempt) {
                     panic!("injected worker panic at chunk {index}");
@@ -247,7 +274,7 @@ impl ParallelChunkRunner {
                     return Err(e);
                 }
             }
-            plan.sample(index)
+            plan.sample_into(index, out)
         })
     }
 
@@ -313,13 +340,20 @@ impl ParallelChunkRunner {
     /// Execute `plan`, streaming non-empty chunks into `sink` in
     /// chunk-index order. Returns the total number of edges produced.
     ///
+    /// The sink receives each chunk by `&mut` and may take ownership of
+    /// its edges with `std::mem::take`; whatever buffer it leaves behind
+    /// is recycled into a bounded arena (at most `window` spare lists)
+    /// that workers draw their next chunk buffer from, so a streaming
+    /// sink drives the whole run on a fixed set of edge buffers instead
+    /// of one fresh allocation per chunk.
+    ///
     /// The first error — from a worker's `sample` or from the sink —
     /// cancels the pool and propagates; the sink never sees another chunk
     /// after returning an error.
     pub fn run(
         &self,
         plan: &dyn ChunkPlan,
-        sink: &mut dyn FnMut(Chunk) -> Result<()>,
+        sink: &mut dyn FnMut(&mut Chunk) -> Result<()>,
     ) -> Result<u64> {
         let n = plan.n_chunks();
         if n == 0 {
@@ -340,6 +374,10 @@ impl ParallelChunkRunner {
         let emitted = Mutex::new(0usize);
         let advanced = Condvar::new();
         let worker_err: Mutex<Option<crate::Error>> = Mutex::new(None);
+        // Recycled chunk buffers: the writer returns emitted chunks'
+        // edge lists here and workers pop them for their next chunk, so
+        // steady-state sampling reuses at most `window` warm buffers.
+        let pool: Mutex<Vec<EdgeList>> = Mutex::new(Vec::new());
         let mut sink_err: Option<crate::Error> = None;
         let mut total = 0u64;
 
@@ -347,7 +385,7 @@ impl ParallelChunkRunner {
             for w in 0..self.workers {
                 let tx = chan.clone();
                 let this = &*self;
-                let (next, abort) = (&next, &abort);
+                let (next, abort, pool) = (&next, &abort, &pool);
                 let (emitted, advanced, worker_err) = (&emitted, &advanced, &worker_err);
                 s.spawn(move || loop {
                     let ci = next.fetch_add(1, Ordering::Relaxed);
@@ -364,9 +402,10 @@ impl ParallelChunkRunner {
                     if abort.load(Ordering::Relaxed) {
                         break;
                     }
+                    let mut edges = pool.lock().unwrap().pop().unwrap_or_default();
                     let t0 = Instant::now();
-                    match this.sample_chunk(plan, ci) {
-                        Ok(edges) => {
+                    match this.sample_chunk_into(plan, ci, &mut edges) {
+                        Ok(()) => {
                             let chunk = Chunk {
                                 index: ci,
                                 worker: w,
@@ -393,7 +432,14 @@ impl ParallelChunkRunner {
             }
 
             // Writer, on the caller thread: reorder arriving chunks and
-            // emit strictly in index order.
+            // emit strictly in index order, recycling each chunk's
+            // buffer after the sink has seen it.
+            let recycle = |edges: EdgeList| {
+                let mut spare = pool.lock().unwrap();
+                if spare.len() < window {
+                    spare.push(edges);
+                }
+            };
             let rx = chan.clone();
             let mut pending: BTreeMap<usize, Chunk> = BTreeMap::new();
             let mut expect = 0usize;
@@ -403,15 +449,22 @@ impl ParallelChunkRunner {
                     None => break, // a worker failed and closed the channel
                 };
                 pending.insert(chunk.index, chunk);
-                while let Some(c) = pending.remove(&expect) {
+                while let Some(mut c) = pending.remove(&expect) {
                     expect += 1;
                     *emitted.lock().unwrap() = expect;
                     advanced.notify_all();
                     if c.edges.is_empty() {
+                        recycle(c.edges);
                         continue; // ordered, but nothing for the sink
                     }
                     total += c.edges.len() as u64;
-                    if let Err(e) = sink(c) {
+                    let res = sink(&mut c);
+                    // an ownership-taking sink leaves an empty (taken)
+                    // list behind; a borrowing sink leaves the full
+                    // buffer — either way the allocation goes back to
+                    // the workers
+                    recycle(std::mem::take(&mut c.edges));
+                    if let Err(e) = res {
                         sink_err = Some(e);
                         abort.store(true, Ordering::Relaxed);
                         rx.close();
@@ -435,26 +488,31 @@ impl ParallelChunkRunner {
 
     /// Sequential execution of a plan on the caller thread: identical
     /// chunk decomposition, seeds, and robustness policy, so the output
-    /// matches any parallel run byte for byte.
+    /// matches any parallel run byte for byte. The degenerate arena: one
+    /// buffer, sampled into and handed to the sink chunk after chunk.
     fn run_sequential(
         &self,
         plan: &dyn ChunkPlan,
-        sink: &mut dyn FnMut(Chunk) -> Result<()>,
+        sink: &mut dyn FnMut(&mut Chunk) -> Result<()>,
     ) -> Result<u64> {
         let mut total = 0u64;
+        let mut buf = EdgeList::default();
         for index in 0..plan.n_chunks() {
             let t0 = Instant::now();
-            let edges = self.sample_chunk(plan, index)?;
-            if edges.is_empty() {
+            self.sample_chunk_into(plan, index, &mut buf)?;
+            if buf.is_empty() {
                 continue;
             }
-            total += edges.len() as u64;
-            sink(Chunk {
+            total += buf.len() as u64;
+            let mut chunk = Chunk {
                 index,
                 worker: 0,
                 sample_secs: t0.elapsed().as_secs_f64(),
-                edges,
-            })?;
+                edges: std::mem::take(&mut buf),
+            };
+            let res = sink(&mut chunk);
+            buf = std::mem::take(&mut chunk.edges);
+            res?;
         }
         Ok(total)
     }
@@ -779,6 +837,45 @@ mod tests {
         });
         assert_eq!(one.n_chunks(), 1);
         assert_eq!(one.sample(0).unwrap().src[0], 42);
+    }
+
+    #[test]
+    fn ownership_taking_sink_sees_identical_output() {
+        // a sink that `mem::take`s each chunk's edges (MemorySink-style)
+        // must observe the same stream as a borrowing sink, and buffer
+        // recycling must never leak edges between chunks
+        let plan = TestPlan { n: 23, per: 250, seed: 9, fail_at: None };
+        let (_, base) = collect(1, &plan).unwrap();
+        for workers in [1, 4] {
+            let runner = ParallelChunkRunner::new(workers, 2);
+            let mut all = EdgeList::new(PartiteSpec::square(1 << 10));
+            let mut lens = Vec::new();
+            runner
+                .run(&plan, &mut |c| {
+                    let owned = std::mem::take(&mut c.edges);
+                    lens.push(owned.len());
+                    all.extend_from(&owned);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(base.src, all.src, "workers={workers}");
+            assert_eq!(base.dst, all.dst, "workers={workers}");
+            assert!(lens.iter().all(|&l| l == 250), "{lens:?}");
+        }
+    }
+
+    #[test]
+    fn sample_into_default_matches_sample() {
+        let plan = TestPlan { n: 4, per: 64, seed: 3, fail_at: None };
+        for i in 0..4 {
+            // a dirty pre-used buffer must be fully replaced
+            let mut out = EdgeList::from_pairs(PartiteSpec::square(2), &[(1, 1)]);
+            plan.sample_into(i, &mut out).unwrap();
+            let fresh = plan.sample(i).unwrap();
+            assert_eq!(out.spec, fresh.spec);
+            assert_eq!(out.src, fresh.src);
+            assert_eq!(out.dst, fresh.dst);
+        }
     }
 
     #[test]

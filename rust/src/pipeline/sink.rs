@@ -71,8 +71,12 @@ pub trait Sink {
     /// Sink name (for logs / registry-style selection).
     fn name(&self) -> &'static str;
 
-    /// Receive one structure chunk.
-    fn edges(&mut self, chunk: Chunk) -> Result<()>;
+    /// Receive one structure chunk. The chunk arrives by `&mut` so the
+    /// runner can recycle its edge buffer afterwards: streaming sinks
+    /// just borrow the edges, retaining sinks take them with
+    /// `std::mem::take(&mut chunk.edges)` and leave an empty list for
+    /// the arena.
+    fn edges(&mut self, chunk: &mut Chunk) -> Result<()>;
 
     /// Called once after the last chunk.
     fn finish(&mut self) -> Result<SinkFinish>;
@@ -99,8 +103,13 @@ impl Sink for MemorySink {
         "memory"
     }
 
-    fn edges(&mut self, chunk: Chunk) -> Result<()> {
-        self.chunks.push(chunk);
+    fn edges(&mut self, chunk: &mut Chunk) -> Result<()> {
+        self.chunks.push(Chunk {
+            index: chunk.index,
+            worker: chunk.worker,
+            sample_secs: chunk.sample_secs,
+            edges: std::mem::take(&mut chunk.edges),
+        });
         Ok(())
     }
 
@@ -182,11 +191,15 @@ pub fn shard_path(dir: &Path, index: usize) -> PathBuf {
     dir.join(format!("shard-{index:05}.sgg"))
 }
 
-/// Writes each chunk to its own binary shard file under a directory.
+/// Writes each chunk to its own binary shard file under a directory, in
+/// the [`io::ShardFormat`] the chunk config selects (`SGGEDGE1` fixed
+/// width by default, `SGGEDGE2` varint-delta when asked).
 ///
 /// Every shard is written atomically (`.tmp` + rename, see
-/// [`io::write_binary_atomic`]) and transient write failures are retried
-/// under the sink's [`RetryPolicy`]. Because the parallel runner feeds
+/// [`io::write_shard_atomic_with`]) and transient write failures are
+/// retried under the sink's [`RetryPolicy`]; `SGGEDGE2` shards encode
+/// through one persistent scratch buffer, so the compressed path adds no
+/// per-shard staging allocation. Because the parallel runner feeds
 /// chunks strictly in index order, the completed shard files of an
 /// interrupted run always form a consecutive `shard-00000..` prefix —
 /// the per-chunk completion records [`ShardSink::resume`] restarts from.
@@ -198,6 +211,10 @@ pub struct ShardSink {
     max_inflight: usize,
     /// Bounded retry for transient shard-write failures.
     retry: RetryPolicy,
+    /// On-disk encoding for every shard this sink writes.
+    format: io::ShardFormat,
+    /// Reused `SGGEDGE2` payload staging buffer.
+    scratch: Vec<u8>,
     /// Largest `max_inflight` chunk edge-counts seen, descending.
     top_sizes: Vec<usize>,
     /// Sampling seconds per worker id, aggregated from chunk provenance.
@@ -215,6 +232,8 @@ impl ShardSink {
             out_dir: out_dir.to_path_buf(),
             max_inflight: chunks.queue_capacity.max(1) + chunks.workers.max(1) + 1,
             retry: chunks.retry,
+            format: chunks.format,
+            scratch: Vec::new(),
             top_sizes: Vec::new(),
             worker_busy: Vec::new(),
             shards: 0,
@@ -314,9 +333,12 @@ impl Sink for ShardSink {
         "shards"
     }
 
-    fn edges(&mut self, chunk: Chunk) -> Result<()> {
+    fn edges(&mut self, chunk: &mut Chunk) -> Result<()> {
         let path = shard_path(&self.out_dir, chunk.index);
-        retry_transient(self.retry, |_| io::write_binary_atomic(&path, &chunk.edges))?;
+        let (format, scratch) = (self.format, &mut self.scratch);
+        retry_transient(self.retry, |_| {
+            io::write_shard_atomic_with(&path, &chunk.edges, format, scratch)
+        })?;
         self.written += chunk.edges.len() as u64;
         self.shards += 1;
         if self.worker_busy.len() <= chunk.worker {
@@ -350,8 +372,8 @@ mod tests {
         let mut sink = MemorySink::new();
         // chunks arrive out of order (parallel workers race); output must
         // be deterministic in the index, not the arrival order
-        sink.edges(chunk(1, 5)).unwrap();
-        sink.edges(chunk(0, 10)).unwrap();
+        sink.edges(&mut chunk(1, 5)).unwrap();
+        sink.edges(&mut chunk(0, 10)).unwrap();
         match sink.finish().unwrap() {
             SinkFinish::Collected(e) => {
                 assert_eq!(e.len(), 15);
@@ -377,7 +399,7 @@ mod tests {
         // sizes 100..107; max_inflight = 1 + 2 + 1 = 4 → peak sums the 4
         // largest actual chunks, not a divisor-based estimate
         for (i, n) in (100..108).enumerate() {
-            sink.edges(chunk(i, n)).unwrap();
+            sink.edges(&mut chunk(i, n)).unwrap();
         }
         let report = match sink.finish().unwrap() {
             SinkFinish::Streamed(r) => r,
@@ -396,13 +418,40 @@ mod tests {
     }
 
     #[test]
+    fn shard_sink_writes_the_configured_format() {
+        let dir = std::env::temp_dir().join(format!("sgg_sink_fmt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = ChunkConfig { format: io::ShardFormat::Edge2, ..ChunkConfig::default() };
+        let mut sink = ShardSink::new(&dir, cfg).unwrap();
+        let mut c = chunk(0, 500);
+        let reference = c.edges.clone();
+        sink.edges(&mut c).unwrap();
+        let path = shard_path(&dir, 0);
+        let header = io::read_shard_header(&path).unwrap();
+        assert_eq!(header.format, io::ShardFormat::Edge2);
+        assert_eq!(header.n_edges, 500);
+        // decoded multiset identical to what was sampled, and the
+        // compressed shard beats the 16 B/edge fixed-width footprint
+        assert_eq!(
+            io::decoded_checksum(&io::read_binary(&path).unwrap()),
+            io::decoded_checksum(&reference)
+        );
+        assert!(std::fs::metadata(&path).unwrap().len() < 500 * 16);
+        // resume auto-detects the format from the header
+        let (resumed, completed) = ShardSink::resume(&dir, cfg).unwrap();
+        assert_eq!(completed, 1);
+        assert_eq!(resumed.report().edges_written, 500);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn resume_restores_prefix_and_sweeps_leftovers() {
         let dir = std::env::temp_dir().join(format!("sgg_resume_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
         let cfg = ChunkConfig { workers: 2, ..ChunkConfig::default() };
         let mut sink = ShardSink::new(&dir, cfg).unwrap();
         for (i, n) in [(0usize, 10usize), (1, 20), (2, 30)] {
-            sink.edges(chunk(i, n)).unwrap();
+            sink.edges(&mut chunk(i, n)).unwrap();
         }
         // simulate interruption debris: a staged partial write and a
         // shard past the completed prefix (an empty-chunk gap at 3)

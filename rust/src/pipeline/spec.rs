@@ -509,6 +509,19 @@ impl RawConfig {
                         "memory" => SinkSpec::Memory,
                         "shards" => {
                             let defaults = ChunkConfig::default();
+                            let format = match p.str_opt("format")? {
+                                None => defaults.format,
+                                Some(name) => {
+                                    crate::graph::io::ShardFormat::parse(name).ok_or_else(
+                                        || {
+                                            Error::Config(format!(
+                                                "unknown shard format `{name}`; known: \
+                                                 sggedge1, sggedge2"
+                                            ))
+                                        },
+                                    )?
+                                }
+                            };
                             SinkSpec::Shards {
                                 dir: PathBuf::from(p.str_opt("dir")?.unwrap_or("sgg-shards")),
                                 chunks: ChunkConfig {
@@ -528,6 +541,7 @@ impl RawConfig {
                                         backoff_ms: p
                                             .u64_or("backoff_ms", defaults.retry.backoff_ms)?,
                                     },
+                                    format,
                                     ..defaults
                                 },
                             }
@@ -831,6 +845,25 @@ mod tests {
             SinkSpec::Shards { chunks, .. } => assert_eq!(chunks.workers, 2),
             other => panic!("wrong sink {other:?}"),
         }
+    }
+
+    #[test]
+    fn sink_format_key_parses_and_rejects_unknown() {
+        use crate::graph::io::ShardFormat;
+        // default: SGGEDGE1 (byte-stable, resume/CI-smoke compatible)
+        let text = "dataset = \"cora\"\n[sink]\nkind = \"shards\"\n";
+        match ScenarioSpec::parse(text).unwrap().sink {
+            SinkSpec::Shards { chunks, .. } => assert_eq!(chunks.format, ShardFormat::Edge1),
+            other => panic!("wrong sink {other:?}"),
+        }
+        let text = "dataset = \"cora\"\n[sink]\nkind = \"shards\"\nformat = \"sggedge2\"\n";
+        match ScenarioSpec::parse(text).unwrap().sink {
+            SinkSpec::Shards { chunks, .. } => assert_eq!(chunks.format, ShardFormat::Edge2),
+            other => panic!("wrong sink {other:?}"),
+        }
+        let text = "dataset = \"cora\"\n[sink]\nkind = \"shards\"\nformat = \"parquet\"\n";
+        let err = ScenarioSpec::parse(text).unwrap_err();
+        assert!(err.to_string().contains("unknown shard format"), "{err}");
     }
 
     #[test]

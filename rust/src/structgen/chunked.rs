@@ -23,8 +23,10 @@ use crate::util::rng::Pcg64;
 use crate::Result;
 
 /// One generated chunk: edges whose ids already include the prefix, plus
-/// provenance the streaming report aggregates. `Clone` so a retrying
-/// sink adapter can re-send a chunk after a transient write fault.
+/// provenance the streaming report aggregates. Sinks receive chunks by
+/// `&mut` (see [`crate::pipeline::Sink::edges`]): streaming sinks borrow
+/// the edges and leave the buffer for the runner to recycle into its
+/// arena, while ownership-taking sinks `std::mem::take` them.
 #[derive(Clone, Debug)]
 pub struct Chunk {
     /// Chunk index in [0, 4^prefix_levels).
@@ -66,6 +68,11 @@ pub struct ChunkConfig {
     /// Deterministic fault-injection schedule (harness / tests); `None`
     /// in production runs.
     pub faults: Option<crate::pipeline::fault::FaultPlan>,
+    /// On-disk shard encoding used when this run streams to a
+    /// `ShardSink` (`sggedge1` fixed-width or `sggedge2` varint-delta).
+    /// Ignored by in-memory sinks. Decoded edges are identical either
+    /// way — only the bytes differ.
+    pub format: crate::graph::io::ShardFormat,
 }
 
 impl Default for ChunkConfig {
@@ -78,6 +85,7 @@ impl Default for ChunkConfig {
             resume_from: 0,
             stop_before: None,
             faults: None,
+            format: crate::graph::io::ShardFormat::Edge1,
         }
     }
 }
@@ -169,10 +177,22 @@ impl ChunkPlan for KroneckerChunkPlan {
     }
 
     fn sample(&self, ci: usize) -> Result<EdgeList> {
+        let mut edges = EdgeList::new(self.spec);
+        self.sample_into(ci, &mut edges)?;
+        Ok(edges)
+    }
+
+    /// Arena-friendly sampling: `edges` is reset (spec overwritten,
+    /// capacity kept) and refilled, so the runner's recycled chunk
+    /// buffers avoid a fresh allocation per chunk. Attempts run through
+    /// the batched draw-buffer path — identical edges to the scalar
+    /// descent, including the PRNG state entering the uniform fallback.
+    fn sample_into(&self, ci: usize, edges: &mut EdgeList) -> Result<()> {
         let count = self.budgets[ci];
-        let mut edges = EdgeList::with_capacity(self.spec, count as usize);
+        edges.reset(self.spec);
+        edges.reserve(count as usize);
         if count == 0 {
-            return Ok(edges);
+            return Ok(());
         }
         // prefix bits of this chunk: pairs of (src, dst) bits, most
         // significant first
@@ -185,19 +205,25 @@ impl ChunkPlan for KroneckerChunkPlan {
         }
         let mut rng = Pcg64::with_stream(self.seed, ci as u64 + 1);
         // sample in chunk-local suffix space, then prepend the prefix
-        let mut produced = 0u64;
-        let max_attempts = count.saturating_mul(64).max(1024);
-        let mut attempts = 0u64;
-        while produced < count && attempts < max_attempts {
-            attempts += 1;
-            let (su, sv) = self.sampler.sample(&mut rng);
-            let u = (pre_s << self.suf_rb) | su;
-            let v = (pre_d << self.suf_db) | sv;
-            if u < self.n_src && v < self.n_dst {
-                edges.push(u, v);
-                produced += 1;
-            }
-        }
+        let (suf_rb, suf_db) = (self.suf_rb, self.suf_db);
+        let (n_src, n_dst) = (self.n_src, self.n_dst);
+        let mut draws = Vec::new();
+        let mut produced = self.sampler.sample_rejection_batched(
+            count,
+            KroneckerGen::max_attempts(count),
+            &mut rng,
+            &mut draws,
+            |su, sv| {
+                let u = (pre_s << suf_rb) | su;
+                let v = (pre_d << suf_db) | sv;
+                if u < n_src && v < n_dst {
+                    edges.push(u, v);
+                    true
+                } else {
+                    false
+                }
+            },
+        );
         // pathological rejection: fill uniformly inside the chunk's own
         // id range so prefixes never collide
         while produced < count {
@@ -208,7 +234,7 @@ impl ChunkPlan for KroneckerChunkPlan {
             edges.push(u, v);
             produced += 1;
         }
-        Ok(edges)
+        Ok(())
     }
 }
 
@@ -231,7 +257,7 @@ pub fn generate_chunked<F>(
     mut sink: F,
 ) -> Result<u64>
 where
-    F: FnMut(Chunk) -> Result<()>,
+    F: FnMut(&mut Chunk) -> Result<()>,
 {
     let plan = KroneckerChunkPlan::new(gen, n_src, n_dst, total_edges, seed, cfg.prefix_levels);
     ParallelChunkRunner::from_config(cfg).run(&plan, &mut sink)

@@ -6,12 +6,12 @@
 //! longer dimension using the appropriate marginal (θ_H / θ_V, eq. 2).
 //! With `rb == db` this is exactly R-MAT (eq. 5).
 
-use super::theta::{Level, ThetaS};
+use super::theta::{u32_threshold, Level, ThetaS};
 use super::{noise::NoiseConfig, StructureGenerator};
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
 use crate::util::json::Json;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, RNG_BLOCK};
 
 /// Fitted generalized-Kronecker structure generator.
 #[derive(Clone, Debug)]
@@ -114,20 +114,20 @@ impl KroneckerGen {
     /// [`SamplerPlan`] used on the hot path (see EXPERIMENTS.md §Perf:
     /// ~5× over the enum-match/f64 descent).
     pub fn plan(levels: &[Level]) -> SamplerPlan {
-        let to_u32 = |p: f64| -> u32 {
-            // map probability to a 32-bit threshold; clamp avoids overflow
-            (p.clamp(0.0, 1.0) * u32::MAX as f64) as u32
-        };
         let mut square = Vec::new();
         let mut col_q = Vec::new();
         let mut row_p = Vec::new();
         for level in levels {
             match level {
                 Level::Square { cum } => {
-                    square.push([to_u32(cum[0]), to_u32(cum[1]), to_u32(cum[2])]);
+                    square.push([
+                        u32_threshold(cum[0]),
+                        u32_threshold(cum[1]),
+                        u32_threshold(cum[2]),
+                    ]);
                 }
-                Level::Col { q } => col_q.push(to_u32(*q)),
-                Level::Row { p } => row_p.push(to_u32(*p)),
+                Level::Col { q } => col_q.push(u32_threshold(*q)),
+                Level::Row { p } => row_p.push(u32_threshold(*p)),
             }
         }
         SamplerPlan { square, col_q, row_p }
@@ -169,8 +169,18 @@ impl KroneckerGen {
         (u, v)
     }
 
+    /// Bounded rejection-attempt budget for `count` requested edges.
+    /// Shared by the one-shot and chunked samplers so both enter the
+    /// uniform fallback with identical PRNG state.
+    #[inline]
+    pub fn max_attempts(count: u64) -> u64 {
+        count.saturating_mul(64).max(1024)
+    }
+
     /// Sample `count` edges into `out`, rejecting samples that fall outside
     /// the requested partite sizes (the padded space has 2^bits slots).
+    /// Attempts run through the batched draw-buffer path of
+    /// [`SamplerPlan::sample_rejection_batched`].
     pub fn sample_into(
         levels: &[Level],
         n_src: u64,
@@ -180,19 +190,18 @@ impl KroneckerGen {
         out: &mut EdgeList,
     ) {
         let plan = Self::plan(levels);
-        let mut produced = 0u64;
+        let mut draws = Vec::new();
         // Bounded rejection: with mass concentrated on low ids the
         // acceptance rate is high; guard against pathological thetas.
-        let max_attempts = count.saturating_mul(64).max(1024);
-        let mut attempts = 0u64;
-        while produced < count && attempts < max_attempts {
-            attempts += 1;
-            let (u, v) = plan.sample(rng);
-            if u < n_src && v < n_dst {
-                out.push(u, v);
-                produced += 1;
-            }
-        }
+        let mut produced =
+            plan.sample_rejection_batched(count, Self::max_attempts(count), rng, &mut draws, |u, v| {
+                if u < n_src && v < n_dst {
+                    out.push(u, v);
+                    true
+                } else {
+                    false
+                }
+            });
         // If rejection was pathological, fill the remainder uniformly so
         // the requested edge count is always honored.
         while produced < count {
@@ -248,6 +257,111 @@ impl SamplerPlan {
             v = (v << 1) | (rng.next_u64() as u32 >= t) as u64;
         }
         (u, v)
+    }
+
+    /// Raw 64-bit draws one attempt consumes: one per square-level pair
+    /// (halves feed two levels), one for an odd remainder level, one per
+    /// marginal bit. The batched path prefetches in this stride.
+    #[inline]
+    pub fn draws_per_attempt(&self) -> usize {
+        self.square.len().div_ceil(2) + self.col_q.len() + self.row_p.len()
+    }
+
+    /// Decode one attempt from a prefetched draw slice (exactly
+    /// [`SamplerPlan::draws_per_attempt`] values, consumed in the same
+    /// order [`SamplerPlan::sample`] draws them — the two paths return
+    /// identical pairs for identical raw streams). The loop body is
+    /// pure integer compare/shift arithmetic on an in-cache slice, so
+    /// the compiler can unroll and pipeline it without the serial PRNG
+    /// dependency chain between levels.
+    #[inline]
+    pub fn decode(&self, draws: &[u64]) -> (u64, u64) {
+        let mut u = 0u64;
+        let mut v = 0u64;
+        let mut k = 0usize;
+        let mut pairs = self.square.chunks_exact(2);
+        for pair in &mut pairs {
+            let r = draws[k];
+            k += 1;
+            let (r0, r1) = (r as u32, (r >> 32) as u32);
+            let t = &pair[0];
+            let quad = (r0 >= t[0]) as u64 + (r0 >= t[1]) as u64 + (r0 >= t[2]) as u64;
+            u = (u << 1) | (quad >> 1);
+            v = (v << 1) | (quad & 1);
+            let t = &pair[1];
+            let quad = (r1 >= t[0]) as u64 + (r1 >= t[1]) as u64 + (r1 >= t[2]) as u64;
+            u = (u << 1) | (quad >> 1);
+            v = (v << 1) | (quad & 1);
+        }
+        for t in pairs.remainder() {
+            let r0 = draws[k] as u32;
+            k += 1;
+            let quad = (r0 >= t[0]) as u64 + (r0 >= t[1]) as u64 + (r0 >= t[2]) as u64;
+            u = (u << 1) | (quad >> 1);
+            v = (v << 1) | (quad & 1);
+        }
+        for &t in &self.col_q {
+            u = (u << 1) | (draws[k] as u32 >= t) as u64;
+            k += 1;
+        }
+        for &t in &self.row_p {
+            v = (v << 1) | (draws[k] as u32 >= t) as u64;
+            k += 1;
+        }
+        debug_assert_eq!(k, self.draws_per_attempt());
+        (u, v)
+    }
+
+    /// Run the bounded rejection loop in prefetched batches: up to
+    /// [`RNG_BLOCK`] raw draws are pulled into `draws` (a reused
+    /// caller-owned buffer) per refill, then decoded attempt by attempt
+    /// with no PRNG calls inside the decode loop. `accept` is called
+    /// once per raw attempt and returns whether the pair was kept; the
+    /// loop stops after `count` acceptances or `max_attempts` raw
+    /// attempts and returns the acceptances.
+    ///
+    /// Determinism contract: identical to the scalar
+    /// `while { plan.sample(rng) }` loop. The final block is clamped to
+    /// the remaining attempt budget, so when the budget exhausts the
+    /// generator has consumed *exactly* `max_attempts ×
+    /// draws_per_attempt` outputs — a caller's fallback path (uniform
+    /// fill) starts from the same PRNG state either way. When `count`
+    /// is reached mid-block the generator sits ahead of the served
+    /// position, which is unobservable because a satisfied rejection
+    /// loop is the last user of its chunk stream.
+    pub fn sample_rejection_batched<F: FnMut(u64, u64) -> bool>(
+        &self,
+        count: u64,
+        max_attempts: u64,
+        rng: &mut Pcg64,
+        draws: &mut Vec<u64>,
+        mut accept: F,
+    ) -> u64 {
+        let dpa = self.draws_per_attempt();
+        let mut produced = 0u64;
+        let mut attempts = 0u64;
+        if dpa == 0 {
+            // degenerate 1×1 space: every attempt is (0, 0), no draws
+            while produced < count && attempts < max_attempts {
+                attempts += 1;
+                produced += accept(0, 0) as u64;
+            }
+            return produced;
+        }
+        let block_attempts = (RNG_BLOCK / dpa).max(1) as u64;
+        'blocks: while produced < count && attempts < max_attempts {
+            let take = block_attempts.min(max_attempts - attempts);
+            rng.fill_u64(draws, take as usize * dpa);
+            attempts += take;
+            for a in draws.chunks_exact(dpa) {
+                let (u, v) = self.decode(a);
+                produced += accept(u, v) as u64;
+                if produced == count {
+                    break 'blocks;
+                }
+            }
+        }
+        produced
     }
 }
 
@@ -400,6 +514,97 @@ mod tests {
         let max_deg = *deg.iter().max().unwrap() as f64;
         let mean = 50_000.0 / 256.0;
         assert!(max_deg < mean * 1.6, "max={max_deg} mean={mean}");
+    }
+
+    /// The pre-batching scalar rejection loop, kept verbatim as the
+    /// reference the batched path must reproduce draw-for-draw.
+    fn scalar_sample_into(
+        levels: &[Level],
+        n_src: u64,
+        n_dst: u64,
+        count: u64,
+        rng: &mut Pcg64,
+        out: &mut EdgeList,
+    ) {
+        let plan = KroneckerGen::plan(levels);
+        let mut produced = 0u64;
+        let max_attempts = KroneckerGen::max_attempts(count);
+        let mut attempts = 0u64;
+        while produced < count && attempts < max_attempts {
+            attempts += 1;
+            let (u, v) = plan.sample(rng);
+            if u < n_src && v < n_dst {
+                out.push(u, v);
+                produced += 1;
+            }
+        }
+        while produced < count {
+            out.push(rng.below(n_src), rng.below(n_dst));
+            produced += 1;
+        }
+    }
+
+    #[test]
+    fn batched_sampling_matches_scalar_reference() {
+        // square, tall, and wide spaces; rejection active on all three
+        for &(n_src, n_dst, count) in
+            &[(256u64, 256u64, 5_000u64), (4096, 16, 3_000), (5, 160, 2_000), (1, 1, 64)]
+        {
+            let g = KroneckerGen::new(
+                ThetaS::rmat_default(),
+                PartiteSpec::bipartite(n_src, n_dst),
+                count,
+            );
+            let (rb, db) = KroneckerGen::bits(n_src, n_dst);
+            let levels = g.levels(rb, db, &mut Pcg64::new(1));
+            let spec = PartiteSpec::bipartite(n_src, n_dst);
+            let mut scalar = EdgeList::new(spec);
+            scalar_sample_into(&levels, n_src, n_dst, count, &mut Pcg64::new(9), &mut scalar);
+            let mut batched = EdgeList::new(spec);
+            KroneckerGen::sample_into(&levels, n_src, n_dst, count, &mut Pcg64::new(9), &mut batched);
+            assert_eq!(scalar.src, batched.src, "{n_src}x{n_dst}");
+            assert_eq!(scalar.dst, batched.dst, "{n_src}x{n_dst}");
+            assert_eq!(batched.len() as u64, count);
+        }
+    }
+
+    #[test]
+    fn batched_uniform_fallback_matches_scalar_reference() {
+        // theta mass pinned to the (1,1) quadrant: every descent lands on
+        // the all-ones id, which is >= n_src in a 5-of-8 space, so the
+        // attempt budget exhausts and the uniform fallback must start
+        // from the same PRNG state on both paths.
+        let theta = ThetaS::new(1e-12, 1e-12, 1e-12, 1.0);
+        let (n_src, n_dst, count) = (5u64, 5u64, 50u64);
+        let (rb, db) = KroneckerGen::bits(n_src, n_dst);
+        let g = KroneckerGen::new(theta, PartiteSpec::bipartite(n_src, n_dst), count);
+        let levels = g.levels(rb, db, &mut Pcg64::new(1));
+        let spec = PartiteSpec::bipartite(n_src, n_dst);
+        let mut scalar = EdgeList::new(spec);
+        scalar_sample_into(&levels, n_src, n_dst, count, &mut Pcg64::new(3), &mut scalar);
+        let mut batched = EdgeList::new(spec);
+        KroneckerGen::sample_into(&levels, n_src, n_dst, count, &mut Pcg64::new(3), &mut batched);
+        assert_eq!(scalar.src, batched.src);
+        assert_eq!(scalar.dst, batched.dst);
+        assert_eq!(batched.len() as u64, count);
+    }
+
+    #[test]
+    fn decode_matches_scalar_sample_draw_for_draw() {
+        let g = KroneckerGen::new(ThetaS::rmat_default(), PartiteSpec::bipartite(4096, 16), 1);
+        let (rb, db) = KroneckerGen::bits(4096, 16);
+        let levels = g.levels(rb, db, &mut Pcg64::new(1));
+        let plan = KroneckerGen::plan(&levels);
+        let dpa = plan.draws_per_attempt();
+        assert!(dpa > 0);
+        let mut a = Pcg64::new(17);
+        let mut b = Pcg64::new(17);
+        let mut draws = Vec::new();
+        for _ in 0..200 {
+            let want = plan.sample(&mut a);
+            b.fill_u64(&mut draws, dpa);
+            assert_eq!(plan.decode(&draws), want);
+        }
     }
 
     #[test]

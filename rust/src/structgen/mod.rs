@@ -120,7 +120,7 @@ pub trait StructureGenerator: Send + Sync {
         edges: u64,
         seed: u64,
         chunks: ChunkConfig,
-        sink: &mut dyn FnMut(Chunk) -> Result<()>,
+        sink: &mut dyn FnMut(&mut Chunk) -> Result<()>,
     ) -> Result<u64> {
         let plan = self.chunk_plan(n_src, n_dst, edges, seed, chunks.prefix_levels)?;
         ParallelChunkRunner::from_config(chunks).run(plan.as_ref(), sink)

@@ -14,7 +14,7 @@ use super::StructureGenerator;
 use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
 use crate::util::json::Json;
-use crate::util::rng::{AliasTable, Pcg64};
+use crate::util::rng::{AliasTable, BlockRng, Pcg64, RandomSource};
 
 /// Fitted degree-corrected SBM.
 #[derive(Clone, Debug)]
@@ -247,18 +247,20 @@ impl StructureGenerator for DcSbm {
         let block_table = AliasTable::new(&self.block_mass);
         let src_tables: Vec<AliasTable> = src_p.iter().map(|p| AliasTable::new(p)).collect();
         let dst_tables: Vec<AliasTable> = dst_p.iter().map(|p| AliasTable::new(p)).collect();
-        let mut rng = Pcg64::new(seed);
+        // block-buffered draws: the three alias lookups per edge decode
+        // from a prefetched batch (bit-identical stream to a bare Pcg64)
+        let mut rng = BlockRng::new(Pcg64::new(seed));
         let mut out = EdgeList::with_capacity(spec, edges as usize);
         for _ in 0..edges {
-            let pair = block_table.sample(&mut rng);
+            let pair = block_table.sample_with(&mut rng);
             let (bs, bd) = (pair / self.blocks, pair % self.blocks);
             if src_m[bs].is_empty() || dst_m[bd].is_empty() {
                 // degenerate block after scaling; fall back to uniform
                 out.push(rng.below(n_src), rng.below(n_dst));
                 continue;
             }
-            let s = src_m[bs][src_tables[bs].sample(&mut rng)];
-            let d = dst_m[bd][dst_tables[bd].sample(&mut rng)];
+            let s = src_m[bs][src_tables[bs].sample_with(&mut rng)];
+            let d = dst_m[bd][dst_tables[bd].sample_with(&mut rng)];
             out.push(s, d);
         }
         Ok(out)

@@ -81,6 +81,14 @@ impl ThetaS {
         [self.a, self.a + self.b, self.a + self.b + self.c]
     }
 
+    /// [`ThetaS::cumulative`] in u32 fixed point — the compiled form the
+    /// branch-free descent sampler compares raw PRNG bits against.
+    #[inline]
+    pub fn cumulative_u32(&self) -> [u32; 3] {
+        let c = self.cumulative();
+        [u32_threshold(c[0]), u32_threshold(c[1]), u32_threshold(c[2])]
+    }
+
     /// Log-likelihood of observed quadrant counts under this seed.
     pub fn log_likelihood(&self, counts: &[f64; 4]) -> f64 {
         counts[0] * self.a.ln()
@@ -94,6 +102,16 @@ impl Default for ThetaS {
     fn default() -> Self {
         ThetaS::rmat_default()
     }
+}
+
+/// Map a probability to the 32-bit fixed-point threshold the compiled
+/// samplers compare raw PRNG halves against: a level decision becomes a
+/// single branch-free `bits >= threshold` instead of an f64 compare.
+/// Shared by the scalar and batched descent loops so both paths test
+/// against bit-identical thresholds.
+#[inline]
+pub fn u32_threshold(p: f64) -> u32 {
+    (p.clamp(0.0, 1.0) * u32::MAX as f64) as u32
 }
 
 /// One recursion level of the (possibly noisy) Kronecker cascade. Square
@@ -149,6 +167,21 @@ mod tests {
         let t = ThetaS::rmat_default();
         let c = t.cumulative();
         assert!(c[0] < c[1] && c[1] < c[2] && c[2] < 1.0);
+    }
+
+    #[test]
+    fn u32_thresholds_are_monotone_and_clamped() {
+        assert_eq!(u32_threshold(0.0), 0);
+        assert_eq!(u32_threshold(-1.0), 0);
+        assert_eq!(u32_threshold(1.0), u32::MAX);
+        assert_eq!(u32_threshold(2.0), u32::MAX);
+        let t = ThetaS::rmat_default();
+        let c = t.cumulative_u32();
+        assert!(c[0] < c[1] && c[1] < c[2] && c[2] < u32::MAX);
+        // fixed point agrees with the f64 cumulative to one ulp of u32
+        for (fx, fl) in c.iter().zip(t.cumulative()) {
+            assert_eq!(*fx, (fl * u32::MAX as f64) as u32);
+        }
     }
 
     #[test]

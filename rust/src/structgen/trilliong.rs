@@ -17,7 +17,7 @@ use crate::error::{Error, Result};
 use crate::graph::{EdgeList, PartiteSpec};
 use crate::pipeline::parallel::{apportion, ChunkPlan};
 use crate::util::json::Json;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{BlockRng, Pcg64, RandomSource};
 
 /// TrillionG-style generator with a fitted (or default R-MAT) seed.
 #[derive(Clone, Copy, Debug)]
@@ -74,8 +74,14 @@ impl TrillionG {
     /// the column distribution conditioned on u's bits. Both the one-shot
     /// path (`lo = 0`, `hi = n_src`) and the chunked plan share this loop,
     /// so chunked output at one chunk equals the sequential output.
+    ///
+    /// Generic over [`RandomSource`]: the hot paths run it on a
+    /// block-buffered [`BlockRng`] (the per-node draw count is
+    /// data-dependent — Poisson degrees, bounded-rejection fallbacks —
+    /// so a fixed-stride draw buffer can't be sized up front), and a
+    /// bare [`Pcg64`] produces the identical edge stream for tests.
     #[allow(clippy::too_many_arguments)]
-    fn sample_range(
+    fn sample_range<R: RandomSource>(
         &self,
         rb: u32,
         db: u32,
@@ -84,7 +90,7 @@ impl TrillionG {
         hi: u64,
         budget: u64,
         total_edges: u64,
-        rng: &mut Pcg64,
+        rng: &mut R,
         out: &mut EdgeList,
     ) {
         let p = self.theta.p(); // P(source bit = 0)
@@ -166,11 +172,11 @@ impl ChunkPlan for TrillionGChunkPlan {
         // a single-chunk plan degenerates to the raw job seed so that
         // `generate_into` at `prefix_levels = 0` reproduces
         // `generate_sized` exactly (same contract as `SplitPlan::even`)
-        let mut rng = if self.budgets.len() == 1 {
+        let mut rng = BlockRng::new(if self.budgets.len() == 1 {
             Pcg64::new(self.seed)
         } else {
             Pcg64::with_stream(self.seed, ci as u64 + 1)
-        };
+        });
         self.gen.sample_range(
             self.rb,
             self.db,
@@ -219,7 +225,7 @@ impl StructureGenerator for TrillionG {
             return Err(Error::Config("empty partite".into()));
         }
         let (rb, db) = KroneckerGen::bits(n_src, n_dst);
-        let mut rng = Pcg64::new(seed);
+        let mut rng = BlockRng::new(Pcg64::new(seed));
         let mut out = EdgeList::with_capacity(self.out_spec(n_src, n_dst), edges as usize);
         self.sample_range(rb, db, n_dst, 0, n_src, edges, edges, &mut rng, &mut out);
         Ok(out)
@@ -303,6 +309,25 @@ mod tests {
         let mut sorted = e.src.clone();
         sorted.sort_unstable();
         assert_eq!(e.src, sorted);
+    }
+
+    #[test]
+    fn block_buffered_sampling_matches_bare_pcg() {
+        // sample_range over BlockRng (the production path) must emit the
+        // identical edge stream as a bare Pcg64 on the same seed — the
+        // batched-equals-scalar contract for the variable-draw sampler.
+        let g = TrillionG::with_default_seed(PartiteSpec::bipartite(1 << 9, 1 << 7), 10_000);
+        let (rb, db) = KroneckerGen::bits(1 << 9, 1 << 7);
+        let spec = PartiteSpec::bipartite(1 << 9, 1 << 7);
+        let mut scalar = EdgeList::new(spec);
+        let mut srng = Pcg64::new(21);
+        g.sample_range(rb, db, 1 << 7, 0, 1 << 9, 10_000, 10_000, &mut srng, &mut scalar);
+        let mut batched = EdgeList::new(spec);
+        let mut brng = BlockRng::new(Pcg64::new(21));
+        g.sample_range(rb, db, 1 << 7, 0, 1 << 9, 10_000, 10_000, &mut brng, &mut batched);
+        assert_eq!(scalar.src, batched.src);
+        assert_eq!(scalar.dst, batched.dst);
+        assert_eq!(batched.len(), 10_000);
     }
 
     #[test]

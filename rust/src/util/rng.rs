@@ -54,11 +54,21 @@ impl Pcg64 {
         xored.rotate_right(rot)
     }
 
+    /// Fill `buf` with exactly `n` raw outputs (cleared first, capacity
+    /// reused). The values equal `n` successive [`Pcg64::next_u64`]
+    /// calls — the batch prefetch primitive of the hot sampling loops.
+    pub fn fill_u64(&mut self, buf: &mut Vec<u64>, n: usize) {
+        buf.clear();
+        buf.reserve(n);
+        for _ in 0..n {
+            buf.push(self.next_u64());
+        }
+    }
+
     /// Uniform f64 in [0, 1).
     #[inline]
     pub fn f64(&mut self) -> f64 {
-        // 53 top bits -> [0,1)
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        RandomSource::f64(self)
     }
 
     /// Uniform f32 in [0, 1).
@@ -70,19 +80,7 @@ impl Pcg64 {
     /// Uniform integer in [0, n) without modulo bias (Lemire's method).
     #[inline]
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
-        let mut x = self.next_u64();
-        let mut m = (x as u128).wrapping_mul(n as u128);
-        let mut l = m as u64;
-        if l < n {
-            let t = n.wrapping_neg() % n;
-            while l < t {
-                x = self.next_u64();
-                m = (x as u128).wrapping_mul(n as u128);
-                l = m as u64;
-            }
-        }
-        (m >> 64) as u64
+        RandomSource::below(self, n)
     }
 
     /// Uniform usize in [0, n).
@@ -106,20 +104,13 @@ impl Pcg64 {
     /// Standard normal via Box–Muller (cached second value dropped for
     /// simplicity; throughput is not normal-bound anywhere in SGG).
     pub fn normal(&mut self) -> f64 {
-        loop {
-            let u1 = self.f64();
-            if u1 > 1e-300 {
-                let u2 = self.f64();
-                let r = (-2.0 * u1.ln()).sqrt();
-                return r * (std::f64::consts::TAU * u2).cos();
-            }
-        }
+        RandomSource::normal(self)
     }
 
     /// Normal with mean/std.
     #[inline]
     pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
-        mean + std * self.normal()
+        RandomSource::normal_ms(self, mean, std)
     }
 
     /// Exponential with rate `lambda`.
@@ -139,21 +130,7 @@ impl Pcg64 {
 
     /// Poisson (Knuth for small lambda, normal approx for large).
     pub fn poisson(&mut self, lambda: f64) -> u64 {
-        if lambda < 30.0 {
-            let l = (-lambda).exp();
-            let mut k = 0u64;
-            let mut p = 1.0;
-            loop {
-                p *= self.f64();
-                if p <= l {
-                    return k;
-                }
-                k += 1;
-            }
-        } else {
-            let x = self.normal_ms(lambda, lambda.sqrt());
-            x.max(0.0).round() as u64
-        }
+        RandomSource::poisson(self, lambda)
     }
 
     /// Fisher–Yates shuffle.
@@ -190,6 +167,141 @@ impl Pcg64 {
             }
         }
         weights.len() - 1
+    }
+}
+
+impl RandomSource for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        Pcg64::next_u64(self)
+    }
+}
+
+/// A deterministic uniform `u64` stream plus the canonical distribution
+/// algorithms built on it.
+///
+/// This is the seam that lets the block-buffered [`BlockRng`] stand in
+/// for a bare [`Pcg64`] on sampling hot paths: PCG output depends only
+/// on the call count, so any source that serves the same raw outputs in
+/// the same order is interchangeable **bit-for-bit**. The provided
+/// methods are the single authoritative implementation of each
+/// distribution — `Pcg64`'s inherent methods delegate here, so a
+/// batched path and a scalar path can never drift apart.
+pub trait RandomSource {
+    /// Next raw 64-bit output.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform f64 in [0, 1) — top 53 bits of one raw output.
+    #[inline]
+    fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (second value dropped).
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with mean/std.
+    #[inline]
+    fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Poisson (Knuth for small lambda, normal approx for large).
+    fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal_ms(lambda, lambda.sqrt());
+            x.max(0.0).round() as u64
+        }
+    }
+}
+
+/// Raw outputs prefetched per [`BlockRng`] refill (8 KiB buffer).
+pub const RNG_BLOCK: usize = 1024;
+
+/// Block-buffered PCG64: prefetches [`RNG_BLOCK`] raw outputs at a time
+/// into a reused buffer and serves them in order.
+///
+/// The served stream is bit-identical to calling [`Pcg64::next_u64`]
+/// directly (PCG output depends only on the call count), but hot
+/// sampling loops pay one predictable refill branch per draw instead of
+/// the serial 128-bit LCG multiply + rotate dependency chain, and the
+/// refill loop itself is trivially pipelined by the compiler. Used by
+/// generators whose per-edge draw count is data-dependent (TrillionG's
+/// Poisson degrees, alias-table rejection) where a fixed-stride draw
+/// buffer can't be sized up front.
+///
+/// The wrapper may leave the inner generator *ahead* of the served
+/// position (a refill draws a full block eagerly), so callers must not
+/// interleave draws from the inner generator afterwards.
+#[derive(Clone, Debug)]
+pub struct BlockRng {
+    inner: Pcg64,
+    buf: Vec<u64>,
+    pos: usize,
+}
+
+impl BlockRng {
+    /// Wrap a generator; no draws happen until the first request.
+    pub fn new(inner: Pcg64) -> BlockRng {
+        BlockRng { inner, buf: Vec::with_capacity(RNG_BLOCK), pos: 0 }
+    }
+
+    /// Next raw output — identical to what the wrapped generator's
+    /// `next_u64` would have returned at the same call index.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        if self.pos == self.buf.len() {
+            self.inner.fill_u64(&mut self.buf, RNG_BLOCK);
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+}
+
+impl RandomSource for BlockRng {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        BlockRng::next_u64(self)
     }
 }
 
@@ -270,7 +382,15 @@ impl AliasTable {
     /// Draw a category index.
     #[inline]
     pub fn sample(&self, rng: &mut Pcg64) -> usize {
-        let i = rng.below_usize(self.prob.len());
+        self.sample_with(rng)
+    }
+
+    /// [`AliasTable::sample`] over any [`RandomSource`] — the same two
+    /// draws in the same order, so a [`BlockRng`]-batched chunk loop
+    /// picks the identical category sequence as the scalar path.
+    #[inline]
+    pub fn sample_with<R: RandomSource>(&self, rng: &mut R) -> usize {
+        let i = rng.below(self.prob.len() as u64) as usize;
         if rng.f64() < self.prob[i] {
             i
         } else {
@@ -404,6 +524,48 @@ mod tests {
             let s: u64 = (0..n).map(|_| rng.poisson(lambda)).sum();
             let mean = s as f64 / n as f64;
             assert!((mean - lambda).abs() / lambda < 0.05, "lambda={lambda} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn block_rng_serves_the_exact_pcg_stream() {
+        // mixed draw widths, crossing several refill boundaries
+        let mut scalar = Pcg64::new(42);
+        let mut block = BlockRng::new(Pcg64::new(42));
+        for i in 0..(RNG_BLOCK * 3 + 17) {
+            match i % 4 {
+                0 => assert_eq!(scalar.next_u64(), block.next_u64(), "raw @{i}"),
+                1 => assert_eq!(scalar.f64().to_bits(), RandomSource::f64(&mut block).to_bits()),
+                2 => assert_eq!(scalar.below(7), RandomSource::below(&mut block, 7)),
+                _ => assert_eq!(scalar.poisson(3.5), RandomSource::poisson(&mut block, 3.5)),
+            }
+        }
+    }
+
+    #[test]
+    fn fill_u64_matches_sequential_draws() {
+        let mut a = Pcg64::new(5);
+        let mut b = Pcg64::new(5);
+        let mut buf = Vec::new();
+        a.fill_u64(&mut buf, 100);
+        assert_eq!(buf.len(), 100);
+        for v in &buf {
+            assert_eq!(*v, b.next_u64());
+        }
+        // reuse keeps the stream continuous
+        a.fill_u64(&mut buf, 3);
+        for v in &buf {
+            assert_eq!(*v, b.next_u64());
+        }
+    }
+
+    #[test]
+    fn alias_sample_with_matches_scalar_sample() {
+        let t = AliasTable::new(&[0.5, 2.0, 1.25, 0.25]);
+        let mut scalar = Pcg64::new(77);
+        let mut block = BlockRng::new(Pcg64::new(77));
+        for _ in 0..5_000 {
+            assert_eq!(t.sample(&mut scalar), t.sample_with(&mut block));
         }
     }
 

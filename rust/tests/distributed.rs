@@ -1,12 +1,16 @@
 //! The distributed-run contract: a planned multi-host run, merged, is
 //! byte-identical to a single-process run from the same `.sggm` artifact
 //! and seed; the folded metric profile bit-matches the single-host
-//! profile; and the manifest/merge validation rejects wrong models,
-//! overlapping or missing chunk ranges, and corrupted shards loudly.
+//! profile; hosts writing the compact SGGEDGE2 format decode to the
+//! same graph (and fold to the same profile hash) as SGGEDGE1 hosts;
+//! and the manifest/merge validation rejects wrong models, overlapping
+//! or missing chunk ranges, and corrupted shards loudly.
 
+use sgg::graph::io::{self, ShardFormat};
 use sgg::metrics::stream::{evaluate_shard_dirs, evaluate_shards, profile_shards};
 use sgg::metrics::{degree, DegreeProfile};
 use sgg::pipeline::distrib::{self, RunManifest, HOST_REPORT_FILE};
+use sgg::pipeline::sink::shard_path;
 use sgg::pipeline::{FittedPipeline, Pipeline, Registries, ShardSink, SizeSpec};
 use sgg::structgen::chunked::ChunkConfig;
 use sgg::util::json::Json;
@@ -50,8 +54,14 @@ fn setup(tag: &str) -> (PathBuf, RunManifest) {
     (model, manifest)
 }
 
-/// Run every planned host range into its own directory.
-fn run_hosts(model: &Path, manifest: &RunManifest, tag: &str) -> Vec<PathBuf> {
+/// Run every planned host range into its own directory, writing shards
+/// in `format`.
+fn run_hosts_fmt(
+    model: &Path,
+    manifest: &RunManifest,
+    tag: &str,
+    format: ShardFormat,
+) -> Vec<PathBuf> {
     manifest
         .hosts
         .iter()
@@ -65,12 +75,18 @@ fn run_hosts(model: &Path, manifest: &RunManifest, tag: &str) -> Vec<PathBuf> {
                 &dir,
                 2,
                 false,
+                format,
                 &Registries::builtin(),
             )
             .unwrap();
             dir
         })
         .collect()
+}
+
+/// Run every planned host range in the default SGGEDGE1 format.
+fn run_hosts(model: &Path, manifest: &RunManifest, tag: &str) -> Vec<PathBuf> {
+    run_hosts_fmt(model, manifest, tag, ShardFormat::Edge1)
 }
 
 /// The reference: one process generating the whole job into one shard
@@ -184,6 +200,70 @@ fn three_hosts_merged_equal_one_process_bit_for_bit() {
 }
 
 #[test]
+fn sggedge2_hosts_fold_to_the_sggedge1_single_process_profile() {
+    let (model, manifest) = setup("xfmt");
+    // hosts write the compact varint-delta format…
+    let host_dirs = run_hosts_fmt(&model, &manifest, "xfmt", ShardFormat::Edge2);
+    // …the reference single-process run writes the default SGGEDGE1
+    let single = single_run(&model, &manifest, "xfmt");
+
+    // merge validates the SGGEDGE2 shards (decoded-edge checksums) and
+    // folds them to the exact profile of the SGGEDGE1 reference
+    let merged = tmp_dir("xfmt_merged");
+    let report = distrib::merge_run(&manifest, &host_dirs, &merged, None).unwrap();
+    let (single_prof, _) = profile_shards(&single, 2).unwrap();
+    assert_eq!(report.profile_hash, degree::profile_hash(&single_prof));
+    assert_eq!(report.edges, manifest.edges);
+
+    // every chunk present in both runs decodes to the same edge multiset
+    let mut compared = 0usize;
+    for chunk in 0..manifest.total_chunks {
+        let p1 = shard_path(&single, chunk);
+        let p2 = shard_path(&merged, chunk);
+        assert_eq!(p1.exists(), p2.exists(), "chunk {chunk} presence differs");
+        if !p1.exists() {
+            continue;
+        }
+        assert_eq!(
+            io::shard_decoded_checksum(&p1).unwrap(),
+            io::shard_decoded_checksum(&p2).unwrap(),
+            "chunk {chunk} decodes differently across formats"
+        );
+        compared += 1;
+    }
+    assert!(compared > 0, "no shards to compare");
+
+    // the compact format actually is compact
+    let dir_bytes = |d: &Path| -> u64 {
+        std::fs::read_dir(d)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.extension().map(|x| x == "sgg").unwrap_or(false))
+            .map(|p| std::fs::metadata(p).unwrap().len())
+            .sum()
+    };
+    assert!(
+        dir_bytes(&merged) < dir_bytes(&single),
+        "SGGEDGE2 run should be smaller than SGGEDGE1 ({} vs {} bytes)",
+        dir_bytes(&merged),
+        dir_bytes(&single)
+    );
+
+    // streamed evaluation reads both formats to identical scores
+    let reference = sgg::datasets::load(&manifest.dataset, 1).unwrap();
+    let orig = DegreeProfile::of(&reference.edges);
+    let eval1 = evaluate_shards(&single, &orig, 2).unwrap();
+    let eval2 = evaluate_shards(&merged, &orig, 2).unwrap();
+    assert_eq!(eval1.degree_dist.to_bits(), eval2.degree_dist.to_bits());
+    assert_eq!(eval1.dcc.to_bits(), eval2.dcc.to_bits());
+    assert_eq!(eval1.edges, eval2.edges);
+
+    let mut all = host_dirs;
+    all.extend([single, merged]);
+    cleanup(&model, &all);
+}
+
+#[test]
 fn unmerged_host_dirs_evaluate_like_the_merged_graph() {
     let (model, manifest) = setup("evaldirs");
     let host_dirs = run_hosts(&model, &manifest, "evaldirs");
@@ -222,6 +302,7 @@ fn host_run_resumes_to_identical_bytes_and_report() {
         &full,
         2,
         false,
+        ShardFormat::Edge1,
         &regs,
     )
     .unwrap();
@@ -237,6 +318,7 @@ fn host_run_resumes_to_identical_bytes_and_report() {
         &resumed,
         2,
         false,
+        ShardFormat::Edge1,
         &regs,
     )
     .unwrap();
@@ -249,6 +331,7 @@ fn host_run_resumes_to_identical_bytes_and_report() {
         &resumed,
         2,
         true,
+        ShardFormat::Edge1,
         &regs,
     )
     .unwrap();
@@ -266,12 +349,32 @@ fn wrong_model_and_wrong_range_are_rejected_before_sampling() {
 
     let mut tampered = manifest.clone();
     tampered.model_hash ^= 1;
-    let err =
-        distrib::run_host_range(&model, &tampered, 0, 4, &dir, 1, false, &regs).unwrap_err();
+    let err = distrib::run_host_range(
+        &model,
+        &tampered,
+        0,
+        4,
+        &dir,
+        1,
+        false,
+        ShardFormat::Edge1,
+        &regs,
+    )
+    .unwrap_err();
     assert!(err.to_string().contains("model"), "{err}");
 
-    let err =
-        distrib::run_host_range(&model, &manifest, 4, 99, &dir, 1, false, &regs).unwrap_err();
+    let err = distrib::run_host_range(
+        &model,
+        &manifest,
+        4,
+        99,
+        &dir,
+        1,
+        false,
+        ShardFormat::Edge1,
+        &regs,
+    )
+    .unwrap_err();
     assert!(err.to_string().contains("chunk range"), "{err}");
 
     cleanup(&model, &[dir]);

@@ -128,6 +128,68 @@ fn truncated_shard_read(dir: &Path) {
     assert!(err.to_string().contains("bytes"), "{err}");
 }
 
+/// Every SGGEDGE2 corruption mode — truncation, payload bit-flips, an
+/// unknown format version, forged header counts — fails the read with a
+/// single `Error::ShardIo` carrying the shard path and a byte offset,
+/// never a panic, a hang, or a silently wrong edge list.
+fn sggedge2_corruption_paths(dir: &Path) {
+    let mut edges = EdgeList::new(PartiteSpec::square(64));
+    for i in 0..200u64 {
+        edges.push((i * 7) % 64, (i * 13) % 64);
+    }
+    let path = dir.join("shard-00000.sgg");
+    io::write_shard(&path, &edges, io::ShardFormat::Edge2).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // (case, corrupted bytes, message substring the error must carry)
+    let truncated = good[..good.len() - 5].to_vec();
+    let mut flipped = good.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x01;
+    let mut future_version = good.clone();
+    future_version[7] = b'9';
+    let mut forged_count = good.clone();
+    forged_count[25..33].copy_from_slice(&u64::MAX.to_le_bytes());
+    let mut forged_payload_len = good.clone();
+    forged_payload_len[33..41].copy_from_slice(&u64::MAX.to_le_bytes());
+    let cases: &[(&str, &[u8], &str)] = &[
+        ("truncated file", &truncated, "bytes"),
+        ("flipped payload bit", &flipped, "checksum mismatch"),
+        ("unknown version byte", &future_version, "unsupported shard format version"),
+        ("forged edge count", &forged_count, "edge count"),
+        ("forged payload length", &forged_payload_len, "overflows"),
+    ];
+    for (name, bytes, needle) in cases {
+        std::fs::write(&path, bytes).unwrap();
+        let err = io::read_binary(&path).unwrap_err();
+        match &err {
+            sgg::Error::ShardIo { path: p, .. } => {
+                assert!(
+                    p.to_string_lossy().contains("shard-00000.sgg"),
+                    "{name}: error lost the shard path: {err}"
+                );
+            }
+            other => panic!("{name}: expected Error::ShardIo, got: {other}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains(needle), "{name}: `{needle}` not in `{msg}`");
+        assert!(msg.contains("at byte"), "{name}: no byte offset in `{msg}`");
+        // corruption is never retried as a transient blip
+        assert!(!err.is_transient(), "{name}: {msg}");
+        // the header-only path rejects header-level corruption the same
+        // way instead of trusting a poisoned edge count
+        if *name != "flipped payload bit" {
+            assert!(io::read_binary_header(&path).is_err(), "{name}: header path accepted it");
+        }
+    }
+
+    // restoring the original bytes restores a clean decode
+    std::fs::write(&path, &good).unwrap();
+    let back = io::read_binary(&path).unwrap();
+    assert_eq!(back.len(), edges.len());
+    assert_eq!(io::decoded_checksum(&back), io::decoded_checksum(&edges));
+}
+
 /// A full transient fault schedule — sampling faults, sink faults, one
 /// injected worker panic — recovers via retries to shards byte-identical
 /// to a fault-free run.
@@ -231,6 +293,7 @@ fn fault_paths_table() {
         ("worker_panic_mid_pool", worker_panic_mid_pool),
         ("sink_error_mid_stream", sink_error_mid_stream),
         ("truncated_shard_read", truncated_shard_read),
+        ("sggedge2_corruption_paths", sggedge2_corruption_paths),
         (
             "transient_faults_recover_byte_identically",
             transient_faults_recover_byte_identically,

@@ -171,6 +171,108 @@ fn prop_json_roundtrip_fuzz() {
 }
 
 #[test]
+fn prop_sggedge2_roundtrip_preserves_the_edge_multiset() {
+    use sgg::graph::io;
+    check("sggedge2 roundtrip", 25, |rng| {
+        // occasionally stress the widest ids the format must carry
+        // (10-byte varints); otherwise a broad random id range
+        let spec = if rng.bool(0.25) {
+            PartiteSpec::square(u64::MAX)
+        } else {
+            PartiteSpec::bipartite(1 + rng.below(1 << 40), 1 + rng.below(1 << 40))
+        };
+        let mut e = EdgeList::new(spec);
+        for _ in 0..rng.below(2_000) {
+            e.push(rng.below(spec.n_src), rng.below(spec.n_dst));
+        }
+        if spec.n_src == u64::MAX {
+            e.push(u64::MAX - 1, u64::MAX - 1);
+            e.push(0, u64::MAX - 1);
+        }
+        let path = std::env::temp_dir().join(format!(
+            "sgg_prop_e2_{}_{:016x}.sgg",
+            std::process::id(),
+            rng.next_u64()
+        ));
+        let res = (|| -> Result<(), String> {
+            io::write_binary2(&path, &e).map_err(|x| x.to_string())?;
+            let back = io::read_binary(&path).map_err(|x| x.to_string())?;
+            prop_assert!(back.len() == e.len(), "count {} != {}", back.len(), e.len());
+            prop_assert!(
+                io::decoded_checksum(&back) == io::decoded_checksum(&e),
+                "edge multiset changed in the round trip"
+            );
+            // the decoded stream is sorted by (src, dst) — the format's
+            // within-chunk ordering guarantee
+            let pairs: Vec<_> = back.iter().collect();
+            for w in pairs.windows(2) {
+                prop_assert!(w[0] <= w[1], "decoded stream not sorted: {:?}", w);
+            }
+            Ok(())
+        })();
+        std::fs::remove_file(&path).ok();
+        res
+    });
+}
+
+#[test]
+fn prop_builtin_backends_are_deterministic_and_worker_invariant() {
+    use sgg::graph::io;
+    check("backend determinism", 5, |rng| {
+        // a small random source graph to fit the data-driven backends on
+        let n = 64 + rng.below(64);
+        let mut source = EdgeList::new(PartiteSpec::square(n));
+        for _ in 0..1_500 {
+            source.push(rng.below(n), rng.below(n));
+        }
+        let theta = random_theta(rng);
+        let backends: Vec<Box<dyn StructureGenerator>> = vec![
+            Box::new(KroneckerGen::new(theta, PartiteSpec::square(256), 3_000)),
+            Box::new(sgg::structgen::erdos_renyi::ErdosRenyi::fit(&source)),
+            Box::new(sgg::structgen::sbm::DcSbm::fit(&source, 4)),
+            Box::new(sgg::structgen::trilliong::TrillionG::fit(&source)),
+        ];
+        let seed = rng.next_u64();
+        let workers = 2 + rng.below_usize(4);
+        for gen in &backends {
+            let (spec, base_edges) = gen.base();
+            let edges = base_edges.clamp(500, 3_000);
+            // the batched hot path must be reproducible call over call
+            let a = gen
+                .generate_sized(spec.n_src, spec.n_dst, edges, seed)
+                .map_err(|e| e.to_string())?;
+            let b = gen
+                .generate_sized(spec.n_src, spec.n_dst, edges, seed)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(a.src == b.src && a.dst == b.dst, "{}: rerun differs", gen.name());
+            // chunked execution folds to the same edge multiset at any
+            // worker count (decoded checksum is order-invariant)
+            let mut fold = |w: usize| -> Result<(u64, u64), String> {
+                let cfg =
+                    ChunkConfig { prefix_levels: 2, workers: w, ..ChunkConfig::default() };
+                let (mut sum, mut count) = (0u64, 0u64);
+                gen.generate_into(spec.n_src, spec.n_dst, edges, seed, cfg, &mut |c| {
+                    sum = sum.wrapping_add(io::decoded_checksum(&c.edges));
+                    count += c.edges.len() as u64;
+                    Ok(())
+                })
+                .map_err(|e| e.to_string())?;
+                Ok((sum, count))
+            };
+            let (s1, c1) = fold(1)?;
+            let (sk, ck) = fold(workers)?;
+            prop_assert!(
+                c1 == edges && ck == edges,
+                "{}: chunked counts {c1}/{ck} != {edges}",
+                gen.name()
+            );
+            prop_assert!(s1 == sk, "{}: worker count changed the edge multiset", gen.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_density_preserved_across_scales() {
     check("density preservation", 20, |rng| {
         let spec = PartiteSpec::bipartite(1 + rng.below(10_000), 1 + rng.below(10_000));
