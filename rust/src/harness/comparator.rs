@@ -24,7 +24,12 @@
 //! ([`crate::graph::io::decoded_checksum`]) — exact, stored as a
 //! 16-digit hex string because the value is a full u64 and JSON numbers
 //! only carry 53 bits; goldens pinned before the field existed simply
-//! skip the check. A golden with `"pinned": false` — the checked-in
+//! skip the check. The BFS-sampled path metrics (`effective_diameter`,
+//! `cpl`, measured at the pinned
+//! [`crate::harness::runner::BFS_SAMPLES`]/[`crate::harness::runner::BFS_SEED`]
+//! schedule) are optional the same way: always written on bless,
+//! checked only when the golden carries them. A golden with
+//! `"pinned": false` — the checked-in
 //! placeholder state — or a missing file is *blessed*: the measured
 //! profile is written back pinned, so the repository converges to real
 //! measured goldens on the first `sgg test` run in any environment.
@@ -168,6 +173,18 @@ fn check_all(g: &Json, m: &MetricProfile, path: &Path) -> Result<Vec<MetricCheck
             .unwrap_or(DEFAULT_TOL);
         checks.push(MetricCheck::new(name, value, got, tol));
     }
+    // Optional for back-compat, like `edge_checksum`: goldens pinned
+    // before the BFS path metrics existed skip them until re-blessed.
+    for (name, got) in [("effective_diameter", m.effective_diameter), ("cpl", m.cpl)] {
+        let Some(entry) = metrics.get(name) else { continue };
+        let value =
+            entry.get("value").and_then(|v| v.as_f64()).ok_or_else(|| bad(name))?;
+        let tol = entry
+            .get("tol")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(DEFAULT_TOL);
+        checks.push(MetricCheck::new(name, value, got, tol));
+    }
     Ok(checks)
 }
 
@@ -194,6 +211,11 @@ fn write_golden(path: &Path, m: &MetricProfile, prev: Option<&Json>) -> Result<(
             Json::obj(vec![
                 ("degree_dist", metric(m.degree_dist, tol_of("degree_dist"))),
                 ("dcc", metric(m.dcc, tol_of("dcc"))),
+                (
+                    "effective_diameter",
+                    metric(m.effective_diameter, tol_of("effective_diameter")),
+                ),
+                ("cpl", metric(m.cpl, tol_of("cpl"))),
             ]),
         ),
     ]);
@@ -227,6 +249,8 @@ mod tests {
             // deliberately > 2^53 so the test fails if the comparator
             // ever routes the checksum through f64 equality
             edge_checksum: 0xdead_beef_cafe_f00d,
+            effective_diameter: 3.25,
+            cpl: 2.5,
         }
     }
 
@@ -242,7 +266,7 @@ mod tests {
         // the blessed golden round-trips to a full match
         match compare_or_bless(&path, &m, false).unwrap() {
             GoldenOutcome::Matched(checks) => {
-                assert_eq!(checks.len(), 5);
+                assert_eq!(checks.len(), 7);
                 assert!(checks.iter().all(|c| c.passed));
             }
             other => panic!("expected match, got {other:?}"),
@@ -283,7 +307,7 @@ mod tests {
         }
         std::fs::write(&path, g.to_string()).unwrap();
         match compare_or_bless(&path, &off, false).unwrap() {
-            GoldenOutcome::Matched(checks) => assert_eq!(checks.len(), 4),
+            GoldenOutcome::Matched(checks) => assert_eq!(checks.len(), 6),
             other => panic!("expected legacy match, got {other:?}"),
         }
 
@@ -294,6 +318,41 @@ mod tests {
         std::fs::write(&path, g.to_string()).unwrap();
         let err = compare_or_bless(&path, &off, false).unwrap_err();
         assert!(err.to_string().contains("hex"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pre_bfs_goldens_skip_path_metric_checks() {
+        let dir = tmp("prebfs");
+        let path = dir.join("g.json");
+        compare_or_bless(&path, &profile(), false).unwrap();
+        let mut g = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Json::Obj(o) = &mut g {
+            if let Some(Json::Obj(ms)) = o.get_mut("metrics") {
+                ms.remove("effective_diameter");
+                ms.remove("cpl");
+            }
+        }
+        std::fs::write(&path, g.to_string()).unwrap();
+        // path metrics drifted, but the old golden never pinned them
+        let mut moved = profile();
+        moved.effective_diameter += 10.0;
+        moved.cpl += 10.0;
+        match compare_or_bless(&path, &moved, false).unwrap() {
+            GoldenOutcome::Matched(checks) => {
+                assert_eq!(checks.len(), 5);
+                assert!(checks
+                    .iter()
+                    .all(|c| c.name != "effective_diameter" && c.name != "cpl"));
+            }
+            other => panic!("expected match, got {other:?}"),
+        }
+        // re-blessing pins them again
+        compare_or_bless(&path, &moved, true).unwrap();
+        match compare_or_bless(&path, &moved, false).unwrap() {
+            GoldenOutcome::Matched(checks) => assert_eq!(checks.len(), 7),
+            other => panic!("expected match, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

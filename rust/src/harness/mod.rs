@@ -27,7 +27,7 @@ pub mod runner;
 
 pub use comparator::{compare_or_bless, GoldenOutcome, MetricCheck};
 pub use reporter::{report_json, write_report};
-pub use runner::{run_scenario_profile, MetricProfile};
+pub use runner::{run_scenario_profile, MetricProfile, BFS_SAMPLES, BFS_SEED};
 
 use crate::pipeline::fault::FaultPlan;
 use crate::{Error, Result};

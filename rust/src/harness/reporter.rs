@@ -35,6 +35,8 @@ pub fn report_json(report: &HarnessReport) -> Json {
                         ("degree_dist", Json::from(p.degree_dist)),
                         ("dcc", Json::from(p.dcc)),
                         ("edge_checksum", Json::from(format!("{:016x}", p.edge_checksum))),
+                        ("effective_diameter", Json::from(p.effective_diameter)),
+                        ("cpl", Json::from(p.cpl)),
                     ]),
                 ));
             }
@@ -94,6 +96,8 @@ mod tests {
                         dcc: 0.8,
                         profile_hash: 7,
                         edge_checksum: 0xabcd,
+                        effective_diameter: 4.5,
+                        cpl: 2.25,
                     }),
                     checks: vec![MetricCheck {
                         name: "edges".into(),

@@ -3,8 +3,9 @@
 //! schedule) and measure its [`MetricProfile`] by streaming the shards
 //! back — never materializing the generated graph.
 
-use crate::graph::io;
+use crate::graph::{io, EdgeList};
 use crate::metrics::degree::{self, DegreeProfile};
+use crate::metrics::hopplot;
 use crate::metrics::stream::{profile_shards_with, DCC_SAMPLES};
 use crate::pipeline::fault::{FaultPlan, RetryPolicy};
 use crate::pipeline::spec::{ScenarioSpec, SinkSpec};
@@ -13,13 +14,23 @@ use crate::structgen::chunked::ChunkConfig;
 use crate::{Error, Result};
 use std::path::Path;
 
+/// BFS sample count pinned by the harness for the sampled path metrics
+/// ([`MetricProfile::effective_diameter`] / [`MetricProfile::cpl`]).
+/// Fixed together with [`BFS_SEED`] so golden values are deterministic.
+pub const BFS_SAMPLES: usize = 64;
+
+/// BFS source-sampling seed paired with [`BFS_SAMPLES`].
+pub const BFS_SEED: u64 = 0x5667;
+
 /// The measured fingerprint of one scenario run: output sizes, the
 /// streamed structural scores against the scenario's source dataset,
 /// a hash of the full synthetic degree profile (so "bit-identical"
-/// covers every node's degree, not just the two scalar scores), and
-/// the decoded-edge multiset checksum of the output shards (so the
+/// covers every node's degree, not just the two scalar scores), the
+/// decoded-edge multiset checksum of the output shards (so the
 /// pinned identity is the *graph*, not the shard encoding — SGGEDGE1
-/// and SGGEDGE2 runs of the same scenario measure equal).
+/// and SGGEDGE2 runs of the same scenario measure equal), and the
+/// BFS-sampled path metrics at the pinned
+/// ([`BFS_SAMPLES`], [`BFS_SEED`]) schedule.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MetricProfile {
     /// Total generated edges (from the validated shard headers).
@@ -35,6 +46,12 @@ pub struct MetricProfile {
     /// Order- and format-invariant multiset checksum over every decoded
     /// edge of every shard ([`io::decoded_checksum`]).
     pub edge_checksum: u64,
+    /// 90%-effective diameter of the generated graph, BFS-sampled at
+    /// the pinned ([`BFS_SAMPLES`], [`BFS_SEED`]) schedule (paper
+    /// Figure 2 right).
+    pub effective_diameter: f64,
+    /// Characteristic path length under the same pinned BFS schedule.
+    pub cpl: f64,
 }
 
 impl MetricProfile {
@@ -47,6 +64,8 @@ impl MetricProfile {
             && self.dcc.to_bits() == other.dcc.to_bits()
             && self.profile_hash == other.profile_hash
             && self.edge_checksum == other.edge_checksum
+            && self.effective_diameter.to_bits() == other.effective_diameter.to_bits()
+            && self.cpl.to_bits() == other.cpl.to_bits()
     }
 }
 
@@ -94,7 +113,7 @@ pub fn run_scenario_profile(
     run_scenario_opts(
         &spec,
         &Registries::builtin(),
-        RunOptions { resume: false, faults },
+        RunOptions { resume: false, faults, ..RunOptions::default() },
     )?;
 
     let source = crate::datasets::load(&spec.dataset, spec.dataset_seed)?;
@@ -103,16 +122,24 @@ pub fn run_scenario_profile(
         profile_shards_with(out_dir, spec.workers.max(1), faults, RetryPolicy::default())?;
     // The decoded-edge checksum is a second read pass; wrapping-summing
     // the per-shard checksums equals the checksum of the union multiset,
-    // so the value is independent of shard format and edge order.
-    let edge_checksum = if scan.shards == 0 {
-        0
+    // so the value is independent of shard format and edge order. The
+    // same pass assembles the edges in memory for the BFS-sampled path
+    // metrics — harness scenarios are sized to fit.
+    let (edge_checksum, effective_diameter, cpl) = if scan.shards == 0 {
+        (0, 0.0, 0.0)
     } else {
         let reader = io::ShardReader::open(out_dir)?;
         let mut sum = 0u64;
+        let mut all = EdgeList::new(reader.spec());
         for i in 0..reader.len() {
             sum = sum.wrapping_add(io::shard_decoded_checksum(reader.path(i))?);
+            all.extend_from(&io::read_binary(reader.path(i))?);
         }
-        sum
+        (
+            sum,
+            hopplot::effective_diameter(&all, 0.9, BFS_SAMPLES, BFS_SEED),
+            hopplot::characteristic_path_length(&all, BFS_SAMPLES, BFS_SEED),
+        )
     };
     Ok(MetricProfile {
         edges: scan.edges,
@@ -121,6 +148,8 @@ pub fn run_scenario_profile(
         dcc: degree::dcc_profiles(&orig, &synth, DCC_SAMPLES),
         profile_hash: degree::profile_hash(&synth),
         edge_checksum,
+        effective_diameter,
+        cpl,
     })
 }
 

@@ -107,6 +107,7 @@ pub mod metrics;
 pub mod datasets;
 pub mod pipeline;
 pub mod harness;
+pub mod serve;
 pub mod runtime;
 pub mod gnn;
 pub mod experiments;

@@ -5,21 +5,34 @@
 //! sgg run scenario.toml [--workers N]   execute a declarative scenario spec
 //!         [--resume]                    complete an interrupted shard run
 //!         [--fault-seed N]              inject a transient fault schedule
+//!         [--json]                      canonical-JSON report instead of prose
 //! sgg test scenarios/ [--bless] [--report harness.json]
 //!                                       golden-profile conformance harness
 //! sgg fit --dataset ieee-fraud --out model.sggm
 //! sgg generate --model model.sggm --scale 2 --out /tmp/synth [--workers N]
 //! sgg fit-generate --dataset ieee-fraud --scale 2 --out /tmp/synth
 //! sgg evaluate --dataset tabformer      fit + generate + Table-2 metrics
-//! sgg eval --shards DIR[,DIR...] --dataset X   streamed evaluation of shard output
+//! sgg eval --shards DIR[,DIR...] --dataset X [--json]   streamed evaluation of shard output
 //! sgg plan --model model.sggm --hosts 3 --out run.json [--scale N] [--seed N]
 //! sgg generate --model model.sggm --chunks A..B --manifest run.json --out-dir shard-k/
 //! sgg merge --manifest run.json HOST_DIR... --out-dir merged/
 //! sgg stream --nodes 1048576 --edges 50000000 --out /tmp/shards --workers 8
 //!         [--format sggedge1|sggedge2]       fixed-width or varint-delta shards
+//!         [--json]                      canonical-JSON stream report
+//! sgg serve [--addr 127.0.0.1:7878] [--cache-dir sgg-cache]
+//!         [--max-jobs N] [--queue-depth N]   HTTP generation service
 //! sgg experiment table2 [--quick]       regenerate one paper table/figure
 //! sgg experiment all [--quick]          regenerate everything
 //! ```
+//!
+//! `sgg serve` exposes the scenario pipeline over HTTP (see
+//! `src/serve/`): `POST /jobs` submits a scenario (TOML body) into a
+//! bounded job queue (`429` + `Retry-After` when full), `GET
+//! /jobs/<id>` streams the same canonical-JSON `StreamReport` lines
+//! `sgg run --json` prints, `DELETE /jobs/<id>` cancels at the next
+//! chunk boundary leaving a resumable shard prefix, and `POST /fit` /
+//! `GET /artifacts/<hash>` fit and fetch content-addressed `.sggm`
+//! model artifacts.
 //!
 //! `sgg eval` scores `ShardSink` output **without materializing it**:
 //! shards stream chunk-by-chunk through the mergeable degree
@@ -206,17 +219,59 @@ fn run(args: &Args) -> Result<()> {
                 plan.fatal_at_chunk = Some(chunk);
                 faults = Some(plan);
             }
-            let opts = pipeline::RunOptions { resume: args.has_flag("resume"), faults };
+            let opts = pipeline::RunOptions {
+                resume: args.has_flag("resume"),
+                faults,
+                ..pipeline::RunOptions::default()
+            };
+            let json = args.has_flag("json") || args.get("json").is_some();
             let out = pipeline::run_scenario_opts(&spec, &Registries::builtin(), opts)?;
-            println!("scenario `{}`: {}", spec.name, out.summary());
-            if spec.evaluate {
-                if let SinkOutput::Dataset(synth) = &out {
-                    // the shard path prints its tapped quality via the
-                    // stream report; the memory path scores the full
-                    // Table-2 metrics here
+            // the shard path carries its tapped quality inside the
+            // stream report; the memory path scores the full Table-2
+            // metrics here
+            let quality = match (&out, spec.evaluate) {
+                (SinkOutput::Dataset(synth), true) => {
                     let ds = sgg::datasets::load(&spec.dataset, spec.dataset_seed)?;
-                    let report = sgg::metrics::Evaluator::new(&ds.edges, &ds.edge_features)
-                        .score(&synth.edges, &synth.edge_features);
+                    Some(
+                        sgg::metrics::Evaluator::new(&ds.edges, &ds.edge_features)
+                            .score(&synth.edges, &synth.edge_features),
+                    )
+                }
+                _ => None,
+            };
+            if json {
+                // one canonical-JSON line; the shard-run form is the
+                // exact serialization `GET /jobs/<id>` streams
+                match &out {
+                    SinkOutput::Streamed(report) => println!("{}", report.to_json()),
+                    SinkOutput::Dataset(synth) => {
+                        let quality_json = quality
+                            .as_ref()
+                            .map(|q| q.to_json())
+                            .unwrap_or(sgg::util::json::Json::Null);
+                        println!(
+                            "{}",
+                            sgg::util::json::Json::obj(vec![
+                                ("edge_feature_cols", synth.edge_features.n_cols().into()),
+                                (
+                                    "edges",
+                                    sgg::util::json::Json::u64_exact(synth.edges.len() as u64)
+                                ),
+                                (
+                                    "nodes",
+                                    sgg::util::json::Json::u64_exact(
+                                        synth.edges.n_nodes() as u64
+                                    )
+                                ),
+                                ("quality", quality_json),
+                                ("scenario", spec.name.as_str().into()),
+                            ])
+                        );
+                    }
+                }
+            } else {
+                println!("scenario `{}`: {}", spec.name, out.summary());
+                if let Some(report) = &quality {
                     println!("quality[{}]: {report}", spec.name);
                 }
             }
@@ -403,7 +458,8 @@ fn run(args: &Args) -> Result<()> {
         }
         Some("eval") => {
             let usage = "usage: sgg eval --shards DIR[,DIR...] (--dataset NAME | \
-                         --model m.sggm) [--dataset-seed N] [--workers N]";
+                         --model m.sggm) [--dataset-seed N] [--workers N] [--json]";
+            let json = args.has_flag("json") || args.get("json").is_some();
             let shards = args
                 .get("shards")
                 .ok_or_else(|| sgg::Error::Config(usage.into()))?;
@@ -422,7 +478,9 @@ fn run(args: &Args) -> Result<()> {
                     // the artifact's provenance header names the fit
                     // dataset — no component is deserialized
                     let src = FittedPipeline::read_provenance(Path::new(model))?;
-                    println!("reference from `{model}`: dataset `{}`", src.dataset);
+                    if !json {
+                        println!("reference from `{model}`: dataset `{}`", src.dataset);
+                    }
                     sgg::datasets::load(&src.dataset, args.get_or("dataset-seed", 1u64))?
                 }
                 (None, Some(name)) => {
@@ -439,7 +497,11 @@ fn run(args: &Args) -> Result<()> {
                 .map(std::path::PathBuf::from)
                 .collect();
             let report = sgg::metrics::stream::evaluate_shard_dirs(&dirs, &orig, workers)?;
-            println!("{} vs {}: {report}", shards, reference.name);
+            if json {
+                println!("{}", report.to_json());
+            } else {
+                println!("{} vs {}: {report}", shards, reference.name);
+            }
             Ok(())
         }
         Some("stream") => {
@@ -473,7 +535,11 @@ fn run(args: &Args) -> Result<()> {
                 std::path::Path::new(&out),
                 args.has_flag("resume"),
             )?;
-            println!("{report}");
+            if args.has_flag("json") || args.get("json").is_some() {
+                println!("{}", report.to_json());
+            } else {
+                println!("{report}");
+            }
             Ok(())
         }
         Some("test") => {
@@ -531,6 +597,29 @@ fn run(args: &Args) -> Result<()> {
                 )))
             }
         }
+        Some("serve") => {
+            let addr = args.get("addr").unwrap_or("127.0.0.1:7878").to_string();
+            let cache_dir = args.get("cache-dir").unwrap_or("sgg-cache").to_string();
+            // --max-jobs 0 means "one per core" on the CLI; the paused
+            // workers=0 mode is a library-level test knob only
+            let workers = match args.get_or("max-jobs", 0usize) {
+                0 => sgg::util::threadpool::default_threads(),
+                w => w,
+            };
+            let queue_depth = args.get_or("queue-depth", 8usize);
+            let server = sgg::serve::Server::bind(&sgg::serve::ServeConfig {
+                addr,
+                cache_dir: std::path::PathBuf::from(&cache_dir),
+                workers,
+                queue_depth,
+            })?;
+            println!(
+                "sgg serve listening on {} ({workers} job workers, queue depth \
+                 {queue_depth}, cache {cache_dir})",
+                server.local_addr()?
+            );
+            server.run()
+        }
         Some("experiment") => {
             let quick = args.has_flag("quick") || args.get("quick").is_some();
             let id = args
@@ -549,7 +638,7 @@ fn run(args: &Args) -> Result<()> {
         }
         _ => {
             println!(
-                "usage: sgg <datasets|run|test|fit|generate|plan|merge|fit-generate|evaluate|eval|stream|experiment> [--options]\n\
+                "usage: sgg <datasets|run|test|fit|generate|plan|merge|fit-generate|evaluate|eval|stream|serve|experiment> [--options]\n\
                  lifecycle: sgg fit --dataset ieee-fraud --out m.sggm && \
                  sgg generate --model m.sggm --scale 2 --out /tmp/synth\n\
                  distributed: sgg plan --model m.sggm --hosts 3 --out run.json; \
@@ -557,6 +646,8 @@ fn run(args: &Args) -> Result<()> {
                  sgg merge --manifest run.json shard-*/ --out-dir merged/\n\
                  streamed eval: sgg eval --shards /tmp/shards --dataset ieee-fraud --workers 4 \
                  (comma-separate unmerged host dirs)\n\
+                 service: sgg serve --addr 127.0.0.1:7878 --cache-dir sgg-cache \
+                 (POST /jobs, GET /jobs/<id>, POST /fit, GET /artifacts/<hash>)\n\
                  conformance: sgg test scenarios/ [--bless] [--report harness.json]\n\
                  recovery: sgg run scenarios/fraud.toml --resume (after an interrupted shard run)\n\
                  experiments: {:?}\n\

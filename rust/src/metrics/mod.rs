@@ -54,6 +54,18 @@ impl std::fmt::Display for QualityReport {
     }
 }
 
+impl QualityReport {
+    /// Canonical JSON form (`sgg run --json` / `sgg evaluate` memory
+    /// runs, and the final quality object of `sgg serve` memory jobs).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("degree_dist", self.degree_dist.into()),
+            ("feature_corr", self.feature_corr.into()),
+            ("degree_feat_dist", self.degree_feat_dist.into()),
+        ])
+    }
+}
+
 /// Evaluate a synthetic (structure, features) pair against the original —
 /// one row of paper Table 2. Features are edge-level (one row per edge).
 ///

@@ -33,6 +33,7 @@ use crate::pipeline::fault::{FaultPlan, FaultReader, RetryPolicy};
 use crate::pipeline::parallel::ParallelChunkRunner;
 use crate::pipeline::sink::{Sink, SinkFinish};
 use crate::structgen::chunked::Chunk;
+use crate::util::json::Json;
 use crate::Result;
 use std::path::Path;
 
@@ -141,6 +142,20 @@ impl std::fmt::Display for ShardEvalReport {
     }
 }
 
+impl ShardEvalReport {
+    /// Canonical JSON form (`sgg eval --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("degree_dist", Json::from(self.degree_dist)),
+            ("dcc", Json::from(self.dcc)),
+            ("edges", Json::u64_exact(self.edges)),
+            ("shards", Json::from(self.shards)),
+            ("peak_shard_edges", Json::u64_exact(self.peak_shard_edges)),
+            ("profile_bytes", Json::u64_exact(self.profile_bytes)),
+        ])
+    }
+}
+
 /// Evaluate `ShardSink` output against an original degree profile
 /// without materializing the synthetic graph. See the module docs for
 /// the exactness and memory contract.
@@ -188,6 +203,25 @@ pub struct StructuralReport {
 impl std::fmt::Display for StructuralReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "degree_dist={:.4} dcc={:.4}", self.degree_dist, self.dcc)
+    }
+}
+
+impl StructuralReport {
+    /// Canonical JSON form (the `quality` object of a
+    /// [`StreamReport`](crate::pipeline::StreamReport)'s JSON document).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("degree_dist", Json::from(self.degree_dist)),
+            ("dcc", Json::from(self.dcc)),
+        ])
+    }
+
+    /// Parse the canonical JSON form.
+    pub fn from_json(doc: &Json) -> Result<StructuralReport> {
+        Ok(StructuralReport {
+            degree_dist: doc.req_f64("degree_dist")?,
+            dcc: doc.req_f64("dcc")?,
+        })
     }
 }
 

@@ -45,9 +45,12 @@ pub mod spec;
 pub use artifact::{SourceSummary, SGGM_FORMAT, SGGM_VERSION};
 pub use distrib::{HostReport, MergeReport, RunManifest};
 pub use fault::{FaultPlan, FaultReader, FaultSink, RetryPolicy, RetryingSink};
-pub use parallel::{ChunkPlan, ParallelChunkRunner, SplitPlan};
+pub use parallel::{CancelToken, ChunkPlan, ParallelChunkRunner, SplitPlan};
 pub use registry::{Registries, Registry};
-pub use sink::{MemorySink, ShardSink, Sink, SinkFinish, SinkOutput, StreamReport};
+pub use sink::{
+    CancelSink, MemorySink, ProgressHandle, ShardSink, Sink, SinkFinish, SinkOutput,
+    StreamReport,
+};
 pub use spec::{
     ComponentSpec, NodeFeatureSpec, Params, ScenarioSpec, SinkSpec, SizeSpec, Value,
 };
@@ -388,8 +391,9 @@ pub fn run_scenario_with(spec: &ScenarioSpec, regs: &Registries) -> Result<SinkO
 }
 
 /// Robustness knobs for [`run_scenario_opts`] — the levers behind `sgg
-/// run --resume` / `--fault-seed` and the harness's fault re-runs.
-#[derive(Clone, Copy, Debug, Default)]
+/// run --resume` / `--fault-seed`, the harness's fault re-runs, and
+/// `sgg serve`'s job supervision (cancellation + live progress).
+#[derive(Clone, Debug, Default)]
 pub struct RunOptions {
     /// Resume an interrupted shard run from its per-chunk completion
     /// records (the intact shard prefix): already-completed chunks are
@@ -403,6 +407,17 @@ pub struct RunOptions {
     /// sink's [`RetryPolicy`] absorbs every transient fault, so output
     /// is bit-identical to a fault-free run.
     pub faults: Option<FaultPlan>,
+    /// Cooperative cancellation: when set, a [`sink::CancelSink`] wraps
+    /// the sink chain and aborts the run through the parallel runner's
+    /// first-error path as soon as the token trips. A cancelled shard
+    /// run keeps its consecutive completed prefix and can be finished
+    /// later with [`RunOptions::resume`].
+    pub cancel: Option<CancelToken>,
+    /// Live progress mirror for shard runs: the [`ShardSink`] publishes
+    /// a [`StreamReport`] snapshot into this slot after every written
+    /// shard (`sgg serve` streams these from `GET /jobs/<id>`). Ignored
+    /// by memory runs.
+    pub progress: Option<sink::ProgressHandle>,
 }
 
 /// [`run_scenario_with`] plus [`RunOptions`]: resume support and fault
@@ -453,12 +468,20 @@ pub fn run_scenario_opts(
             let chunks =
                 ChunkConfig { workers, faults: opts.faults, ..ChunkConfig::default() };
             let mut sink = MemorySink::new();
-            if let Some(plan) = opts.faults {
-                let mut faulted = FaultSink::new(&mut sink, plan);
-                let mut retrying = RetryingSink::new(&mut faulted, chunks.retry);
-                fitted.run(spec.size, chunks, &mut retrying, spec.seed)?
+            let mut faulted;
+            let mut retrying;
+            let inner: &mut dyn Sink = if let Some(plan) = opts.faults {
+                faulted = FaultSink::new(&mut sink, plan);
+                retrying = RetryingSink::new(&mut faulted, chunks.retry);
+                &mut retrying
             } else {
-                fitted.run(spec.size, chunks, &mut sink, spec.seed)?
+                &mut sink
+            };
+            if let Some(token) = &opts.cancel {
+                let mut cancel = sink::CancelSink::new(inner, token.clone());
+                fitted.run(spec.size, chunks, &mut cancel, spec.seed)?
+            } else {
+                fitted.run(spec.size, chunks, inner, spec.seed)?
             }
         }
         SinkSpec::Shards { dir, chunks } => {
@@ -474,9 +497,14 @@ pub fn run_scenario_opts(
             } else {
                 ShardSink::new(dir, chunks)?
             };
+            if let Some(slot) = &opts.progress {
+                sink.publish_to(slot.clone());
+            }
             // Adapter order matters: the tap sits innermost so it
             // observes each chunk exactly once — injected faults fire
-            // (and retries replay) above it.
+            // (and retries replay) above it; the cancel check sits
+            // outermost so a tripped token stops the run before any
+            // further work.
             let mut tapped;
             let inner: &mut dyn Sink = if spec.evaluate {
                 let tap = crate::metrics::stream::GenerationTap::new(
@@ -487,10 +515,18 @@ pub fn run_scenario_opts(
             } else {
                 &mut sink
             };
-            if let Some(plan) = opts.faults {
-                let mut faulted = FaultSink::new(inner, plan);
-                let mut retrying = RetryingSink::new(&mut faulted, chunks.retry);
-                fitted.run(spec.size, chunks, &mut retrying, spec.seed)?
+            let mut faulted;
+            let mut retrying;
+            let inner: &mut dyn Sink = if let Some(plan) = opts.faults {
+                faulted = FaultSink::new(inner, plan);
+                retrying = RetryingSink::new(&mut faulted, chunks.retry);
+                &mut retrying
+            } else {
+                inner
+            };
+            if let Some(token) = &opts.cancel {
+                let mut cancel = sink::CancelSink::new(inner, token.clone());
+                fitted.run(spec.size, chunks, &mut cancel, spec.seed)?
             } else {
                 fitted.run(spec.size, chunks, inner, spec.seed)?
             }

@@ -48,8 +48,38 @@ use crate::util::threadpool::Bounded;
 use crate::Result;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+/// A shared, cloneable cancellation flag for in-flight generation.
+///
+/// Cancellation rides the runner's existing first-error path: a
+/// cancel-aware sink adapter (see
+/// [`CancelSink`](crate::pipeline::sink::CancelSink)) turns a tripped
+/// token into a sink error at the next chunk boundary, which aborts the
+/// worker pool exactly like any other sink failure — in-flight workers
+/// stop, unsampled chunks are never sampled, and the already-written
+/// shard prefix stays intact (and resumable). `sgg serve`'s
+/// `DELETE /jobs/<id>` trips this token.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// Fresh, untripped token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the token: every clone observes the cancellation.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// True once any clone has called [`CancelToken::cancel`].
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
 
 /// Deterministic per-chunk seed: a splitmix64-style hash of the job seed
 /// and the chunk index. Chunk streams are independent of each other and

@@ -7,7 +7,9 @@
 use crate::datasets::Dataset;
 use crate::graph::{io, EdgeList};
 use crate::pipeline::fault::{retry_transient, RetryPolicy};
+use crate::pipeline::parallel::CancelToken;
 use crate::structgen::chunked::{Chunk, ChunkConfig};
+use crate::util::json::Json;
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -185,6 +187,48 @@ impl std::fmt::Display for StreamReport {
     }
 }
 
+impl StreamReport {
+    /// Canonical JSON form — the single report format shared by
+    /// `sgg run --json` / `sgg stream --json` and every progress line
+    /// `sgg serve` emits from `GET /jobs/<id>`. Wide counters use
+    /// [`Json::u64_exact`], so the document round-trips losslessly
+    /// through [`StreamReport::from_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("edges_written", Json::u64_exact(self.edges_written)),
+            ("shards", Json::from(self.shards)),
+            ("wall_secs", Json::from(self.wall_secs)),
+            ("peak_buffer_bytes", Json::u64_exact(self.peak_buffer_bytes)),
+            ("worker_busy_secs", Json::from(self.worker_busy_secs.clone())),
+            ("out_dir", Json::from(self.out_dir.display().to_string())),
+            (
+                "quality",
+                match &self.quality {
+                    Some(q) => q.to_json(),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Parse the canonical JSON form back into a report — the client
+    /// side of the service's progress stream.
+    pub fn from_json(doc: &Json) -> Result<StreamReport> {
+        Ok(StreamReport {
+            edges_written: doc.req_u64("edges_written")?,
+            shards: doc.req_usize("shards")?,
+            wall_secs: doc.req_f64("wall_secs")?,
+            peak_buffer_bytes: doc.req_u64("peak_buffer_bytes")?,
+            worker_busy_secs: doc.req_f64s("worker_busy_secs")?,
+            out_dir: PathBuf::from(doc.req_str("out_dir")?),
+            quality: match doc.opt("quality") {
+                Some(q) => Some(crate::metrics::stream::StructuralReport::from_json(q)?),
+                None => None,
+            },
+        })
+    }
+}
+
 /// Path of the shard holding chunk `index` under `dir` — zero-padded so
 /// lexical path order equals chunk-index order.
 pub fn shard_path(dir: &Path, index: usize) -> PathBuf {
@@ -219,15 +263,35 @@ pub struct ShardSink {
     top_sizes: Vec<usize>,
     /// Sampling seconds per worker id, aggregated from chunk provenance.
     worker_busy: Vec<f64>,
+    /// Live progress mirror: when set, the sink publishes a fresh
+    /// [`StreamReport`] snapshot here after every shard it writes.
+    progress: Option<ProgressHandle>,
     shards: usize,
     written: u64,
     t0: Instant,
 }
 
+/// Shared slot a [`ShardSink`] publishes in-flight [`StreamReport`]
+/// snapshots into — the mechanism behind `sgg serve`'s
+/// `GET /jobs/<id>` progress stream. Readers lock and clone; the sink
+/// overwrites the slot once per written shard.
+pub type ProgressHandle = std::sync::Arc<std::sync::Mutex<Option<StreamReport>>>;
+
 impl ShardSink {
     /// Create the output directory and an empty sink.
+    ///
+    /// Leftover `*.tmp` staging files from an interrupted earlier run
+    /// are swept on open — they are incomplete by construction, and a
+    /// fresh run would otherwise leave them lying around to confuse
+    /// directory listings and shard-dir consumers.
     pub fn new(out_dir: &Path, chunks: ChunkConfig) -> Result<ShardSink> {
         std::fs::create_dir_all(out_dir)?;
+        for entry in std::fs::read_dir(out_dir)? {
+            let p = entry?.path();
+            if p.extension().map(|x| x == "tmp").unwrap_or(false) {
+                std::fs::remove_file(&p)?;
+            }
+        }
         Ok(ShardSink {
             out_dir: out_dir.to_path_buf(),
             max_inflight: chunks.queue_capacity.max(1) + chunks.workers.max(1) + 1,
@@ -236,6 +300,7 @@ impl ShardSink {
             scratch: Vec::new(),
             top_sizes: Vec::new(),
             worker_busy: Vec::new(),
+            progress: None,
             shards: 0,
             written: 0,
             t0: Instant::now(),
@@ -267,13 +332,8 @@ impl ShardSink {
         chunks: ChunkConfig,
         start: usize,
     ) -> Result<(ShardSink, usize)> {
+        // `ShardSink::new` sweeps the staged `.tmp` debris
         let mut sink = ShardSink::new(out_dir, chunks)?;
-        for entry in std::fs::read_dir(out_dir)? {
-            let p = entry?.path();
-            if p.extension().map(|x| x == "tmp").unwrap_or(false) {
-                std::fs::remove_file(&p)?;
-            }
-        }
         let mut completed = start;
         loop {
             let p = shard_path(out_dir, completed);
@@ -314,6 +374,15 @@ impl ShardSink {
         }
     }
 
+    /// Mirror every subsequent progress snapshot into `slot` (one
+    /// [`StreamReport`] per written shard). The current state is
+    /// published immediately, so resumed runs surface their restored
+    /// prefix before the first new shard lands.
+    pub fn publish_to(&mut self, slot: ProgressHandle) {
+        *slot.lock().unwrap() = Some(self.report());
+        self.progress = Some(slot);
+    }
+
     /// The report built so far (same data [`Sink::finish`] returns).
     pub fn report(&self) -> StreamReport {
         StreamReport {
@@ -346,11 +415,65 @@ impl Sink for ShardSink {
         }
         self.worker_busy[chunk.worker] += chunk.sample_secs;
         self.note_size(chunk.edges.len());
+        if let Some(slot) = &self.progress {
+            *slot.lock().unwrap() = Some(StreamReport {
+                edges_written: self.written,
+                shards: self.shards,
+                wall_secs: self.t0.elapsed().as_secs_f64(),
+                peak_buffer_bytes: self.top_sizes.iter().sum::<usize>() as u64 * 16,
+                worker_busy_secs: self.worker_busy.clone(),
+                out_dir: self.out_dir.clone(),
+                quality: None,
+            });
+        }
         Ok(())
     }
 
     fn finish(&mut self) -> Result<SinkFinish> {
         Ok(SinkFinish::Streamed(self.report()))
+    }
+}
+
+/// Cancel-aware sink adapter: checks a [`CancelToken`] before handing
+/// each chunk to the inner sink and turns a tripped token into an
+/// error, which aborts the parallel runner through its normal
+/// first-error path (workers stop at the next chunk boundary, unsampled
+/// chunks never run). Because the runner delivers chunks strictly in
+/// index order and shard writes are atomic, a cancelled shard run
+/// always leaves a consecutive completed prefix — exactly what
+/// [`ShardSink::resume`] restarts from.
+pub struct CancelSink<'a> {
+    inner: &'a mut dyn Sink,
+    token: CancelToken,
+}
+
+impl<'a> CancelSink<'a> {
+    /// Wrap `inner`, aborting as soon as `token` trips.
+    pub fn new(inner: &'a mut dyn Sink, token: CancelToken) -> CancelSink<'a> {
+        CancelSink { inner, token }
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.token.is_cancelled() {
+            return Err(Error::Worker("generation cancelled".into()));
+        }
+        Ok(())
+    }
+}
+
+impl Sink for CancelSink<'_> {
+    fn name(&self) -> &'static str {
+        "cancel"
+    }
+
+    fn edges(&mut self, chunk: &mut Chunk) -> Result<()> {
+        self.check()?;
+        self.inner.edges(chunk)
+    }
+
+    fn finish(&mut self) -> Result<SinkFinish> {
+        self.check()?;
+        self.inner.finish()
     }
 }
 
@@ -442,6 +565,69 @@ mod tests {
         assert_eq!(completed, 1);
         assert_eq!(resumed.report().edges_written, 500);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_open_sweeps_stale_tmp_files() {
+        // regression: a fresh (non-resume) run over a directory holding
+        // `.tmp` debris from an interrupted earlier run must sweep it —
+        // previously only the resume path did
+        let dir = std::env::temp_dir().join(format!("sgg_sweep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(shard_path(&dir, 0).with_extension("sgg.tmp"), b"partial").unwrap();
+        std::fs::write(shard_path(&dir, 7).with_extension("sgg.tmp"), b"partial").unwrap();
+        let mut sink = ShardSink::new(&dir, ChunkConfig::default()).unwrap();
+        sink.edges(&mut chunk(0, 10)).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.extension().map(|x| x == "tmp").unwrap_or(false))
+            .collect();
+        assert!(leftovers.is_empty(), "stale .tmp survived fresh open: {leftovers:?}");
+        assert!(shard_path(&dir, 0).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stream_report_json_roundtrips() {
+        let report = StreamReport {
+            edges_written: (1u64 << 53) + 7, // exercises the wide-u64 encoding
+            shards: 3,
+            wall_secs: 1.25,
+            peak_buffer_bytes: 4096,
+            worker_busy_secs: vec![0.5, 0.75],
+            out_dir: PathBuf::from("/tmp/out"),
+            quality: Some(crate::metrics::stream::StructuralReport {
+                degree_dist: 0.9375,
+                dcc: 0.8125,
+            }),
+        };
+        let doc = Json::parse(&report.to_json().to_string()).unwrap();
+        let back = StreamReport::from_json(&doc).unwrap();
+        assert_eq!(back.edges_written, report.edges_written);
+        assert_eq!(back.shards, report.shards);
+        assert_eq!(back.wall_secs.to_bits(), report.wall_secs.to_bits());
+        assert_eq!(back.worker_busy_secs, report.worker_busy_secs);
+        assert_eq!(back.out_dir, report.out_dir);
+        assert_eq!(back.quality, report.quality);
+        // absent quality round-trips as None, not an error
+        let mut plain = report.clone();
+        plain.quality = None;
+        let back = StreamReport::from_json(&plain.to_json()).unwrap();
+        assert!(back.quality.is_none());
+    }
+
+    #[test]
+    fn cancel_sink_aborts_at_chunk_boundary() {
+        let token = CancelToken::new();
+        let mut inner = MemorySink::new();
+        let mut sink = CancelSink::new(&mut inner, token.clone());
+        sink.edges(&mut chunk(0, 5)).unwrap();
+        token.cancel();
+        let err = sink.edges(&mut chunk(1, 5)).unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        assert!(sink.finish().is_err());
     }
 
     #[test]

@@ -1,0 +1,93 @@
+//! Request/response bodies of the HTTP API, built on the canonical
+//! [`Json`] writer so every byte the service emits is reproducible:
+//! object keys sort, numbers follow the shared formatting rules, and
+//! progress lines are the exact [`crate::pipeline::StreamReport`]
+//! serialization `sgg run --json` prints.
+
+use super::cache::hash_hex;
+use super::jobs::{Job, JobState};
+use crate::util::json::Json;
+
+/// `{"error": <msg>}` — every non-2xx body.
+pub fn error(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::from(msg))])
+}
+
+/// `{"job": <id>}` — `POST /jobs` accepted.
+pub fn job_accepted(id: u64) -> Json {
+    Json::obj(vec![("job", Json::u64_exact(id))])
+}
+
+/// `{"cancelled": true, "job": <id>}` — `DELETE /jobs/<id>`.
+pub fn job_cancelled(id: u64) -> Json {
+    Json::obj(vec![("cancelled", Json::Bool(true)), ("job", Json::u64_exact(id))])
+}
+
+/// `{"cached": <bool>, "model": <16-hex>}` — `POST /fit`.
+pub fn fit_response(hash: u64, cached: bool) -> Json {
+    Json::obj(vec![("cached", Json::Bool(cached)), ("model", Json::from(hash_hex(hash)))])
+}
+
+/// Point-in-time job snapshot: `GET /jobs/<id>?wait=0`.
+///
+/// `report` is the final [`crate::pipeline::StreamReport`] for done
+/// jobs, the latest in-flight snapshot while running (or after a
+/// mid-run cancel), and `null` before the first progress update.
+/// `error` is non-null only for failed jobs.
+pub fn job_status(job: &Job) -> Json {
+    let state = job.state();
+    let report = match &state {
+        JobState::Done(r) => r.to_json(),
+        _ => job.progress().map(|r| r.to_json()).unwrap_or(Json::Null),
+    };
+    let error = match &state {
+        JobState::Failed(msg) => Json::from(msg.as_str()),
+        _ => Json::Null,
+    };
+    Json::obj(vec![
+        ("error", error),
+        ("job", Json::u64_exact(job.id())),
+        ("report", report),
+        ("state", Json::from(state.label())),
+    ])
+}
+
+/// Terminal line of a streamed `GET /jobs/<id>` body. Done jobs close
+/// with the verbatim final [`crate::pipeline::StreamReport`] (quality
+/// scores included when the scenario evaluated); failed and cancelled
+/// jobs close with an `{"error": ...}` / `{"cancelled": true}` marker
+/// so clients can always classify the last line by its keys.
+pub fn terminal_line(state: &JobState) -> Option<Json> {
+    match state {
+        JobState::Done(r) => Some(r.to_json()),
+        JobState::Failed(msg) => Some(error(msg)),
+        JobState::Cancelled => Some(Json::obj(vec![("cancelled", Json::Bool(true))])),
+        JobState::Queued | JobState::Running => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bodies_serialize_with_sorted_keys() {
+        assert_eq!(job_accepted(3).to_string(), "{\"job\":3}");
+        assert_eq!(job_cancelled(3).to_string(), "{\"cancelled\":true,\"job\":3}");
+        assert_eq!(
+            fit_response(0xdead_beef_0102_0304, true).to_string(),
+            "{\"cached\":true,\"model\":\"deadbeef01020304\"}"
+        );
+        assert_eq!(error("nope").to_string(), "{\"error\":\"nope\"}");
+    }
+
+    #[test]
+    fn terminal_lines_classify_by_keys() {
+        assert!(terminal_line(&JobState::Queued).is_none());
+        assert!(terminal_line(&JobState::Running).is_none());
+        let cancelled = terminal_line(&JobState::Cancelled).unwrap().to_string();
+        assert_eq!(cancelled, "{\"cancelled\":true}");
+        let failed = terminal_line(&JobState::Failed("boom".into())).unwrap();
+        assert_eq!(failed.get("error").and_then(|j| j.as_str()), Some("boom"));
+    }
+}

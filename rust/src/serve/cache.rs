@@ -1,0 +1,248 @@
+//! Content-addressed model cache for the generation service.
+//!
+//! Fitted pipelines are stored under their FNV-1a content hash
+//! (`<16-hex>.sggm`, the hash of the serialized artifact bytes), so a
+//! model reference in a submitted scenario is a stable, host-portable
+//! name: `model = "a1b2c3d4e5f60718"` resolves to the same bytes on any
+//! server that has seen the artifact. `POST /fit` memoizes on a second
+//! key — a canonical digest of the fit-relevant spec fields — mapping
+//! "what you asked to fit" onto "the artifact that fit produced", so
+//! refitting an identical spec is a cache hit that never touches the
+//! dataset.
+
+use crate::pipeline::spec::{ComponentSpec, NodeFeatureSpec, ScenarioSpec, Value};
+use crate::pipeline::FittedPipeline;
+use crate::util::checksum::{fnv1a_bytes, fnv1a_file};
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter making concurrent temp-file names unique within
+/// the process (the pid makes them unique across processes).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Render a content hash the way the HTTP API spells it: 16 lowercase
+/// hex digits, zero-padded.
+pub fn hash_hex(hash: u64) -> String {
+    format!("{hash:016x}")
+}
+
+/// Parse a 16-hex-digit content hash. `None` for anything else — the
+/// strict shape check doubles as the path-traversal guard for
+/// `GET /artifacts/<hash>`.
+pub fn parse_hash(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// A directory of content-addressed `.sggm` artifacts plus fit-key
+/// memo files. All writes are atomic (temp file + rename), so a cache
+/// shared by concurrent requests never exposes a partial artifact.
+#[derive(Debug)]
+pub struct ArtifactCache {
+    dir: PathBuf,
+}
+
+impl ArtifactCache {
+    /// Open (creating if needed) a cache rooted at `dir`.
+    pub fn open(dir: &Path) -> Result<ArtifactCache> {
+        std::fs::create_dir_all(dir)?;
+        Ok(ArtifactCache { dir: dir.to_path_buf() })
+    }
+
+    /// Root directory of the cache.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path an artifact with this content hash lives at (whether or not
+    /// it exists yet).
+    pub fn model_path(&self, hash: u64) -> PathBuf {
+        self.dir.join(format!("{}.sggm", hash_hex(hash)))
+    }
+
+    /// Path of a cached artifact, `None` when the hash is unknown.
+    pub fn lookup_model(&self, hash: u64) -> Option<PathBuf> {
+        let path = self.model_path(hash);
+        path.is_file().then_some(path)
+    }
+
+    /// Serialize `fitted` into the cache and return its content hash.
+    /// The artifact is written to a temp file, hashed, and renamed into
+    /// place; storing bytes that already exist is a no-op rename.
+    pub fn store_model(&self, fitted: &FittedPipeline) -> Result<u64> {
+        let tmp = self.tmp_path();
+        fitted.save(&tmp)?;
+        let hash = fnv1a_file(&tmp)?;
+        let dest = self.model_path(hash);
+        std::fs::rename(&tmp, &dest)?;
+        Ok(hash)
+    }
+
+    /// Model hash previously recorded for this fit key, validated
+    /// against the artifact store (a dangling key is a miss).
+    pub fn lookup_fit(&self, key: u64) -> Option<u64> {
+        let text = std::fs::read_to_string(self.fit_key_path(key)).ok()?;
+        let hash = parse_hash(text.trim())?;
+        self.lookup_model(hash).map(|_| hash)
+    }
+
+    /// Record that fitting the spec digested as `key` produced the
+    /// artifact `hash`.
+    pub fn record_fit(&self, key: u64, hash: u64) -> Result<()> {
+        let tmp = self.tmp_path();
+        std::fs::write(&tmp, format!("{}\n", hash_hex(hash)))?;
+        std::fs::rename(&tmp, self.fit_key_path(key))?;
+        Ok(())
+    }
+
+    /// Canonical digest of the fields that determine a fit's outcome:
+    /// dataset (+ its seed), generation seed, and the four component
+    /// selections with their parameters. Size, sink, worker count, and
+    /// evaluation flags don't participate — they shape generation, not
+    /// the fitted model.
+    pub fn fit_key(&self, spec: &ScenarioSpec) -> u64 {
+        let mut canon = String::new();
+        canon.push_str(&format!(
+            "dataset={};dataset_seed={};seed={};",
+            spec.dataset, spec.dataset_seed, spec.seed
+        ));
+        push_component(&mut canon, "structure", &spec.structure);
+        push_component(&mut canon, "edge_features", &spec.edge_features);
+        match &spec.node_features {
+            NodeFeatureSpec::Auto => canon.push_str("node_features=auto;"),
+            NodeFeatureSpec::Off => canon.push_str("node_features=off;"),
+            NodeFeatureSpec::Component(c) => push_component(&mut canon, "node_features", c),
+        }
+        push_component(&mut canon, "aligner", &spec.aligner);
+        fnv1a_bytes(canon.as_bytes())
+    }
+
+    /// Rewrite a `model = "<16-hex>"` reference onto the cached artifact
+    /// path. References that already name an existing file pass through
+    /// untouched; a hash-shaped reference not present in the cache is an
+    /// error (the client should `POST /fit` or upload first).
+    pub fn resolve_model_ref(&self, spec: &mut ScenarioSpec) -> Result<()> {
+        let Some(path) = &spec.model else { return Ok(()) };
+        if path.is_file() {
+            return Ok(());
+        }
+        let name = path.to_string_lossy();
+        match parse_hash(&name) {
+            Some(hash) => match self.lookup_model(hash) {
+                Some(cached) => {
+                    spec.model = Some(cached);
+                    Ok(())
+                }
+                None => Err(Error::Config(format!(
+                    "model `{name}` is not in the artifact cache; fit it first"
+                ))),
+            },
+            None => Err(Error::Config(format!(
+                "model `{name}` is neither a file nor a 16-hex artifact hash"
+            ))),
+        }
+    }
+
+    fn fit_key_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("fit-{}.key", hash_hex(key)))
+    }
+
+    fn tmp_path(&self) -> PathBuf {
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        self.dir.join(format!(".store-{}-{seq}.tmp", std::process::id()))
+    }
+}
+
+/// Append one component's canonical form: name plus every parameter in
+/// `Params`' sorted key order. Numbers are digested by their IEEE bits
+/// so the key never depends on float formatting.
+fn push_component(out: &mut String, slot: &str, c: &ComponentSpec) {
+    out.push_str(&format!("{slot}={}(", c.name));
+    for (k, v) in c.params.iter() {
+        match v {
+            Value::Str(s) => out.push_str(&format!("{k}=s:{s},")),
+            Value::Num(n) => out.push_str(&format!("{k}=n:{:016x},", n.to_bits())),
+            Value::Bool(b) => out.push_str(&format!("{k}=b:{b},")),
+        }
+    }
+    out.push_str(");");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("sgg_cache_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    const SPEC: &str = r#"
+dataset = "travel-insurance"
+seed = 5
+
+[structure]
+backend = "erdos-renyi"
+
+[edge_features]
+backend = "random"
+
+[aligner]
+backend = "random"
+"#;
+
+    #[test]
+    fn hash_roundtrips_and_rejects_bad_shapes() {
+        assert_eq!(parse_hash(&hash_hex(0xdead_beef_0102_0304)), Some(0xdead_beef_0102_0304));
+        assert_eq!(parse_hash("0000000000000000"), Some(0));
+        assert_eq!(parse_hash("short"), None);
+        assert_eq!(parse_hash("../../etc/passwd!"), None);
+        assert_eq!(parse_hash("00000000000000000"), None);
+    }
+
+    #[test]
+    fn fit_key_tracks_fit_relevant_fields_only() {
+        let cache = ArtifactCache::open(&tmp("key")).unwrap();
+        let base = ScenarioSpec::parse(SPEC).unwrap();
+        let mut same = base.clone();
+        same.workers = 7;
+        same.evaluate = true;
+        assert_eq!(cache.fit_key(&base), cache.fit_key(&same));
+        let mut other = base.clone();
+        other.seed = 6;
+        assert_ne!(cache.fit_key(&base), cache.fit_key(&other));
+        let mut comp = base.clone();
+        comp.structure.name = "kronecker".into();
+        assert_ne!(cache.fit_key(&base), cache.fit_key(&comp));
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+
+    #[test]
+    fn store_lookup_and_fit_memo_roundtrip() {
+        let cache = ArtifactCache::open(&tmp("store")).unwrap();
+        let spec = ScenarioSpec::parse(SPEC).unwrap();
+        let ds = crate::datasets::load(&spec.dataset, spec.dataset_seed).unwrap();
+        let fitted =
+            spec.to_builder().fit_with(&ds, &crate::pipeline::Registries::builtin()).unwrap();
+        let hash = cache.store_model(&fitted).unwrap();
+        let path = cache.lookup_model(hash).unwrap();
+        assert_eq!(fnv1a_file(&path).unwrap(), hash);
+
+        let key = cache.fit_key(&spec);
+        assert_eq!(cache.lookup_fit(key), None);
+        cache.record_fit(key, hash).unwrap();
+        assert_eq!(cache.lookup_fit(key), Some(hash));
+
+        // a model reference by hash resolves onto the cached path
+        let mut by_ref = ScenarioSpec::parse(&format!("model = \"{}\"\n", hash_hex(hash))).unwrap();
+        cache.resolve_model_ref(&mut by_ref).unwrap();
+        assert_eq!(by_ref.model.as_deref(), Some(path.as_path()));
+        let mut missing = ScenarioSpec::parse("model = \"ffffffffffffffff\"\n").unwrap();
+        assert!(cache.resolve_model_ref(&mut missing).is_err());
+        std::fs::remove_dir_all(cache.dir()).ok();
+    }
+}

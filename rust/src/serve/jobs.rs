@@ -1,0 +1,306 @@
+//! Bounded job queue + worker pool for the generation service.
+//!
+//! Submitted scenarios become [`Job`]s: queued in a [`Bounded`] channel
+//! whose capacity is the admission-control knob (a full queue rejects
+//! with [`SubmitError::QueueFull`], which the HTTP layer maps to `429`
+//! + `Retry-After`), then executed by a fixed pool of worker threads
+//! via [`crate::pipeline::run_scenario_opts`]. Each job carries a
+//! [`CancelToken`] (tripped by `DELETE /jobs/<id>`, aborting at the
+//! next chunk boundary through the runner's first-error path) and a
+//! [`ProgressHandle`] the shard sink publishes [`StreamReport`]
+//! snapshots into, which `GET /jobs/<id>` streams back out.
+
+use crate::pipeline::spec::{ScenarioSpec, SinkSpec};
+use crate::pipeline::{
+    run_scenario_opts, CancelToken, ProgressHandle, Registries, RunOptions, SinkOutput,
+    StreamReport,
+};
+use crate::util::threadpool::Bounded;
+use std::sync::{Arc, Mutex};
+
+/// Lifecycle of one submitted job.
+#[derive(Clone, Debug)]
+pub enum JobState {
+    /// Admitted, waiting for a worker.
+    Queued,
+    /// A worker is generating.
+    Running,
+    /// Finished; the final [`StreamReport`] (with quality scores when
+    /// the scenario asked to `[evaluate]`).
+    Done(StreamReport),
+    /// Generation failed.
+    Failed(String),
+    /// Cancelled before or during generation. Shards written before the
+    /// abort form a consecutive, resumable prefix on disk.
+    Cancelled,
+}
+
+impl JobState {
+    /// Short lowercase label used by the HTTP status body.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// True once the job will never change state again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed(_) | JobState::Cancelled)
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Clone, Debug)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity — retry later (`429`).
+    QueueFull,
+    /// The spec cannot run as a service job.
+    Invalid(String),
+}
+
+/// One admitted generation job.
+#[derive(Debug)]
+pub struct Job {
+    id: u64,
+    spec: ScenarioSpec,
+    state: Mutex<JobState>,
+    cancel: CancelToken,
+    progress: ProgressHandle,
+}
+
+impl Job {
+    /// Server-assigned id (dense, starting at 0).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The submitted scenario.
+    pub fn spec(&self) -> &ScenarioSpec {
+        &self.spec
+    }
+
+    /// Current lifecycle state (cloned snapshot).
+    pub fn state(&self) -> JobState {
+        self.state.lock().unwrap().clone()
+    }
+
+    /// Latest in-flight [`StreamReport`] published by the shard sink,
+    /// `None` until the first shard-path progress update.
+    pub fn progress(&self) -> Option<StreamReport> {
+        self.progress.lock().unwrap().clone()
+    }
+
+    fn set_state(&self, next: JobState) {
+        *self.state.lock().unwrap() = next;
+    }
+}
+
+/// The service's job registry, admission queue, and worker pool.
+pub struct JobManager {
+    jobs: Mutex<Vec<Arc<Job>>>,
+    queue: Bounded<u64>,
+}
+
+impl JobManager {
+    /// Start a manager with `workers` executor threads and an admission
+    /// queue of `queue_depth` jobs. `workers == 0` starts no executors —
+    /// jobs are admitted but never run, which pins queue occupancy and
+    /// makes the `429` path deterministic to test.
+    pub fn start(workers: usize, queue_depth: usize) -> Arc<JobManager> {
+        let mgr = Arc::new(JobManager {
+            jobs: Mutex::new(Vec::new()),
+            queue: Bounded::new(queue_depth.max(1)),
+        });
+        for _ in 0..workers {
+            let m = Arc::clone(&mgr);
+            std::thread::spawn(move || m.worker_loop());
+        }
+        mgr
+    }
+
+    /// Admit a scenario. Fails with [`SubmitError::Invalid`] for memory
+    /// sinks (a service job's output must outlive the request) and with
+    /// [`SubmitError::QueueFull`] when the bounded queue rejects.
+    pub fn submit(&self, spec: ScenarioSpec) -> Result<Arc<Job>, SubmitError> {
+        if matches!(spec.sink, SinkSpec::Memory) {
+            return Err(SubmitError::Invalid(
+                "service jobs need `[sink] kind = \"shards\"`; memory-sink output \
+                 would vanish with the request"
+                    .into(),
+            ));
+        }
+        let mut jobs = self.jobs.lock().unwrap();
+        let id = jobs.len() as u64;
+        let job = Arc::new(Job {
+            id,
+            spec,
+            state: Mutex::new(JobState::Queued),
+            cancel: CancelToken::new(),
+            progress: Arc::new(Mutex::new(None)),
+        });
+        if self.queue.try_send(id).is_err() {
+            return Err(SubmitError::QueueFull);
+        }
+        jobs.push(Arc::clone(&job));
+        Ok(job)
+    }
+
+    /// Look up a job by id.
+    pub fn get(&self, id: u64) -> Option<Arc<Job>> {
+        self.jobs.lock().unwrap().get(id as usize).cloned()
+    }
+
+    /// Trip a job's cancel token. Queued jobs flip to
+    /// [`JobState::Cancelled`] immediately; running jobs abort at the
+    /// next chunk boundary (the outermost [`crate::pipeline::CancelSink`]
+    /// surfaces a fatal worker error the pool drains on). Returns
+    /// `false` for unknown ids.
+    pub fn cancel(&self, id: u64) -> bool {
+        let Some(job) = self.get(id) else { return false };
+        job.cancel.cancel();
+        let mut state = job.state.lock().unwrap();
+        if matches!(*state, JobState::Queued) {
+            *state = JobState::Cancelled;
+        }
+        true
+    }
+
+    /// Close the admission queue; idle workers exit once it drains.
+    pub fn shutdown(&self) {
+        self.queue.close();
+    }
+
+    fn worker_loop(&self) {
+        while let Some(id) = self.queue.recv() {
+            let Some(job) = self.get(id) else { continue };
+            self.run(&job);
+        }
+    }
+
+    fn run(&self, job: &Job) {
+        if job.cancel.is_cancelled() {
+            job.set_state(JobState::Cancelled);
+            return;
+        }
+        job.set_state(JobState::Running);
+        // resume=true on evaluate-free jobs: a fresh directory has
+        // watermark 0 (output identical to a non-resuming run), and a
+        // directory left behind by a killed server picks up after its
+        // last complete shard. Evaluated jobs must see every chunk, so
+        // they always start clean.
+        let opts = RunOptions {
+            resume: !job.spec.evaluate,
+            cancel: Some(job.cancel.clone()),
+            progress: Some(Arc::clone(&job.progress)),
+            ..RunOptions::default()
+        };
+        match run_scenario_opts(&job.spec, &Registries::builtin(), opts) {
+            Ok(SinkOutput::Streamed(report)) => job.set_state(JobState::Done(report)),
+            Ok(SinkOutput::Dataset(_)) => {
+                job.set_state(JobState::Failed("memory-sink output in a service job".into()))
+            }
+            Err(_) if job.cancel.is_cancelled() => job.set_state(JobState::Cancelled),
+            Err(e) => job.set_state(JobState::Failed(e.to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("sgg_jobs_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    fn shard_spec(dir: &std::path::Path) -> ScenarioSpec {
+        ScenarioSpec::parse(&format!(
+            r#"
+dataset = "travel-insurance"
+seed = 11
+workers = 2
+
+[structure]
+backend = "erdos-renyi"
+
+[edge_features]
+backend = "random"
+
+[aligner]
+backend = "random"
+
+[sink]
+kind = "shards"
+dir = "{}"
+"#,
+            dir.display()
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn memory_sink_specs_are_rejected() {
+        let mgr = JobManager::start(0, 2);
+        let spec = ScenarioSpec::parse("dataset = \"travel-insurance\"\n").unwrap();
+        match mgr.submit(spec) {
+            Err(SubmitError::Invalid(msg)) => assert!(msg.contains("shards"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn full_queue_rejects_and_queued_jobs_cancel_immediately() {
+        let dir = tmp("full");
+        // no workers: admitted jobs stay queued, so occupancy is pinned
+        let mgr = JobManager::start(0, 1);
+        let first = mgr.submit(shard_spec(&dir.join("a"))).unwrap();
+        match mgr.submit(shard_spec(&dir.join("b"))) {
+            Err(SubmitError::QueueFull) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert!(mgr.cancel(first.id()));
+        assert!(matches!(first.state(), JobState::Cancelled));
+        assert!(!mgr.cancel(99));
+        mgr.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jobs_run_to_done_with_progress_snapshots() {
+        let dir = tmp("run");
+        let mgr = JobManager::start(1, 4);
+        let job = mgr.submit(shard_spec(&dir)).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            let state = job.state();
+            if state.is_terminal() {
+                match state {
+                    JobState::Done(report) => {
+                        assert!(report.shards > 0);
+                        assert!(report.edges_written > 0);
+                    }
+                    other => panic!("expected Done, got {other:?}"),
+                }
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "job did not finish");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let last = job.progress().expect("shard sink published progress");
+        let done_shards = match job.state() {
+            JobState::Done(r) => r.shards,
+            _ => unreachable!(),
+        };
+        assert_eq!(last.shards, done_shards);
+        mgr.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,32 @@
+//! Generation-as-a-service: a dependency-free HTTP/1.1 front end over
+//! the scenario pipeline (`sgg serve`).
+//!
+//! The service composes three pieces, each independently testable:
+//!
+//! * [`server`] — hand-rolled HTTP over [`std::net::TcpListener`]:
+//!   request parsing, routing, canonical-JSON responses, and the
+//!   newline-delimited progress stream of `GET /jobs/<id>`.
+//! * [`jobs`] — a bounded admission queue + worker pool. Queue depth is
+//!   the backpressure contract (`429` + `Retry-After` when full); every
+//!   job carries a cancel token (`DELETE /jobs/<id>`) and a progress
+//!   slot the shard sink publishes into.
+//! * [`cache`] — a content-addressed `.sggm` artifact store. Models are
+//!   named by the FNV-1a hash of their bytes; `POST /fit` memoizes on a
+//!   canonical digest of the fit-relevant spec fields, so refitting an
+//!   identical spec never touches the dataset again.
+//!
+//! Because jobs run through the same
+//! [`crate::pipeline::run_scenario_opts`] path as the CLI with atomic
+//! shard writes, an HTTP job's output is byte-identical to `sgg run` on
+//! the same spec/seed/workers, a killed server's half-finished jobs are
+//! resumable from their shard watermark, and a cancelled job leaves a
+//! consecutive, resumable shard prefix.
+
+pub mod api;
+pub mod cache;
+pub mod jobs;
+pub mod server;
+
+pub use cache::{hash_hex, parse_hash, ArtifactCache};
+pub use jobs::{Job, JobManager, JobState, SubmitError};
+pub use server::{ServeConfig, Server, ServerHandle};

@@ -1,0 +1,357 @@
+//! Hand-rolled HTTP/1.1 generation service (`sgg serve`).
+//!
+//! A [`std::net::TcpListener`] accept loop dispatches one thread per
+//! connection; requests are parsed from the raw socket (request line,
+//! headers, `Content-Length` body — the subset the API needs), routed,
+//! and answered with canonical-JSON bodies from [`super::api`]. There
+//! is no TLS, no keep-alive, and no chunked transfer coding: every
+//! response closes the connection, and the streaming `GET /jobs/<id>`
+//! body is newline-delimited JSON terminated by connection close.
+//!
+//! Routes:
+//!
+//! | Method + path            | Behaviour                                      |
+//! |--------------------------|------------------------------------------------|
+//! | `POST /jobs`             | Submit a scenario (TOML body) → `202 {"job"}`  |
+//! | `GET /jobs/<id>`         | Stream progress lines until terminal           |
+//! | `GET /jobs/<id>?wait=0`  | One status snapshot, no blocking               |
+//! | `DELETE /jobs/<id>`      | Cancel (abort at the next chunk boundary)      |
+//! | `POST /fit`              | Fit-and-cache (TOML body) → `{"model","cached"}` |
+//! | `GET /artifacts/<hash>`  | Fetch a cached `.sggm` artifact                |
+//!
+//! A full admission queue answers `429` with `Retry-After`.
+
+use super::api;
+use super::cache::{parse_hash, ArtifactCache};
+use super::jobs::{JobManager, SubmitError};
+use crate::pipeline::spec::ScenarioSpec;
+use crate::pipeline::Registries;
+use crate::util::json::Json;
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Largest accepted request body (scenario TOML is tiny; this is a
+/// hard stop against junk input, answered with `400`).
+const MAX_BODY: usize = 1 << 20;
+
+/// Poll interval of the streaming `GET /jobs/<id>` body.
+const STREAM_POLL: Duration = Duration::from_millis(50);
+
+/// Configuration of one [`Server`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 binds an ephemeral port —
+    /// read it back from [`Server::local_addr`]).
+    pub addr: String,
+    /// Artifact-cache directory (created if missing).
+    pub cache_dir: std::path::PathBuf,
+    /// Job executor threads. `0` admits jobs without running them
+    /// (test/drain mode); the CLI maps `0` to one per core instead.
+    pub workers: usize,
+    /// Admission-queue depth — jobs beyond this are answered `429`.
+    pub queue_depth: usize,
+}
+
+/// A bound generation service, ready to [`Server::run`] on the caller
+/// thread or [`Server::spawn`] in the background.
+pub struct Server {
+    listener: TcpListener,
+    jobs: Arc<JobManager>,
+    cache: Arc<ArtifactCache>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// Handle to a background server: address + clean shutdown.
+#[derive(Debug)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// The bound listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept loop. In-flight
+    /// connection threads finish on their own; queued jobs are dropped
+    /// with the closed queue.
+    pub fn stop(self) {
+        self.shutdown.store(true, Ordering::Release);
+        // unblock the accept loop with a no-op connection
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.thread.join();
+    }
+}
+
+impl Server {
+    /// Bind the listener, open the artifact cache, and start the job
+    /// worker pool.
+    pub fn bind(cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let cache = Arc::new(ArtifactCache::open(&cfg.cache_dir)?);
+        let jobs = JobManager::start(cfg.workers, cfg.queue_depth);
+        Ok(Server { listener, jobs, cache, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The address the listener actually bound (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve on the caller thread until shut down (the CLI entry).
+    pub fn run(self) -> Result<()> {
+        self.accept_loop();
+        Ok(())
+    }
+
+    /// Serve on a background thread; the returned handle stops it.
+    pub fn spawn(self) -> Result<ServerHandle> {
+        let addr = self.local_addr()?;
+        let shutdown = Arc::clone(&self.shutdown);
+        let thread = std::thread::spawn(move || self.accept_loop());
+        Ok(ServerHandle { addr, shutdown, thread })
+    }
+
+    fn accept_loop(self) {
+        for conn in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let jobs = Arc::clone(&self.jobs);
+            let cache = Arc::clone(&self.cache);
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &jobs, &cache);
+            });
+        }
+        self.jobs.shutdown();
+    }
+}
+
+/// One parsed request.
+struct Request {
+    method: String,
+    path: String,
+    query: String,
+    body: String,
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    jobs: &Arc<JobManager>,
+    cache: &Arc<ArtifactCache>,
+) -> std::io::Result<()> {
+    let req = match read_request(&stream) {
+        Ok(req) => req,
+        Err(msg) => return respond_json(&mut stream, 400, "Bad Request", &[], &api::error(&msg)),
+    };
+    let segments: Vec<&str> =
+        req.path.trim_matches('/').split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("POST", ["jobs"]) => post_job(&mut stream, jobs, cache, &req.body),
+        ("GET", ["jobs", id]) => get_job(&mut stream, jobs, id, &req.query),
+        ("DELETE", ["jobs", id]) => delete_job(&mut stream, jobs, id),
+        ("POST", ["fit"]) => post_fit(&mut stream, cache, &req.body),
+        ("GET", ["artifacts", hash]) => get_artifact(&mut stream, cache, hash),
+        _ => respond_json(&mut stream, 404, "Not Found", &[], &api::error("no such route")),
+    }
+}
+
+/// Parse request line + headers + `Content-Length` body off the socket.
+/// Errors are client errors (answered `400`) described by the string.
+fn read_request(stream: &TcpStream) -> std::result::Result<Request, String> {
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let target = parts.next().ok_or("request line has no target")?.to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| e.to_string())?;
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(format!("body exceeds {MAX_BODY} bytes"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| e.to_string())?;
+    let body = String::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    Ok(Request { method, path, query, body })
+}
+
+fn post_job(
+    stream: &mut TcpStream,
+    jobs: &Arc<JobManager>,
+    cache: &Arc<ArtifactCache>,
+    body: &str,
+) -> std::io::Result<()> {
+    let mut spec = match ScenarioSpec::parse(body) {
+        Ok(spec) => spec,
+        Err(e) => {
+            return respond_json(stream, 400, "Bad Request", &[], &api::error(&e.to_string()))
+        }
+    };
+    if let Err(e) = cache.resolve_model_ref(&mut spec) {
+        return respond_json(stream, 400, "Bad Request", &[], &api::error(&e.to_string()));
+    }
+    match jobs.submit(spec) {
+        Ok(job) => respond_json(stream, 202, "Accepted", &[], &api::job_accepted(job.id())),
+        Err(SubmitError::Invalid(msg)) => {
+            respond_json(stream, 400, "Bad Request", &[], &api::error(&msg))
+        }
+        Err(SubmitError::QueueFull) => respond_json(
+            stream,
+            429,
+            "Too Many Requests",
+            &[("Retry-After", "1")],
+            &api::error("job queue is full; retry later"),
+        ),
+    }
+}
+
+fn get_job(
+    stream: &mut TcpStream,
+    jobs: &Arc<JobManager>,
+    id: &str,
+    query: &str,
+) -> std::io::Result<()> {
+    let job = match id.parse::<u64>().ok().and_then(|id| jobs.get(id)) {
+        Some(job) => job,
+        None => return respond_json(stream, 404, "Not Found", &[], &api::error("no such job")),
+    };
+    if query.split('&').any(|kv| kv == "wait=0") {
+        return respond_json(stream, 200, "OK", &[], &api::job_status(&job));
+    }
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nConnection: close\r\n\r\n",
+    )?;
+    let mut last_line: Option<String> = None;
+    loop {
+        let state = job.state();
+        if let Some(line) = api::terminal_line(&state) {
+            stream.write_all(format!("{line}\n").as_bytes())?;
+            return stream.flush();
+        }
+        if let Some(report) = job.progress() {
+            let line = report.to_json().to_string();
+            if last_line.as_deref() != Some(&line) {
+                stream.write_all(format!("{line}\n").as_bytes())?;
+                stream.flush()?;
+                last_line = Some(line);
+            }
+        }
+        std::thread::sleep(STREAM_POLL);
+    }
+}
+
+fn delete_job(stream: &mut TcpStream, jobs: &Arc<JobManager>, id: &str) -> std::io::Result<()> {
+    match id.parse::<u64>().ok().filter(|&id| jobs.cancel(id)) {
+        Some(id) => respond_json(stream, 200, "OK", &[], &api::job_cancelled(id)),
+        None => respond_json(stream, 404, "Not Found", &[], &api::error("no such job")),
+    }
+}
+
+fn post_fit(stream: &mut TcpStream, cache: &Arc<ArtifactCache>, body: &str) -> std::io::Result<()> {
+    match fit_cached(cache, body) {
+        Ok((hash, true)) => respond_json(stream, 200, "OK", &[], &api::fit_response(hash, true)),
+        Ok((hash, false)) => {
+            respond_json(stream, 201, "Created", &[], &api::fit_response(hash, false))
+        }
+        Err(e) => respond_json(stream, 400, "Bad Request", &[], &api::error(&e.to_string())),
+    }
+}
+
+/// Fit the spec in `body`, memoized on the cache's fit key. Returns
+/// `(model_hash, cache_hit)`.
+fn fit_cached(cache: &ArtifactCache, body: &str) -> Result<(u64, bool)> {
+    let spec = ScenarioSpec::parse(body)?;
+    if spec.model.is_some() {
+        return Err(Error::Config(
+            "`POST /fit` fits from a `dataset`; the spec already names a `model`".into(),
+        ));
+    }
+    let key = cache.fit_key(&spec);
+    if let Some(hash) = cache.lookup_fit(key) {
+        return Ok((hash, true));
+    }
+    let ds = crate::datasets::load(&spec.dataset, spec.dataset_seed)?;
+    let fitted = spec.to_builder().fit_with(&ds, &Registries::builtin())?;
+    let hash = cache.store_model(&fitted)?;
+    cache.record_fit(key, hash)?;
+    Ok((hash, false))
+}
+
+fn get_artifact(
+    stream: &mut TcpStream,
+    cache: &Arc<ArtifactCache>,
+    hash: &str,
+) -> std::io::Result<()> {
+    let found = parse_hash(hash).and_then(|h| cache.lookup_model(h));
+    let path = match found {
+        Some(path) => path,
+        None => {
+            return respond_json(stream, 404, "Not Found", &[], &api::error("no such artifact"))
+        }
+    };
+    match std::fs::read(&path) {
+        Ok(bytes) => respond_raw(stream, 200, "OK", "application/json", &[], &bytes),
+        Err(e) => {
+            respond_json(stream, 500, "Internal Server Error", &[], &api::error(&e.to_string()))
+        }
+    }
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, &str)],
+    body: &Json,
+) -> std::io::Result<()> {
+    let text = format!("{body}\n");
+    respond_raw(stream, status, reason, "application/json", extra, text.as_bytes())
+}
+
+fn respond_raw(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (name, value) in extra {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}

@@ -133,6 +133,23 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// Non-blocking send: enqueue `item` only when a slot is free.
+    /// Returns `Err(item)` when the queue is full or the channel is
+    /// closed — the admission-control primitive behind `sgg serve`'s
+    /// 429 backpressure (a full queue rejects instead of blocking the
+    /// acceptor thread).
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.items.len() >= self.inner.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        let n = st.items.len();
+        st.high_water = st.high_water.max(n);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Blocking receive; None when the channel is closed and drained.
     pub fn recv(&self) -> Option<T> {
         let mut st = self.inner.q.lock().unwrap();
@@ -221,6 +238,22 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         ch.close();
         assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn try_send_rejects_when_full_or_closed() {
+        let ch: Bounded<u8> = Bounded::new(2);
+        assert!(ch.try_send(1).is_ok());
+        assert!(ch.try_send(2).is_ok());
+        assert_eq!(ch.try_send(3), Err(3));
+        assert_eq!(ch.recv(), Some(1));
+        assert!(ch.try_send(3).is_ok());
+        ch.close();
+        assert_eq!(ch.try_send(4), Err(4));
+        // already-queued items still drain after close
+        assert_eq!(ch.recv(), Some(2));
+        assert_eq!(ch.recv(), Some(3));
+        assert_eq!(ch.recv(), None);
     }
 
     #[test]

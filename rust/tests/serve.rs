@@ -1,0 +1,331 @@
+//! The `sgg serve` service contract: an HTTP job is byte-identical to
+//! `sgg run` on the same spec/seed/workers and streams the same
+//! canonical `StreamReport` JSON `--json` prints; refitting an
+//! identical spec is a cache hit whose artifact round-trips through
+//! `GET /artifacts/<hash>`; a full admission queue answers `429` with
+//! `Retry-After`; and a cancelled job stops at a chunk boundary leaving
+//! a consecutive, resumable shard prefix.
+
+use sgg::pipeline::{
+    run_scenario_opts, Registries, RunOptions, ScenarioSpec, SinkOutput, StreamReport,
+};
+use sgg::serve::{parse_hash, ServeConfig, Server, ServerHandle};
+use sgg::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("sgg_serve_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+/// Start a background server on an ephemeral port.
+fn start(cache_dir: &Path, workers: usize, queue_depth: usize) -> ServerHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        cache_dir: cache_dir.to_path_buf(),
+        workers,
+        queue_depth,
+    };
+    Server::bind(&cfg).unwrap().spawn().unwrap()
+}
+
+/// Minimal blocking HTTP/1.1 client: one request, read to close.
+/// Returns (status, head, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: sgg\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    (status, head.to_string(), body.to_string())
+}
+
+fn submitted_job_id(addr: SocketAddr, spec: &str) -> u64 {
+    let (status, _, body) = http(addr, "POST", "/jobs", spec);
+    assert_eq!(status, 202, "{body}");
+    let doc = Json::parse(body.trim()).unwrap();
+    doc.get("job").and_then(|j| j.as_f64()).unwrap() as u64
+}
+
+/// Sorted shard files (`*.sgg`) of a directory (empty when the sink
+/// has not created the directory yet).
+fn shard_files(dir: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut files: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "sgg"))
+        .collect();
+    files.sort();
+    files
+}
+
+fn scenario(dir: &Path) -> String {
+    format!(
+        r#"
+name = "serve-test"
+dataset = "travel-insurance"
+seed = 33
+workers = 2
+
+[structure]
+backend = "erdos-renyi"
+
+[edge_features]
+backend = "random"
+
+[aligner]
+backend = "random"
+
+[sink]
+kind = "shards"
+dir = "{}"
+"#,
+        dir.display()
+    )
+}
+
+#[test]
+fn http_job_is_byte_identical_to_cli_run_and_streams_canonical_json() {
+    let root = tmp("identity");
+    let http_dir = root.join("via-http");
+    let cli_dir = root.join("via-cli");
+    let server = start(&root.join("cache"), 2, 4);
+    let addr = server.addr();
+
+    let id = submitted_job_id(addr, &scenario(&http_dir));
+    // the blocking GET streams NDJSON until the job is terminal
+    let (status, head, body) = http(addr, "GET", &format!("/jobs/{id}"), "");
+    assert_eq!(status, 200);
+    assert!(head.contains("application/x-ndjson"), "{head}");
+    let lines: Vec<&str> = body.lines().filter(|l| !l.is_empty()).collect();
+    assert!(!lines.is_empty());
+    // every line is the canonical StreamReport serialization
+    for line in &lines {
+        let doc = Json::parse(line).unwrap();
+        StreamReport::from_json(&doc).unwrap();
+    }
+    let final_report =
+        StreamReport::from_json(&Json::parse(lines.last().unwrap()).unwrap()).unwrap();
+    assert!(final_report.shards > 0);
+    assert!(final_report.edges_written > 0);
+
+    // the CLI on the same spec (different dir), with --json: the same
+    // canonical serialization, and byte-identical shards
+    let spec_path = root.join("cli.toml");
+    std::fs::write(&spec_path, scenario(&cli_dir)).unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_sgg"))
+        .args(["run", spec_path.to_str().unwrap(), "--json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    let cli_report =
+        StreamReport::from_json(&Json::parse(stdout.trim().lines().last().unwrap()).unwrap())
+            .unwrap();
+    assert_eq!(cli_report.edges_written, final_report.edges_written);
+    assert_eq!(cli_report.shards, final_report.shards);
+
+    let http_shards = shard_files(&http_dir);
+    let cli_shards = shard_files(&cli_dir);
+    assert_eq!(http_shards.len(), cli_shards.len());
+    assert!(!http_shards.is_empty());
+    for (a, b) in http_shards.iter().zip(&cli_shards) {
+        assert_eq!(a.file_name(), b.file_name());
+        assert_eq!(
+            std::fs::read(a).unwrap(),
+            std::fs::read(b).unwrap(),
+            "shard {:?} differs between HTTP job and CLI run",
+            a.file_name()
+        );
+    }
+    server.stop();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn refit_is_a_cache_hit_and_artifacts_are_fetchable() {
+    let root = tmp("fit");
+    let server = start(&root.join("cache"), 1, 4);
+    let addr = server.addr();
+    let fit_spec = r#"
+dataset = "travel-insurance"
+seed = 9
+
+[structure]
+backend = "erdos-renyi"
+
+[edge_features]
+backend = "random"
+
+[aligner]
+backend = "random"
+"#;
+
+    let (status, _, body) = http(addr, "POST", "/fit", fit_spec);
+    assert_eq!(status, 201, "{body}");
+    let first = Json::parse(body.trim()).unwrap();
+    assert_eq!(first.get("cached").and_then(|c| c.as_bool()), Some(false));
+    let hash = first.get("model").and_then(|m| m.as_str()).unwrap().to_string();
+    assert!(parse_hash(&hash).is_some(), "{hash}");
+
+    // identical spec → cache hit, same artifact, no refit
+    let (status, _, body) = http(addr, "POST", "/fit", fit_spec);
+    assert_eq!(status, 200, "{body}");
+    let second = Json::parse(body.trim()).unwrap();
+    assert_eq!(second.get("cached").and_then(|c| c.as_bool()), Some(true));
+    assert_eq!(second.get("model").and_then(|m| m.as_str()), Some(hash.as_str()));
+
+    // the artifact fetches byte-for-byte and loads as a pipeline
+    let (status, _, body) = http(addr, "GET", &format!("/artifacts/{hash}"), "");
+    assert_eq!(status, 200);
+    let fetched = root.join("fetched.sggm");
+    std::fs::write(&fetched, &body).unwrap();
+    let loaded =
+        sgg::pipeline::FittedPipeline::load(&fetched, &Registries::builtin()).unwrap();
+    assert_eq!(loaded.source().dataset, "travel-insurance");
+
+    let (status, _, _) = http(addr, "GET", "/artifacts/ffffffffffffffff", "");
+    assert_eq!(status, 404);
+    let (status, _, _) = http(addr, "GET", "/artifacts/not-a-hash", "");
+    assert_eq!(status, 404);
+    server.stop();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn full_queue_answers_429_with_retry_after() {
+    let root = tmp("backpressure");
+    // no workers: admitted jobs stay queued, pinning queue occupancy
+    let server = start(&root.join("cache"), 0, 1);
+    let addr = server.addr();
+
+    let id = submitted_job_id(addr, &scenario(&root.join("a")));
+    let (status, head, body) = http(addr, "POST", "/jobs", &scenario(&root.join("b")));
+    assert_eq!(status, 429, "{body}");
+    assert!(head.lines().any(|l| l.to_ascii_lowercase().starts_with("retry-after:")), "{head}");
+
+    // unknown jobs are 404; cancelling the queued job frees nothing in
+    // the closed queue but flips its state immediately
+    let (status, _, _) = http(addr, "GET", "/jobs/999", "");
+    assert_eq!(status, 404);
+    let (status, _, body) = http(addr, "DELETE", &format!("/jobs/{id}"), "");
+    assert_eq!(status, 200, "{body}");
+    let (status, _, body) = http(addr, "GET", &format!("/jobs/{id}?wait=0"), "");
+    assert_eq!(status, 200);
+    let doc = Json::parse(body.trim()).unwrap();
+    assert_eq!(doc.get("state").and_then(|s| s.as_str()), Some("cancelled"));
+    server.stop();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cancelled_job_leaves_a_resumable_prefix() {
+    let root = tmp("cancel");
+    let out_dir = root.join("cancelled");
+    let clean_dir = root.join("clean");
+    let server = start(&root.join("cache"), 1, 2);
+    let addr = server.addr();
+
+    // one worker, 64 sequential chunks: slow enough to cancel mid-run
+    let spec_text = format!(
+        r#"
+name = "serve-cancel"
+dataset = "travel-insurance"
+seed = 17
+workers = 1
+
+[structure]
+backend = "erdos-renyi"
+
+[edge_features]
+backend = "random"
+
+[aligner]
+backend = "random"
+
+[size]
+n_src = 65536
+edges = 2000000
+
+[sink]
+kind = "shards"
+dir = "{}"
+prefix_levels = 3
+"#,
+        out_dir.display()
+    );
+    let id = submitted_job_id(addr, &spec_text);
+
+    // cancel as soon as the first shard lands
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while shard_files(&out_dir).is_empty() {
+        assert!(Instant::now() < deadline, "no shard ever appeared");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let (status, _, body) = http(addr, "DELETE", &format!("/jobs/{id}"), "");
+    assert_eq!(status, 200, "{body}");
+
+    // the blocking stream terminates with the cancellation marker
+    // (unless the tiny job already finished — then it's a full report)
+    let (_, _, body) = http(addr, "GET", &format!("/jobs/{id}"), "");
+    let last = Json::parse(body.lines().filter(|l| !l.is_empty()).last().unwrap()).unwrap();
+    let cancelled_mid_run = last.get("cancelled").and_then(|c| c.as_bool()) == Some(true);
+
+    // whatever was written is a consecutive prefix shard-00000..k
+    let prefix = shard_files(&out_dir);
+    assert!(!prefix.is_empty());
+    for (i, path) in prefix.iter().enumerate() {
+        assert_eq!(
+            path.file_name().unwrap().to_str().unwrap(),
+            format!("shard-{i:05}.sgg"),
+            "hole in the shard prefix"
+        );
+    }
+    if cancelled_mid_run {
+        assert!(prefix.len() < 64, "cancel landed but every chunk was written");
+    }
+
+    // resuming the cancelled directory completes it byte-identically to
+    // an uninterrupted run of the same spec
+    let spec = ScenarioSpec::parse(&spec_text).unwrap();
+    let opts = RunOptions { resume: true, ..RunOptions::default() };
+    match run_scenario_opts(&spec, &Registries::builtin(), opts).unwrap() {
+        SinkOutput::Streamed(report) => assert_eq!(report.shards, 64),
+        SinkOutput::Dataset(_) => panic!("expected a streamed run"),
+    }
+    let mut clean_spec = ScenarioSpec::parse(&spec_text).unwrap();
+    clean_spec.sink = sgg::pipeline::SinkSpec::Shards {
+        dir: clean_dir.clone(),
+        chunks: match &spec.sink {
+            sgg::pipeline::SinkSpec::Shards { chunks, .. } => *chunks,
+            sgg::pipeline::SinkSpec::Memory => unreachable!(),
+        },
+    };
+    run_scenario_opts(&clean_spec, &Registries::builtin(), RunOptions::default()).unwrap();
+    let resumed = shard_files(&out_dir);
+    let clean = shard_files(&clean_dir);
+    assert_eq!(resumed.len(), clean.len());
+    for (a, b) in resumed.iter().zip(&clean) {
+        assert_eq!(
+            std::fs::read(a).unwrap(),
+            std::fs::read(b).unwrap(),
+            "shard {:?} differs after resume",
+            a.file_name()
+        );
+    }
+    server.stop();
+    std::fs::remove_dir_all(&root).ok();
+}
