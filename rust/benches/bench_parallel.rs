@@ -8,11 +8,19 @@
 //! regression gate for the batched PRNG/alias sampling and the chunk
 //! buffer arena: `sequential_edges_per_sec` is tracked at the top level.
 //!
+//! A second stage runs the full shard path (worker-side SGGEDGE2
+//! encoding + overlapped shard IO) at 1 vs 4 workers, byte-compares the
+//! two directories, and records the stage-time breakdown
+//! (`sample_secs`/`encode_secs`/`write_secs`/`writer_busy_secs`) the
+//! [`StreamReport`](sgg::pipeline::StreamReport) now carries.
+//!
 //! Run: `cargo bench --bench bench_parallel`
 //! Knobs: `SGG_BENCH_EDGES` (default 8_000_000), `SGG_BENCH_NODES`
 //! (default 1 << 20).
 
+use sgg::graph::io::ShardFormat;
 use sgg::graph::PartiteSpec;
+use sgg::pipeline::orchestrator::stream_to_shards;
 use sgg::structgen::chunked::{generate_chunked, ChunkConfig};
 use sgg::structgen::kronecker::KroneckerGen;
 use sgg::structgen::theta::ThetaS;
@@ -75,6 +83,82 @@ fn main() {
         ]));
     }
 
+    // Streamed-shard stage: the same scenario through the full
+    // worker-encode → overlapped-IO shard path (SGGEDGE2), 1 vs 4
+    // workers. Byte-comparing the two directories is the determinism
+    // gate for the encoded path; the stage-time breakdown shows where
+    // the wall clock went.
+    let bench_dir =
+        std::env::temp_dir().join(format!("sgg_bench_stream_{}", std::process::id()));
+    let mut streamed: Vec<Json> = Vec::new();
+    let mut stream_seq_eps = 0.0f64;
+    let mut stream_speedup_at_4 = 0.0f64;
+    let mut dirs = Vec::new();
+    for workers in [1usize, 4] {
+        let dir = bench_dir.join(format!("w{workers}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = ChunkConfig {
+            prefix_levels: 3,
+            workers,
+            queue_capacity: 4,
+            format: ShardFormat::Edge2,
+            ..ChunkConfig::default()
+        };
+        let report = stream_to_shards(&gen, nodes, nodes, edges, seed, cfg, &dir)
+            .expect("bench streaming failed");
+        assert_eq!(report.edges_written, edges, "wrong streamed edge count at {workers} workers");
+        let eps = edges as f64 / report.wall_secs.max(1e-9);
+        if workers == 1 {
+            stream_seq_eps = eps;
+        }
+        let speedup = eps / stream_seq_eps.max(1e-9);
+        if workers == 4 {
+            stream_speedup_at_4 = speedup;
+        }
+        println!(
+            "[bench] streamed workers={workers:2}  {:6.2}s  {:8.2} Medges/s  speedup \
+             {speedup:.2}x  (sample {:.2}s, encode {:.2}s, write {:.2}s, writer busy {:.2}s)",
+            report.wall_secs,
+            eps / 1e6,
+            report.sample_secs,
+            report.encode_secs,
+            report.write_secs,
+            report.writer_busy_secs
+        );
+        streamed.push(Json::obj(vec![
+            ("workers", Json::from(workers)),
+            ("secs", Json::from(report.wall_secs)),
+            ("edges_per_sec", Json::from(eps)),
+            ("speedup_vs_sequential", Json::from(speedup)),
+            ("sample_secs", Json::from(report.sample_secs)),
+            ("encode_secs", Json::from(report.encode_secs)),
+            ("write_secs", Json::from(report.write_secs)),
+            ("writer_busy_secs", Json::from(report.writer_busy_secs)),
+            ("shards", Json::from(report.shards)),
+        ]));
+        dirs.push(dir);
+    }
+    let mut names: Vec<String> = std::fs::read_dir(&dirs[0])
+        .expect("read bench shard dir")
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    names.sort();
+    assert_eq!(
+        names.len(),
+        std::fs::read_dir(&dirs[1]).unwrap().count(),
+        "worker counts produced different shard sets"
+    );
+    for name in &names {
+        let a = std::fs::read(dirs[0].join(name)).unwrap();
+        let b = std::fs::read(dirs[1].join(name)).unwrap();
+        assert_eq!(a, b, "shard {name} differs between worker counts — determinism broken");
+    }
+    println!(
+        "[bench] streamed output byte-identical across worker counts ({} shards)",
+        names.len()
+    );
+    std::fs::remove_dir_all(&bench_dir).ok();
+
     let out = Json::obj(vec![
         (
             "scenario",
@@ -91,7 +175,26 @@ fn main() {
         ("sequential_edges_per_sec", Json::from(seq_eps)),
         ("speedup_at_4_workers", Json::from(speedup_at_4)),
         ("runs", Json::Arr(runs)),
+        ("streamed_speedup_at_4_workers", Json::from(stream_speedup_at_4)),
+        ("streamed", Json::Arr(streamed)),
     ]);
     std::fs::write("BENCH_parallel.json", format!("{out}\n")).expect("write BENCH_parallel.json");
     println!("[bench] wrote BENCH_parallel.json (speedup@4 = {speedup_at_4:.2}x)");
+
+    // Regression gates, meaningful only where 4 hardware threads exist
+    // (laptops/CI — not single-core containers).
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 4 {
+        assert!(
+            speedup_at_4 >= 3.36,
+            "speedup_at_4_workers regressed: {speedup_at_4:.2}x < 3.36x (the PR 8 baseline)"
+        );
+        assert!(
+            stream_speedup_at_4 >= 3.0,
+            "streamed speedup at 4 workers collapsed: {stream_speedup_at_4:.2}x — the \
+             writer is a serial bottleneck again"
+        );
+    } else {
+        println!("[bench] only {cores} hardware threads — skipping the 4-worker speedup gates");
+    }
 }

@@ -140,6 +140,12 @@ fn read_varint(payload: &[u8], pos: &mut usize) -> Option<u64> {
 /// source advanced. `buf` is cleared and reused.
 fn encode_delta_payload(edges: &EdgeList, buf: &mut Vec<u8>) {
     buf.clear();
+    append_delta_payload(edges, buf);
+}
+
+/// [`encode_delta_payload`] without the clear: the worker-encode path
+/// stages the payload directly behind the header in one buffer.
+fn append_delta_payload(edges: &EdgeList, buf: &mut Vec<u8>) {
     let mut keys: Vec<u128> = edges
         .iter()
         .map(|(s, d)| ((s as u128) << 64) | d as u128)
@@ -252,11 +258,103 @@ pub fn write_shard(path: &Path, edges: &EdgeList, format: ShardFormat) -> Result
     }
 }
 
-/// [`write_shard`] with crash atomicity: the shard is staged as
-/// `<path>.tmp` and renamed into place only after every byte is
-/// written, so an interrupted run never leaves a partial file under the
-/// final name. A complete `shard-NNNNN.sgg` therefore doubles as that
-/// chunk's durable completion record — the basis of `--resume`.
+/// A chunk already serialized to its final shard wire bytes — header,
+/// payload, and (for `SGGEDGE2`) checksum included, byte-identical to
+/// what [`write_shard`] would put on disk. Pool workers produce these
+/// right after sampling, while the chunk is cache-hot and encoding is
+/// embarrassingly parallel (per-chunk deterministic); the writer thread
+/// then only sequences buffers and issues [`write_encoded_atomic`]
+/// calls. The `bytes` buffer doubles as the recycle vessel of the
+/// runner's byte-buffer arena.
+#[derive(Clone, Debug)]
+pub struct EncodedChunk {
+    /// Wire format `bytes` is encoded in.
+    pub format: ShardFormat,
+    /// The complete shard file image.
+    pub bytes: Vec<u8>,
+}
+
+/// Serialize `edges` into the complete shard file image for `format`,
+/// byte-identical to the file [`write_shard`] produces. `out` is
+/// cleared and reused — the worker-side encode stage recycles these
+/// buffers through the runner's arena, so steady-state encoding
+/// allocates nothing.
+pub fn encode_chunk(edges: &EdgeList, format: ShardFormat, out: &mut Vec<u8>) {
+    out.clear();
+    match format {
+        ShardFormat::Edge1 => {
+            out.reserve(HEADER_LEN + edges.len() * 16);
+            out.extend_from_slice(MAGIC);
+            out.extend_from_slice(&edges.spec.n_src.to_le_bytes());
+            out.extend_from_slice(&edges.spec.n_dst.to_le_bytes());
+            out.push(edges.spec.square as u8);
+            out.extend_from_slice(&(edges.len() as u64).to_le_bytes());
+            for (s, d) in edges.iter() {
+                out.extend_from_slice(&s.to_le_bytes());
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+        }
+        ShardFormat::Edge2 => {
+            out.resize(HEADER2_LEN, 0);
+            append_delta_payload(edges, out);
+            let payload_len = (out.len() - HEADER2_LEN) as u64;
+            let fnv = fnv1a_bytes(&out[HEADER2_LEN..]);
+            out[0..8].copy_from_slice(MAGIC2);
+            out[8..16].copy_from_slice(&edges.spec.n_src.to_le_bytes());
+            out[16..24].copy_from_slice(&edges.spec.n_dst.to_le_bytes());
+            out[24] = edges.spec.square as u8;
+            out[25..33].copy_from_slice(&(edges.len() as u64).to_le_bytes());
+            out[33..41].copy_from_slice(&payload_len.to_le_bytes());
+            out[41..49].copy_from_slice(&fnv.to_le_bytes());
+        }
+    }
+}
+
+/// Flush a freshly staged file's bytes to stable storage.
+fn sync_file(path: &Path) -> Result<()> {
+    std::fs::File::open(path).and_then(|f| f.sync_all()).map_err(shard_io(path, 0))
+}
+
+/// Flush a rename's directory entry to stable storage. Directory
+/// handles can only be fsync'd on Unix; other platforms no-op.
+fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    std::fs::File::open(dir).and_then(|f| f.sync_all()).map_err(shard_io(dir, 0))?;
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+/// Persist an [`EncodedChunk`]'s bytes under `path` with crash
+/// atomicity *and* durability: staged as `<path>.tmp`, fsync'd, renamed
+/// into place, and the parent directory entry fsync'd — only then may
+/// the shard count as a per-chunk completion record resume can trust.
+pub fn write_encoded_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    let staged = std::fs::File::create(&tmp)
+        .and_then(|mut f| f.write_all(bytes).and_then(|_| f.sync_all()))
+        .map_err(shard_io(&tmp, 0));
+    if let Err(e) = staged {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path).map_err(shard_io(path, 0))?;
+    match path.parent() {
+        Some(dir) => sync_dir(dir),
+        None => Ok(()),
+    }
+}
+
+/// [`write_shard`] with crash atomicity and durability: the shard is
+/// staged as `<path>.tmp`, fsync'd, and renamed into place only after
+/// every byte is on stable storage; the parent directory entry is
+/// fsync'd after the rename. An interrupted run therefore never leaves
+/// a partial file under the final name, and a complete
+/// `shard-NNNNN.sgg` doubles as that chunk's *durable* completion
+/// record — the basis of `--resume` (without the fsyncs, a crash after
+/// rename could surface a completion record with unflushed bytes).
 /// `scratch` is the reusable `SGGEDGE2` encode buffer (unused by
 /// `SGGEDGE1`).
 pub fn write_shard_atomic_with(
@@ -272,11 +370,15 @@ pub fn write_shard_atomic_with(
         ShardFormat::Edge1 => write_binary(&tmp, edges),
         ShardFormat::Edge2 => write_binary2_with(&tmp, edges, scratch),
     };
-    if let Err(e) = staged {
+    if let Err(e) = staged.and_then(|_| sync_file(&tmp)) {
         std::fs::remove_file(&tmp).ok();
         return Err(e);
     }
-    std::fs::rename(&tmp, path).map_err(shard_io(path, 0))
+    std::fs::rename(&tmp, path).map_err(shard_io(path, 0))?;
+    match path.parent() {
+        Some(dir) => sync_dir(dir),
+        None => Ok(()),
+    }
 }
 
 /// [`write_shard_atomic_with`] with a one-shot scratch buffer.
@@ -459,22 +561,43 @@ pub fn read_shard_header(path: &Path) -> Result<ShardHeader> {
 /// stream through a reusable ~1 MiB batch buffer; `SGGEDGE2` payloads
 /// are checksum-verified and then strictly decoded.
 pub fn read_binary(path: &Path) -> Result<EdgeList> {
+    let mut out = EdgeList::new(PartiteSpec::square(1));
+    read_binary_into(path, &mut Vec::new(), &mut out)?;
+    Ok(out)
+}
+
+/// [`read_binary`] into caller-owned buffers: `scratch` is the reusable
+/// byte staging buffer (the `SGGEDGE2` payload / `SGGEDGE1` record
+/// batch), `out` is reset to the shard's spec and filled with its
+/// edges. Parallel decode partitions hold one `(scratch, out)` pair per
+/// thread, so a whole-directory scan allocates nothing per shard.
+pub fn read_binary_into(path: &Path, scratch: &mut Vec<u8>, out: &mut EdgeList) -> Result<()> {
     let (f, h) = open_validated(path)?;
+    out.reset(h.spec);
+    out.reserve(h.n_edges as usize);
     match h.format {
-        ShardFormat::Edge1 => read_body1(f, &h, path),
-        ShardFormat::Edge2 => read_body2(f, &h, path),
+        ShardFormat::Edge1 => read_body1(f, &h, path, scratch, out),
+        ShardFormat::Edge2 => read_body2(f, &h, path, scratch, out),
     }
 }
 
 /// Read the fixed-width `SGGEDGE1` body.
-fn read_body1(mut f: std::fs::File, h: &RawHeader, path: &Path) -> Result<EdgeList> {
+fn read_body1(
+    mut f: std::fs::File,
+    h: &RawHeader,
+    path: &Path,
+    scratch: &mut Vec<u8>,
+    edges: &mut EdgeList,
+) -> Result<()> {
     let n_edges = h.n_edges as usize;
-    let mut edges = EdgeList::with_capacity(h.spec, n_edges);
-    let mut buf = vec![0u8; n_edges.clamp(1, IO_BATCH_EDGES) * 16];
+    let batch = n_edges.clamp(1, IO_BATCH_EDGES) * 16;
+    if scratch.len() < batch {
+        scratch.resize(batch, 0);
+    }
     let mut remaining = n_edges;
     while remaining > 0 {
         let take = remaining.min(IO_BATCH_EDGES);
-        let bytes = &mut buf[..take * 16];
+        let bytes = &mut scratch[..take * 16];
         let offset = (HEADER_LEN + (n_edges - remaining) * 16) as u64;
         f.read_exact(bytes).map_err(shard_io(path, offset))?;
         for rec in bytes.chunks_exact(16) {
@@ -484,17 +607,27 @@ fn read_body1(mut f: std::fs::File, h: &RawHeader, path: &Path) -> Result<EdgeLi
         }
         remaining -= take;
     }
-    Ok(edges)
+    Ok(())
 }
 
 /// Read and strictly decode the `SGGEDGE2` body: the payload must hash
 /// to the header checksum, yield exactly `n_edges` edges, and be
 /// consumed to the last byte. Every violation is an [`Error::ShardIo`]
 /// at the offending byte offset.
-fn read_body2(mut f: std::fs::File, h: &RawHeader, path: &Path) -> Result<EdgeList> {
-    let mut payload = vec![0u8; h.payload_len as usize];
-    f.read_exact(&mut payload).map_err(shard_io(path, HEADER2_LEN as u64))?;
-    let got = fnv1a_bytes(&payload);
+fn read_body2(
+    mut f: std::fs::File,
+    h: &RawHeader,
+    path: &Path,
+    scratch: &mut Vec<u8>,
+    edges: &mut EdgeList,
+) -> Result<()> {
+    // `open_validated` checked the file really holds `payload_len`
+    // bytes, so this resize is bounded by the actual file size
+    scratch.clear();
+    scratch.resize(h.payload_len as usize, 0);
+    let payload: &mut [u8] = scratch;
+    f.read_exact(payload).map_err(shard_io(path, HEADER2_LEN as u64))?;
+    let got = fnv1a_bytes(payload);
     if got != h.payload_fnv {
         return Err(shard_corrupt(
             path,
@@ -506,19 +639,18 @@ fn read_body2(mut f: std::fs::File, h: &RawHeader, path: &Path) -> Result<EdgeLi
         ));
     }
     let n_edges = h.n_edges as usize;
-    let mut edges = EdgeList::with_capacity(h.spec, n_edges);
     let mut pos = 0usize;
     let (mut prev_s, mut prev_d) = (0u64, 0u64);
     for i in 0..n_edges {
         let at = (HEADER2_LEN + pos) as u64;
-        let ds = read_varint(&payload, &mut pos).ok_or_else(|| {
+        let ds = read_varint(payload, &mut pos).ok_or_else(|| {
             shard_corrupt(path, at, format!("edge {i}: truncated or malformed src varint"))
         })?;
         let s = prev_s.checked_add(ds).ok_or_else(|| {
             shard_corrupt(path, at, format!("edge {i}: source delta overflows u64"))
         })?;
         let at = (HEADER2_LEN + pos) as u64;
-        let dd = read_varint(&payload, &mut pos).ok_or_else(|| {
+        let dd = read_varint(payload, &mut pos).ok_or_else(|| {
             shard_corrupt(path, at, format!("edge {i}: truncated or malformed dst varint"))
         })?;
         let d = if ds == 0 {
@@ -539,7 +671,7 @@ fn read_body2(mut f: std::fs::File, h: &RawHeader, path: &Path) -> Result<EdgeLi
             format!("{} trailing payload bytes after {n_edges} edges", payload.len() - pos),
         ));
     }
-    Ok(edges)
+    Ok(())
 }
 
 /// Validated header of one shard in a [`ShardReader`] directory.
@@ -563,6 +695,12 @@ pub struct ShardReader {
     paths: Vec<PathBuf>,
     headers: Vec<ShardHeader>,
     spec: PartiteSpec,
+    /// Reusable decode scratch for the sequential [`ShardReader::read`]
+    /// path, hoisted here so a whole-directory scan allocates the
+    /// payload buffer once instead of once per shard. Parallel decode
+    /// never touches this lock — each partition owns its own scratch
+    /// via [`ShardReader::read_into`].
+    scratch: std::sync::Mutex<Vec<u8>>,
 }
 
 impl ShardReader {
@@ -623,7 +761,7 @@ impl ShardReader {
                 )));
             }
         }
-        Ok(ShardReader { paths, headers, spec })
+        Ok(ShardReader { paths, headers, spec, scratch: std::sync::Mutex::new(Vec::new()) })
     }
 
     /// Number of shards.
@@ -662,9 +800,53 @@ impl ShardReader {
         &self.paths[i]
     }
 
-    /// Read shard `i` into memory.
+    /// Read shard `i` into memory through the reader's shared decode
+    /// scratch (one staging buffer for the whole sequential scan).
     pub fn read(&self, i: usize) -> Result<EdgeList> {
-        read_binary(&self.paths[i])
+        let mut out = EdgeList::new(self.spec);
+        let mut scratch = self.scratch.lock().unwrap();
+        read_binary_into(&self.paths[i], &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Read shard `i` into caller-owned buffers — the lock-free path
+    /// parallel decode partitions use, one `(scratch, out)` pair per
+    /// thread (see [`read_binary_into`]).
+    pub fn read_into(&self, i: usize, scratch: &mut Vec<u8>, out: &mut EdgeList) -> Result<()> {
+        read_binary_into(&self.paths[i], scratch, out)
+    }
+
+    /// Decode every shard across `workers` threads and reassemble them
+    /// in shard order, also returning the wrapping sum of per-shard
+    /// [`decoded_checksum`]s (the order-invariant edge-multiset pin the
+    /// conformance harness records). Partitions are contiguous shard
+    /// ranges with per-thread reused scratch, so the result — edges and
+    /// checksum both — is identical at any worker count.
+    pub fn read_all_checksummed(&self, workers: usize) -> Result<(EdgeList, u64)> {
+        let runner = crate::pipeline::parallel::ParallelChunkRunner::new(workers.max(1), 1);
+        let partials = runner.fold_indices(
+            self.len(),
+            |_| (EdgeList::new(self.spec), 0u64, Vec::new(), EdgeList::new(self.spec)),
+            |(acc, sum, scratch, buf), i| {
+                self.read_into(i, scratch, buf)?;
+                *sum = sum.wrapping_add(decoded_checksum(buf));
+                acc.extend_from(buf);
+                Ok(())
+            },
+        )?;
+        let mut all = EdgeList::with_capacity(self.spec, self.total_edges() as usize);
+        let mut sum = 0u64;
+        for (part, s, _, _) in partials {
+            all.extend_from(&part);
+            sum = sum.wrapping_add(s);
+        }
+        Ok((all, sum))
+    }
+
+    /// Decode every shard across `workers` threads and reassemble them
+    /// in shard order (see [`ShardReader::read_all_checksummed`]).
+    pub fn read_all(&self, workers: usize) -> Result<EdgeList> {
+        Ok(self.read_all_checksummed(workers)?.0)
     }
 }
 
@@ -1087,6 +1269,89 @@ mod tests {
             decoded_checksum(&r.read(0).unwrap()),
             decoded_checksum(&r.read(1).unwrap())
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn encode_chunk_matches_file_writers_byte_for_byte() {
+        let path = tmp("enc");
+        let mut e = EdgeList::with_capacity(PartiteSpec::square(1 << 12), 2048);
+        for i in 0..2048u64 {
+            e.push((i * 37) % (1 << 12), (i * 101) % (1 << 12));
+        }
+        let mut out = vec![0xAAu8; 7]; // dirty buffer: encode must clear it
+        for format in [ShardFormat::Edge1, ShardFormat::Edge2] {
+            write_shard(&path, &e, format).unwrap();
+            encode_chunk(&e, format, &mut out);
+            assert_eq!(out, std::fs::read(&path).unwrap(), "{format}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn write_encoded_atomic_roundtrips_and_leaves_no_tmp() {
+        let path = tmp("enc_atomic");
+        let e = sample();
+        let mut bytes = Vec::new();
+        encode_chunk(&e, ShardFormat::Edge2, &mut bytes);
+        write_encoded_atomic(&path, &bytes).unwrap();
+        let r = read_binary(&path).unwrap();
+        assert_eq!(decoded_checksum(&r), decoded_checksum(&e));
+        assert_eq!(read_shard_header(&path).unwrap().format, ShardFormat::Edge2);
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists(), "stale .tmp left behind");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn read_binary_into_reuses_buffers_across_formats() {
+        let (p1, p2) = (tmp("into1"), tmp("into2"));
+        let e = sample();
+        write_binary(&p1, &e).unwrap();
+        write_binary2(&p2, &e).unwrap();
+        let mut scratch = Vec::new();
+        let mut out = EdgeList::new(PartiteSpec::square(1));
+        read_binary_into(&p1, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.src, e.src);
+        assert_eq!(out.spec, e.spec);
+        // second read resets `out` rather than appending, reusing both
+        // the staging scratch and the edge buffers
+        read_binary_into(&p2, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), e.len());
+        assert_eq!(decoded_checksum(&out), decoded_checksum(&e));
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn parallel_read_all_matches_sequential_at_any_worker_count() {
+        let dir = tmp("par_read");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = PartiteSpec::square(1 << 10);
+        for i in 0..7u64 {
+            let mut e = EdgeList::new(spec);
+            for j in 0..(50 + i * 13) {
+                e.push((i * 131 + j) % (1 << 10), (j * 17) % (1 << 10));
+            }
+            let fmt = if i % 2 == 0 { ShardFormat::Edge1 } else { ShardFormat::Edge2 };
+            write_shard(&dir.join(format!("shard-{i:05}.sgg")), &e, fmt).unwrap();
+        }
+        let r = ShardReader::open(&dir).unwrap();
+        let mut seq = EdgeList::with_capacity(spec, r.total_edges() as usize);
+        let mut sum = 0u64;
+        for i in 0..r.len() {
+            let e = r.read(i).unwrap();
+            sum = sum.wrapping_add(decoded_checksum(&e));
+            seq.extend_from(&e);
+        }
+        for workers in [1usize, 2, 4] {
+            let (all, csum) = r.read_all_checksummed(workers).unwrap();
+            assert_eq!(all.src, seq.src, "workers={workers}");
+            assert_eq!(all.dst, seq.dst, "workers={workers}");
+            assert_eq!(csum, sum, "workers={workers}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -27,8 +27,9 @@
 //! skip the check. The BFS-sampled path metrics (`effective_diameter`,
 //! `cpl`, measured at the pinned
 //! [`crate::harness::runner::BFS_SAMPLES`]/[`crate::harness::runner::BFS_SEED`]
-//! schedule) are optional the same way: always written on bless,
-//! checked only when the golden carries them. A golden with
+//! schedule) are **required** on a pinned golden: a pinned document
+//! missing either field is a config error, never a silent skip —
+//! re-bless (`sgg test --bless`) to pin them. A golden with
 //! `"pinned": false` — the checked-in
 //! placeholder state — or a missing file is *blessed*: the measured
 //! profile is written back pinned, so the repository converges to real
@@ -173,10 +174,11 @@ fn check_all(g: &Json, m: &MetricProfile, path: &Path) -> Result<Vec<MetricCheck
             .unwrap_or(DEFAULT_TOL);
         checks.push(MetricCheck::new(name, value, got, tol));
     }
-    // Optional for back-compat, like `edge_checksum`: goldens pinned
-    // before the BFS path metrics existed skip them until re-blessed.
+    // Required since the goldens were re-blessed with BFS path metrics:
+    // a pinned golden missing either field errors loudly (ROADMAP 6(c))
+    // instead of silently skipping the check — re-bless to pin them.
     for (name, got) in [("effective_diameter", m.effective_diameter), ("cpl", m.cpl)] {
-        let Some(entry) = metrics.get(name) else { continue };
+        let entry = metrics.get(name).ok_or_else(|| bad(name))?;
         let value =
             entry.get("value").and_then(|v| v.as_f64()).ok_or_else(|| bad(name))?;
         let tol = entry
@@ -322,36 +324,46 @@ mod tests {
     }
 
     #[test]
-    fn pre_bfs_goldens_skip_path_metric_checks() {
-        let dir = tmp("prebfs");
+    fn pinned_golden_missing_bfs_fields_is_config_error() {
+        let dir = tmp("reqbfs");
         let path = dir.join("g.json");
         compare_or_bless(&path, &profile(), false).unwrap();
-        let mut g = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
-        if let Json::Obj(o) = &mut g {
-            if let Some(Json::Obj(ms)) = o.get_mut("metrics") {
-                ms.remove("effective_diameter");
-                ms.remove("cpl");
+        // a pinned golden that drops a BFS path metric (the pre-re-bless
+        // state) must fail loudly instead of silently skipping the check
+        for dropped in ["effective_diameter", "cpl"] {
+            let mut g = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            if let Json::Obj(o) = &mut g {
+                if let Some(Json::Obj(ms)) = o.get_mut("metrics") {
+                    ms.remove(dropped);
+                }
             }
+            let stale = dir.join(format!("stale_{dropped}.json"));
+            std::fs::write(&stale, g.to_string()).unwrap();
+            let err = compare_or_bless(&stale, &profile(), false).unwrap_err();
+            assert!(err.to_string().contains(dropped), "{err}");
         }
-        std::fs::write(&path, g.to_string()).unwrap();
-        // path metrics drifted, but the old golden never pinned them
+        // re-blessing a stale golden restores the full 7-check pin,
+        // including the BFS fields
+        let stale = dir.join("stale_effective_diameter.json");
+        compare_or_bless(&stale, &profile(), true).unwrap();
+        match compare_or_bless(&stale, &profile(), false).unwrap() {
+            GoldenOutcome::Matched(checks) => {
+                assert_eq!(checks.len(), 7);
+                assert!(checks.iter().any(|c| c.name == "effective_diameter"));
+                assert!(checks.iter().any(|c| c.name == "cpl"));
+            }
+            other => panic!("expected match, got {other:?}"),
+        }
+        // and a pinned BFS drift is a mismatch, not a skip
         let mut moved = profile();
         moved.effective_diameter += 10.0;
-        moved.cpl += 10.0;
         match compare_or_bless(&path, &moved, false).unwrap() {
-            GoldenOutcome::Matched(checks) => {
-                assert_eq!(checks.len(), 5);
-                assert!(checks
-                    .iter()
-                    .all(|c| c.name != "effective_diameter" && c.name != "cpl"));
+            GoldenOutcome::Mismatched(checks) => {
+                let bad: Vec<_> = checks.iter().filter(|c| !c.passed).collect();
+                assert_eq!(bad.len(), 1);
+                assert_eq!(bad[0].name, "effective_diameter");
             }
-            other => panic!("expected match, got {other:?}"),
-        }
-        // re-blessing pins them again
-        compare_or_bless(&path, &moved, true).unwrap();
-        match compare_or_bless(&path, &moved, false).unwrap() {
-            GoldenOutcome::Matched(checks) => assert_eq!(checks.len(), 7),
-            other => panic!("expected match, got {other:?}"),
+            other => panic!("expected mismatch, got {other:?}"),
         }
         std::fs::remove_dir_all(&dir).ok();
     }

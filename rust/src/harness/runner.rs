@@ -3,7 +3,7 @@
 //! schedule) and measure its [`MetricProfile`] by streaming the shards
 //! back — never materializing the generated graph.
 
-use crate::graph::{io, EdgeList};
+use crate::graph::io;
 use crate::metrics::degree::{self, DegreeProfile};
 use crate::metrics::hopplot;
 use crate::metrics::stream::{profile_shards_with, DCC_SAMPLES};
@@ -120,21 +120,18 @@ pub fn run_scenario_profile(
     let orig = DegreeProfile::of(&source.edges);
     let (synth, scan) =
         profile_shards_with(out_dir, spec.workers.max(1), faults, RetryPolicy::default())?;
-    // The decoded-edge checksum is a second read pass; wrapping-summing
-    // the per-shard checksums equals the checksum of the union multiset,
-    // so the value is independent of shard format and edge order. The
-    // same pass assembles the edges in memory for the BFS-sampled path
-    // metrics — harness scenarios are sized to fit.
+    // The decoded-edge checksum is a second read pass: each shard is
+    // decoded once on the worker pool and checksummed from the decoded
+    // edges (wrapping-summing per-shard checksums equals the checksum of
+    // the union multiset, so the value is independent of shard format,
+    // edge order, and worker count). The same pass assembles the edges
+    // in memory for the BFS-sampled path metrics — harness scenarios are
+    // sized to fit.
     let (edge_checksum, effective_diameter, cpl) = if scan.shards == 0 {
         (0, 0.0, 0.0)
     } else {
         let reader = io::ShardReader::open(out_dir)?;
-        let mut sum = 0u64;
-        let mut all = EdgeList::new(reader.spec());
-        for i in 0..reader.len() {
-            sum = sum.wrapping_add(io::shard_decoded_checksum(reader.path(i))?);
-            all.extend_from(&io::read_binary(reader.path(i))?);
-        }
+        let (all, sum) = reader.read_all_checksummed(spec.workers.max(1))?;
         (
             sum,
             hopplot::effective_diameter(&all, 0.9, BFS_SAMPLES, BFS_SEED),

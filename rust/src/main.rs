@@ -408,7 +408,7 @@ fn run(args: &Args) -> Result<()> {
         }
         Some("merge") => {
             let usage = "usage: sgg merge --manifest run.json HOST_DIR... --out-dir merged/ \
-                         [--dataset-seed N]";
+                         [--dataset-seed N] [--workers N]";
             let manifest_path = args
                 .get("manifest")
                 .ok_or_else(|| sgg::Error::Config(usage.into()))?;
@@ -426,11 +426,18 @@ fn run(args: &Args) -> Result<()> {
             let reference =
                 sgg::datasets::load(&manifest.dataset, args.get_or("dataset-seed", 1u64))?;
             let orig = sgg::metrics::DegreeProfile::of(&reference.edges);
-            let report = pipeline::distrib::merge_run(
+            // `--workers 0` = one per core, as elsewhere; the default of
+            // 1 keeps the historical single-threaded verify behavior
+            let workers = match args.get_or("workers", 1usize) {
+                0 => sgg::util::threadpool::default_threads(),
+                w => w,
+            };
+            let report = pipeline::distrib::merge_run_with(
                 &manifest,
                 &dirs,
                 Path::new(out_dir),
                 Some(&orig),
+                workers,
             )?;
             println!("{report}");
             Ok(())

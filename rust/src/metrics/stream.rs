@@ -92,16 +92,25 @@ pub fn profile_reader_with(
     };
     let faulted = FaultReader::new(reader, faults, retry);
     let runner = ParallelChunkRunner::new(workers.max(1), 1);
+    // Per-worker state: accumulator + reusable decode buffers, so the
+    // hot loop allocates nothing once the largest shard has been seen.
     let partials = runner.fold_indices(
         faulted.len(),
-        |_worker| DegreeAccumulator::with_spec(reader.spec()),
-        |acc, i| {
-            acc.observe_edges(&faulted.read(i)?);
+        |_worker| {
+            (
+                DegreeAccumulator::with_spec(reader.spec()),
+                Vec::new(),
+                EdgeList::new(reader.spec()),
+            )
+        },
+        |(acc, scratch, buf), i| {
+            faulted.read_into(i, scratch, buf)?;
+            acc.observe_edges(buf);
             Ok(())
         },
     )?;
     let mut acc = DegreeAccumulator::with_spec(reader.spec());
-    for p in partials {
+    for (p, _, _) in partials {
         acc.merge(p);
     }
     Ok((acc.finalize(), scan))
@@ -407,7 +416,14 @@ mod tests {
                 chunk.push(synth.src[j], synth.dst[j]);
             }
             tapped
-                .edges(&mut Chunk { index: i, worker: 0, sample_secs: 0.0, edges: chunk })
+                .edges(&mut Chunk {
+                    index: i,
+                    worker: 0,
+                    sample_secs: 0.0,
+                    encode_secs: 0.0,
+                    edges: chunk,
+                    encoded: None,
+                })
                 .unwrap();
         }
         let report = match tapped.finish().unwrap() {

@@ -628,6 +628,7 @@ pub fn run_host_range(
         resume_from: start,
         stop_before: Some(end),
         format,
+        encode: true,
         ..ChunkConfig::default()
     };
     let mut sink = if resume {
@@ -654,16 +655,30 @@ pub fn run_host_range(
 
     // Post-run accounting is a separate pass over the finished shards so
     // a resumed run records resumed chunks too: checksum + header edge
-    // count per shard, then the host's degree partial.
-    let mut records = Vec::new();
-    for chunk in start..end {
-        let path = shard_path(out_dir, chunk);
-        if !path.exists() {
-            continue; // zero-edge chunk: no shard by design
-        }
-        let (_spec, edges) = io::read_binary_header(&path)?;
-        records.push(ChunkRecord { chunk, edges, checksum: io::shard_decoded_checksum(&path)? });
-    }
+    // count per shard, then the host's degree partial. The decode-heavy
+    // checksum pass runs on the worker pool (contiguous chunk ranges per
+    // worker, partials concatenated in worker order, so the record list
+    // stays in chunk order).
+    let partials = crate::pipeline::parallel::ParallelChunkRunner::new(workers.max(1), 1)
+        .fold_indices(
+            end - start,
+            |_worker| Vec::new(),
+            |records: &mut Vec<ChunkRecord>, i| {
+                let chunk = start + i;
+                let path = shard_path(out_dir, chunk);
+                if !path.exists() {
+                    return Ok(()); // zero-edge chunk: no shard by design
+                }
+                let (_spec, edges) = io::read_binary_header(&path)?;
+                records.push(ChunkRecord {
+                    chunk,
+                    edges,
+                    checksum: io::shard_decoded_checksum(&path)?,
+                });
+                Ok(())
+            },
+        )?;
+    let records: Vec<ChunkRecord> = partials.into_iter().flatten().collect();
     let profile = if records.is_empty() {
         None
     } else {
@@ -709,6 +724,9 @@ pub struct MergeReport {
     pub quality: Option<StructuralReport>,
     /// Merge wall-clock seconds (validation + assembly + fold).
     pub wall_secs: f64,
+    /// Seconds spent in the per-shard size/checksum re-verification
+    /// pass (wall clock; the pass runs on the merge's worker pool).
+    pub verify_secs: f64,
     /// Shard bytes assembled into the merged directory.
     pub bytes: u64,
     /// The merged output directory.
@@ -754,6 +772,7 @@ impl MergeReport {
             ),
             ("dcc", self.quality.map(|q| Json::from(q.dcc)).unwrap_or(Json::Null)),
             ("wall_secs", Json::from(self.wall_secs)),
+            ("verify_secs", Json::from(self.verify_secs)),
             ("bytes", Json::u64_exact(self.bytes)),
         ])
     }
@@ -776,6 +795,21 @@ pub fn merge_run(
     host_dirs: &[PathBuf],
     out_dir: &Path,
     reference: Option<&DegreeProfile>,
+) -> Result<MergeReport> {
+    merge_run_with(manifest, host_dirs, out_dir, reference, 1)
+}
+
+/// [`merge_run`] with an explicit worker count for the decode-heavy
+/// per-shard re-verification pass (`sgg merge --workers`). Verification
+/// order does not affect the result — every shard is checked
+/// independently and the first failure aborts the merge — so any worker
+/// count produces the same report (modulo timings).
+pub fn merge_run_with(
+    manifest: &RunManifest,
+    host_dirs: &[PathBuf],
+    out_dir: &Path,
+    reference: Option<&DegreeProfile>,
+    workers: usize,
 ) -> Result<MergeReport> {
     let t0 = Instant::now();
     if host_dirs.is_empty() {
@@ -809,10 +843,9 @@ pub fn merge_run(
         manifest.total_chunks,
     )?;
 
-    // Verify every recorded shard before moving anything: header edge
-    // count vs record, then a full decoded-edge checksum pass — format-
-    // and order-invariant, so SGGEDGE1 and SGGEDGE2 hosts validate the
-    // same way.
+    // Cheap structural checks first (no IO): records inside their host's
+    // range, and each degree partial covering exactly the edges its
+    // shard records sum to.
     for (dir, report) in &reports {
         let mut host_edges = 0u64;
         for rec in &report.chunks {
@@ -823,25 +856,6 @@ pub fn merge_run(
                     rec.chunk,
                     report.start,
                     report.end
-                )));
-            }
-            let path = shard_path(dir, rec.chunk);
-            let (_spec, edges) = io::read_binary_header(&path)?;
-            if edges != rec.edges {
-                return Err(Error::Data(format!(
-                    "{}: holds {edges} edges but the host report recorded {} — shard \
-                     rewritten after the run?",
-                    path.display(),
-                    rec.edges
-                )));
-            }
-            let checksum = io::shard_decoded_checksum(&path)?;
-            if checksum != rec.checksum {
-                return Err(Error::Data(format!(
-                    "{}: decoded-edge checksum mismatch ({checksum:016x}, host report \
-                     recorded {:016x}) — shard corrupted in transit?",
-                    path.display(),
-                    rec.checksum
                 )));
             }
             host_edges += rec.edges;
@@ -855,6 +869,48 @@ pub fn merge_run(
             )));
         }
     }
+
+    // Verify every recorded shard before moving anything: header edge
+    // count vs record, then a full decoded-edge checksum pass — format-
+    // and order-invariant, so SGGEDGE1 and SGGEDGE2 hosts validate the
+    // same way. Each shard verifies independently, so the pass fans out
+    // over the worker pool (contiguous ranges of the flattened record
+    // list) and the first failure aborts the merge.
+    let to_verify: Vec<(PathBuf, u64, u64)> = reports
+        .iter()
+        .flat_map(|(dir, report)| {
+            report
+                .chunks
+                .iter()
+                .map(|rec| (shard_path(dir, rec.chunk), rec.edges, rec.checksum))
+        })
+        .collect();
+    let tv = Instant::now();
+    crate::pipeline::parallel::ParallelChunkRunner::new(workers.max(1), 1).fold_indices(
+        to_verify.len(),
+        |_worker| (),
+        |_acc, i| {
+            let (path, rec_edges, rec_checksum) = &to_verify[i];
+            let (_spec, edges) = io::read_binary_header(path)?;
+            if edges != *rec_edges {
+                return Err(Error::Data(format!(
+                    "{}: holds {edges} edges but the host report recorded {rec_edges} \
+                     — shard rewritten after the run?",
+                    path.display()
+                )));
+            }
+            let checksum = io::shard_decoded_checksum(path)?;
+            if checksum != *rec_checksum {
+                return Err(Error::Data(format!(
+                    "{}: decoded-edge checksum mismatch ({checksum:016x}, host report \
+                     recorded {rec_checksum:016x}) — shard corrupted in transit?",
+                    path.display()
+                )));
+            }
+            Ok(())
+        },
+    )?;
+    let verify_secs = tv.elapsed().as_secs_f64();
 
     // Assemble: every shard keeps its canonical name, so the merged
     // directory decodes to the same graph as a single-host run's output
@@ -907,6 +963,7 @@ pub fn merge_run(
         profile_hash: degree::profile_hash(&folded),
         quality,
         wall_secs: t0.elapsed().as_secs_f64(),
+        verify_secs,
         bytes,
         out_dir: out_dir.to_path_buf(),
     };

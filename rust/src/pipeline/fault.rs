@@ -361,6 +361,26 @@ impl<'a> FaultReader<'a> {
             self.inner.read(i)
         })
     }
+
+    /// [`FaultReader::read`] into caller-owned buffers: decode shard `i`
+    /// into `out` reusing `scratch` for the raw payload, retrying
+    /// transient faults. Hot decode loops hold one `(scratch, out)` pair
+    /// per worker so no per-shard allocation survives warm-up.
+    pub fn read_into(
+        &self,
+        i: usize,
+        scratch: &mut Vec<u8>,
+        out: &mut crate::graph::EdgeList,
+    ) -> Result<()> {
+        retry_transient(self.retry, |attempt| {
+            if let Some(plan) = &self.plan {
+                if let Some(e) = plan.read_fault(i, attempt) {
+                    return Err(e);
+                }
+            }
+            self.inner.read_into(i, scratch, out)
+        })
+    }
 }
 
 #[cfg(test)]

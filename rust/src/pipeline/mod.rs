@@ -490,6 +490,9 @@ pub fn run_scenario_opts(
                 chunks.workers = workers;
             }
             chunks.faults = opts.faults;
+            // Shard runs encode on the workers (cache-hot, fully
+            // parallel); the sink's fast path writes the bytes verbatim.
+            chunks.encode = true;
             let mut sink = if opts.resume {
                 let (sink, completed) = ShardSink::resume(dir, chunks)?;
                 chunks.resume_from = completed;

@@ -51,6 +51,9 @@ pub fn stream_to_shards_opts(
     out_dir: &std::path::Path,
     resume: bool,
 ) -> Result<StreamReport> {
+    // Shard runs encode on the workers: the sink then writes the wire
+    // bytes verbatim instead of re-encoding on the reorder thread.
+    cfg.encode = true;
     let mut sink = if resume {
         let (sink, completed) = ShardSink::resume(out_dir, cfg)?;
         cfg.resume_from = completed;

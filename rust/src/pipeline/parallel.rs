@@ -41,6 +41,7 @@
 //!   steady-state generation reuses at most `window` warm buffers
 //!   instead of allocating one per chunk.
 
+use crate::graph::io::{self, ShardFormat};
 use crate::graph::EdgeList;
 use crate::pipeline::fault::{self, FaultPlan, RetryPolicy};
 use crate::structgen::chunked::{Chunk, ChunkConfig};
@@ -242,6 +243,11 @@ pub struct ParallelChunkRunner {
     resume_from: usize,
     stop_before: Option<usize>,
     faults: Option<FaultPlan>,
+    /// Encode each sampled chunk into its final shard wire bytes on the
+    /// worker (see [`ChunkConfig::encode`]); `format` picks the wire
+    /// encoding.
+    encode: bool,
+    format: ShardFormat,
 }
 
 impl ParallelChunkRunner {
@@ -256,6 +262,8 @@ impl ParallelChunkRunner {
             resume_from: 0,
             stop_before: None,
             faults: None,
+            encode: false,
+            format: ShardFormat::Edge1,
         }
     }
 
@@ -268,6 +276,8 @@ impl ParallelChunkRunner {
             resume_from: cfg.resume_from,
             stop_before: cfg.stop_before,
             faults: cfg.faults,
+            encode: cfg.encode,
+            format: cfg.format,
             ..ParallelChunkRunner::new(cfg.workers, cfg.queue_capacity)
         }
     }
@@ -408,6 +418,9 @@ impl ParallelChunkRunner {
         // edge lists here and workers pop them for their next chunk, so
         // steady-state sampling reuses at most `window` warm buffers.
         let pool: Mutex<Vec<EdgeList>> = Mutex::new(Vec::new());
+        // Companion arena for the worker-encode stage: encoded shard
+        // byte buffers flow back from the writer the same way.
+        let byte_pool: Mutex<Vec<Vec<u8>>> = Mutex::new(Vec::new());
         let mut sink_err: Option<crate::Error> = None;
         let mut total = 0u64;
 
@@ -415,7 +428,7 @@ impl ParallelChunkRunner {
             for w in 0..self.workers {
                 let tx = chan.clone();
                 let this = &*self;
-                let (next, abort, pool) = (&next, &abort, &pool);
+                let (next, abort, pool, byte_pool) = (&next, &abort, &pool, &byte_pool);
                 let (emitted, advanced, worker_err) = (&emitted, &advanced, &worker_err);
                 s.spawn(move || loop {
                     let ci = next.fetch_add(1, Ordering::Relaxed);
@@ -436,11 +449,32 @@ impl ParallelChunkRunner {
                     let t0 = Instant::now();
                     match this.sample_chunk_into(plan, ci, &mut edges) {
                         Ok(()) => {
+                            let sample_secs = t0.elapsed().as_secs_f64();
+                            // encode right here, while the chunk is
+                            // cache-hot: per-chunk encoding is
+                            // deterministic, so doing it on the worker
+                            // changes nothing but where the CPU time
+                            // lands
+                            let (encoded, encode_secs) = if this.encode && !edges.is_empty()
+                            {
+                                let mut bytes =
+                                    byte_pool.lock().unwrap().pop().unwrap_or_default();
+                                let te = Instant::now();
+                                io::encode_chunk(&edges, this.format, &mut bytes);
+                                (
+                                    Some(io::EncodedChunk { format: this.format, bytes }),
+                                    te.elapsed().as_secs_f64(),
+                                )
+                            } else {
+                                (None, 0.0)
+                            };
                             let chunk = Chunk {
                                 index: ci,
                                 worker: w,
-                                sample_secs: t0.elapsed().as_secs_f64(),
+                                sample_secs,
+                                encode_secs,
                                 edges,
+                                encoded,
                             };
                             if tx.send(chunk).is_err() {
                                 break; // channel closed: run is over
@@ -494,6 +528,15 @@ impl ParallelChunkRunner {
                     // buffer — either way the allocation goes back to
                     // the workers
                     recycle(std::mem::take(&mut c.edges));
+                    // same for the encoded byte buffer: a shard sink
+                    // takes it (and may leave a drained one in its
+                    // place); whatever remains feeds the encode arena
+                    if let Some(enc) = c.encoded.take() {
+                        let mut spare = byte_pool.lock().unwrap();
+                        if spare.len() < window {
+                            spare.push(enc.bytes);
+                        }
+                    }
                     if let Err(e) = res {
                         sink_err = Some(e);
                         abort.store(true, Ordering::Relaxed);
@@ -527,6 +570,7 @@ impl ParallelChunkRunner {
     ) -> Result<u64> {
         let mut total = 0u64;
         let mut buf = EdgeList::default();
+        let mut bytes = Vec::new();
         for index in 0..plan.n_chunks() {
             let t0 = Instant::now();
             self.sample_chunk_into(plan, index, &mut buf)?;
@@ -534,14 +578,33 @@ impl ParallelChunkRunner {
                 continue;
             }
             total += buf.len() as u64;
+            let sample_secs = t0.elapsed().as_secs_f64();
+            let (encoded, encode_secs) = if self.encode {
+                let te = Instant::now();
+                io::encode_chunk(&buf, self.format, &mut bytes);
+                (
+                    Some(io::EncodedChunk {
+                        format: self.format,
+                        bytes: std::mem::take(&mut bytes),
+                    }),
+                    te.elapsed().as_secs_f64(),
+                )
+            } else {
+                (None, 0.0)
+            };
             let mut chunk = Chunk {
                 index,
                 worker: 0,
-                sample_secs: t0.elapsed().as_secs_f64(),
+                sample_secs,
+                encode_secs,
                 edges: std::mem::take(&mut buf),
+                encoded,
             };
             let res = sink(&mut chunk);
             buf = std::mem::take(&mut chunk.edges);
+            if let Some(enc) = chunk.encoded.take() {
+                bytes = enc.bytes;
+            }
             res?;
         }
         Ok(total)

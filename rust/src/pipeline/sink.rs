@@ -110,7 +110,9 @@ impl Sink for MemorySink {
             index: chunk.index,
             worker: chunk.worker,
             sample_secs: chunk.sample_secs,
+            encode_secs: chunk.encode_secs,
             edges: std::mem::take(&mut chunk.edges),
+            encoded: None,
         });
         Ok(())
     }
@@ -152,6 +154,23 @@ pub struct StreamReport {
     /// attribute time to sampling vs. writing and keeps
     /// `peak_buffer_bytes` honest about how many workers were live.
     pub worker_busy_secs: Vec<f64>,
+    /// Total seconds spent sampling, summed across workers (the scalar
+    /// counterpart of `worker_busy_secs` — the first stage of the
+    /// sample → encode → write breakdown).
+    pub sample_secs: f64,
+    /// Total seconds spent encoding chunks into shard wire bytes —
+    /// on the sampling workers when worker-side encoding is on, on the
+    /// writer when a chunk arrived raw.
+    pub encode_secs: f64,
+    /// Total seconds the IO stage spent in shard writes (write + fsync
+    /// + rename), overlapped with reordering when the async write stage
+    /// is active.
+    pub write_secs: f64,
+    /// Seconds the writer thread itself was busy inside the sink — the
+    /// serial-section residue that caps parallel speedup (Amdahl). With
+    /// worker-side encoding and overlapped IO this should be a small
+    /// fraction of `wall_secs`.
+    pub writer_busy_secs: f64,
     /// Shard output directory.
     pub out_dir: PathBuf,
     /// Structural quality against the fit source, filled when the run
@@ -200,6 +219,10 @@ impl StreamReport {
             ("wall_secs", Json::from(self.wall_secs)),
             ("peak_buffer_bytes", Json::u64_exact(self.peak_buffer_bytes)),
             ("worker_busy_secs", Json::from(self.worker_busy_secs.clone())),
+            ("sample_secs", Json::from(self.sample_secs)),
+            ("encode_secs", Json::from(self.encode_secs)),
+            ("write_secs", Json::from(self.write_secs)),
+            ("writer_busy_secs", Json::from(self.writer_busy_secs)),
             ("out_dir", Json::from(self.out_dir.display().to_string())),
             (
                 "quality",
@@ -212,14 +235,21 @@ impl StreamReport {
     }
 
     /// Parse the canonical JSON form back into a report — the client
-    /// side of the service's progress stream.
+    /// side of the service's progress stream. The stage-time breakdown
+    /// fields default to 0 when absent, so reports written before the
+    /// breakdown existed still parse.
     pub fn from_json(doc: &Json) -> Result<StreamReport> {
+        let opt_f64 = |key: &str| doc.opt(key).and_then(Json::as_f64).unwrap_or(0.0);
         Ok(StreamReport {
             edges_written: doc.req_u64("edges_written")?,
             shards: doc.req_usize("shards")?,
             wall_secs: doc.req_f64("wall_secs")?,
             peak_buffer_bytes: doc.req_u64("peak_buffer_bytes")?,
             worker_busy_secs: doc.req_f64s("worker_busy_secs")?,
+            sample_secs: opt_f64("sample_secs"),
+            encode_secs: opt_f64("encode_secs"),
+            write_secs: opt_f64("write_secs"),
+            writer_busy_secs: opt_f64("writer_busy_secs"),
             out_dir: PathBuf::from(doc.req_str("out_dir")?),
             quality: match doc.opt("quality") {
                 Some(q) => Some(crate::metrics::stream::StructuralReport::from_json(q)?),
@@ -239,14 +269,26 @@ pub fn shard_path(dir: &Path, index: usize) -> PathBuf {
 /// the [`io::ShardFormat`] the chunk config selects (`SGGEDGE1` fixed
 /// width by default, `SGGEDGE2` varint-delta when asked).
 ///
-/// Every shard is written atomically (`.tmp` + rename, see
-/// [`io::write_shard_atomic_with`]) and transient write failures are
-/// retried under the sink's [`RetryPolicy`]; `SGGEDGE2` shards encode
-/// through one persistent scratch buffer, so the compressed path adds no
-/// per-shard staging allocation. Because the parallel runner feeds
-/// chunks strictly in index order, the completed shard files of an
-/// interrupted run always form a consecutive `shard-00000..` prefix —
-/// the per-chunk completion records [`ShardSink::resume`] restarts from.
+/// **Encoded-chunk fast path:** a chunk that arrives with its wire
+/// bytes already attached (worker-side encoding, see
+/// [`ChunkConfig::encode`]) is written verbatim — the sink never
+/// re-encodes it. Raw chunks fall back to an in-sink
+/// [`io::encode_chunk`] through one reused staging buffer.
+///
+/// **Overlapped IO:** shard bytes are handed to a dedicated IO thread
+/// (one write in flight, double-buffered), so shard `N`'s write + fsync
+/// + rename overlaps the reorder wait for chunk `N + 1`. Writes are
+/// still *issued and completed* strictly in index order, so the
+/// completed shard files of an interrupted run always form a
+/// consecutive `shard-00000..` prefix — the per-chunk completion
+/// records [`ShardSink::resume`] restarts from. Once a deferred write
+/// fails (after the IO thread's own bounded retry under the sink's
+/// [`RetryPolicy`]), the sink goes sticky-failed: the error surfaces on
+/// the next call and every later call fails fatally without submitting
+/// more writes, preserving the consecutive-prefix invariant.
+///
+/// Every shard is written atomically and durably (`.tmp` + fsync +
+/// rename + directory fsync, see [`io::write_encoded_atomic`]).
 pub struct ShardSink {
     out_dir: PathBuf,
     /// Upper bound on simultaneously resident chunks: the parallel
@@ -257,18 +299,92 @@ pub struct ShardSink {
     retry: RetryPolicy,
     /// On-disk encoding for every shard this sink writes.
     format: io::ShardFormat,
-    /// Reused `SGGEDGE2` payload staging buffer.
-    scratch: Vec<u8>,
+    /// Reused encode buffer for the fallback (sink-side) encode path.
+    spare: Vec<u8>,
+    /// Lazily spawned IO stage; `None` until the first shard write.
+    io: Option<IoStage>,
+    /// Sticky failure (the first deferred write error's message): set
+    /// once a submitted write fails, after which every call fails
+    /// fatally without submitting new writes.
+    failed: Option<String>,
     /// Largest `max_inflight` chunk edge-counts seen, descending.
     top_sizes: Vec<usize>,
     /// Sampling seconds per worker id, aggregated from chunk provenance.
     worker_busy: Vec<f64>,
+    /// Stage-time accumulators (see [`StreamReport`]).
+    sample_secs: f64,
+    encode_secs: f64,
+    write_secs: f64,
+    writer_busy: f64,
     /// Live progress mirror: when set, the sink publishes a fresh
     /// [`StreamReport`] snapshot here after every shard it writes.
     progress: Option<ProgressHandle>,
     shards: usize,
     written: u64,
     t0: Instant,
+}
+
+/// One shard write handed to the IO thread.
+struct WriteJob {
+    path: PathBuf,
+    bytes: Vec<u8>,
+}
+
+/// The IO thread's completion record: the drained byte buffer (recycled
+/// into the encode arena), the seconds the write took, and its outcome.
+struct WriteDone {
+    bytes: Vec<u8>,
+    secs: f64,
+    result: Result<()>,
+}
+
+/// The double-buffered shard write stage: a dedicated IO thread fed
+/// through a pair of depth-1 bounded channels. The sink submits at most
+/// one job before draining the previous completion, so exactly one
+/// write is in flight and rename order equals submission order — the
+/// resume invariant does not depend on scheduling.
+struct IoStage {
+    jobs: crate::util::threadpool::Bounded<WriteJob>,
+    done: crate::util::threadpool::Bounded<WriteDone>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    inflight: bool,
+}
+
+impl IoStage {
+    fn spawn(retry: RetryPolicy) -> IoStage {
+        let jobs: crate::util::threadpool::Bounded<WriteJob> =
+            crate::util::threadpool::Bounded::new(1);
+        let done: crate::util::threadpool::Bounded<WriteDone> =
+            crate::util::threadpool::Bounded::new(1);
+        let (rx, tx) = (jobs.clone(), done.clone());
+        let handle = std::thread::spawn(move || {
+            while let Some(job) = rx.recv() {
+                let t0 = Instant::now();
+                let result =
+                    retry_transient(retry, |_| io::write_encoded_atomic(&job.path, &job.bytes));
+                let secs = t0.elapsed().as_secs_f64();
+                if tx.send(WriteDone { bytes: job.bytes, secs, result }).is_err() {
+                    break; // sink dropped mid-write
+                }
+            }
+        });
+        IoStage { jobs, done, handle: Some(handle), inflight: false }
+    }
+}
+
+impl Drop for ShardSink {
+    fn drop(&mut self) {
+        if let Some(stage) = self.io.take() {
+            // let an in-flight write complete (keeping the on-disk
+            // prefix consecutive even on an abort path), then stop the
+            // thread
+            stage.jobs.close();
+            if let Some(h) = stage.handle {
+                h.join().ok();
+            }
+            stage.done.close();
+        }
+    }
 }
 
 /// Shared slot a [`ShardSink`] publishes in-flight [`StreamReport`]
@@ -297,9 +413,15 @@ impl ShardSink {
             max_inflight: chunks.queue_capacity.max(1) + chunks.workers.max(1) + 1,
             retry: chunks.retry,
             format: chunks.format,
-            scratch: Vec::new(),
+            spare: Vec::new(),
+            io: None,
+            failed: None,
             top_sizes: Vec::new(),
             worker_busy: Vec::new(),
+            sample_secs: 0.0,
+            encode_secs: 0.0,
+            write_secs: 0.0,
+            writer_busy: 0.0,
             progress: None,
             shards: 0,
             written: 0,
@@ -391,9 +513,42 @@ impl ShardSink {
             wall_secs: self.t0.elapsed().as_secs_f64(),
             peak_buffer_bytes: self.top_sizes.iter().sum::<usize>() as u64 * 16,
             worker_busy_secs: self.worker_busy.clone(),
+            sample_secs: self.sample_secs,
+            encode_secs: self.encode_secs,
+            write_secs: self.write_secs,
+            writer_busy_secs: self.writer_busy,
             out_dir: self.out_dir.clone(),
             quality: None,
         }
+    }
+
+    /// The fatal sticky error every call after a deferred write failure
+    /// returns. Deliberately [`Error::Data`] (never transient): the IO
+    /// thread already exhausted the retry budget on the write itself, so
+    /// a retrying adapter above must not spin on the sink.
+    fn sticky_err(msg: &str) -> Error {
+        Error::Data(format!("shard sink disabled after write failure: {msg}"))
+    }
+
+    /// Block until the in-flight shard write (if any) completes,
+    /// folding its timing into `write_secs` and returning its drained
+    /// byte buffer for recycling. A write error trips the sticky flag
+    /// and propagates — the caller must not submit more writes.
+    fn drain_inflight(&mut self) -> Result<Option<Vec<u8>>> {
+        let Some(stage) = self.io.as_mut() else { return Ok(None) };
+        if !stage.inflight {
+            return Ok(None);
+        }
+        stage.inflight = false;
+        let done = stage.done.recv().ok_or_else(|| {
+            Error::Worker("shard IO thread exited with a write outstanding".into())
+        })?;
+        self.write_secs += done.secs;
+        if let Err(e) = done.result {
+            self.failed = Some(e.to_string());
+            return Err(e);
+        }
+        Ok(Some(done.bytes))
     }
 }
 
@@ -403,33 +558,69 @@ impl Sink for ShardSink {
     }
 
     fn edges(&mut self, chunk: &mut Chunk) -> Result<()> {
+        let t0 = Instant::now();
+        if let Some(msg) = &self.failed {
+            return Err(ShardSink::sticky_err(msg));
+        }
+        // Fast path: the chunk arrived with its wire bytes already
+        // encoded (worker-side). A raw chunk — or one encoded in a
+        // different format than this sink writes — is encoded here
+        // through the reused fallback buffer.
+        let worker_encoded =
+            chunk.encoded.as_ref().map(|e| e.format == self.format).unwrap_or(false);
+        let bytes = if worker_encoded {
+            chunk.encoded.take().expect("checked above").bytes
+        } else {
+            let mut buf = std::mem::take(&mut self.spare);
+            let te = Instant::now();
+            io::encode_chunk(&chunk.edges, self.format, &mut buf);
+            self.encode_secs += te.elapsed().as_secs_f64();
+            buf
+        };
+        // Overlap: the previous shard's write ran while this chunk was
+        // being reordered/encoded; settle it before issuing the next
+        // write so exactly one is in flight and rename order is
+        // submission order.
+        let drained = self.drain_inflight()?;
+        if let Some(drained) = drained {
+            if worker_encoded {
+                // hand the drained buffer back through the chunk slot so
+                // the runner recycles it into the worker encode arena
+                chunk.encoded = Some(io::EncodedChunk { format: self.format, bytes: drained });
+            } else {
+                self.spare = drained;
+            }
+        }
+        let stage = self.io.get_or_insert_with(|| IoStage::spawn(self.retry));
         let path = shard_path(&self.out_dir, chunk.index);
-        let (format, scratch) = (self.format, &mut self.scratch);
-        retry_transient(self.retry, |_| {
-            io::write_shard_atomic_with(&path, &chunk.edges, format, scratch)
-        })?;
+        if stage.jobs.send(WriteJob { path, bytes }).is_err() {
+            return Err(Error::Worker("shard IO thread is gone".into()));
+        }
+        stage.inflight = true;
         self.written += chunk.edges.len() as u64;
         self.shards += 1;
         if self.worker_busy.len() <= chunk.worker {
             self.worker_busy.resize(chunk.worker + 1, 0.0);
         }
         self.worker_busy[chunk.worker] += chunk.sample_secs;
+        self.sample_secs += chunk.sample_secs;
+        self.encode_secs += chunk.encode_secs;
         self.note_size(chunk.edges.len());
         if let Some(slot) = &self.progress {
-            *slot.lock().unwrap() = Some(StreamReport {
-                edges_written: self.written,
-                shards: self.shards,
-                wall_secs: self.t0.elapsed().as_secs_f64(),
-                peak_buffer_bytes: self.top_sizes.iter().sum::<usize>() as u64 * 16,
-                worker_busy_secs: self.worker_busy.clone(),
-                out_dir: self.out_dir.clone(),
-                quality: None,
-            });
+            *slot.lock().unwrap() = Some(self.report());
         }
+        self.writer_busy += t0.elapsed().as_secs_f64();
         Ok(())
     }
 
     fn finish(&mut self) -> Result<SinkFinish> {
+        if let Some(msg) = &self.failed {
+            return Err(ShardSink::sticky_err(msg));
+        }
+        // settle the last in-flight write before declaring the run done
+        if let Some(drained) = self.drain_inflight()? {
+            self.spare = drained;
+        }
         Ok(SinkFinish::Streamed(self.report()))
     }
 }
@@ -487,7 +678,14 @@ mod tests {
         for i in 0..n {
             edges.push(i as u64 % 1024, (i as u64 * 7) % 1024);
         }
-        Chunk { index, worker: index % 2, sample_secs: 0.25, edges }
+        Chunk {
+            index,
+            worker: index % 2,
+            sample_secs: 0.25,
+            encode_secs: 0.0,
+            edges,
+            encoded: None,
+        }
     }
 
     #[test]
@@ -535,6 +733,12 @@ mod tests {
         assert_eq!(report.worker_busy_secs.len(), 2);
         assert!((report.worker_busy_secs[0] - 1.0).abs() < 1e-9);
         assert!((report.worker_busy_secs[1] - 1.0).abs() < 1e-9);
+        // ... and into the scalar stage breakdown: 8 chunks × 0.25 s
+        // sampling, sink-side fallback encoding and real writes
+        assert!((report.sample_secs - 2.0).abs() < 1e-9);
+        assert!(report.encode_secs > 0.0);
+        assert!(report.write_secs > 0.0);
+        assert!(report.writer_busy_secs > 0.0);
         let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
         assert_eq!(files.len(), 8);
         std::fs::remove_dir_all(&dir).ok();
@@ -549,6 +753,8 @@ mod tests {
         let mut c = chunk(0, 500);
         let reference = c.edges.clone();
         sink.edges(&mut c).unwrap();
+        // the write is asynchronous — settle it before reading the file
+        sink.finish().unwrap();
         let path = shard_path(&dir, 0);
         let header = io::read_shard_header(&path).unwrap();
         assert_eq!(header.format, io::ShardFormat::Edge2);
@@ -579,6 +785,7 @@ mod tests {
         std::fs::write(shard_path(&dir, 7).with_extension("sgg.tmp"), b"partial").unwrap();
         let mut sink = ShardSink::new(&dir, ChunkConfig::default()).unwrap();
         sink.edges(&mut chunk(0, 10)).unwrap();
+        sink.finish().unwrap();
         let leftovers: Vec<_> = std::fs::read_dir(&dir)
             .unwrap()
             .map(|e| e.unwrap().path())
@@ -597,6 +804,10 @@ mod tests {
             wall_secs: 1.25,
             peak_buffer_bytes: 4096,
             worker_busy_secs: vec![0.5, 0.75],
+            sample_secs: 1.25,
+            encode_secs: 0.25,
+            write_secs: 0.125,
+            writer_busy_secs: 0.0625,
             out_dir: PathBuf::from("/tmp/out"),
             quality: Some(crate::metrics::stream::StructuralReport {
                 degree_dist: 0.9375,
@@ -609,6 +820,10 @@ mod tests {
         assert_eq!(back.shards, report.shards);
         assert_eq!(back.wall_secs.to_bits(), report.wall_secs.to_bits());
         assert_eq!(back.worker_busy_secs, report.worker_busy_secs);
+        assert_eq!(back.sample_secs.to_bits(), report.sample_secs.to_bits());
+        assert_eq!(back.encode_secs.to_bits(), report.encode_secs.to_bits());
+        assert_eq!(back.write_secs.to_bits(), report.write_secs.to_bits());
+        assert_eq!(back.writer_busy_secs.to_bits(), report.writer_busy_secs.to_bits());
         assert_eq!(back.out_dir, report.out_dir);
         assert_eq!(back.quality, report.quality);
         // absent quality round-trips as None, not an error
@@ -616,6 +831,64 @@ mod tests {
         plain.quality = None;
         let back = StreamReport::from_json(&plain.to_json()).unwrap();
         assert!(back.quality.is_none());
+        // reports written before the stage-time breakdown existed still
+        // parse, with the stage fields defaulting to zero
+        let doc = Json::parse(
+            r#"{"edges_written":1,"shards":1,"wall_secs":1.0,"peak_buffer_bytes":16,
+                "worker_busy_secs":[1.0],"out_dir":"/tmp/out"}"#,
+        )
+        .unwrap();
+        let old = StreamReport::from_json(&doc).unwrap();
+        assert_eq!(old.sample_secs, 0.0);
+        assert_eq!(old.write_secs, 0.0);
+    }
+
+    #[test]
+    fn worker_encoded_chunks_write_verbatim_and_recycle_buffers() {
+        let dir = std::env::temp_dir().join(format!("sgg_sink_enc_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = ChunkConfig { format: io::ShardFormat::Edge2, ..ChunkConfig::default() };
+        let mut sink = ShardSink::new(&dir, cfg).unwrap();
+        let mut expected = Vec::new();
+        for i in 0..3usize {
+            let mut c = chunk(i, 200 + i);
+            let mut bytes = Vec::new();
+            io::encode_chunk(&c.edges, io::ShardFormat::Edge2, &mut bytes);
+            expected.push(bytes.clone());
+            c.encoded = Some(io::EncodedChunk { format: io::ShardFormat::Edge2, bytes });
+            sink.edges(&mut c).unwrap();
+            if i > 0 {
+                // the drained previous write's buffer comes back through
+                // the chunk slot, feeding the runner's encode arena
+                assert!(c.encoded.is_some(), "chunk {i}: no recycled buffer");
+            }
+        }
+        sink.finish().unwrap();
+        for (i, bytes) in expected.iter().enumerate() {
+            assert_eq!(&std::fs::read(shard_path(&dir, i)).unwrap(), bytes, "shard {i}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deferred_write_failure_is_sticky_and_fatal() {
+        let dir = std::env::temp_dir().join(format!("sgg_sink_sticky_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut sink = ShardSink::new(&dir, ChunkConfig::default()).unwrap();
+        // sabotage: replace the output directory with a file, so chunk
+        // 0's deferred write fails on the IO thread
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::write(&dir, b"not a directory").unwrap();
+        sink.edges(&mut chunk(0, 10)).unwrap(); // async submit succeeds
+        let err = sink.edges(&mut chunk(1, 10)).unwrap_err(); // drain surfaces it
+        assert!(err.to_string().contains("shard"), "{err}");
+        // every later call fails fatally (Error::Data — never transient,
+        // so a retrying adapter above cannot spin) without submitting
+        let err2 = sink.edges(&mut chunk(2, 10)).unwrap_err();
+        assert!(matches!(err2, Error::Data(_)), "{err2}");
+        assert!(err2.to_string().contains("disabled after write failure"), "{err2}");
+        assert!(sink.finish().is_err());
+        std::fs::remove_file(&dir).ok();
     }
 
     #[test]
@@ -639,6 +912,7 @@ mod tests {
         for (i, n) in [(0usize, 10usize), (1, 20), (2, 30)] {
             sink.edges(&mut chunk(i, n)).unwrap();
         }
+        sink.finish().unwrap();
         // simulate interruption debris: a staged partial write and a
         // shard past the completed prefix (an empty-chunk gap at 3)
         std::fs::write(shard_path(&dir, 3).with_extension("sgg.tmp"), b"partial").unwrap();

@@ -36,8 +36,16 @@ pub struct Chunk {
     /// Wall-clock seconds the worker spent sampling this chunk; feeds the
     /// per-worker timing in [`crate::pipeline::StreamReport`].
     pub sample_secs: f64,
+    /// Wall-clock seconds the worker spent encoding this chunk into
+    /// `encoded` (0 when encoding was left to the sink).
+    pub encode_secs: f64,
     /// Edges of this chunk (global ids).
     pub edges: EdgeList,
+    /// The chunk's final shard wire bytes, when [`ChunkConfig::encode`]
+    /// moved encoding onto the sampling worker. `edges` stays populated
+    /// either way — taps and in-memory sinks keep observing decoded
+    /// edges; shard sinks take these bytes instead of re-encoding.
+    pub encoded: Option<crate::graph::io::EncodedChunk>,
 }
 
 /// Configuration for chunked generation. Construct with functional
@@ -73,6 +81,11 @@ pub struct ChunkConfig {
     /// Ignored by in-memory sinks. Decoded edges are identical either
     /// way — only the bytes differ.
     pub format: crate::graph::io::ShardFormat,
+    /// Encode each chunk into its final shard wire bytes on the sampling
+    /// worker (cache-hot, fully parallel) instead of on the writer
+    /// thread. Shard-sink runs enable this; in-memory sinks ignore the
+    /// bytes, so it defaults off.
+    pub encode: bool,
 }
 
 impl Default for ChunkConfig {
@@ -86,6 +99,7 @@ impl Default for ChunkConfig {
             stop_before: None,
             faults: None,
             format: crate::graph::io::ShardFormat::Edge1,
+            encode: false,
         }
     }
 }
